@@ -1,0 +1,127 @@
+//! Figure 1 reproduction: error-per-iteration for the six optimization
+//! primitives (gra, acc, acc_r, acc_b, acc_rb, lbfgs) on the paper's four
+//! test problems:
+//!
+//!   linear      10000 obs x 1024 feats, 512 informative, unregularized LSQ
+//!   linear l1   same, with L1 regularization
+//!   logistic    10000 obs x 250 feats (category-gaussian features)
+//!   logistic l2 same, with L2 regularization
+//!
+//! All methods share the same initial step size (paper protocol). Output:
+//! ASCII log-error plots + CSV series under target/experiments/.
+//!
+//! ```bash
+//! cargo run --release --example convergence_suite [-- --rows 10000 --iters 100]
+//! ```
+
+use sparkla::linalg::vector::Vector;
+use sparkla::optim::accelerated::{accelerated, AccelConfig};
+use sparkla::optim::gd::{gradient_descent, GdConfig};
+use sparkla::optim::lbfgs::{lbfgs, LbfgsConfig};
+use sparkla::optim::problem::{synth, DistProblem};
+use sparkla::optim::{Regularizer, Trace};
+use sparkla::util::argparse::ArgSpec;
+use sparkla::util::csv::CsvWriter;
+use sparkla::util::plot::{render, Series};
+use sparkla::Context;
+
+fn run_all(problem: &DistProblem, dim: usize, iters: usize, skip_lbfgs_l1: bool) -> Vec<Trace> {
+    let w0 = Vector::zeros(dim);
+    let step = 1.0 / problem.lipschitz_estimate().expect("lipschitz");
+    let mut traces = vec![];
+    traces.push(
+        gradient_descent(problem, &w0, &GdConfig { step_size: step, max_iters: iters, tol: 0.0 })
+            .expect("gra"),
+    );
+    for name in ["acc", "acc_r", "acc_b", "acc_rb"] {
+        let cfg = AccelConfig::variant(name, step, iters).unwrap();
+        traces.push(accelerated(problem, &w0, &cfg).expect(name));
+    }
+    if !skip_lbfgs_l1 {
+        traces.push(
+            lbfgs(problem, &w0, &LbfgsConfig { max_iters: iters, ..Default::default() })
+                .expect("lbfgs"),
+        );
+    }
+    traces
+}
+
+fn report(title: &str, traces: &[Trace], csv_path: &str) {
+    // f* = best objective any method reached (paper: "difference from best
+    // determined optimized value")
+    let f_star = traces.iter().map(|t| t.best()).fold(f64::INFINITY, f64::min);
+    let series: Vec<Series> = traces
+        .iter()
+        .map(|t| Series {
+            name: t.name.clone(),
+            points: t
+                .objective
+                .iter()
+                .enumerate()
+                .map(|(i, &f)| (i as f64, (f - f_star).max(1e-16)))
+                .collect(),
+        })
+        .collect();
+    println!("{}", render(title, &series, 72, 18, true));
+    let mut csv = CsvWriter::create(csv_path, &["solver", "iteration", "objective", "log10_error"])
+        .expect("csv");
+    for t in traces {
+        for (i, &f) in t.objective.iter().enumerate() {
+            csv.write_vals(&[
+                &t.name,
+                &i,
+                &f,
+                &((f - f_star).max(1e-16)).log10(),
+            ])
+            .expect("row");
+        }
+    }
+    let p = csv.finish().expect("flush");
+    println!("  series written to {p:?}\n");
+}
+
+fn main() -> sparkla::Result<()> {
+    let args = ArgSpec::new("convergence_suite", "Figure 1 reproduction")
+        .opt("rows", "10000", "observations (paper: 10000)")
+        .opt("linear-cols", "1024", "linear-problem features (paper: 1024)")
+        .opt("logistic-cols", "250", "logistic-problem features (paper: 250)")
+        .opt("iters", "100", "outer iterations (Fig. 1 x-axis)")
+        .opt("executors", "4", "logical executors")
+        .opt("seed", "1", "workload seed")
+        .parse();
+    let ctx = Context::local("convergence_suite", args.usize("executors"));
+    let rows = args.usize("rows");
+    let n_lin = args.usize("linear-cols");
+    let n_log = args.usize("logistic-cols");
+    let iters = args.usize("iters");
+    let seed = args.u64("seed");
+
+    println!("== Figure 1 reproduction: {rows} observations, {iters} iterations ==\n");
+
+    // panel 1: logistic (unregularized)
+    let (p_log, _) = synth::logistic(&ctx, rows, n_log, Regularizer::None, 8, seed)?;
+    let traces = run_all(&p_log, n_log, iters, false);
+    report("logistic regression", &traces, "target/experiments/fig1_logistic.csv");
+
+    // panel 2: linear (unregularized least squares, 512 informative)
+    let (p_lin, _) = synth::linear(&ctx, rows, n_lin, n_lin / 2, Regularizer::None, 8, seed)?;
+    let traces = run_all(&p_lin, n_lin, iters, false);
+    report("least squares regression", &traces, "target/experiments/fig1_linear.csv");
+
+    // panel 3: logistic + L2
+    let (p_log2, _) = synth::logistic(&ctx, rows, n_log, Regularizer::L2(0.1), 8, seed)?;
+    let traces = run_all(&p_log2, n_log, iters, false);
+    report("L2-regularized logistic regression", &traces, "target/experiments/fig1_logistic_l2.csv");
+
+    // panel 4: linear + L1 (LASSO) — lbfgs skipped (nonsmooth), as in MLlib
+    let (p_l1, _) = synth::linear(&ctx, rows, n_lin, n_lin / 2, Regularizer::L1(10.0), 8, seed)?;
+    let traces = run_all(&p_l1, n_lin, iters, true);
+    report("L1-regularized least squares (LASSO)", &traces, "target/experiments/fig1_lasso.csv");
+
+    println!("observations to check against the paper's Fig. 1:");
+    println!("  1. acceleration converges faster than gra at the same step size");
+    println!("  2. automatic restarts (acc_r / acc_rb) help");
+    println!("  3. backtracking boosts per-iteration convergence (extra cost not in x-axis)");
+    println!("  4. lbfgs generally outperforms the accelerated variants");
+    Ok(())
+}

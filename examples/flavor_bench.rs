@@ -1,0 +1,58 @@
+//! L1 artifact-flavor ablation (EXPERIMENTS.md section Perf): times the
+//! Pallas-kernel artifacts against their jnp-lowered twins through the
+//! live PJRT runtime. Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example flavor_bench
+//! ```
+
+use std::sync::Arc;
+
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::linalg::vector::Vector;
+use sparkla::runtime::{ops, RuntimeHandle};
+use sparkla::util::rng::SplitMix64;
+use sparkla::util::timer::Timer;
+
+fn main() -> sparkla::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Arc::new(RuntimeHandle::start(dir.to_str().unwrap())?);
+    let mut rng = SplitMix64::new(1);
+    let a = DenseMatrix::randn(1024, 256, &mut rng);
+    let w = Vector::zeros(256);
+    let y = Vector::ones(1024);
+    let n = 30;
+    println!("{:<16} {:>12} {:>12}", "op (1024x256)", "pallas ms", "jnp ms");
+    for op in ["gram", "gramvec", "matvec", "quad", "logistic"] {
+        let mut cols = vec![];
+        for flavor in ["pallas", "jnp"] {
+            std::env::set_var("SPARKLA_XLA_FLAVOR", flavor);
+            let run = |rt: &Arc<RuntimeHandle>| -> sparkla::Result<()> {
+                match op {
+                    "gram" => drop(ops::gram(Some(rt), &a)?),
+                    "gramvec" => drop(ops::gramvec(Some(rt), &a, &w)?),
+                    "matvec" => drop(ops::matvec(Some(rt), &a, &w)?),
+                    "quad" => drop(ops::quad_loss_grad(Some(rt), &a, &w, &y)?),
+                    _ => drop(ops::logistic_loss_grad(Some(rt), &a, &w, &y)?),
+                }
+                Ok(())
+            };
+            run(&rt)?; // warm: compile
+            let t = Timer::start();
+            for _ in 0..n {
+                run(&rt)?;
+            }
+            cols.push(t.secs() / n as f64 * 1e3);
+        }
+        println!("{:<16} {:>12.3} {:>12.3}", op, cols[0], cols[1]);
+    }
+    std::env::remove_var("SPARKLA_XLA_FLAVOR");
+    println!("\n(interpret-mode Pallas grids lower to sequential HLO while-loops — the CPU");
+    println!(" backend can't fuse them; the jnp twin is one fused dot. On real TPU the");
+    println!(" Mosaic-compiled Pallas kernel is the fast path. See EXPERIMENTS.md.)");
+    Ok(())
+}

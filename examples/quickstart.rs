@@ -1,0 +1,52 @@
+//! Quickstart: build distributed matrices, run the core computations.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sparkla::distributed::{BlockMatrix, CoordinateMatrix, RowMatrix};
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn main() -> sparkla::Result<()> {
+    // a local "cluster": 4 executors x 2 cores
+    let ctx = Context::local("quickstart", 4);
+
+    // ---- RowMatrix: column stats, Gram, SVD, PCA --------------------
+    let mut rng = SplitMix64::new(7);
+    let local = DenseMatrix::randn(5000, 24, &mut rng);
+    let a = RowMatrix::from_local(&ctx, &local, 8).cache();
+    println!("A: {} x {} ({} nonzeros)", a.num_rows()?, a.num_cols()?, a.nnz()?);
+
+    let stats = a.column_stats()?;
+    println!("col 0: mean={:+.4} std={:.4}", stats.mean()[0], stats.variance()[0].sqrt());
+
+    let svd = a.compute_svd(5, true)?;
+    println!("top-5 singular values ({}): {:?}", svd.algorithm, svd.s);
+    let err = sparkla::distributed::svd::reconstruction_error(&a, &svd)?;
+    println!("rank-5 reconstruction error: {err:.4}");
+
+    let (_components, variances) = a.pca(3)?;
+    println!("top-3 PCA explained variances: {variances:?}");
+
+    // ---- CoordinateMatrix -> conversions ----------------------------
+    let cm = CoordinateMatrix::sprand(&ctx, 10_000, 100, 50_000, 8, 42);
+    println!("sparse C: {} x {}, nnz={}", cm.num_rows, cm.num_cols, cm.nnz()?);
+    let c_rows = cm.to_row_matrix(8)?;
+    let sims = c_rows.column_similarities(Some(0.1))?;
+    println!("DIMSUM similarity (0,1) = {:+.4}", sims.get(0, 1));
+
+    // ---- BlockMatrix: distributed multiply --------------------------
+    let x = DenseMatrix::randn(96, 64, &mut rng);
+    let y = DenseMatrix::randn(64, 48, &mut rng);
+    let bx = BlockMatrix::from_local(&ctx, &x, 32, 32, 4);
+    let by = BlockMatrix::from_local(&ctx, &y, 32, 32, 4);
+    bx.validate()?;
+    let product = bx.multiply(&by)?;
+    let check = product.to_local()?.max_abs_diff(&x.matmul(&y)?);
+    println!("BlockMatrix multiply vs local: max |diff| = {check:.2e}");
+
+    println!("\nscheduler metrics: {}", ctx.metrics().summary());
+    Ok(())
+}

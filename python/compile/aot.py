@@ -1,0 +1,76 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format — NOT lowered.compile() serialization
+and NOT serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published `xla` 0.1.6
+crate links) rejects (`proto.id() <= INT_MAX`). The text parser reassigns
+ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Also writes artifacts/manifest.txt: one line per artifact,
+  name <TAB> file <TAB> in_shapes <TAB> out_shapes
+e.g.  gemm_256\tgemm_256.hlo.txt\tf32[256,256];f32[256,256]\tf32[256,256]
+The Rust ArtifactRegistry parses this to validate its compiled-in specs.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_shapes(specs) -> str:
+    out = []
+    for s in specs:
+        dims = ",".join(str(d) for d in s.shape)
+        out.append(f"f32[{dims}]")
+    return ";".join(out)
+
+
+def lower_all(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, arg_specs) in sorted(ARTIFACTS.items()):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *arg_specs)
+        manifest_lines.append(
+            "\t".join([name, fname, _fmt_shapes(arg_specs), _fmt_shapes(out_specs)])
+        )
+        print(f"  lowered {name:<28} {len(text):>9} chars -> {fname}")
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest} ({len(manifest_lines)} artifacts)")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", nargs="*", help="lower only these artifact names")
+    args = p.parse_args()
+    lower_all(args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for sparkla.
+
+Every kernel here is authored with jax.experimental.pallas and lowered in
+interpret mode (the CPU PJRT plugin cannot execute Mosaic custom-calls;
+see DESIGN.md section 4). The kernels are the compute hot-spots the paper
+pushes to hardware BLAS: tiled GEMM, Gram matrix (A^T A), mat-vec, and the
+fused loss+gradient kernels used by the distributed optimizers.
+
+`ref.py` holds the pure-jnp oracles used by pytest.
+"""
+
+from .gemm import gemm_pallas, matvec_pallas
+from .gram import gram_pallas
+from .grad import quad_loss_grad_pallas, logistic_loss_grad_pallas
+
+__all__ = [
+    "gemm_pallas",
+    "matvec_pallas",
+    "gram_pallas",
+    "quad_loss_grad_pallas",
+    "logistic_loss_grad_pallas",
+]

@@ -1,0 +1,118 @@
+"""Tiled Pallas GEMM — the hot-spot the paper serves with hardware BLAS.
+
+Hardware adaptation (DESIGN.md section "Hardware adaptation"): the paper's
+Fig. 2 GEMM backends (OpenBLAS / MKL / cuBLAS) tile for L2 cache or for
+GPU threadblock shared memory. On TPU the analogous resource is VMEM and
+the compute engine is the 128x128 MXU systolic array, so the kernel below
+
+  * tiles the output into (BM, BN) blocks, one grid cell per block,
+  * streams (BM, BK) x (BK, BN) panels of the operands HBM->VMEM via
+    BlockSpec index maps (this is the threadblock-loop the paper's CUDA
+    backends express with blockIdx),
+  * accumulates over the K grid axis in the f32 output ref, relying on
+    grid-dimension sequential semantics for the K loop.
+
+Lowered with interpret=True for CPU PJRT execution (Mosaic custom-calls
+only run on real TPU); structure, not interpret-mode wallclock, is what
+we optimize. See EXPERIMENTS.md "Perf / L1" for the VMEM/MXU accounting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. 128x128 keeps each operand panel at
+# 128*128*4 B = 64 KiB, three panels well under the ~16 MiB VMEM budget
+# and aligned with the systolic array so every pass is a full MXU issue.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (BM, BN) output tile: accumulate x_tile @ y_tile over the K axis.
+
+    The K grid axis is the innermost (fastest-varying) loop, so for a fixed
+    (i, j) output tile the kernel sees k = 0..n_k-1 sequentially and can
+    use o_ref itself as the accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU issue: bf16/f32 matmul on a (BM, BK) x (BK, BN) panel pair.
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """C = X @ Y with a 3-D (M/BM, N/BN, K/BK) Pallas grid.
+
+    Shapes must be multiples of the block sizes; the Rust runtime pads
+    partitions to the artifact shape (zero padding is exact for matmul).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One (BM,) slice of y = A @ x. x is small (fits VMEM whole)."""
+    o_ref[...] = a_ref[...] @ x_ref[...]
+
+
+@jax.jit
+def matvec_pallas(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y = A @ x, tiled over rows.
+
+    This is the ARPACK reverse-communication hot op: the driver ships one
+    of these per row-partition per Lanczos iteration. The vector operand
+    is broadcast whole into VMEM (the paper's core assumption: vectors fit
+    on one machine, matrices do not).
+    """
+    m, n = a.shape
+    bm = min(DEFAULT_BM, m)
+    assert m % bm == 0, f"rows {m} not divisible by block {bm}"
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(a, x)

@@ -1,0 +1,121 @@
+"""Fused loss + gradient Pallas kernels for the convex-optimization path.
+
+Paper section 3.3: F(w) = sum_i F_i(w); each executor computes the
+gradient contribution of its row partition, the driver tree-aggregates
+and takes the (local, cheap) vector step. These kernels are the executor
+side of that split, fused so one HBM pass over the partition produces
+both the loss contribution and the gradient contribution.
+
+Fusion layout: a 1-D grid over row panels; a VMEM scratch accumulator
+would be natural on real TPU, here we accumulate into the output refs
+across sequential grid steps (same trick as gemm.py).
+
+quad:      loss = 1/2 ||A w - b||^2,          grad = A^T (A w - b)
+logistic:  loss = sum log(1 + exp(-y (A w))), grad = A^T (s - l)  with
+           s = sigmoid(A w), l = (y + 1) / 2  (labels y in {-1, +1})
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+
+
+def _quad_kernel(a_ref, w_ref, b_ref, g_ref, loss_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    r = a_ref[...] @ w_ref[...] - b_ref[...]          # (BM,)
+    g_ref[...] += r @ a_ref[...]                      # A_panel^T r
+    loss_ref[...] += 0.5 * jnp.sum(r * r)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def quad_loss_grad_pallas(a, w, b, *, bm: int = DEFAULT_BM):
+    """Returns (grad (n,), loss (1,)) for 1/2 ||A w - b||^2 over a row block."""
+    m, n = a.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _quad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda k: (k, 0)),
+            pl.BlockSpec((n,), lambda k: (0,)),
+            pl.BlockSpec((bm,), lambda k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda k: (0,)),
+            pl.BlockSpec((1,), lambda k: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, w, b)
+
+
+def _logistic_kernel(a_ref, w_ref, y_ref, g_ref, loss_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    margin = a_ref[...] @ w_ref[...]                  # (BM,)
+    y = y_ref[...]
+    # log(1 + exp(-y m)) computed stably: log1p(exp(-|z|)) + max(0, -z)
+    z = y * margin
+    loss_ref[...] += jnp.sum(jnp.log1p(jnp.exp(-jnp.abs(z))) + jnp.maximum(-z, 0.0))
+    s = jax.nn.sigmoid(margin)
+    labels01 = 0.5 * (y + 1.0)
+    g_ref[...] += (s - labels01) @ a_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def logistic_loss_grad_pallas(a, w, y, *, bm: int = DEFAULT_BM):
+    """Returns (grad (n,), loss (1,)) for logistic loss with labels in {-1,+1}.
+
+    Padding contract: padded rows must carry y = +1 and all-zero features,
+    which contribute sigmoid(0) - 1 = -1/2 times a zero row to the
+    gradient and log(2) to the loss... which would be WRONG. The runtime
+    therefore passes a y of +1 and a *mask* via the label: padded rows use
+    y = 0, making z = 0 contribute log1p(exp(0)) + 0 = log 2 as well.
+    Instead we adopt the simpler exact contract used by the Rust runtime:
+    padded rows have zero features AND y = +1, and the runtime subtracts
+    n_pad * log(2) from the returned loss and n_pad * (-1/2) * 0 = 0 from
+    the gradient (zero rows contribute nothing to A^T(...)). See
+    rust/src/runtime/ops.rs.
+    """
+    m, n = a.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _logistic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda k: (k, 0)),
+            pl.BlockSpec((n,), lambda k: (0,)),
+            pl.BlockSpec((bm,), lambda k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda k: (0,)),
+            pl.BlockSpec((1,), lambda k: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, w, y)

@@ -1,0 +1,63 @@
+"""Gram matrix A^T A as a Pallas kernel.
+
+This is the tall-skinny SVD hot-spot (paper section 3.1.2): each executor
+computes the Gram contribution of its row block; the driver sums the
+(n x n) results and eigendecomposes locally. The paper computes it with
+one all-to-one communication (DIMSUM, refs [10, 11]); here the kernel is
+the per-partition compute and the Rust tree_aggregate is the
+communication.
+
+Grid layout: (n/BN1, n/BN2, m/BM). For a fixed output tile (i, j) the row
+axis k runs sequentially, so the output ref doubles as the accumulator —
+the same schedule as gemm.py with X = A^T expressed via index maps rather
+than a materialized transpose (transposes are free in BlockSpec space;
+the paper pays a shuffle for them).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 128
+DEFAULT_BM = 128
+
+
+def _gram_kernel(a_col_i_ref, a_col_j_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BN1, BM) @ (BM, BN2): contract over the row panel.
+    o_ref[...] += jnp.dot(
+        a_col_i_ref[...].T, a_col_j_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm"))
+def gram_pallas(a: jax.Array, *, bn: int = DEFAULT_BN, bm: int = DEFAULT_BM) -> jax.Array:
+    """G = A^T A for a (m, n) row block, m >> n typically."""
+    m, n = a.shape
+    bn = min(bn, n)
+    bm = min(bm, m)
+    assert n % bn == 0 and m % bm == 0, (
+        f"gram shape ({m},{n}) not divisible by blocks ({bm},{bn})"
+    )
+    grid = (n // bn, n // bn, m // bm)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            # column panel i: rows k-block, cols i-block
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, i)),
+            # column panel j: rows k-block, cols j-block
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, a)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose between kernels.* and these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def matvec_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    return a @ x
+
+
+def gram_ref(a: jax.Array) -> jax.Array:
+    return jnp.dot(a.T, a, preferred_element_type=jnp.float32)
+
+
+def quad_loss_grad_ref(a, w, b):
+    r = a @ w - b
+    return a.T @ r, 0.5 * jnp.sum(r * r)
+
+
+def logistic_loss_grad_ref(a, w, y):
+    margin = a @ w
+    z = y * margin
+    loss = jnp.sum(jnp.log1p(jnp.exp(-jnp.abs(z))) + jnp.maximum(-z, 0.0))
+    s = jax.nn.sigmoid(margin)
+    labels01 = 0.5 * (y + 1.0)
+    grad = a.T @ (s - labels01)
+    return grad, loss

@@ -1,0 +1,135 @@
+"""Layer-2 JAX compute graphs, built on the Layer-1 Pallas kernels.
+
+Each public function here is one AOT artifact: aot.py jits + lowers it at
+a fixed shape to HLO text that the Rust runtime loads via PJRT. Python is
+never on the Rust request path — these run once at `make artifacts`.
+
+The graphs are deliberately thin: the paper's L2 is "the per-partition
+compute MLlib closes over", i.e. exactly one fused kernel call plus any
+cheap glue (bias terms, regularization is applied driver-side in Rust
+because it is a vector op).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import (
+    gemm_pallas,
+    gram_pallas,
+    matvec_pallas,
+    quad_loss_grad_pallas,
+    logistic_loss_grad_pallas,
+)
+
+
+def gemm(x, y):
+    """Dense matmul — the Fig. 2 benchmark op and BlockMatrix.multiply tile op."""
+    return (gemm_pallas(x, y),)
+
+
+def gram(a):
+    """A^T A of a row partition — tall-skinny SVD / column-similarity hot op."""
+    return (gram_pallas(a),)
+
+
+def matvec(a, x):
+    """A @ x of a row partition — the ARPACK reverse-communication op."""
+    return (matvec_pallas(a, x),)
+
+
+def gramvec(a, x):
+    """A^T (A x) of a row partition — the square-SVD operator op.
+
+    ARPACK mode: eigen-decomposition of A^T A without forming it. One
+    fused pass: matvec then the transposed matvec, both Pallas.
+    """
+    ax = matvec_pallas(a, x)
+    # A^T y as a matvec on the BlockSpec-transposed panel: reuse gemm-style
+    # contraction via gram-like scheduling would need a second kernel; the
+    # transpose contraction is small (n x m panel @ m) — express with dot
+    # so XLA fuses it with the pallas output. Zero-padded rows are exact.
+    return (ax @ a,)
+
+
+def quad_loss_grad(a, w, b):
+    """(grad, loss) of 1/2||Aw - b||^2 over a row partition."""
+    g, l = quad_loss_grad_pallas(a, w, b)
+    return (g, l)
+
+
+def logistic_loss_grad(a, w, y):
+    """(grad, loss) of logistic loss over a row partition, labels in {-1,+1}."""
+    g, l = logistic_loss_grad_pallas(a, w, y)
+    return (g, l)
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example-arg shapes (f32)).
+# Shapes are the fixed AOT contract with rust/src/runtime/artifact.rs —
+# keep in sync with DESIGN.md section 4 and the Rust `ArtifactSpec` table.
+# ---------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# jnp-lowered variants (perf ablation, EXPERIMENTS.md "Perf / L1-L2"):
+# interpret-mode Pallas lowers its grid to sequential HLO while-loops,
+# which the CPU PJRT backend executes slowly; the same math written in
+# plain jnp lowers to a single fused dot that hits XLA's native kernel.
+# On a real TPU the Mosaic-compiled Pallas kernel would be the fast path;
+# on this CPU testbed the jnp artifacts are, so the Rust runtime prefers
+# `*_jnp` when present (SPARKLA_XLA_FLAVOR=pallas forces the kernels).
+# ---------------------------------------------------------------------------
+
+def gemm_jnp(x, y):
+    return (ref.gemm_ref(x, y),)
+
+
+def gram_jnp(a):
+    return (ref.gram_ref(a),)
+
+
+def matvec_jnp(a, x):
+    return (ref.matvec_ref(a, x),)
+
+
+def gramvec_jnp(a, x):
+    return (a.T @ (a @ x),)
+
+
+def quad_loss_grad_jnp(a, w, b):
+    g, l = ref.quad_loss_grad_ref(a, w, b)
+    return (g, l.reshape(1))
+
+
+def logistic_loss_grad_jnp(a, w, y):
+    g, l = ref.logistic_loss_grad_ref(a, w, y)
+    return (g, l.reshape(1))
+
+
+ARTIFACTS = {
+    "gemm_256": (gemm, (_f32(256, 256), _f32(256, 256))),
+    "gemm_512": (gemm, (_f32(512, 512), _f32(512, 512))),
+    "gram_1024x256": (gram, (_f32(1024, 256),)),
+    "matvec_1024x256": (matvec, (_f32(1024, 256), _f32(256))),
+    "gramvec_1024x256": (gramvec, (_f32(1024, 256), _f32(256))),
+    "quad_grad_1024x256": (quad_loss_grad, (_f32(1024, 256), _f32(256), _f32(1024))),
+    "logistic_grad_1024x256": (
+        logistic_loss_grad,
+        (_f32(1024, 256), _f32(256), _f32(1024)),
+    ),
+    # jnp ablation variants (same signatures)
+    "gemm_jnp_256": (gemm_jnp, (_f32(256, 256), _f32(256, 256))),
+    "gemm_jnp_512": (gemm_jnp, (_f32(512, 512), _f32(512, 512))),
+    "gram_jnp_1024x256": (gram_jnp, (_f32(1024, 256),)),
+    "matvec_jnp_1024x256": (matvec_jnp, (_f32(1024, 256), _f32(256))),
+    "gramvec_jnp_1024x256": (gramvec_jnp, (_f32(1024, 256), _f32(256))),
+    "quad_grad_jnp_1024x256": (quad_loss_grad_jnp, (_f32(1024, 256), _f32(256), _f32(1024))),
+    "logistic_grad_jnp_1024x256": (
+        logistic_loss_grad_jnp,
+        (_f32(1024, 256), _f32(256), _f32(1024)),
+    ),
+}

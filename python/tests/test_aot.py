@@ -1,0 +1,67 @@
+"""AOT pipeline checks: HLO text artifacts parse, manifest is consistent."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART_DIR, "manifest.txt"))
+
+
+pytestmark = pytest.mark.skipif(
+    not _have_artifacts(), reason="run `make artifacts` first"
+)
+
+
+def _manifest():
+    with open(os.path.join(ART_DIR, "manifest.txt")) as f:
+        rows = [line.strip().split("\t") for line in f if line.strip()]
+    return {r[0]: r[1:] for r in rows}
+
+
+def test_manifest_covers_registry():
+    assert set(_manifest()) == set(model.ARTIFACTS)
+
+
+def test_artifact_files_exist_and_are_hlo_text():
+    for name, (fname, _ins, _outs) in _manifest().items():
+        path = os.path.join(ART_DIR, fname)
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        # HLO text modules start with `HloModule <name>`
+        assert head.startswith("HloModule"), f"{name}: not HLO text: {head[:40]!r}"
+
+
+def test_manifest_shapes_match_registry():
+    man = _manifest()
+    for name, (fn, specs) in model.ARTIFACTS.items():
+        ins = man[name][1]
+        want = aot._fmt_shapes(specs)
+        assert ins == want, f"{name}: manifest {ins} != registry {want}"
+
+
+def test_hlo_entry_shapes_match_manifest():
+    """Parse the ENTRY line of each HLO module and cross-check row/col sizes."""
+    man = _manifest()
+    for name, (fname, ins, _outs) in man.items():
+        text = open(os.path.join(ART_DIR, fname)).read()
+        m = re.search(r"entry_computation_layout=\{\((.*?)\)->", text)
+        assert m, f"{name}: no entry_computation_layout"
+        entry_params = m.group(1)
+        for spec in ins.split(";"):
+            dims = spec[spec.index("[") :]
+            assert dims in entry_params, f"{name}: {dims} not in ENTRY({entry_params})"
+
+
+def test_no_mosaic_custom_calls():
+    """interpret=True must hold: a Mosaic custom-call would be unrunnable
+    on the CPU PJRT client the Rust runtime uses."""
+    for name, (fname, _ins, _outs) in _manifest().items():
+        text = open(os.path.join(ART_DIR, fname)).read()
+        assert "tpu_custom_call" not in text and "mosaic" not in text.lower(), name

@@ -1,0 +1,207 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (multiples of the block size and degenerate
+single-block cases) and data; assert_allclose against kernels/ref.py.
+This is the CORE correctness signal for the compute layer.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    gemm_pallas,
+    matvec_pallas,
+    gram_pallas,
+    quad_loss_grad_pallas,
+    logistic_loss_grad_pallas,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# --------------------------------------------------------------------- GEMM
+
+@settings(**SETTINGS)
+@given(
+    mi=st.integers(1, 3), ni=st.integers(1, 3), ki=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_block_multiples(mi, ni, ki, seed):
+    rng = np.random.default_rng(seed)
+    m, n, k = 128 * mi, 128 * ni, 128 * ki
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+    got = gemm_pallas(x, y)
+    np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 384)])
+def test_gemm_identity(shape):
+    m, k, n = shape
+    x = jnp.eye(m, k, dtype=jnp.float32)
+    y = jnp.arange(k * n, dtype=jnp.float32).reshape(k, n) / (k * n)
+    got = gemm_pallas(x, y)
+    want = ref.gemm_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_zero():
+    z = jnp.zeros((128, 128), jnp.float32)
+    np.testing.assert_array_equal(gemm_pallas(z, z), z)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 64, 128), (32, 128, 64)])
+def test_gemm_block_shapes(bm, bn, bk):
+    """Tiling must not change the result — the Fig. 2 tuning knob."""
+    rng = np.random.default_rng(0)
+    x, y = _arr(rng, 128, 128), _arr(rng, 128, 128)
+    got = gemm_pallas(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=2e-4, atol=2e-3)
+
+
+def test_gemm_rejects_inner_dim_mismatch():
+    x = jnp.zeros((128, 100), jnp.float32)
+    y = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm_pallas(x, y)
+
+
+def test_gemm_non_multiple_shapes_fall_back_to_single_block():
+    """Shapes smaller than the tile shrink the block (bm=min(bm,m))."""
+    rng = np.random.default_rng(11)
+    x, y = _arr(rng, 100, 60), _arr(rng, 60, 36)
+    got = gemm_pallas(x, y)
+    np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=2e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------------- MATVEC
+
+@settings(**SETTINGS)
+@given(mi=st.integers(1, 8), n=st.sampled_from([16, 64, 256]), seed=st.integers(0, 2**31 - 1))
+def test_matvec(mi, n, seed):
+    rng = np.random.default_rng(seed)
+    a, x = _arr(rng, 128 * mi, n), _arr(rng, n)
+    got = matvec_pallas(a, x)
+    np.testing.assert_allclose(got, ref.matvec_ref(a, x), rtol=2e-4, atol=2e-3)
+
+
+def test_matvec_small_single_block():
+    rng = np.random.default_rng(7)
+    a, x = _arr(rng, 64, 32), _arr(rng, 32)   # m < BM -> single block
+    np.testing.assert_allclose(matvec_pallas(a, x), ref.matvec_ref(a, x), rtol=2e-4, atol=1e-3)
+
+
+# --------------------------------------------------------------------- GRAM
+
+@settings(**SETTINGS)
+@given(mi=st.integers(1, 6), ni=st.integers(1, 2), seed=st.integers(0, 2**31 - 1))
+def test_gram(mi, ni, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, 128 * mi, 128 * ni)
+    got = gram_pallas(a)
+    np.testing.assert_allclose(got, ref.gram_ref(a), rtol=2e-4, atol=5e-3)
+
+
+def test_gram_symmetry_and_psd_diagonal():
+    rng = np.random.default_rng(1)
+    a = _arr(rng, 256, 128)
+    g = np.asarray(gram_pallas(a))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
+    assert (np.diag(g) >= -1e-5).all()
+
+
+def test_gram_zero_padding_exact():
+    """Zero-padded rows must not change A^T A — the runtime's padding contract."""
+    rng = np.random.default_rng(2)
+    a = _arr(rng, 128, 128)
+    padded = jnp.concatenate([a, jnp.zeros((128, 128), jnp.float32)])
+    np.testing.assert_allclose(gram_pallas(padded), gram_pallas(a), rtol=1e-5, atol=1e-4)
+
+
+# ----------------------------------------------------------- LOSS+GRAD quad
+
+@settings(**SETTINGS)
+@given(mi=st.integers(1, 6), n=st.sampled_from([32, 128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_quad_loss_grad(mi, n, seed):
+    rng = np.random.default_rng(seed)
+    m = 128 * mi
+    a, w, b = _arr(rng, m, n), _arr(rng, n), _arr(rng, m)
+    g, l = quad_loss_grad_pallas(a, w, b)
+    g_ref, l_ref = ref.quad_loss_grad_ref(a, w, b)
+    np.testing.assert_allclose(g, g_ref, rtol=3e-4, atol=5e-3)
+    np.testing.assert_allclose(l[0], l_ref, rtol=3e-4, atol=5e-3)
+
+
+def test_quad_grad_matches_autodiff():
+    rng = np.random.default_rng(3)
+    a, w, b = _arr(rng, 128, 64), _arr(rng, 64), _arr(rng, 128)
+    g, _ = quad_loss_grad_pallas(a, w, b)
+    g_ad = jax.grad(lambda w_: 0.5 * jnp.sum((a @ w_ - b) ** 2))(w)
+    np.testing.assert_allclose(g, g_ad, rtol=3e-4, atol=3e-3)
+
+
+def test_quad_zero_padding_exact():
+    rng = np.random.default_rng(4)
+    a, w, b = _arr(rng, 128, 64), _arr(rng, 64), _arr(rng, 128)
+    ap = jnp.concatenate([a, jnp.zeros((128, 64), jnp.float32)])
+    bp = jnp.concatenate([b, jnp.zeros((128,), jnp.float32)])
+    g, l = quad_loss_grad_pallas(a, w, b)
+    gp, lp = quad_loss_grad_pallas(ap, w, bp)
+    np.testing.assert_allclose(gp, g, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(lp, l, rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------- LOSS+GRAD logistic
+
+@settings(**SETTINGS)
+@given(mi=st.integers(1, 4), n=st.sampled_from([32, 128]), seed=st.integers(0, 2**31 - 1))
+def test_logistic_loss_grad(mi, n, seed):
+    rng = np.random.default_rng(seed)
+    m = 128 * mi
+    a, w = _arr(rng, m, n), _arr(rng, n, scale=0.1)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=m).astype(np.float32))
+    g, l = logistic_loss_grad_pallas(a, w, y)
+    g_ref, l_ref = ref.logistic_loss_grad_ref(a, w, y)
+    np.testing.assert_allclose(g, g_ref, rtol=3e-4, atol=5e-3)
+    np.testing.assert_allclose(l[0], l_ref, rtol=3e-4, atol=5e-3)
+
+
+def test_logistic_grad_matches_autodiff():
+    rng = np.random.default_rng(5)
+    a, w = _arr(rng, 128, 32), _arr(rng, 32, scale=0.1)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=128).astype(np.float32))
+    g, _ = logistic_loss_grad_pallas(a, w, y)
+    loss_fn = lambda w_: jnp.sum(jnp.log1p(jnp.exp(-y * (a @ w_))))
+    np.testing.assert_allclose(g, jax.grad(loss_fn)(w), rtol=3e-4, atol=3e-3)
+
+
+def test_logistic_loss_extreme_margins_stable():
+    """Stable log1p(exp(.)) formulation: no inf/nan at huge margins."""
+    a = jnp.ones((128, 4), jnp.float32) * 100.0
+    w = jnp.ones((4,), jnp.float32) * 100.0
+    y = jnp.asarray([1.0, -1.0] * 64, jnp.float32)
+    g, l = logistic_loss_grad_pallas(a, w, y)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.isfinite(np.asarray(l)).all()
+
+
+def test_logistic_padding_contract():
+    """Padded rows (zero features, y=+1) add exactly log(2) each to loss
+    and nothing to the gradient — what rust/src/runtime/ops.rs subtracts."""
+    rng = np.random.default_rng(6)
+    a, w = _arr(rng, 128, 32), _arr(rng, 32, scale=0.1)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=128).astype(np.float32))
+    n_pad = 128
+    ap = jnp.concatenate([a, jnp.zeros((n_pad, 32), jnp.float32)])
+    yp = jnp.concatenate([y, jnp.ones((n_pad,), jnp.float32)])
+    g, l = logistic_loss_grad_pallas(a, w, y)
+    gp, lp = logistic_loss_grad_pallas(ap, w, yp)
+    np.testing.assert_allclose(gp, g, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(lp[0] - n_pad * np.log(2.0, dtype=np.float32), l[0], rtol=1e-4, atol=1e-2)

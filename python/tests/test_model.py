@@ -1,0 +1,97 @@
+"""L2 correctness: model graphs vs jnp oracles + artifact registry shape checks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng_arrs(seed, *shapes):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(s, dtype=np.float32)) for s in shapes]
+
+
+def test_gemm_model():
+    x, y = _rng_arrs(0, (256, 256), (256, 256))
+    (got,) = model.gemm(x, y)
+    np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=2e-4, atol=3e-3)
+
+
+def test_gram_model():
+    (a,) = _rng_arrs(1, (1024, 256))
+    (got,) = model.gram(a)
+    np.testing.assert_allclose(got, ref.gram_ref(a), rtol=3e-4, atol=2e-2)
+
+
+def test_matvec_model():
+    a, x = _rng_arrs(2, (1024, 256), (256,))
+    (got,) = model.matvec(a, x)
+    np.testing.assert_allclose(got, ref.matvec_ref(a, x), rtol=3e-4, atol=5e-3)
+
+
+def test_gramvec_model():
+    """gramvec = A^T (A x): the square-SVD ARPACK operator."""
+    a, x = _rng_arrs(3, (1024, 256), (256,))
+    (got,) = model.gramvec(a, x)
+    want = a.T @ (a @ x)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-2)
+
+
+def test_quad_grad_model():
+    a, w, b = _rng_arrs(4, (1024, 256), (256,), (1024,))
+    g, l = model.quad_loss_grad(a, w, b)
+    g_ref, l_ref = ref.quad_loss_grad_ref(a, w, b)
+    np.testing.assert_allclose(g, g_ref, rtol=5e-4, atol=5e-2)
+    np.testing.assert_allclose(l[0], l_ref, rtol=5e-4, atol=5e-2)
+
+
+def test_logistic_grad_model():
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.standard_normal((1024, 256), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal(256, dtype=np.float32) * 0.05)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=1024).astype(np.float32))
+    g, l = model.logistic_loss_grad(a, w, y)
+    g_ref, l_ref = ref.logistic_loss_grad_ref(a, w, y)
+    np.testing.assert_allclose(g, g_ref, rtol=5e-4, atol=3e-2)
+    np.testing.assert_allclose(l[0], l_ref, rtol=5e-4, atol=3e-2)
+
+
+# ----------------------------------------------------------------- registry
+
+def test_artifact_registry_shapes_evaluate():
+    """Every registered artifact must trace at its declared shapes and
+    produce only f32 outputs (the Rust loader assumes f32 throughout)."""
+    for name, (fn, specs) in model.ARTIFACTS.items():
+        out = jax.eval_shape(fn, *specs)
+        assert isinstance(out, tuple) and len(out) >= 1, name
+        for o in out:
+            assert o.dtype == jnp.float32, f"{name}: {o.dtype}"
+
+
+def test_artifact_names_match_design_contract():
+    pallas = {
+        "gemm_256", "gemm_512", "gram_1024x256", "matvec_1024x256",
+        "gramvec_1024x256", "quad_grad_1024x256", "logistic_grad_1024x256",
+    }
+    # every pallas artifact has a jnp ablation twin (EXPERIMENTS.md §Perf)
+    jnp_variants = {
+        "gemm_jnp_256", "gemm_jnp_512", "gram_jnp_1024x256",
+        "matvec_jnp_1024x256", "gramvec_jnp_1024x256",
+        "quad_grad_jnp_1024x256", "logistic_grad_jnp_1024x256",
+    }
+    expected = pallas | jnp_variants
+    assert expected == set(model.ARTIFACTS), (
+        "artifact set drifted — update DESIGN.md section 4 and "
+        "rust/src/runtime/artifact.rs together with this test"
+    )
+
+
+def test_partition_shapes_are_block_multiples():
+    """AOT shapes must be divisible by the kernels' default blocks."""
+    for name, (_, specs) in model.ARTIFACTS.items():
+        a = specs[0]
+        if len(a.shape) == 2:
+            assert a.shape[0] % 128 == 0, name

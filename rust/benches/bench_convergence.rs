@@ -1,0 +1,70 @@
+//! Figure 1 as a bench: wall-clock + distributed-job accounting for the
+//! six optimizers on one representative problem (the full four-panel
+//! figure is `examples/convergence_suite.rs`). Verifies the paper's
+//! orderings numerically and reports seconds/iteration.
+
+use sparkla::bench::Table;
+use sparkla::linalg::vector::Vector;
+use sparkla::optim::accelerated::{accelerated, AccelConfig};
+use sparkla::optim::gd::{gradient_descent, GdConfig};
+use sparkla::optim::lbfgs::{lbfgs, LbfgsConfig};
+use sparkla::optim::problem::synth;
+use sparkla::optim::Regularizer;
+use sparkla::util::csv::CsvWriter;
+use sparkla::util::timer::Timer;
+use sparkla::Context;
+
+fn main() {
+    let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (rows, cols, iters) = if fast { (2000, 64, 20) } else { (10_000, 256, 60) };
+    let ctx = Context::local("bench_convergence", 4);
+    let (p, _) = synth::linear(&ctx, rows, cols, cols / 2, Regularizer::None, 8, 5).unwrap();
+    let step = 1.0 / p.lipschitz_estimate().unwrap();
+    let w0 = Vector::zeros(cols);
+    let mut table = Table::new(&["solver", "final log10 err", "grad evals", "secs", "s/grad-eval"]);
+    let mut csv = CsvWriter::create(
+        "target/experiments/fig1_bench.csv",
+        &["solver", "final_obj", "grad_evals", "secs"],
+    )
+    .unwrap();
+    let mut results = vec![];
+    println!("== Figure 1 bench: least squares {rows}x{cols}, {iters} outer iterations ==");
+    let mut run = |name: &str| {
+        let t = Timer::start();
+        let trace = match name {
+            "gra" => gradient_descent(&p, &w0, &GdConfig { step_size: step, max_iters: iters, tol: 0.0 }).unwrap(),
+            "lbfgs" => lbfgs(&p, &w0, &LbfgsConfig { max_iters: iters, ..Default::default() }).unwrap(),
+            other => accelerated(&p, &w0, &AccelConfig::variant(other, step, iters).unwrap()).unwrap(),
+        };
+        let secs = t.secs();
+        results.push((name.to_string(), trace.best(), trace.grad_evals, secs));
+    };
+    for name in ["gra", "acc", "acc_r", "acc_b", "acc_rb", "lbfgs"] {
+        run(name);
+    }
+    let f_star = results.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    for (name, best, evals, secs) in &results {
+        let log_err = (best - f_star).max(1e-16).log10();
+        table.row(&[
+            name.clone(),
+            format!("{log_err:.2}"),
+            format!("{evals}"),
+            format!("{secs:.3}"),
+            format!("{:.5}", secs / *evals as f64),
+        ]);
+        csv.write_vals(&[name, best, evals, secs]).unwrap();
+    }
+    println!("{}", table.render());
+    let p2 = csv.finish().unwrap();
+    println!("rows -> {p2:?}");
+    // assert the paper's orderings (soft: print FAIL rather than panic)
+    let get = |n: &str| results.iter().find(|r| r.0 == n).unwrap().1;
+    let checks = [
+        ("acc <= gra", get("acc") <= get("gra") + 1e-9),
+        ("acc_r <= acc * 1.05", get("acc_r") <= get("acc") * 1.05 + 1e-9),
+        ("lbfgs <= acc_rb", get("lbfgs") <= get("acc_rb") + 1e-9),
+    ];
+    for (what, ok) in checks {
+        println!("paper-shape check {}: {}", what, if ok { "OK" } else { "FAIL" });
+    }
+}

@@ -1,0 +1,96 @@
+//! Representation ablation (paper section 2's design argument): the same
+//! sparse matrix held as CoordinateMatrix / RowMatrix(sparse rows) /
+//! BlockMatrix, timing (a) the op each format is best at and (b) the
+//! conversion cost between formats ("may require a global shuffle, which
+//! is quite expensive").
+//!
+//! Also benches tree_aggregate fan-in — the knob the perf pass tunes.
+
+use sparkla::bench::{bench, BenchConfig, Table};
+use sparkla::distributed::{BlockMatrix, CoordinateMatrix};
+use sparkla::linalg::vector::Vector;
+use sparkla::util::csv::CsvWriter;
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (rows, cols, nnz, parts) = if fast {
+        (20_000u64, 200u64, 100_000usize, 8usize)
+    } else {
+        (200_000u64, 500u64, 2_000_000usize, 16usize)
+    };
+    let ctx = Context::local("bench_distributed", 4);
+    let mut csv = CsvWriter::create(
+        "target/experiments/ablation_representations.csv",
+        &["what", "median_sec"],
+    )
+    .unwrap();
+    let mut table = Table::new(&["operation", "time"]);
+    println!("== representation ablation: {rows}x{cols}, nnz={nnz} ==");
+
+    let cm = CoordinateMatrix::sprand(&ctx, rows, cols, nnz, parts, 9);
+    let mut emit = |name: &str, m: sparkla::bench::Measurement| {
+        csv.write_vals(&[&name, &m.summary.median]).unwrap();
+        table.row(&[name.into(), format!("{:.1} ms", m.summary.median * 1e3)]);
+    };
+
+    // ops in each format's sweet spot
+    emit("coordinate: transpose+count (entry streaming)", bench("t", &cfg, || {
+        std::hint::black_box(cm.transpose().nnz().unwrap());
+    }));
+    let rm = cm.to_row_matrix(parts).unwrap().cache();
+    rm.gram().unwrap(); // materialize cache before timing
+    emit("row(cached): gram A^T A", bench("gram", &cfg, || {
+        std::hint::black_box(rm.gram().unwrap());
+    }));
+    let mut rng = SplitMix64::new(10);
+    let x = Vector(rng.normal_vec(cols as usize));
+    emit("row(cached): gramvec A^T A x (ARPACK op)", bench("gv", &cfg, || {
+        std::hint::black_box(rm.gramvec(&x).unwrap());
+    }));
+    let bm = BlockMatrix::from_coordinate(&cm, 4096, 128, parts).unwrap();
+    emit("block: A + A (co-partitioned add)", bench("add", &cfg, || {
+        std::hint::black_box(bm.add(&bm).unwrap().blocks.count().unwrap());
+    }));
+
+    // conversion costs (the section-2 "choose your format wisely" claim)
+    emit("convert: coordinate -> row (shuffle)", bench("c2r", &cfg, || {
+        std::hint::black_box(cm.to_row_matrix(parts).unwrap().rows.count().unwrap());
+    }));
+    emit("convert: coordinate -> block (shuffle)", bench("c2b", &cfg, || {
+        std::hint::black_box(BlockMatrix::from_coordinate(&cm, 4096, 128, parts).unwrap().blocks.count().unwrap());
+    }));
+
+    // tree_aggregate fan-in ablation on the gram reduction
+    for fanin in [2usize, 4, 8, 16] {
+        let rm2 = rm.clone();
+        let m = bench(&format!("fanin{fanin}"), &cfg, || {
+            let n = cols as usize;
+            let partial = rm2.rows.map_partitions_with_index(move |_p, rs| {
+                let mut g = sparkla::linalg::matrix::DenseMatrix::zeros(n, n);
+                for r in rs {
+                    r.gram_into(&mut g);
+                }
+                vec![g]
+            });
+            std::hint::black_box(
+                partial
+                    .tree_aggregate(
+                        sparkla::linalg::matrix::DenseMatrix::zeros(n, n),
+                        |a, b| a.add(b).unwrap(),
+                        |a, b| a.add(&b).unwrap(),
+                        fanin,
+                    )
+                    .unwrap(),
+            );
+        });
+        emit(&format!("gram reduction, tree fan-in {fanin}"), m);
+    }
+    println!("{}", table.render());
+    let p = csv.finish().unwrap();
+    println!("rows -> {p:?}");
+    println!("shape check vs paper section 2: conversions (shuffles) dominate per-op costs;");
+    println!("cached row format wins for repeated gram/gramvec (the SVD/optimizer pattern).");
+}

@@ -1,0 +1,33 @@
+//! An ARPACK-style symmetric eigensolver behind a **reverse-communication
+//! interface** — the paper's §3.1.1 centerpiece.
+//!
+//! The paper's point is architectural: ARPACK never touches the matrix;
+//! it hands control back to the caller with "multiply this vector for
+//! me", and the caller is free to do that multiply *on a cluster*. We
+//! reproduce exactly that contract:
+//!
+//! ```no_run
+//! # use sparkla::arpack::{Lanczos, LanczosStep};
+//! # fn cluster_multiply(x: &[f64]) -> Vec<f64> { x.to_vec() }
+//! let mut solver = Lanczos::new(100, 5, 1e-10, 300).unwrap();
+//! loop {
+//!     match solver.step().unwrap() {
+//!         LanczosStep::MatVec { x, y } => {
+//!             // ship to the cluster (RowMatrix::gramvec) — the solver
+//!             // neither knows nor cares
+//!             y.copy_from_slice(&cluster_multiply(&x));
+//!         }
+//!         LanczosStep::Converged => break,
+//!     }
+//! }
+//! let (values, vectors) = solver.extract().unwrap();
+//! ```
+//!
+//! [`lanczos`] implements the implicitly restarted Lanczos method (IRLM —
+//! what dsaupd runs for symmetric operators) for the largest eigenvalues
+//! of a symmetric PSD operator, which is all the SVD path needs
+//! (eigenvalues of AᵀA).
+
+pub mod lanczos;
+
+pub use lanczos::{Lanczos, LanczosStep};

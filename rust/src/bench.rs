@@ -1,0 +1,198 @@
+//! Micro/macro-benchmark harness (criterion is unavailable offline):
+//! warmup + timed samples + median/percentile reporting, plus a
+//! fixed-width table printer matching the paper's result layout.
+
+use crate::util::stats::Summary;
+use crate::util::timer::{human_duration, Timer};
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup runs (not measured).
+    pub warmup: usize,
+    /// Measured samples.
+    pub samples: usize,
+    /// Soft wall-clock budget per benchmark (seconds); sampling stops
+    /// early once exceeded (keeps `cargo bench` bounded).
+    pub budget_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 1, samples: 5, budget_secs: 30.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Scale samples down via `SPARKLA_BENCH_FAST=1` (CI smoke mode).
+    pub fn from_env() -> BenchConfig {
+        let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        if fast {
+            BenchConfig { warmup: 0, samples: 2, budget_secs: 5.0 }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark id (table row).
+    pub name: String,
+    /// Timing summary over samples (seconds).
+    pub summary: Summary,
+    /// Optional throughput denominator (ops/flops per run).
+    pub work: Option<f64>,
+}
+
+impl Measurement {
+    /// Median seconds.
+    pub fn median(&self) -> f64 {
+        self.summary.median
+    }
+
+    /// Throughput in `work / median` units (e.g. GFLOP/s when work is
+    /// FLOPs) — the Fig. 2 y-axis.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work.map(|w| w / self.summary.median)
+    }
+}
+
+/// Run one benchmark: `f` is the timed unit.
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    bench_with_work(name, cfg, None, &mut f)
+}
+
+/// Run with a throughput denominator.
+pub fn bench_with_work(
+    name: &str,
+    cfg: &BenchConfig,
+    work: Option<f64>,
+    f: &mut dyn FnMut(),
+) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let budget = Timer::start();
+    let mut times = vec![];
+    for _ in 0..cfg.samples.max(1) {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+        if budget.secs() > cfg.budget_secs {
+            break;
+        }
+    }
+    Measurement { name: name.to_string(), summary: Summary::of(&times), work }
+}
+
+/// Fixed-width results table (the bench binaries' stdout format; the
+/// same rows are also written as CSV for external plotting).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a measurement row fragment: median ± spread.
+pub fn fmt_timing(m: &Measurement) -> String {
+    format!(
+        "{} (p05 {}, p95 {})",
+        human_duration(m.summary.median),
+        human_duration(m.summary.p05),
+        human_duration(m.summary.p95)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarizes() {
+        let cfg = BenchConfig { warmup: 1, samples: 3, budget_secs: 10.0 };
+        let mut count = 0;
+        let m = bench("noop", &cfg, || {
+            count += 1;
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 samples
+        assert_eq!(m.summary.n, 3);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let cfg = BenchConfig { warmup: 0, samples: 2, budget_secs: 10.0 };
+        let m = bench_with_work("flops", &cfg, Some(1e9), &mut || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let t = m.throughput().unwrap();
+        assert!(t > 0.0 && t < 1.1e12);
+    }
+
+    #[test]
+    fn budget_stops_sampling() {
+        let cfg = BenchConfig { warmup: 0, samples: 1000, budget_secs: 0.02 };
+        let m = bench("slow", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        assert!(m.summary.n < 1000, "budget should cut sampling");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("longer-name"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only".into()]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Configuration system: cluster topology, fault injection, runtime
+//! artifact location, solver defaults. Values load from (in order of
+//! precedence) explicit setters, a `key = value` config file, and
+//! `SPARKLA_*` environment variables.
+
+pub mod parse;
+
+use crate::error::{Error, Result};
+
+/// Fault-injection settings for the simulated cluster (all probabilities
+/// per *task attempt*; deterministic under `seed`).
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Probability a task attempt fails with a (retryable) injected fault.
+    pub task_fail_prob: f64,
+    /// Probability a task attempt takes down its whole executor —
+    /// evicting every cached block that executor held (forces lineage
+    /// recompute, the paper's §1.1(3) claim).
+    pub executor_kill_prob: f64,
+    /// RNG seed for the injector.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { task_fail_prob: 0.0, executor_kill_prob: 0.0, seed: 0xFA17 }
+    }
+}
+
+/// Top-level cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Application name (logs / metrics).
+    pub app_name: String,
+    /// Number of logical executors (the paper's Table 1 ran 68).
+    pub num_executors: usize,
+    /// Worker threads per executor.
+    pub cores_per_executor: usize,
+    /// Max attempts per task before the job fails.
+    pub max_task_retries: usize,
+    /// Default partition count for `parallelize` when unspecified.
+    pub default_parallelism: usize,
+    /// Fault injection.
+    pub fault: FaultConfig,
+    /// Directory holding AOT artifacts (`manifest.txt` + `*.hlo.txt`).
+    pub artifacts_dir: String,
+    /// Use the XLA/PJRT runtime for per-partition kernels when artifacts
+    /// are available (falls back to native automatically when not).
+    pub use_xla: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            app_name: "sparkla".into(),
+            num_executors: 4,
+            cores_per_executor: 2,
+            max_task_retries: 4,
+            default_parallelism: 8,
+            fault: FaultConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            use_xla: false,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Total worker threads.
+    pub fn total_cores(&self) -> usize {
+        self.num_executors * self.cores_per_executor
+    }
+
+    /// Apply `key = value` pairs (from a file or CLI) — see
+    /// [`parse::parse_kv`] for the accepted syntax.
+    pub fn apply_kv(&mut self, pairs: &[(String, String)]) -> Result<()> {
+        for (k, v) in pairs {
+            let bad = |what: &str| {
+                Error::InvalidArgument(format!("config {k} = {v:?}: expected {what}"))
+            };
+            match k.as_str() {
+                "app_name" => self.app_name = v.clone(),
+                "num_executors" => {
+                    self.num_executors = v.parse().map_err(|_| bad("usize"))?
+                }
+                "cores_per_executor" => {
+                    self.cores_per_executor = v.parse().map_err(|_| bad("usize"))?
+                }
+                "max_task_retries" => {
+                    self.max_task_retries = v.parse().map_err(|_| bad("usize"))?
+                }
+                "default_parallelism" => {
+                    self.default_parallelism = v.parse().map_err(|_| bad("usize"))?
+                }
+                "fault.task_fail_prob" => {
+                    self.fault.task_fail_prob = v.parse().map_err(|_| bad("f64"))?
+                }
+                "fault.executor_kill_prob" => {
+                    self.fault.executor_kill_prob = v.parse().map_err(|_| bad("f64"))?
+                }
+                "fault.seed" => self.fault.seed = v.parse().map_err(|_| bad("u64"))?,
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                "use_xla" => self.use_xla = v.parse().map_err(|_| bad("bool"))?,
+                other => {
+                    return Err(Error::InvalidArgument(format!("unknown config key {other:?}")))
+                }
+            }
+        }
+        self.validate()
+    }
+
+    /// Load overrides from a config file (see `parse`).
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("config file {path}"), e))?;
+        let pairs = parse::parse_kv(&text)?;
+        self.apply_kv(&pairs)
+    }
+
+    /// Apply `SPARKLA_*` environment variables (e.g.
+    /// `SPARKLA_NUM_EXECUTORS=8`, `SPARKLA_FAULT_TASK_FAIL_PROB=0.05`).
+    /// Unknown env keys are ignored (the shell environment is shared);
+    /// known keys still validate their values.
+    pub fn apply_env(&mut self) -> Result<()> {
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("SPARKLA_") {
+                let key = rest.to_lowercase().replacen("fault_", "fault.", 1);
+                if key == "local_threads" {
+                    continue; // consumed by util::pool
+                }
+                let _ = self.apply_kv(&[(key, v)]);
+            }
+        }
+        self.validate()
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_executors == 0 || self.cores_per_executor == 0 {
+            return Err(Error::InvalidArgument("executors and cores must be >= 1".into()));
+        }
+        if self.default_parallelism == 0 {
+            return Err(Error::InvalidArgument("default_parallelism must be >= 1".into()));
+        }
+        for (name, p) in [
+            ("task_fail_prob", self.fault.task_fail_prob),
+            ("executor_kill_prob", self.fault.executor_kill_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::InvalidArgument(format!("{name} must be in [0,1], got {p}")));
+            }
+        }
+        if self.max_task_retries == 0 {
+            return Err(Error::InvalidArgument("max_task_retries must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ClusterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut c = ClusterConfig::default();
+        c.apply_kv(&[
+            ("num_executors".into(), "16".into()),
+            ("fault.task_fail_prob".into(), "0.25".into()),
+            ("use_xla".into(), "true".into()),
+        ])
+        .unwrap();
+        assert_eq!(c.num_executors, 16);
+        assert_eq!(c.fault.task_fail_prob, 0.25);
+        assert!(c.use_xla);
+        assert_eq!(c.total_cores(), 32);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut c = ClusterConfig::default();
+        assert!(c.apply_kv(&[("num_executors".into(), "zero".into())]).is_err());
+        assert!(c.apply_kv(&[("fault.task_fail_prob".into(), "1.5".into())]).is_err());
+        assert!(c.apply_kv(&[("no_such_key".into(), "1".into())]).is_err());
+        assert!(c.apply_kv(&[("num_executors".into(), "0".into())]).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! `key = value` config-file parser (a TOML-flavored subset: comments with
+//! `#`, optional `[section]` headers that prefix keys with `section.`,
+//! quoted or bare values).
+
+use crate::error::{Error, Result};
+
+/// Parse config text into ordered (key, value) pairs.
+pub fn parse_kv(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = vec![];
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(Error::InvalidArgument(format!(
+                    "config line {}: unterminated section header {line:?}",
+                    lineno + 1
+                )));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| {
+            Error::InvalidArgument(format!("config line {}: expected key = value, got {line:?}", lineno + 1))
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.push((key, unquote(v.trim())));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // don't strip '#' inside quotes
+    let mut in_quote = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_pairs_and_comments() {
+        let pairs = parse_kv("a = 1\n# comment\nb=hello # trailing\n\nc = \"x # y\"\n").unwrap();
+        assert_eq!(
+            pairs,
+            vec![
+                ("a".into(), "1".into()),
+                ("b".into(), "hello".into()),
+                ("c".into(), "x # y".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let pairs = parse_kv("[fault]\ntask_fail_prob = 0.1\nseed = 7\n").unwrap();
+        assert_eq!(pairs[0].0, "fault.task_fail_prob");
+        assert_eq!(pairs[1].0, "fault.seed");
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(parse_kv("just a line\n").is_err());
+        assert!(parse_kv("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip_into_cluster_config() {
+        let mut c = crate::config::ClusterConfig::default();
+        let pairs =
+            parse_kv("num_executors = 6\n[fault]\ntask_fail_prob = 0.05\n").unwrap();
+        c.apply_kv(&pairs).unwrap();
+        assert_eq!(c.num_executors, 6);
+        assert_eq!(c.fault.task_fail_prob, 0.05);
+    }
+}

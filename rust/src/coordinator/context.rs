@@ -1,0 +1,128 @@
+//! `Context` — the user's entry point (Spark's `SparkContext` analog).
+
+use std::sync::{Arc, OnceLock};
+
+use crate::config::ClusterConfig;
+use crate::error::Result;
+use crate::rdd::core::Rdd;
+use crate::rdd::exec::Cluster;
+use crate::rdd::Broadcast;
+use crate::runtime::client::RuntimeHandle;
+
+/// Owns the simulated cluster and (lazily) the XLA PJRT runtime.
+/// Cheap to clone; all clones share the same cluster.
+#[derive(Clone)]
+pub struct Context {
+    pub(crate) cluster: Arc<Cluster>,
+    runtime: Arc<OnceLock<Option<Arc<RuntimeHandle>>>>,
+}
+
+impl Context {
+    /// Build from a full configuration.
+    pub fn with_config(config: ClusterConfig) -> Context {
+        config.validate().expect("invalid ClusterConfig");
+        Context { cluster: Cluster::start(config), runtime: Arc::new(OnceLock::new()) }
+    }
+
+    /// Local cluster with `num_executors` executors (2 cores each) and no
+    /// fault injection — the quickstart constructor.
+    pub fn local(app_name: &str, num_executors: usize) -> Context {
+        let mut cfg = ClusterConfig { app_name: app_name.into(), ..Default::default() };
+        cfg.num_executors = num_executors.max(1);
+        Context::with_config(cfg)
+    }
+
+    /// The underlying cluster (metrics, cache, injector).
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Configuration snapshot.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cluster.config
+    }
+
+    /// Scheduler metrics.
+    pub fn metrics(&self) -> &crate::rdd::Metrics {
+        &self.cluster.metrics
+    }
+
+    /// Distribute a local collection into `num_partitions` slices.
+    pub fn parallelize<T: Clone + Send + Sync + 'static>(
+        &self,
+        data: Vec<T>,
+        num_partitions: usize,
+    ) -> Rdd<T> {
+        let n = data.len();
+        let parts = num_partitions.max(1);
+        let data = Arc::new(data);
+        Rdd::from_parts(
+            Arc::clone(&self.cluster),
+            format!("parallelize[{n}]"),
+            parts,
+            vec![],
+            Box::new(move |p, _exec| {
+                let per = n.div_ceil(parts);
+                let lo = (p * per).min(n);
+                let hi = ((p + 1) * per).min(n);
+                Ok(data[lo..hi].to_vec())
+            }),
+        )
+    }
+
+    /// Generate an RDD from a per-partition generator (no driver-side
+    /// materialization — how the benches build matrices bigger than the
+    /// driver would want to hold).
+    pub fn generate<T, F>(&self, name: &str, num_partitions: usize, gen: F) -> Rdd<T>
+    where
+        T: Send + Sync + 'static,
+        F: Fn(usize) -> Vec<T> + Send + Sync + 'static,
+    {
+        Rdd::from_parts(
+            Arc::clone(&self.cluster),
+            name.to_string(),
+            num_partitions.max(1),
+            vec![],
+            Box::new(move |p, _exec| Ok(gen(p))),
+        )
+    }
+
+    /// Broadcast a read-only value to all tasks.
+    pub fn broadcast<T>(&self, value: T) -> Broadcast<T> {
+        Broadcast::new(self.cluster.new_id(), value)
+    }
+
+    /// The XLA runtime handle, if artifacts are present and `use_xla` is
+    /// set (or if artifacts exist at the configured path). Returns `None`
+    /// when unavailable — callers fall back to native kernels.
+    pub fn runtime(&self) -> Option<Arc<RuntimeHandle>> {
+        self.runtime
+            .get_or_init(|| {
+                if !self.cluster.config.use_xla {
+                    return None;
+                }
+                match RuntimeHandle::start(&self.cluster.config.artifacts_dir) {
+                    Ok(h) => Some(Arc::new(h)),
+                    Err(e) => {
+                        eprintln!(
+                            "[sparkla] XLA runtime unavailable ({e}); falling back to native kernels"
+                        );
+                        None
+                    }
+                }
+            })
+            .clone()
+    }
+
+    /// Force-start the runtime (errors instead of falling back) — used by
+    /// the end-to-end example to prove the XLA path is really exercised.
+    pub fn runtime_required(&self) -> Result<Arc<RuntimeHandle>> {
+        if let Some(rt) = self.runtime() {
+            return Ok(rt);
+        }
+        Err(crate::error::Error::ArtifactMissing(format!(
+            "use_xla={} artifacts_dir={}",
+            self.cluster.config.use_xla, self.cluster.config.artifacts_dir
+        )))
+    }
+}

@@ -1,0 +1,106 @@
+//! Driver-loop helpers: the concrete embodiment of the paper's central
+//! idea — *separate matrix operations from vector operations* (§1.2(2)).
+//!
+//! A [`DriverLoop`] wraps an iterative algorithm whose per-iteration work
+//! splits into (a) one or more **matrix ops** shipped to the cluster and
+//! (b) **vector ops** executed locally. The ARPACK driver (`arpack`),
+//! gradient methods (`optim`), and TFOCS (`tfocs`) are all instances.
+//! The struct also centralizes iteration accounting so every solver
+//! reports comparable metrics (matrix ops ≙ "spark jobs" in Fig. 1's
+//! x-axis).
+
+use crate::util::timer::Timer;
+
+/// Iteration bookkeeping for a matrix-ops/vector-ops separated algorithm.
+#[derive(Debug, Clone)]
+pub struct DriverLoop {
+    /// Algorithm label (metrics/logs).
+    pub name: String,
+    /// Cluster-side matrix operations performed (≈ Spark jobs).
+    pub matrix_ops: usize,
+    /// Driver-side vector operations performed.
+    pub vector_ops: usize,
+    /// Outer iterations completed.
+    pub iterations: usize,
+    /// Wall-clock per iteration (seconds).
+    pub iter_times: Vec<f64>,
+    timer: Timer,
+}
+
+impl DriverLoop {
+    /// New loop with a label.
+    pub fn new(name: impl Into<String>) -> DriverLoop {
+        DriverLoop {
+            name: name.into(),
+            matrix_ops: 0,
+            vector_ops: 0,
+            iterations: 0,
+            iter_times: vec![],
+            timer: Timer::start(),
+        }
+    }
+
+    /// Record a cluster-side matrix op.
+    pub fn matrix_op(&mut self) {
+        self.matrix_ops += 1;
+    }
+
+    /// Record a driver-side vector op.
+    pub fn vector_op(&mut self) {
+        self.vector_ops += 1;
+    }
+
+    /// Close an outer iteration (records its wall time).
+    pub fn end_iteration(&mut self) {
+        self.iterations += 1;
+        self.iter_times.push(self.timer.lap());
+    }
+
+    /// Mean seconds per iteration (0 when none).
+    pub fn mean_iter_secs(&self) -> f64 {
+        if self.iter_times.is_empty() {
+            0.0
+        } else {
+            self.iter_times.iter().sum::<f64>() / self.iter_times.len() as f64
+        }
+    }
+
+    /// Total time across recorded iterations.
+    pub fn total_secs(&self) -> f64 {
+        self.iter_times.iter().sum()
+    }
+
+    /// Table-1-style report row: `name  iters  s/iter  total`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<24} iters={:<5} matrix_ops={:<6} s/iter={:<10.4} total={:.3}s",
+            self.name,
+            self.iterations,
+            self.matrix_ops,
+            self.mean_iter_secs(),
+            self.total_secs()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut d = DriverLoop::new("test");
+        for _ in 0..3 {
+            d.matrix_op();
+            d.vector_op();
+            d.vector_op();
+            d.end_iteration();
+        }
+        assert_eq!(d.iterations, 3);
+        assert_eq!(d.matrix_ops, 3);
+        assert_eq!(d.vector_ops, 6);
+        assert_eq!(d.iter_times.len(), 3);
+        assert!(d.mean_iter_secs() >= 0.0);
+        assert!(d.report().contains("test"));
+    }
+}

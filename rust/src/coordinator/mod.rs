@@ -1,0 +1,7 @@
+//! The driver-side coordination layer: [`context::Context`] owns the
+//! cluster, the XLA runtime handle, and the metrics; [`driver`] holds the
+//! matrix-ops-to-the-cluster / vector-ops-on-the-driver loop helpers that
+//! implement the paper's central idea (§1.2(2), §3).
+
+pub mod context;
+pub mod driver;

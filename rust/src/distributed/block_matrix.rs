@@ -1,0 +1,373 @@
+//! `BlockMatrix` (paper §2.3): dense sub-blocks in an RDD keyed by block
+//! coordinates. Supports `add`, `multiply` (the shuffle-join the paper's
+//! "large linear model parallelism" [4, 9] builds on), `transpose`, and
+//! the paper's `validate` helper.
+
+use crate::coordinator::context::Context;
+use crate::distributed::coordinate_matrix::{CoordinateMatrix, MatrixEntry};
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+use crate::rdd::Rdd;
+
+/// Block-partitioned distributed matrix.
+#[derive(Clone)]
+pub struct BlockMatrix {
+    /// ((block_row, block_col), block) records.
+    pub blocks: Rdd<((usize, usize), DenseMatrix)>,
+    /// Rows per (full) block.
+    pub rows_per_block: usize,
+    /// Cols per (full) block.
+    pub cols_per_block: usize,
+    /// Total rows.
+    pub num_rows: usize,
+    /// Total cols.
+    pub num_cols: usize,
+    ctx: Context,
+}
+
+impl BlockMatrix {
+    /// Wrap a blocks RDD (callers promise block sizes; `validate()` checks).
+    pub fn new(
+        ctx: &Context,
+        blocks: Rdd<((usize, usize), DenseMatrix)>,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_rows: usize,
+        num_cols: usize,
+    ) -> BlockMatrix {
+        BlockMatrix { blocks, rows_per_block, cols_per_block, num_rows, num_cols, ctx: ctx.clone() }
+    }
+
+    /// Split a local matrix into blocks.
+    pub fn from_local(
+        ctx: &Context,
+        a: &DenseMatrix,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> BlockMatrix {
+        let mut blocks = vec![];
+        for bi in 0..a.rows.div_ceil(rows_per_block) {
+            for bj in 0..a.cols.div_ceil(cols_per_block) {
+                let r0 = bi * rows_per_block;
+                let c0 = bj * cols_per_block;
+                let nr = rows_per_block.min(a.rows - r0);
+                let nc = cols_per_block.min(a.cols - c0);
+                blocks.push(((bi, bj), a.block(r0, c0, nr, nc)));
+            }
+        }
+        BlockMatrix::new(
+            ctx,
+            ctx.parallelize(blocks, num_partitions),
+            rows_per_block,
+            cols_per_block,
+            a.rows,
+            a.cols,
+        )
+    }
+
+    /// From coordinate entries (one shuffle; the paper's
+    /// `CoordinateMatrix.toBlockMatrix`).
+    pub fn from_coordinate(
+        cm: &CoordinateMatrix,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        let (nr, nc) = (cm.num_rows as usize, cm.num_cols as usize);
+        let rpb = rows_per_block;
+        let cpb = cols_per_block;
+        let keyed = cm
+            .entries
+            .map(move |e| (((e.i as usize / rpb), (e.j as usize / cpb)), vec![*e]));
+        let grouped = keyed.reduce_by_key(num_partitions.max(1), |a: &Vec<MatrixEntry>, b| {
+            let mut v = a.clone();
+            v.extend_from_slice(b);
+            v
+        });
+        let blocks = grouped.map(move |((bi, bj), entries)| {
+            let (bi, bj) = (*bi, *bj);
+            let block_rows = rpb.min(nr - bi * rpb);
+            let block_cols = cpb.min(nc - bj * cpb);
+            let mut m = DenseMatrix::zeros(block_rows, block_cols);
+            for e in entries {
+                let li = e.i as usize - bi * rpb;
+                let lj = e.j as usize - bj * cpb;
+                let cur = m.get(li, lj);
+                m.set(li, lj, cur + e.value);
+            }
+            ((bi, bj), m)
+        });
+        Ok(BlockMatrix::new(cm.context(), blocks, rpb, cpb, nr, nc))
+    }
+
+    /// Block-grid dimensions.
+    pub fn grid(&self) -> (usize, usize) {
+        (
+            self.num_rows.div_ceil(self.rows_per_block),
+            self.num_cols.div_ceil(self.cols_per_block),
+        )
+    }
+
+    /// The paper's `validate()`: checks block indices are in range, block
+    /// shapes match their grid slot, and no duplicate indices exist.
+    pub fn validate(&self) -> Result<()> {
+        let (gr, gc) = self.grid();
+        let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
+        let (nr, nc) = (self.num_rows, self.num_cols);
+        let issues = self.blocks.map(move |((bi, bj), m)| {
+            let (bi, bj) = (*bi, *bj);
+            let mut problems: Vec<String> = vec![];
+            if bi >= gr || bj >= gc {
+                problems.push(format!("block ({bi},{bj}) outside {gr}x{gc} grid"));
+            } else {
+                let want_r = rpb.min(nr - bi * rpb);
+                let want_c = cpb.min(nc - bj * cpb);
+                if (m.rows, m.cols) != (want_r, want_c) {
+                    problems.push(format!(
+                        "block ({bi},{bj}) is {}x{}, expected {want_r}x{want_c}",
+                        m.rows, m.cols
+                    ));
+                }
+            }
+            ((bi, bj), problems)
+        });
+        let collected = issues.collect()?;
+        let mut seen = std::collections::HashSet::new();
+        for ((bi, bj), problems) in collected {
+            if let Some(p) = problems.first() {
+                return Err(Error::Validation(p.clone()));
+            }
+            if !seen.insert((bi, bj)) {
+                return Err(Error::Validation(format!("duplicate block index ({bi},{bj})")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Element-wise add (blocks co-located by key; one shuffle each side).
+    pub fn add(&self, other: &BlockMatrix) -> Result<BlockMatrix> {
+        if (self.num_rows, self.num_cols) != (other.num_rows, other.num_cols)
+            || (self.rows_per_block, self.cols_per_block)
+                != (other.rows_per_block, other.cols_per_block)
+        {
+            return Err(Error::dim(format!(
+                "BlockMatrix add: {}x{} ({}x{} blocks) vs {}x{} ({}x{} blocks)",
+                self.num_rows,
+                self.num_cols,
+                self.rows_per_block,
+                self.cols_per_block,
+                other.num_rows,
+                other.num_cols,
+                other.rows_per_block,
+                other.cols_per_block
+            )));
+        }
+        let parts = self.blocks.num_partitions().max(other.blocks.num_partitions());
+        let tagged = self
+            .blocks
+            .map(|(k, m)| (*k, m.clone()))
+            .union(&other.blocks.map(|(k, m)| (*k, m.clone())));
+        let summed = tagged.reduce_by_key(parts, |a: &DenseMatrix, b: &DenseMatrix| {
+            a.add(b).expect("validated block shapes")
+        });
+        Ok(BlockMatrix::new(
+            &self.ctx,
+            summed,
+            self.rows_per_block,
+            self.cols_per_block,
+            self.num_rows,
+            self.num_cols,
+        ))
+    }
+
+    /// Distributed matrix multiply: join on the contraction index k —
+    /// map each A(i,k) and B(k,j) to key k, join, emit partial products
+    /// keyed (i,j), reduce by sum. (The classic SUMMA-over-shuffle.)
+    pub fn multiply(&self, other: &BlockMatrix) -> Result<BlockMatrix> {
+        if self.num_cols != other.num_rows || self.cols_per_block != other.rows_per_block {
+            return Err(Error::dim(format!(
+                "BlockMatrix multiply: inner {} ({}per) vs {} ({}per)",
+                self.num_cols, self.cols_per_block, other.num_rows, other.rows_per_block
+            )));
+        }
+        let parts = self.blocks.num_partitions().max(other.blocks.num_partitions());
+        let a_by_k = self.blocks.map(|((i, k), m)| (*k, (*i, m.clone())));
+        let b_by_k = other.blocks.map(|((k, j), m)| (*k, (*j, m.clone())));
+        let joined = a_by_k.join(&b_by_k, parts);
+        let partials = joined.map(|(_k, ((i, a), (j, b)))| {
+            ((*i, *j), a.matmul(b).expect("inner block dims validated"))
+        });
+        let reduced = partials.reduce_by_key(parts, |x: &DenseMatrix, y: &DenseMatrix| {
+            x.add(y).expect("partial product shapes agree")
+        });
+        Ok(BlockMatrix::new(
+            &self.ctx,
+            reduced,
+            self.rows_per_block,
+            other.cols_per_block,
+            self.num_rows,
+            other.num_cols,
+        ))
+    }
+
+    /// Transpose (blocks transpose locally; indices swap).
+    pub fn transpose(&self) -> BlockMatrix {
+        let blocks = self.blocks.map(|((i, j), m)| ((*j, *i), m.transpose()));
+        BlockMatrix::new(
+            &self.ctx,
+            blocks,
+            self.cols_per_block,
+            self.rows_per_block,
+            self.num_cols,
+            self.num_rows,
+        )
+    }
+
+    /// Scale every block.
+    pub fn scale(&self, alpha: f64) -> BlockMatrix {
+        let blocks = self.blocks.map(move |(k, m)| (*k, m.scale(alpha)));
+        BlockMatrix::new(
+            &self.ctx,
+            blocks,
+            self.rows_per_block,
+            self.cols_per_block,
+            self.num_rows,
+            self.num_cols,
+        )
+    }
+
+    /// Collect to a local dense matrix (tests / small results).
+    pub fn to_local(&self) -> Result<DenseMatrix> {
+        let mut out = DenseMatrix::zeros(self.num_rows, self.num_cols);
+        for ((bi, bj), m) in self.blocks.collect()? {
+            let r0 = bi * self.rows_per_block;
+            let c0 = bj * self.cols_per_block;
+            for i in 0..m.rows {
+                for j in 0..m.cols {
+                    let cur = out.get(r0 + i, c0 + j);
+                    out.set(r0 + i, c0 + j, cur + m.get(i, j));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("block_test", 2)
+    }
+
+    #[test]
+    fn from_local_roundtrip_property() {
+        check("blockmatrix to_local == original", 8, |g| {
+            let c = ctx();
+            let r = 1 + g.int(0, 20);
+            let cc = 1 + g.int(0, 20);
+            let a = DenseMatrix::randn(r, cc, g.rng());
+            let rpb = 1 + g.int(0, 6);
+            let cpb = 1 + g.int(0, 6);
+            let bm = BlockMatrix::from_local(&c, &a, rpb, cpb, 3);
+            bm.validate().unwrap();
+            assert!(bm.to_local().unwrap().max_abs_diff(&a) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn add_matches_local_property() {
+        check("block add == local add", 6, |g| {
+            let c = ctx();
+            let r = 1 + g.int(0, 15);
+            let cc = 1 + g.int(0, 15);
+            let a = DenseMatrix::randn(r, cc, g.rng());
+            let b = DenseMatrix::randn(r, cc, g.rng());
+            let rpb = 1 + g.int(0, 4);
+            let cpb = 1 + g.int(0, 4);
+            let ba = BlockMatrix::from_local(&c, &a, rpb, cpb, 2);
+            let bb = BlockMatrix::from_local(&c, &b, rpb, cpb, 3);
+            let sum = ba.add(&bb).unwrap().to_local().unwrap();
+            assert!(sum.max_abs_diff(&a.add(&b).unwrap()) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn multiply_matches_local_property() {
+        check("block multiply == local matmul", 6, |g| {
+            let c = ctx();
+            let m = 1 + g.int(0, 12);
+            let k = 1 + g.int(0, 12);
+            let n = 1 + g.int(0, 12);
+            let a = DenseMatrix::randn(m, k, g.rng());
+            let b = DenseMatrix::randn(k, n, g.rng());
+            let rpb = 1 + g.int(0, 4);
+            let inner = 1 + g.int(0, 4);
+            let cpb = 1 + g.int(0, 4);
+            let ba = BlockMatrix::from_local(&c, &a, rpb, inner, 2);
+            let bb = BlockMatrix::from_local(&c, &b, inner, cpb, 2);
+            let prod = ba.multiply(&bb).unwrap().to_local().unwrap();
+            let want = a.matmul(&b).unwrap();
+            assert!(
+                prod.max_abs_diff(&want) < 1e-10 * (1.0 + want.frob_norm()),
+                "err {}",
+                prod.max_abs_diff(&want)
+            );
+        });
+    }
+
+    #[test]
+    fn transpose_matches_local() {
+        let c = ctx();
+        let a = DenseMatrix::randn(7, 11, &mut SplitMix64::new(1));
+        let bm = BlockMatrix::from_local(&c, &a, 3, 4, 2);
+        let t = bm.transpose();
+        t.validate().unwrap();
+        assert!(t.to_local().unwrap().max_abs_diff(&a.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn from_coordinate_matches() {
+        let c = ctx();
+        let cm = CoordinateMatrix::sprand(&c, 25, 13, 80, 3, 9);
+        let bm = BlockMatrix::from_coordinate(&cm, 4, 5, 3).unwrap();
+        bm.validate().unwrap();
+        assert!(bm.to_local().unwrap().max_abs_diff(&cm.to_local().unwrap()) < 1e-12);
+    }
+
+    #[test]
+    fn dim_mismatches_rejected() {
+        let c = ctx();
+        let a = DenseMatrix::randn(4, 4, &mut SplitMix64::new(2));
+        let b = DenseMatrix::randn(5, 4, &mut SplitMix64::new(3));
+        let ba = BlockMatrix::from_local(&c, &a, 2, 2, 2);
+        let bb = BlockMatrix::from_local(&c, &b, 2, 2, 2);
+        assert!(ba.add(&bb).is_err());
+        assert!(ba.multiply(&bb).is_err()); // inner 4 vs 5
+    }
+
+    #[test]
+    fn validate_catches_bad_blocks() {
+        let c = ctx();
+        // block claims index outside the grid
+        let blocks = c.parallelize(vec![((5usize, 0usize), DenseMatrix::zeros(2, 2))], 1);
+        let bm = BlockMatrix::new(&c, blocks, 2, 2, 4, 4);
+        assert!(bm.validate().is_err());
+        // wrong shape
+        let blocks = c.parallelize(vec![((0usize, 0usize), DenseMatrix::zeros(1, 2))], 1);
+        let bm = BlockMatrix::new(&c, blocks, 2, 2, 4, 4);
+        assert!(bm.validate().is_err());
+    }
+
+    #[test]
+    fn scale_matches() {
+        let c = ctx();
+        let a = DenseMatrix::randn(6, 6, &mut SplitMix64::new(4));
+        let bm = BlockMatrix::from_local(&c, &a, 2, 3, 2);
+        assert!(bm.scale(-2.5).to_local().unwrap().max_abs_diff(&a.scale(-2.5)) < 1e-12);
+    }
+}

@@ -1,0 +1,195 @@
+//! Column cosine similarities: exact (via the Gram matrix) and DIMSUM
+//! (Dimension-Independent Matrix Square using MapReduce — paper §3.4,
+//! refs [10, 11], by the paper's first author).
+//!
+//! DIMSUM's idea: when computing AᵀA for similarity, rows with large
+//! norms dominate communication. Sampling each co-occurrence (i,j) in a
+//! row with probability min(1, γ / (‖cᵢ‖‖cⱼ‖)) and scaling keeps the
+//! estimate unbiased while bounding shuffle size *independently of the
+//! matrix dimension*. γ = 4 log(n)/ε² gives ε-accurate similarities
+//! w.h.p.; callers pass a `threshold` that trades accuracy for traffic.
+
+use crate::distributed::row::Row;
+use crate::distributed::row_matrix::{RowMatrix, TREE_FANIN};
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+use crate::util::rng::SplitMix64;
+
+/// Exact cosine similarities: normalize the Gram matrix.
+pub fn similarities_exact(a: &RowMatrix) -> Result<DenseMatrix> {
+    let g = a.gram()?;
+    let n = g.rows;
+    let norms: Vec<f64> = (0..n).map(|i| g.get(i, i).max(0.0).sqrt()).collect();
+    let mut s = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let d = norms[i] * norms[j];
+            s.set(i, j, if d > 1e-300 { g.get(i, j) / d } else { 0.0 });
+        }
+    }
+    Ok(s)
+}
+
+/// DIMSUM-sampled cosine similarities. `threshold` ∈ (0, 1]: similarities
+/// above it are estimated within ~20% w.h.p.; smaller thresholds sample
+/// more. Uses the paper's γ = 10·log(n)/threshold oversampling constant.
+pub fn similarities_dimsum(a: &RowMatrix, threshold: f64) -> Result<DenseMatrix> {
+    if !(0.0 < threshold && threshold <= 1.0) {
+        return Err(Error::InvalidArgument(format!(
+            "dimsum threshold must be in (0,1], got {threshold}"
+        )));
+    }
+    let n = a.num_cols()?;
+    // column norms from one stats pass
+    let stats = a.column_stats()?;
+    let norms: Vec<f64> = stats
+        .cols
+        .iter()
+        .map(|c| {
+            // E[x²]·n ⇒ ‖c‖² = m2 + n·mean²  (un-centered second moment)
+            let m = c.n as f64;
+            (c.m2 + m * c.mean * c.mean).max(0.0).sqrt()
+        })
+        .collect();
+    let gamma = (10.0 * (n.max(2) as f64).ln() / threshold).max(1.0);
+    let bnorms = a.context().broadcast(norms.clone());
+    let sampled = a.rows.map_partitions_with_index(move |p, rows| {
+        let norms = bnorms.value();
+        let mut rng = SplitMix64::new(0xD1_5C_00 + p as u64);
+        let mut acc = DenseMatrix::zeros(n, n);
+        for row in rows {
+            // materialize the nonzeros once
+            let entries: Vec<(usize, f64)> = match row {
+                Row::Dense(v) => v
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &x)| x != 0.0)
+                    .map(|(i, &x)| (i, x))
+                    .collect(),
+                Row::Sparse(s) => s
+                    .indices
+                    .iter()
+                    .zip(&s.values)
+                    .map(|(&i, &x)| (i as usize, x))
+                    .collect(),
+            };
+            for (ai, &(i, xi)) in entries.iter().enumerate() {
+                for &(j, xj) in &entries[ai..] {
+                    let denom = (norms[i] * norms[j]).max(1e-300);
+                    let p_keep = (gamma / denom).min(1.0);
+                    if rng.bernoulli(p_keep) {
+                        // unbiased: contribute x_i x_j / p_keep
+                        acc.data[i * n + j] += xi * xj / p_keep;
+                    }
+                }
+            }
+        }
+        vec![acc]
+    });
+    let g_est = sampled.tree_aggregate(
+        DenseMatrix::zeros(n, n),
+        |acc, m| acc.add(m).expect("shapes"),
+        |a, b| a.add(&b).expect("shapes"),
+        TREE_FANIN,
+    )?;
+    // normalize to cosine similarities
+    let mut s = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let d = norms[i] * norms[j];
+            let v = if d > 1e-300 { g_est.get(i, j) / d } else { 0.0 };
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+
+    fn ctx() -> Context {
+        Context::local("dimsum_test", 2)
+    }
+
+    fn random_matrix(m: usize, n: usize, seed: u64) -> DenseMatrix {
+        DenseMatrix::randn(m, n, &mut SplitMix64::new(seed))
+    }
+
+    #[test]
+    fn exact_diagonal_is_one() {
+        let c = ctx();
+        let a = random_matrix(50, 6, 1);
+        let dm = RowMatrix::from_local(&c, &a, 3);
+        let s = similarities_exact(&dm).unwrap();
+        for i in 0..6 {
+            assert!((s.get(i, i) - 1.0).abs() < 1e-10, "diag {i}: {}", s.get(i, i));
+        }
+        // symmetric, bounded
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((s.get(i, j) - s.get(j, i)).abs() < 1e-10);
+                assert!(s.get(i, j).abs() <= 1.0 + 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_identical_columns_similarity_one() {
+        let c = ctx();
+        let mut a = random_matrix(30, 4, 2);
+        for i in 0..30 {
+            let v = a.get(i, 0);
+            a.set(i, 1, v);
+        }
+        let dm = RowMatrix::from_local(&c, &a, 2);
+        let s = similarities_exact(&dm).unwrap();
+        assert!((s.get(0, 1) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dimsum_approximates_exact() {
+        let c = ctx();
+        let a = random_matrix(300, 8, 3);
+        let dm = RowMatrix::from_local(&c, &a, 4);
+        let exact = similarities_exact(&dm).unwrap();
+        let approx = similarities_dimsum(&dm, 0.08).unwrap();
+        // high-similarity entries within the DIMSUM guarantee band
+        // (threshold 0.08 => gamma ~ 260, keep-probability ~0.9: sampling is
+        // active but estimator sd ~0.04, so the 0.2 band is ~5 sigma)
+        for i in 0..8 {
+            for j in 0..8 {
+                let e = exact.get(i, j);
+                if e.abs() > 0.5 {
+                    assert!(
+                        (approx.get(i, j) - e).abs() < 0.2,
+                        "({i},{j}): exact {e} approx {}",
+                        approx.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dimsum_with_gamma_saturated_is_exact() {
+        // threshold tiny -> p_keep = 1 everywhere -> estimator is exact
+        let c = ctx();
+        let a = random_matrix(40, 5, 4);
+        let dm = RowMatrix::from_local(&c, &a, 2);
+        let exact = similarities_exact(&dm).unwrap();
+        let approx = similarities_dimsum(&dm, 1e-6).unwrap();
+        assert!(exact.max_abs_diff(&approx) < 1e-9);
+    }
+
+    #[test]
+    fn bad_threshold_rejected() {
+        let c = ctx();
+        let a = random_matrix(10, 3, 5);
+        let dm = RowMatrix::from_local(&c, &a, 2);
+        assert!(similarities_dimsum(&dm, 0.0).is_err());
+        assert!(similarities_dimsum(&dm, 1.5).is_err());
+    }
+}

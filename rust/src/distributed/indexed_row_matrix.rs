@@ -1,0 +1,172 @@
+//! `IndexedRowMatrix` (paper §2.1): a RowMatrix whose rows carry
+//! meaningful `u64` indices — the bridge between coordinate and row
+//! formats.
+
+use crate::coordinator::context::Context;
+use crate::distributed::coordinate_matrix::{CoordinateMatrix, MatrixEntry};
+use crate::distributed::row::Row;
+use crate::distributed::row_matrix::RowMatrix;
+use crate::error::{Error, Result};
+use crate::rdd::Rdd;
+
+/// Row-indexed distributed matrix.
+#[derive(Clone)]
+pub struct IndexedRowMatrix {
+    /// (row index, row) records.
+    pub rows: Rdd<(u64, Row)>,
+    ctx: Context,
+    n_cols: Option<usize>,
+}
+
+impl IndexedRowMatrix {
+    /// Wrap an RDD of indexed rows.
+    pub fn new(ctx: &Context, rows: Rdd<(u64, Row)>, n_cols: Option<usize>) -> IndexedRowMatrix {
+        IndexedRowMatrix { rows, ctx: ctx.clone(), n_cols }
+    }
+
+    /// Column count (declared or scanned).
+    pub fn num_cols(&self) -> Result<usize> {
+        if let Some(n) = self.n_cols {
+            return Ok(n);
+        }
+        let n = self
+            .rows
+            .aggregate(0usize, |acc, (_, r)| acc.max(r.len()), |a, b| a.max(b))?;
+        if n == 0 {
+            return Err(Error::InvalidArgument("empty IndexedRowMatrix".into()));
+        }
+        Ok(n)
+    }
+
+    /// Logical row count: max index + 1 (MLlib semantics — indices may be
+    /// sparse).
+    pub fn num_rows(&self) -> Result<u64> {
+        let max_idx = self
+            .rows
+            .aggregate(None::<u64>, |acc, (i, _)| Some(acc.map_or(*i, |a| a.max(*i))), |a, b| {
+                match (a, b) {
+                    (None, x) | (x, None) => x,
+                    (Some(a), Some(b)) => Some(a.max(b)),
+                }
+            })?;
+        max_idx
+            .map(|i| i + 1)
+            .ok_or_else(|| Error::InvalidArgument("empty IndexedRowMatrix".into()))
+    }
+
+    /// Drop the indices (paper: `toRowMatrix`).
+    pub fn to_row_matrix(&self) -> RowMatrix {
+        let rdd = self.rows.map(|(_, r)| r.clone());
+        RowMatrix::new(&self.ctx, rdd, self.n_cols)
+    }
+
+    /// Explode into coordinate entries (`toCoordinateMatrix`).
+    pub fn to_coordinate_matrix(&self) -> Result<CoordinateMatrix> {
+        let n_cols = self.num_cols()? as u64;
+        let n_rows = self.num_rows()?;
+        let entries = self.rows.flat_map(|(i, r)| {
+            let i = *i;
+            match r {
+                Row::Dense(v) => v
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &x)| x != 0.0)
+                    .map(|(j, &x)| MatrixEntry { i, j: j as u64, value: x })
+                    .collect(),
+                Row::Sparse(s) => s
+                    .indices
+                    .iter()
+                    .zip(&s.values)
+                    .map(|(&j, &x)| MatrixEntry { i, j: j as u64, value: x })
+                    .collect(),
+            }
+        });
+        Ok(CoordinateMatrix::new(&self.ctx, entries, n_rows, n_cols))
+    }
+
+    /// Multiply by a small local matrix (index-preserving).
+    pub fn multiply_local(&self, b: &crate::linalg::matrix::DenseMatrix) -> Result<IndexedRowMatrix> {
+        let n = self.num_cols()?;
+        crate::ensure_dims!(b.rows, n, "indexed multiply_local dims");
+        let k = b.cols;
+        let bb = self.ctx.broadcast(b.clone());
+        let rdd = self.rows.map(move |(i, r)| {
+            let b = bb.value();
+            let mut out = vec![0.0; k];
+            let dense = r.to_dense();
+            for (ii, &x) in dense.iter().enumerate() {
+                if x != 0.0 {
+                    for j in 0..k {
+                        out[j] += x * b.get(ii, j);
+                    }
+                }
+            }
+            (*i, Row::Dense(out))
+        });
+        Ok(IndexedRowMatrix::new(&self.ctx, rdd, Some(k)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::DenseMatrix;
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("irm_test", 2)
+    }
+
+    fn sample(c: &Context) -> IndexedRowMatrix {
+        let rows = vec![
+            (0u64, Row::Dense(vec![1.0, 0.0, 2.0])),
+            (2u64, Row::Dense(vec![0.0, 3.0, 0.0])),
+            (5u64, Row::Dense(vec![4.0, 0.0, 0.0])),
+        ];
+        IndexedRowMatrix::new(c, c.parallelize(rows, 2), Some(3))
+    }
+
+    #[test]
+    fn dims_respect_sparse_indices() {
+        let c = ctx();
+        let m = sample(&c);
+        assert_eq!(m.num_rows().unwrap(), 6); // max index 5 + 1
+        assert_eq!(m.num_cols().unwrap(), 3);
+    }
+
+    #[test]
+    fn to_row_matrix_drops_indices() {
+        let c = ctx();
+        let m = sample(&c).to_row_matrix();
+        assert_eq!(m.num_rows().unwrap(), 3);
+        assert_eq!(m.nnz().unwrap(), 4);
+    }
+
+    #[test]
+    fn to_coordinate_roundtrip() {
+        let c = ctx();
+        let cm = sample(&c).to_coordinate_matrix().unwrap();
+        assert_eq!(cm.num_rows, 6);
+        assert_eq!(cm.num_cols, 3);
+        let mut entries = cm.entries.collect().unwrap();
+        entries.sort_by_key(|e| (e.i, e.j));
+        assert_eq!(entries.len(), 4);
+        assert_eq!((entries[0].i, entries[0].j, entries[0].value), (0, 0, 1.0));
+        assert_eq!((entries[3].i, entries[3].j, entries[3].value), (5, 0, 4.0));
+    }
+
+    #[test]
+    fn multiply_preserves_indices() {
+        let c = ctx();
+        let m = sample(&c);
+        let b = DenseMatrix::randn(3, 2, &mut SplitMix64::new(1));
+        let prod = m.multiply_local(&b).unwrap();
+        let mut rows = prod.rows.collect().unwrap();
+        rows.sort_by_key(|(i, _)| *i);
+        assert_eq!(rows.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![0, 2, 5]);
+        // row 2 was [0,3,0] -> product = 3 * b.row(1)
+        let r2 = rows[1].1.to_dense();
+        assert!((r2[0] - 3.0 * b.get(1, 0)).abs() < 1e-12);
+        assert!((r2[1] - 3.0 * b.get(1, 1)).abs() < 1e-12);
+    }
+}

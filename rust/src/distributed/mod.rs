@@ -1,0 +1,31 @@
+//! Distributed matrices — the paper's §2: three representations, each for
+//! a sparsity/shape regime, plus the §3 computations built on them.
+//!
+//! | type | backing | regime |
+//! |---|---|---|
+//! | [`RowMatrix`] | `Rdd<Row>` | many rows, few enough cols that a row fits in memory |
+//! | [`IndexedRowMatrix`] | `Rdd<(u64, Row)>` | as above, with meaningful row ids |
+//! | [`CoordinateMatrix`] | `Rdd<MatrixEntry>` | both dims huge, very sparse |
+//! | [`BlockMatrix`] | `Rdd<((i,j), DenseMatrix)>` | dense blocks; supports add/multiply |
+//!
+//! Conversions mirror MLlib (`to_indexed_row_matrix`, `to_block_matrix`,
+//! ...) — each may shuffle, which is why choosing the right initial format
+//! matters (§2, "Converting a distributed matrix to a different format may
+//! require a global shuffle").
+
+pub mod row;
+pub mod row_matrix;
+pub mod indexed_row_matrix;
+pub mod coordinate_matrix;
+pub mod block_matrix;
+pub mod statistics;
+pub mod dimsum;
+pub mod tsqr;
+pub mod svd;
+
+pub use block_matrix::BlockMatrix;
+pub use coordinate_matrix::{CoordinateMatrix, MatrixEntry};
+pub use indexed_row_matrix::IndexedRowMatrix;
+pub use row::Row;
+pub use row_matrix::RowMatrix;
+pub use svd::SingularValueDecomposition;

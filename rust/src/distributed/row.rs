@@ -1,0 +1,178 @@
+//! `Row`: one matrix row, dense or sparse — the paper's §2.4 local-vector
+//! pair, used as the record type of `RowMatrix`.
+
+use crate::linalg::sparse::SparseVector;
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+
+/// A single row with dense or sparse storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Row {
+    /// Dense values.
+    Dense(Vec<f64>),
+    /// Sparse (sorted indices + values).
+    Sparse(SparseVector),
+}
+
+impl Row {
+    /// Logical length.
+    pub fn len(&self) -> usize {
+        match self {
+            Row::Dense(v) => v.len(),
+            Row::Sparse(s) => s.size,
+        }
+    }
+
+    /// True when length 0.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored nonzeros (== len for dense).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Row::Dense(v) => v.iter().filter(|&&x| x != 0.0).count(),
+            Row::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// Dot with a dense vector.
+    pub fn dot(&self, x: &Vector) -> f64 {
+        match self {
+            Row::Dense(v) => crate::linalg::vector::blas_dot(v, x.as_slice()),
+            Row::Sparse(s) => s.dot_dense(x),
+        }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Vec<f64> {
+        match self {
+            Row::Dense(v) => v.clone(),
+            Row::Sparse(s) => s.to_dense().0,
+        }
+    }
+
+    /// Scatter `alpha * row` into an accumulator (Aᵀy inner loop).
+    pub fn axpy_into(&self, alpha: f64, acc: &mut [f64]) {
+        if alpha == 0.0 {
+            return;
+        }
+        match self {
+            Row::Dense(v) => {
+                for (a, &x) in acc.iter_mut().zip(v) {
+                    *a += alpha * x;
+                }
+            }
+            Row::Sparse(s) => {
+                for (&i, &x) in s.indices.iter().zip(&s.values) {
+                    acc[i as usize] += alpha * x;
+                }
+            }
+        }
+    }
+
+    /// Rank-1 update of an upper-triangular Gram accumulator:
+    /// `G[i][j] += row[i]*row[j]` for i <= j (both nonzero).
+    pub fn gram_into(&self, g: &mut DenseMatrix) {
+        let n = g.cols;
+        match self {
+            Row::Dense(v) => {
+                for i in 0..n {
+                    let ri = v[i];
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    let row = &mut g.data[i * n..(i + 1) * n];
+                    for j in i..n {
+                        row[j] += ri * v[j];
+                    }
+                }
+            }
+            Row::Sparse(s) => {
+                for (a, (&ia, &va)) in s.indices.iter().zip(&s.values).enumerate() {
+                    for (&ib, &vb) in s.indices[a..].iter().zip(&s.values[a..]) {
+                        g.data[ia as usize * n + ib as usize] += va * vb;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build a dense block from a slice of rows (executor-side adapter for
+/// the XLA ops; sparse rows densify here).
+pub fn rows_to_block(rows: &[Row], n_cols: usize) -> DenseMatrix {
+    let mut m = DenseMatrix::zeros(rows.len(), n_cols);
+    for (i, r) in rows.iter().enumerate() {
+        match r {
+            Row::Dense(v) => m.row_mut(i)[..v.len()].copy_from_slice(v),
+            Row::Sparse(s) => {
+                let out = m.row_mut(i);
+                for (&j, &x) in s.indices.iter().zip(&s.values) {
+                    out[j as usize] = x;
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+
+    fn sparse(xs: &[f64]) -> Row {
+        Row::Sparse(SparseVector::from_dense(xs))
+    }
+
+    #[test]
+    fn len_nnz_dot() {
+        let d = Row::Dense(vec![1.0, 0.0, 2.0]);
+        let s = sparse(&[1.0, 0.0, 2.0]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(s.nnz(), 2);
+        let x = Vector::from(&[3.0, 9.0, 0.5]);
+        assert_eq!(d.dot(&x), 4.0);
+        assert_eq!(s.dot(&x), 4.0);
+    }
+
+    #[test]
+    fn axpy_dense_sparse_agree_property() {
+        check("axpy_into dense == sparse", 25, |g| {
+            let n = g.int(1, 20);
+            let xs: Vec<f64> =
+                (0..n).map(|_| if g.bool(0.5) { g.normal() } else { 0.0 }).collect();
+            let alpha = g.normal();
+            let mut acc1 = vec![0.5; n];
+            let mut acc2 = vec![0.5; n];
+            Row::Dense(xs.clone()).axpy_into(alpha, &mut acc1);
+            sparse(&xs).axpy_into(alpha, &mut acc2);
+            assert_allclose(&acc1, &acc2, 1e-12, "axpy");
+        });
+    }
+
+    #[test]
+    fn gram_dense_sparse_agree_property() {
+        check("gram_into dense == sparse", 25, |g| {
+            let n = g.int(1, 12);
+            let xs: Vec<f64> =
+                (0..n).map(|_| if g.bool(0.6) { g.normal() } else { 0.0 }).collect();
+            let mut g1 = DenseMatrix::zeros(n, n);
+            let mut g2 = DenseMatrix::zeros(n, n);
+            Row::Dense(xs.clone()).gram_into(&mut g1);
+            sparse(&xs).gram_into(&mut g2);
+            assert_allclose(&g1.data, &g2.data, 1e-12, "gram upper");
+        });
+    }
+
+    #[test]
+    fn rows_to_block_mixes_representations() {
+        let rows = vec![Row::Dense(vec![1.0, 2.0, 0.0]), sparse(&[0.0, 0.0, 3.0])];
+        let b = rows_to_block(&rows, 3);
+        assert_eq!(b.row(0), &[1.0, 2.0, 0.0]);
+        assert_eq!(b.row(1), &[0.0, 0.0, 3.0]);
+    }
+}

@@ -1,0 +1,448 @@
+//! `RowMatrix` — the workhorse distributed matrix (paper §2.1): an RDD of
+//! rows without meaningful indices, assuming the column count is small
+//! enough that one row (and one n×n Gram matrix) fits on the driver.
+//!
+//! Every *matrix* operation here runs on the cluster (per-partition
+//! kernels — XLA artifacts when available, native otherwise — combined by
+//! `tree_aggregate`); every *vector* operation stays on the driver. That
+//! split is the paper's §1.2(2) thesis, and it is what lets the ARPACK
+//! driver (`arpack::Lanczos`) and the TFOCS solvers run unmodified over a
+//! cluster-resident matrix.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::coordinator::context::Context;
+use crate::distributed::row::{rows_to_block, Row};
+use crate::distributed::statistics::ColumnSummaries;
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+use crate::rdd::Rdd;
+use crate::runtime::ops;
+
+/// Row-oriented distributed matrix.
+#[derive(Clone)]
+pub struct RowMatrix {
+    /// Backing rows.
+    pub rows: Rdd<Row>,
+    ctx: Context,
+    n_cols: Arc<OnceLock<usize>>,
+    n_rows: Arc<OnceLock<usize>>,
+}
+
+/// Default tree-aggregate fan-in (tuned in EXPERIMENTS.md §Perf).
+pub const TREE_FANIN: usize = 16;
+
+impl RowMatrix {
+    /// Wrap an existing RDD of rows. `n_cols` may be pre-declared to skip
+    /// a pass; it is validated lazily otherwise.
+    pub fn new(ctx: &Context, rows: Rdd<Row>, n_cols: Option<usize>) -> RowMatrix {
+        let cell = OnceLock::new();
+        if let Some(n) = n_cols {
+            let _ = cell.set(n);
+        }
+        RowMatrix {
+            rows,
+            ctx: ctx.clone(),
+            n_cols: Arc::new(cell),
+            n_rows: Arc::new(OnceLock::new()),
+        }
+    }
+
+    /// Distribute dense rows across `num_partitions`.
+    pub fn from_dense_rows(ctx: &Context, rows: Vec<Vec<f64>>, num_partitions: usize) -> RowMatrix {
+        let n_cols = rows.first().map(|r| r.len());
+        let rdd = ctx
+            .parallelize(rows, num_partitions)
+            .map(|r| Row::Dense(r.clone()));
+        RowMatrix::new(ctx, rdd, n_cols)
+    }
+
+    /// Distribute a local dense matrix (test/bench helper).
+    pub fn from_local(ctx: &Context, a: &DenseMatrix, num_partitions: usize) -> RowMatrix {
+        let rows: Vec<Vec<f64>> = (0..a.rows).map(|i| a.row(i).to_vec()).collect();
+        RowMatrix::from_dense_rows(ctx, rows, num_partitions)
+    }
+
+    /// Generate rows per partition without materializing on the driver.
+    /// `gen(partition)` returns that partition's rows.
+    pub fn generate<F>(
+        ctx: &Context,
+        name: &str,
+        num_partitions: usize,
+        n_cols: usize,
+        gen: F,
+    ) -> RowMatrix
+    where
+        F: Fn(usize) -> Vec<Row> + Send + Sync + 'static,
+    {
+        let rdd = ctx.generate(name, num_partitions, gen);
+        RowMatrix::new(ctx, rdd, Some(n_cols))
+    }
+
+    /// Owning context.
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    /// Row count (cluster pass, cached).
+    pub fn num_rows(&self) -> Result<usize> {
+        if let Some(&n) = self.n_rows.get() {
+            return Ok(n);
+        }
+        let n = self.rows.count()?;
+        Ok(*self.n_rows.get_or_init(|| n))
+    }
+
+    /// Column count (max row length; cluster pass, cached).
+    pub fn num_cols(&self) -> Result<usize> {
+        if let Some(&n) = self.n_cols.get() {
+            return Ok(n);
+        }
+        let n = self
+            .rows
+            .aggregate(0usize, |acc, r| acc.max(r.len()), |a, b| a.max(b))?;
+        if n == 0 {
+            return Err(Error::InvalidArgument("empty RowMatrix".into()));
+        }
+        Ok(*self.n_cols.get_or_init(|| n))
+    }
+
+    /// Cache the backing rows (all §3 iterative algorithms call this).
+    pub fn cache(&self) -> RowMatrix {
+        RowMatrix {
+            rows: self.rows.clone().cache(),
+            ctx: self.ctx.clone(),
+            n_cols: Arc::clone(&self.n_cols),
+            n_rows: Arc::clone(&self.n_rows),
+        }
+    }
+
+    /// Per-column statistics (mean/var/min/max/nnz) in one pass —
+    /// MLlib's `computeColumnSummaryStatistics`.
+    pub fn column_stats(&self) -> Result<ColumnSummaries> {
+        let n = self.num_cols()?;
+        crate::distributed::statistics::column_stats(&self.rows, n, TREE_FANIN)
+    }
+
+    /// Exact Gram matrix `AᵀA` (n×n on the driver): per-partition Gram on
+    /// the cluster (XLA when available), tree-aggregated. This is the
+    /// tall-skinny SVD's matrix op (§3.1.2) and the "one all-to-one
+    /// communication" the paper cites.
+    pub fn gram(&self) -> Result<DenseMatrix> {
+        let n = self.num_cols()?;
+        let rt = self.ctx.runtime();
+        let use_xla_blocks = rt.is_some() && ops::cols_supported(n);
+        let partial = self.rows.map_partitions_with_index(move |_p, rows| {
+            let mut g = DenseMatrix::zeros(n, n);
+            if use_xla_blocks {
+                let block = rows_to_block(rows, n);
+                match ops::gram(rt.as_ref(), &block) {
+                    Ok(gg) => return vec![gg],
+                    Err(e) => {
+                        // fall through to native on runtime error
+                        eprintln!("[sparkla] xla gram failed ({e}); native fallback");
+                    }
+                }
+            }
+            for r in rows {
+                r.gram_into(&mut g);
+            }
+            // mirror the upper triangle (gram_into fills i <= j)
+            for i in 0..n {
+                for j in 0..i {
+                    g.data[i * n + j] = g.data[j * n + i];
+                }
+            }
+            vec![g]
+        });
+        let zero = DenseMatrix::zeros(n, n);
+        partial.tree_aggregate(
+            zero,
+            |acc, g| acc.add(g).expect("gram shapes agree"),
+            |a, b| a.add(&b).expect("gram shapes agree"),
+            TREE_FANIN,
+        )
+    }
+
+    /// The ARPACK operator op: `AᵀA·x` in one distributed pass
+    /// (per-partition fused `Aᵀ(A x)`, tree-summed). The driver-side
+    /// Lanczos only ever sees this closure — the paper's §3.1.1 pattern.
+    pub fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        let n = self.num_cols()?;
+        crate::ensure_dims!(x.len(), n, "gramvec x dims");
+        let bx = self.ctx.broadcast(x.clone());
+        let rt = self.ctx.runtime();
+        let partial = self.rows.map_partitions_with_index(move |_p, rows| {
+            let x = bx.value();
+            if rt.is_some() && ops::cols_supported(n) {
+                let block = rows_to_block(rows, n);
+                if let Ok(v) = ops::gramvec(rt.as_ref(), &block, x) {
+                    return vec![v.0];
+                }
+            }
+            // native: acc += (rᵀx) r  per row
+            let mut acc = vec![0.0; n];
+            for r in rows {
+                let dot = r.dot(x);
+                r.axpy_into(dot, &mut acc);
+            }
+            vec![acc]
+        });
+        let out = partial.tree_aggregate(
+            vec![0.0; n],
+            |mut acc: Vec<f64>, v| {
+                for (a, b) in acc.iter_mut().zip(v) {
+                    *a += b;
+                }
+                acc
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+            TREE_FANIN,
+        )?;
+        Ok(Vector(out))
+    }
+
+    /// `A · B` for a small local `B` (n×k): broadcast B, each partition
+    /// multiplies its row block — embarrassingly parallel, no shuffle.
+    /// This is how `U = A (V Σ⁻¹)` is recovered in the SVD (§3.1.2).
+    pub fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
+        let n = self.num_cols()?;
+        crate::ensure_dims!(b.rows, n, "multiply_local dims");
+        let k = b.cols;
+        let bb = self.ctx.broadcast(b.clone());
+        let rdd = self.rows.map(move |r| {
+            let b = bb.value();
+            let mut out = vec![0.0; k];
+            match r {
+                Row::Dense(v) => {
+                    for (i, &x) in v.iter().enumerate() {
+                        if x != 0.0 {
+                            for j in 0..k {
+                                out[j] += x * b.get(i, j);
+                            }
+                        }
+                    }
+                }
+                Row::Sparse(s) => {
+                    for (&i, &x) in s.indices.iter().zip(&s.values) {
+                        for j in 0..k {
+                            out[j] += x * b.get(i as usize, j);
+                        }
+                    }
+                }
+            }
+            Row::Dense(out)
+        });
+        Ok(RowMatrix::new(&self.ctx, rdd, Some(k)))
+    }
+
+    /// Collect to a local dense matrix (driver must have room — tests and
+    /// small results like U in examples).
+    pub fn to_local(&self) -> Result<DenseMatrix> {
+        let n = self.num_cols()?;
+        let rows = self.rows.collect()?;
+        let mut m = DenseMatrix::zeros(rows.len(), n);
+        for (i, r) in rows.iter().enumerate() {
+            match r {
+                Row::Dense(v) => m.row_mut(i)[..v.len()].copy_from_slice(v),
+                Row::Sparse(s) => {
+                    for (&j, &x) in s.indices.iter().zip(&s.values) {
+                        m.set(i, j as usize, x);
+                    }
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Total nonzeros (Table 1's workload descriptor).
+    pub fn nnz(&self) -> Result<usize> {
+        self.rows.aggregate(0usize, |a, r| a + r.nnz(), |a, b| a + b)
+    }
+
+    /// Rank-k SVD; dispatches tall-skinny vs ARPACK automatically
+    /// (§3.1's `computeSVD`). See [`crate::distributed::svd`].
+    pub fn compute_svd(&self, k: usize, compute_u: bool) -> Result<SingularValueDecompositionView> {
+        crate::distributed::svd::compute_svd(self, k, compute_u)
+    }
+
+    /// Principal component analysis: top-k components of the column-
+    /// centered covariance (paper §1.2(2a)). Returns (components n×k,
+    /// explained variances).
+    pub fn pca(&self, k: usize) -> Result<(DenseMatrix, Vec<f64>)> {
+        let n = self.num_cols()?;
+        if k == 0 || k > n {
+            return Err(Error::InvalidArgument(format!("pca: k={k} out of range (n={n})")));
+        }
+        let m = self.num_rows()? as f64;
+        if m < 2.0 {
+            return Err(Error::InvalidArgument("pca needs >= 2 rows".into()));
+        }
+        let stats = self.column_stats()?;
+        let mean = Vector(stats.mean());
+        let g = self.gram()?;
+        // covariance = (AᵀA - m·μμᵀ) / (m - 1)
+        let mut cov = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                cov.set(i, j, (g.get(i, j) - m * mean[i] * mean[j]) / (m - 1.0));
+            }
+        }
+        let eig = crate::linalg::eig::eig_sym(&cov)?;
+        let mut comps = DenseMatrix::zeros(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                comps.set(i, j, eig.vectors.get(i, j));
+            }
+        }
+        Ok((comps, eig.values[..k].to_vec()))
+    }
+
+    /// Distributed thin QR via TSQR (§3.4, ref \[2\]).
+    pub fn qr(&self) -> Result<(RowMatrix, DenseMatrix)> {
+        crate::distributed::tsqr::tsqr(self)
+    }
+
+    /// All-pairs cosine column similarities, exact or DIMSUM-sampled
+    /// (§3.4, refs [10, 11]).
+    pub fn column_similarities(&self, threshold: Option<f64>) -> Result<DenseMatrix> {
+        match threshold {
+            None => crate::distributed::dimsum::similarities_exact(self),
+            Some(t) => crate::distributed::dimsum::similarities_dimsum(self, t),
+        }
+    }
+}
+
+/// The SVD result for a distributed matrix: `u` stays distributed (it has
+/// as many rows as A), `s`/`v` are driver-local — mirroring MLlib's
+/// `SingularValueDecomposition[RowMatrix, Matrix]`.
+pub struct SingularValueDecompositionView {
+    /// Left singular vectors as a RowMatrix (None unless requested).
+    pub u: Option<RowMatrix>,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors (n×k, driver-local).
+    pub v: DenseMatrix,
+    /// Which algorithm ran ("tall-skinny-gram" | "arpack-gramvec").
+    pub algorithm: &'static str,
+    /// Distributed mat-vec (or gram) ops performed.
+    pub matrix_ops: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("row_matrix_test", 2)
+    }
+
+    #[test]
+    fn dims_and_nnz() {
+        let c = ctx();
+        let m = RowMatrix::from_dense_rows(
+            &c,
+            vec![vec![1.0, 0.0], vec![0.0, 2.0], vec![3.0, 4.0]],
+            2,
+        );
+        assert_eq!(m.num_rows().unwrap(), 3);
+        assert_eq!(m.num_cols().unwrap(), 2);
+        assert_eq!(m.nnz().unwrap(), 4);
+    }
+
+    #[test]
+    fn gram_matches_local_property() {
+        check("distributed gram == local gram", 8, |g| {
+            let c = ctx();
+            let rows = 1 + g.int(0, 40);
+            let cols = 1 + g.int(0, 10);
+            let parts = 1 + g.int(0, 5);
+            let a = DenseMatrix::randn(rows, cols, g.rng());
+            let dm = RowMatrix::from_local(&c, &a, parts);
+            let got = dm.gram().unwrap();
+            assert_allclose(&got.data, &a.gram().data, 1e-9, "gram");
+        });
+    }
+
+    #[test]
+    fn gramvec_matches_local_property() {
+        check("distributed gramvec == A^T A x", 8, |g| {
+            let c = ctx();
+            let rows = 1 + g.int(0, 30);
+            let cols = 1 + g.int(0, 8);
+            let a = DenseMatrix::randn(rows, cols, g.rng());
+            let x = Vector((0..cols).map(|_| g.normal()).collect());
+            let dm = RowMatrix::from_local(&c, &a, 3);
+            let got = dm.gramvec(&x).unwrap();
+            let want = a.gram().matvec(&x).unwrap();
+            assert_allclose(&got.0, &want.0, 1e-9, "gramvec");
+        });
+    }
+
+    #[test]
+    fn multiply_local_matches() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(1);
+        let a = DenseMatrix::randn(20, 6, &mut rng);
+        let b = DenseMatrix::randn(6, 3, &mut rng);
+        let dm = RowMatrix::from_local(&c, &a, 4);
+        let prod = dm.multiply_local(&b).unwrap().to_local().unwrap();
+        let want = a.matmul(&b).unwrap();
+        assert!(prod.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn sparse_rows_supported() {
+        let c = ctx();
+        let sv = crate::linalg::sparse::SparseVector::from_dense(&[0.0, 5.0, 0.0]);
+        let rdd = c.parallelize(
+            vec![Row::Dense(vec![1.0, 0.0, 2.0]), Row::Sparse(sv)],
+            2,
+        );
+        let m = RowMatrix::new(&c, rdd, Some(3));
+        let g = m.gram().unwrap();
+        // A = [[1,0,2],[0,5,0]] -> A^T A = [[1,0,2],[0,25,0],[2,0,4]]
+        assert_allclose(
+            &g.data,
+            &[1.0, 0.0, 2.0, 0.0, 25.0, 0.0, 2.0, 0.0, 4.0],
+            1e-12,
+            "sparse gram",
+        );
+        assert_eq!(m.nnz().unwrap(), 3);
+    }
+
+    #[test]
+    fn pca_recovers_dominant_direction() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(2);
+        // data stretched along (1,1)/sqrt(2)
+        let rows: Vec<Vec<f64>> = (0..200)
+            .map(|_| {
+                let t = rng.normal() * 10.0;
+                let e1 = rng.normal() * 0.1;
+                let e2 = rng.normal() * 0.1;
+                vec![t + e1, t + e2]
+            })
+            .collect();
+        let m = RowMatrix::from_dense_rows(&c, rows, 4);
+        let (comps, vars) = m.pca(1).unwrap();
+        let c0 = (comps.get(0, 0).abs() - std::f64::consts::FRAC_1_SQRT_2).abs();
+        assert!(c0 < 0.05, "component {:?}", comps.col(0).0);
+        assert!(vars[0] > 100.0, "dominant variance {vars:?}");
+    }
+
+    #[test]
+    fn empty_matrix_rejected() {
+        let c = ctx();
+        let m = RowMatrix::from_dense_rows(&c, vec![], 2);
+        assert!(m.num_cols().is_err());
+    }
+}

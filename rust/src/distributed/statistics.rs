@@ -1,0 +1,179 @@
+//! Column statistics — MLlib's `MultivariateStatisticalSummary` (the
+//! paper's "column and block statistics" primitives, §1): one cluster
+//! pass, mergeable Welford moments per column, tree-aggregated.
+
+use crate::distributed::row::Row;
+use crate::error::Result;
+use crate::rdd::Rdd;
+use crate::util::stats::OnlineStats;
+
+/// Per-column summaries for an n-column matrix.
+#[derive(Debug, Clone)]
+pub struct ColumnSummaries {
+    /// One accumulator per column.
+    pub cols: Vec<OnlineStats>,
+    /// Row count observed.
+    pub count: u64,
+}
+
+impl ColumnSummaries {
+    fn new(n: usize) -> ColumnSummaries {
+        ColumnSummaries { cols: (0..n).map(|_| OnlineStats::new()).collect(), count: 0 }
+    }
+
+    fn add_row(mut self, r: &Row) -> ColumnSummaries {
+        self.count += 1;
+        match r {
+            Row::Dense(v) => {
+                for (c, &x) in self.cols.iter_mut().zip(v) {
+                    c.push(x);
+                }
+            }
+            Row::Sparse(s) => {
+                // sparse rows: explicit entries pushed, implicit zeros
+                // accounted in finalize() via count (push(0) per zero
+                // would defeat the point of sparsity)
+                for (&i, &x) in s.indices.iter().zip(&s.values) {
+                    self.cols[i as usize].push(x);
+                }
+            }
+        }
+        self
+    }
+
+    fn merge(mut self, o: ColumnSummaries) -> ColumnSummaries {
+        if self.cols.is_empty() {
+            return o;
+        }
+        if o.cols.is_empty() {
+            return self;
+        }
+        for (a, b) in self.cols.iter_mut().zip(&o.cols) {
+            a.merge(b);
+        }
+        self.count += o.count;
+        self
+    }
+
+    /// Fold implicit zeros of sparse rows into the moments so mean/var
+    /// are over all `count` rows (what MLlib reports).
+    fn finalize(mut self) -> ColumnSummaries {
+        for c in self.cols.iter_mut() {
+            let zeros = self.count - c.n;
+            if zeros > 0 {
+                let mut zstat = OnlineStats::new();
+                // merge a run of `zeros` zeros in O(1): mean 0, m2 0
+                zstat.n = zeros;
+                zstat.mean = 0.0;
+                zstat.m2 = 0.0;
+                zstat.min = 0.0;
+                zstat.max = 0.0;
+                c.merge(&zstat);
+            }
+        }
+        self
+    }
+
+    /// Column means.
+    pub fn mean(&self) -> Vec<f64> {
+        self.cols.iter().map(|c| c.mean).collect()
+    }
+
+    /// Column variances (sample).
+    pub fn variance(&self) -> Vec<f64> {
+        self.cols.iter().map(|c| c.variance()).collect()
+    }
+
+    /// Column minima.
+    pub fn min(&self) -> Vec<f64> {
+        self.cols.iter().map(|c| c.min).collect()
+    }
+
+    /// Column maxima.
+    pub fn max(&self) -> Vec<f64> {
+        self.cols.iter().map(|c| c.max).collect()
+    }
+
+    /// Nonzeros per column.
+    pub fn num_nonzeros(&self) -> Vec<u64> {
+        self.cols.iter().map(|c| c.nnz).collect()
+    }
+
+    /// L1 norm per column.
+    pub fn norm_l1(&self) -> Vec<f64> {
+        self.cols.iter().map(|c| c.abs_sum).collect()
+    }
+}
+
+/// One-pass distributed column statistics.
+pub fn column_stats(rows: &Rdd<Row>, n_cols: usize, fanin: usize) -> Result<ColumnSummaries> {
+    let out = rows.tree_aggregate(
+        ColumnSummaries::new(n_cols),
+        |acc, r| acc.add_row(r),
+        |a, b| a.merge(b),
+        fanin,
+    )?;
+    Ok(out.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::linalg::sparse::SparseVector;
+    use crate::util::prop::{assert_allclose, check};
+
+    #[test]
+    fn dense_stats_match_direct() {
+        let ctx = Context::local("stats", 2);
+        let data = vec![
+            vec![1.0, -2.0],
+            vec![3.0, 0.0],
+            vec![5.0, 2.0],
+            vec![7.0, 4.0],
+        ];
+        let rdd = ctx.parallelize(data, 3).map(|r| Row::Dense(r.clone()));
+        let s = column_stats(&rdd, 2, 2).unwrap();
+        assert_eq!(s.count, 4);
+        assert_allclose(&s.mean(), &[4.0, 1.0], 1e-12, "mean");
+        assert_allclose(&s.min(), &[1.0, -2.0], 1e-12, "min");
+        assert_allclose(&s.max(), &[7.0, 4.0], 1e-12, "max");
+        assert_eq!(s.num_nonzeros(), vec![4, 3]);
+        // sample variance col0: mean 4, devs ±3,±1 -> (9+1+1+9)/3
+        assert_allclose(&s.variance(), &[20.0 / 3.0, 20.0 / 3.0], 1e-12, "var");
+    }
+
+    #[test]
+    fn sparse_rows_count_implicit_zeros() {
+        let ctx = Context::local("stats_sparse", 2);
+        let rows = vec![
+            Row::Sparse(SparseVector::from_dense(&[2.0, 0.0])),
+            Row::Sparse(SparseVector::from_dense(&[0.0, 0.0])),
+            Row::Dense(vec![4.0, 6.0]),
+        ];
+        let rdd = ctx.parallelize(rows, 2);
+        let s = column_stats(&rdd, 2, 2).unwrap();
+        assert_eq!(s.count, 3);
+        assert_allclose(&s.mean(), &[2.0, 2.0], 1e-12, "mean with zeros");
+        assert_eq!(s.num_nonzeros(), vec![2, 1]);
+        assert_allclose(&s.min(), &[0.0, 0.0], 1e-12, "min includes zero");
+    }
+
+    #[test]
+    fn partition_invariance_property() {
+        check("stats independent of partitioning", 10, |g| {
+            let ctx = Context::local("stats_prop", 2);
+            let n_rows = 1 + g.int(0, 30);
+            let data: Vec<Vec<f64>> =
+                (0..n_rows).map(|_| vec![g.normal(), g.normal() * 5.0]).collect();
+            let p1 = 1 + g.int(0, 6);
+            let p2 = 1 + g.int(0, 6);
+            let r1 = ctx.parallelize(data.clone(), p1).map(|r| Row::Dense(r.clone()));
+            let r2 = ctx.parallelize(data, p2).map(|r| Row::Dense(r.clone()));
+            let s1 = column_stats(&r1, 2, 3).unwrap();
+            let s2 = column_stats(&r2, 2, 2).unwrap();
+            assert_allclose(&s1.mean(), &s2.mean(), 1e-10, "mean");
+            assert_allclose(&s1.variance(), &s2.variance(), 1e-9, "var");
+        });
+    }
+}

@@ -1,0 +1,269 @@
+//! Distributed SVD — the paper's §3.1: dispatch between
+//!
+//! * **tall-skinny** (§3.1.2): Gram matrix on the cluster (one
+//!   tree-aggregated pass), local eigendecomposition of the n×n result,
+//!   then distributed `U = A (V Σ⁻¹)`;
+//! * **square/ARPACK** (§3.1.1): drive the reverse-communication Lanczos
+//!   (`arpack::Lanczos`) from the driver, serving every requested
+//!   mat-vec as a distributed `AᵀA·x` job.
+//!
+//! `computeSVD` on the paper's `RowMatrix` makes the same choice
+//! automatically "so the user does not need to make that decision".
+
+use crate::arpack::{Lanczos, LanczosStep};
+use crate::distributed::row_matrix::{RowMatrix, SingularValueDecompositionView};
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+
+use crate::linalg::vector::Vector;
+
+/// Re-export used by `distributed::mod` (MLlib naming).
+pub type SingularValueDecomposition = SingularValueDecompositionView;
+
+/// Columns at or below this use the tall-skinny Gram path (the driver
+/// must hold an n×n dense Gram: 1024² × 8 B = 8 MiB — comfortably small;
+/// MLlib uses a similar constant).
+pub const TALL_SKINNY_MAX_COLS: usize = 1024;
+
+/// Singular values below `RCOND · σ₁` are dropped. The Gram route squares
+/// the condition number: noise eigenvalues of AᵀA sit at ~1e-15·λ₁, i.e.
+/// σ ≈ 3e-8·σ₁, so anything below 1e-6·σ₁ is numerically indistinguishable
+/// from rank deficiency (same reasoning as MLlib's computeSVD rCond).
+pub const RCOND: f64 = 1e-6;
+
+/// Compute the rank-k SVD of a distributed RowMatrix.
+pub fn compute_svd(a: &RowMatrix, k: usize, compute_u: bool) -> Result<SingularValueDecomposition> {
+    let n = a.num_cols()?;
+    if k == 0 || k > n {
+        return Err(Error::InvalidArgument(format!("svd: k={k} out of range (n={n})")));
+    }
+    if n <= TALL_SKINNY_MAX_COLS {
+        tall_skinny_svd(a, k, compute_u)
+    } else {
+        arpack_svd(a, k, compute_u)
+    }
+}
+
+/// §3.1.2: Gram on the cluster, eigen on the driver, U distributed.
+pub fn tall_skinny_svd(
+    a: &RowMatrix,
+    k: usize,
+    compute_u: bool,
+) -> Result<SingularValueDecomposition> {
+    let g = a.gram()?; // 1 distributed matrix op
+    let eig = crate::linalg::eig::eig_sym(&g)?;
+    let (s, v) = triplets_from_gram_eig(&eig, k)?;
+    let u = if compute_u { Some(recover_u(a, &s, &v)?) } else { None };
+    Ok(SingularValueDecomposition {
+        u,
+        s,
+        v,
+        algorithm: "tall-skinny-gram",
+        matrix_ops: if compute_u { 2 } else { 1 },
+    })
+}
+
+/// §3.1.1: ARPACK-style. The eigensolver runs on the driver and only ever
+/// asks for `AᵀA·x`; each request becomes a cluster job.
+pub fn arpack_svd(a: &RowMatrix, k: usize, compute_u: bool) -> Result<SingularValueDecomposition> {
+    let n = a.num_cols()?;
+    let mut solver = Lanczos::new(n, k, 1e-10, 100 * k.max(10))?;
+    loop {
+        match solver.step()? {
+            LanczosStep::MatVec { x, y } => {
+                // the paper's moment: control returns to the calling
+                // program, which performs the multiply on the cluster
+                let res = a.gramvec(&Vector::from(x))?;
+                y.copy_from_slice(&res.0);
+            }
+            LanczosStep::Converged => break,
+        }
+    }
+    let matvecs = solver.matvecs;
+    let (eigvals, eigvecs) = solver.extract()?;
+    let eig = crate::linalg::eig::EigResult { values: eigvals, vectors: eigvecs };
+    let (s, v) = triplets_from_gram_eig(&eig, k)?;
+    let u = if compute_u { Some(recover_u(a, &s, &v)?) } else { None };
+    Ok(SingularValueDecomposition {
+        u,
+        s,
+        v,
+        algorithm: "arpack-gramvec",
+        matrix_ops: matvecs + usize::from(compute_u),
+    })
+}
+
+/// Shared finish: eigenpairs of AᵀA → (σ, V), dropping numerically-zero
+/// triplets.
+fn triplets_from_gram_eig(
+    eig: &crate::linalg::eig::EigResult,
+    k: usize,
+) -> Result<(Vec<f64>, DenseMatrix)> {
+    let n = eig.vectors.rows;
+    let smax = eig.values.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+    if smax == 0.0 {
+        return Err(Error::InvalidArgument("svd of a zero matrix".into()));
+    }
+    let mut s = vec![];
+    let mut keep = vec![];
+    for i in 0..k.min(eig.values.len()) {
+        let sv = eig.values[i].max(0.0).sqrt();
+        if sv > svd_rcond() * smax {
+            s.push(sv);
+            keep.push(i);
+        }
+    }
+    let mut v = DenseMatrix::zeros(n, s.len());
+    for (jj, &i) in keep.iter().enumerate() {
+        for r in 0..n {
+            v.set(r, jj, eig.vectors.get(r, i));
+        }
+    }
+    Ok((s, v))
+}
+
+fn svd_rcond() -> f64 {
+    RCOND
+}
+
+/// `U = A (V Σ⁻¹)` — broadcast the small n×k factor, one map (§3.1.2:
+/// "from there it is embarrassingly parallel").
+fn recover_u(a: &RowMatrix, s: &[f64], v: &DenseMatrix) -> Result<RowMatrix> {
+    let mut vs = v.clone();
+    for j in 0..s.len() {
+        let inv = 1.0 / s[j];
+        for i in 0..vs.rows {
+            let val = vs.get(i, j) * inv;
+            vs.set(i, j, val);
+        }
+    }
+    a.multiply_local(&vs)
+}
+
+/// Reconstruction error ‖A − UΣVᵀ‖_F / ‖A‖_F computed distributively —
+/// used by tests and the Table-1 harness to certify results.
+pub fn reconstruction_error(a: &RowMatrix, svd: &SingularValueDecomposition) -> Result<f64> {
+    let u = svd
+        .u
+        .as_ref()
+        .ok_or_else(|| Error::InvalidArgument("reconstruction needs U".into()))?;
+    // ship σVᵀ, zip row partitions of A and U
+    let k = svd.s.len();
+    let n = a.num_cols()?;
+    let mut svt = DenseMatrix::zeros(k, n);
+    for i in 0..k {
+        for j in 0..n {
+            svt.set(i, j, svd.s[i] * svd.v.get(j, i));
+        }
+    }
+    let ctx = a.context().clone();
+    let b = ctx.broadcast(svt);
+    let sums = a.rows.zip_partitions(&u.rows, move |arows, urows| {
+        let svt = b.value();
+        let mut err = 0.0;
+        let mut norm = 0.0;
+        for (ar, ur) in arows.iter().zip(urows) {
+            let ad = ar.to_dense();
+            let ud = ur.to_dense();
+            for j in 0..ad.len() {
+                let mut rec = 0.0;
+                for i in 0..ud.len() {
+                    rec += ud[i] * svt.get(i, j);
+                }
+                err += (ad[j] - rec) * (ad[j] - rec);
+                norm += ad[j] * ad[j];
+            }
+        }
+        vec![(err, norm)]
+    })?;
+    let (err, norm) = sums
+        .aggregate((0.0, 0.0), |(e, n), &(e2, n2)| (e + e2, n + n2), |a, b| (a.0 + b.0, a.1 + b.1))?;
+    Ok((err / norm.max(1e-300)).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("svd_test", 2)
+    }
+
+    #[test]
+    fn tall_skinny_matches_local_svd_property() {
+        check("distributed svd == local svd (values)", 6, |g| {
+            let c = ctx();
+            let n = 2 + g.int(0, 6);
+            let m = n + 5 + g.int(0, 30);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let dm = RowMatrix::from_local(&c, &a, 3);
+            let k = 1 + g.int(0, n - 1);
+            let svd = compute_svd(&dm, k, false).unwrap();
+            assert_eq!(svd.algorithm, "tall-skinny-gram");
+            let local = crate::linalg::svd_local::svd_via_gram(&a, k, 1e-12).unwrap();
+            assert_allclose(&svd.s, &local.s[..svd.s.len()], 1e-7, "singular values");
+        });
+    }
+
+    #[test]
+    fn reconstruction_error_small_full_rank() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(3);
+        let a = DenseMatrix::randn(60, 6, &mut rng);
+        let dm = RowMatrix::from_local(&c, &a, 4);
+        let svd = compute_svd(&dm, 6, true).unwrap();
+        let err = reconstruction_error(&dm, &svd).unwrap();
+        assert!(err < 1e-7, "reconstruction error {err}");
+    }
+
+    #[test]
+    fn arpack_path_agrees_with_tall_skinny() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(4);
+        let a = DenseMatrix::randn(80, 12, &mut rng);
+        let dm = RowMatrix::from_local(&c, &a, 4);
+        let ts = tall_skinny_svd(&dm, 4, false).unwrap();
+        let ar = arpack_svd(&dm, 4, false).unwrap();
+        assert_eq!(ar.algorithm, "arpack-gramvec");
+        assert!(ar.matrix_ops > 4, "arpack should do several matvec jobs");
+        assert_allclose(&ar.s, &ts.s, 1e-6, "arpack vs gram singular values");
+    }
+
+    #[test]
+    fn u_orthonormal_and_v_orthonormal() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(5);
+        let a = DenseMatrix::randn(50, 8, &mut rng);
+        let dm = RowMatrix::from_local(&c, &a, 3);
+        let svd = compute_svd(&dm, 8, true).unwrap();
+        let u = svd.u.as_ref().unwrap().to_local().unwrap();
+        let utu = u.transpose().matmul(&u).unwrap();
+        assert!(utu.max_abs_diff(&DenseMatrix::eye(8)) < 1e-7, "U^T U");
+        let vtv = svd.v.transpose().matmul(&svd.v).unwrap();
+        assert!(vtv.max_abs_diff(&DenseMatrix::eye(8)) < 1e-7, "V^T V");
+    }
+
+    #[test]
+    fn rank_deficient_truncates() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(6);
+        let b = DenseMatrix::randn(40, 3, &mut rng);
+        let cc = DenseMatrix::randn(3, 7, &mut rng);
+        let a = b.matmul(&cc).unwrap();
+        let dm = RowMatrix::from_local(&c, &a, 3);
+        let svd = compute_svd(&dm, 7, false).unwrap();
+        assert_eq!(svd.s.len(), 3, "rank-3 keeps 3: {:?}", svd.s);
+    }
+
+    #[test]
+    fn bad_k_rejected() {
+        let c = ctx();
+        let a = DenseMatrix::eye(4);
+        let dm = RowMatrix::from_local(&c, &a, 2);
+        assert!(compute_svd(&dm, 0, false).is_err());
+        assert!(compute_svd(&dm, 5, false).is_err());
+    }
+}

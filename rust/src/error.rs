@@ -1,0 +1,128 @@
+//! Crate-wide error type.
+//!
+//! Everything user-facing returns [`Result`]. Internal task plumbing uses
+//! the same type so a failed executor task surfaces its cause through the
+//! scheduler unchanged (important for the fault-injection tests, which
+//! assert on the *recovered* result, not the error).
+
+use std::sync::Arc;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by any layer of the stack.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum Error {
+    /// Shape mismatch in a linear-algebra operation.
+    #[error("dimension mismatch: {0}")]
+    DimensionMismatch(String),
+
+    /// Invalid argument (k out of range, empty matrix, bad config value...).
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// An algorithm failed to converge within its iteration budget.
+    #[error("did not converge: {0}")]
+    NoConvergence(String),
+
+    /// A matrix failed a structural validation (BlockMatrix.validate()).
+    #[error("validation failed: {0}")]
+    Validation(String),
+
+    /// A scheduler task exhausted its retry budget.
+    #[error("task failed after {attempts} attempts: {cause}")]
+    TaskFailed { attempts: usize, cause: String },
+
+    /// A simulated executor fault (consumed internally by the scheduler's
+    /// retry machinery; only escapes when retries are exhausted).
+    #[error("injected fault on executor {executor}: {kind}")]
+    InjectedFault { executor: usize, kind: String },
+
+    /// PJRT / XLA runtime errors (wrapped; xla::Error is not Clone).
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Requested AOT artifact is missing from the manifest.
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    ArtifactMissing(String),
+
+    /// I/O with context.
+    #[error("io: {context}: {source}")]
+    Io {
+        context: String,
+        #[source]
+        source: Arc<std::io::Error>,
+    },
+
+    /// Catch-all with context.
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    /// Shorthand for a free-form error message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+
+    /// Shorthand for dimension mismatches.
+    pub fn dim(m: impl Into<String>) -> Self {
+        Error::DimensionMismatch(m.into())
+    }
+
+    /// Attach file/operation context to an I/O error.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { context: context.into(), source: Arc::new(source) }
+    }
+
+    /// True when this error is an injected (simulated) fault — the
+    /// scheduler retries these; anything else is a real bug and propagates.
+    pub fn is_injected(&self) -> bool {
+        matches!(self, Error::InjectedFault { .. })
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Assert two dimensions agree, with a formatted error.
+#[macro_export]
+macro_rules! ensure_dims {
+    ($a:expr, $b:expr, $what:expr) => {
+        if $a != $b {
+            return Err($crate::error::Error::dim(format!(
+                "{}: {} vs {}",
+                $what, $a, $b
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::dim("gemm: 3 vs 4");
+        assert!(e.to_string().contains("gemm"));
+        let e = Error::TaskFailed { attempts: 4, cause: "boom".into() };
+        assert!(e.to_string().contains("4 attempts"));
+    }
+
+    #[test]
+    fn injected_faults_are_classified() {
+        assert!(Error::InjectedFault { executor: 1, kind: "crash".into() }.is_injected());
+        assert!(!Error::msg("x").is_injected());
+    }
+
+    #[test]
+    fn io_errors_carry_context() {
+        let e = Error::io("reading manifest", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let s = e.to_string();
+        assert!(s.contains("manifest") && s.contains("gone"));
+    }
+}

@@ -1,0 +1,51 @@
+//! # sparkla — Matrix Computations and Optimization on a Rust Dataflow Substrate
+//!
+//! A reproduction of *"Matrix Computations and Optimization in Apache
+//! Spark"* (Zadeh et al., KDD 2016) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   fault-tolerant dataflow substrate ([`rdd`]) playing the
+//!   role of Spark, the distributed matrix library ([`distributed`]), the
+//!   ARPACK-style reverse-communication eigensolver ([`arpack`]), and the
+//!   optimization library ([`optim`], [`tfocs`]) — all built around the
+//!   paper's core idea of *separating matrix operations (cluster) from
+//!   vector operations (driver)*, orchestrated by [`coordinator`].
+//! * **Layer 2/1 (python/, build-time only)** — JAX compute graphs calling
+//!   Pallas kernels, AOT-lowered to HLO text artifacts that [`runtime`]
+//!   loads and executes on a PJRT CPU client. Python is never on the
+//!   request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sparkla::Context;
+//! use sparkla::distributed::RowMatrix;
+//!
+//! let ctx = Context::local("quickstart", 4);
+//! let rows: Vec<Vec<f64>> = (0..1000)
+//!     .map(|i| (0..10).map(|j| ((i * j) % 7) as f64).collect())
+//!     .collect();
+//! let mat = RowMatrix::from_dense_rows(&ctx, rows, 8);
+//! let svd = mat.compute_svd(5, true).unwrap();
+//! println!("top singular values: {:?}", svd.s);
+//! ```
+
+pub mod error;
+pub mod util;
+pub mod config;
+pub mod linalg;
+pub mod rdd;
+pub mod arpack;
+pub mod runtime;
+pub mod distributed;
+pub mod optim;
+pub mod tfocs;
+pub mod coordinator;
+pub mod bench;
+
+pub use coordinator::context::Context;
+pub use error::{Error, Result};

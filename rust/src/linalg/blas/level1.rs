@@ -1,0 +1,97 @@
+//! BLAS level 1: vector–vector kernels (driver-side hot loops).
+
+/// dot: xᵀy. Unrolled 4-way (see `vector::blas_dot` for rationale).
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    crate::linalg::vector::blas_dot(x, y)
+}
+
+/// axpy: y += alpha x.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// scal: x *= alpha.
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// nrm2: ‖x‖₂ with overflow-safe scaling (LAPACK dnrm2-style).
+pub fn nrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &xi in x {
+        if xi != 0.0 {
+            let a = xi.abs();
+            if scale < a {
+                ssq = 1.0 + ssq * (scale / a) * (scale / a);
+                scale = a;
+            } else {
+                ssq += (a / scale) * (a / scale);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// asum: Σ|xᵢ|.
+pub fn asum(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// iamax: index of max |xᵢ| (0 for empty).
+pub fn iamax(x: &[f64]) -> usize {
+    x.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn axpy_scal_basic() {
+        let mut y = vec![1.0, 2.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 42.0]);
+        scal(0.5, &mut y);
+        assert_eq!(y, vec![10.5, 21.0]);
+    }
+
+    #[test]
+    fn nrm2_overflow_safe() {
+        let big = 1e200;
+        let v = vec![big, big];
+        assert_close(nrm2(&v), big * 2f64.sqrt(), 1e-12, "no overflow");
+        assert_eq!(nrm2(&[]), 0.0);
+        assert_eq!(nrm2(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn nrm2_matches_naive_property() {
+        check("nrm2 == sqrt(sum sq)", 30, |g| {
+            let xs = g.vec_f64(1, 100);
+            let naive = xs.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert_close(nrm2(&xs), naive, 1e-12, "nrm2");
+        });
+    }
+
+    #[test]
+    fn iamax_picks_largest_magnitude() {
+        assert_eq!(iamax(&[1.0, -5.0, 3.0]), 1);
+        assert_eq!(iamax(&[]), 0);
+    }
+
+    #[test]
+    fn asum_basic() {
+        assert_eq!(asum(&[1.0, -2.0, 3.0]), 6.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! BLAS level 2: matrix–vector kernels.
+
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::blas_dot;
+
+/// gemv: y = alpha A x + beta y (row-major A: one dot per row).
+pub fn gemv(alpha: f64, a: &DenseMatrix, x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(a.cols, x.len());
+    debug_assert_eq!(a.rows, y.len());
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = alpha * blas_dot(a.row(i), x) + beta * *yi;
+    }
+}
+
+/// gemv_t: y = alpha Aᵀ x + beta y (single pass over A's rows; saxpy per
+/// row — avoids materializing Aᵀ).
+pub fn gemv_t(alpha: f64, a: &DenseMatrix, x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(a.rows, x.len());
+    debug_assert_eq!(a.cols, y.len());
+    if beta != 1.0 {
+        for yi in y.iter_mut() {
+            *yi *= beta;
+        }
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        let axi = alpha * xi;
+        if axi == 0.0 {
+            continue;
+        }
+        for (yj, &aij) in y.iter_mut().zip(a.row(i)) {
+            *yj += axi * aij;
+        }
+    }
+}
+
+/// ger: A += alpha x yᵀ (rank-1 update).
+pub fn ger(alpha: f64, x: &[f64], y: &[f64], a: &mut DenseMatrix) {
+    debug_assert_eq!(a.rows, x.len());
+    debug_assert_eq!(a.cols, y.len());
+    for (i, &xi) in x.iter().enumerate() {
+        let axi = alpha * xi;
+        for (aij, &yj) in a.row_mut(i).iter_mut().zip(y) {
+            *aij += axi * yj;
+        }
+    }
+}
+
+/// symv for a symmetric A (stored full): y = A x exploiting nothing —
+/// kept for API parity; symmetric storage isn't worth it at our sizes.
+pub fn symv(a: &DenseMatrix, x: &[f64], y: &mut [f64]) {
+    gemv(1.0, a, x, 0.0, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn gemv_alpha_beta() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let mut y = vec![100.0, 200.0];
+        gemv(2.0, &a, &[1.0, 1.0], 0.5, &mut y);
+        assert_eq!(y, vec![2.0 * 3.0 + 50.0, 2.0 * 7.0 + 100.0]);
+    }
+
+    #[test]
+    fn gemv_t_matches_transpose_property() {
+        check("gemv_t == gemv on transpose", 30, |g| {
+            let r = g.int(1, 15);
+            let c = g.int(1, 12);
+            let a = DenseMatrix::randn(r, c, g.rng());
+            let x: Vec<f64> = (0..r).map(|_| g.normal()).collect();
+            let mut y1 = vec![0.3; c];
+            let mut y2 = vec![0.3; c];
+            gemv_t(1.7, &a, &x, 0.4, &mut y1);
+            gemv(1.7, &a.transpose(), &x, 0.4, &mut y2);
+            assert_allclose(&y1, &y2, 1e-10, "gemv_t");
+        });
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = DenseMatrix::zeros(2, 3);
+        ger(2.0, &[1.0, -1.0], &[1.0, 2.0, 3.0], &mut a);
+        assert_eq!(a.row(0), &[2.0, 4.0, 6.0]);
+        assert_eq!(a.row(1), &[-2.0, -4.0, -6.0]);
+    }
+
+    #[test]
+    fn symv_delegates() {
+        let a = DenseMatrix::randn(4, 4, &mut SplitMix64::new(3));
+        let sym = a.add(&a.transpose()).unwrap();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 4];
+        symv(&sym, &x, &mut y);
+        let want = sym.matvec(&crate::linalg::vector::Vector(x)).unwrap();
+        assert_allclose(&y, &want.0, 1e-12, "symv");
+    }
+}

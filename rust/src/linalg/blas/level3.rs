@@ -1,0 +1,224 @@
+//! BLAS level 3: GEMM backends for the Fig. 2 reproduction.
+//!
+//! The performance ladder (naive → blocked → parallel) demonstrates the
+//! paper's §4 point on hardware-aware kernels; absolute numbers are in
+//! EXPERIMENTS.md (§Fig2). Tile size is tuned in the §Perf pass.
+
+use crate::linalg::matrix::DenseMatrix;
+use crate::util::pool;
+
+use super::GemmBackend;
+
+/// Cache tile edge: 3 tiles of 128×128 f64 = 384 KiB, L2-resident on the
+/// testbed. Swept {64, 128, 256} in the perf pass (EXPERIMENTS.md §Perf):
+/// 64 and 128 within noise at 128³, 128 ~8% ahead at 256³, 256 regressed.
+pub const TILE: usize = 128;
+
+/// Dispatch by backend.
+pub fn gemm(backend: GemmBackend, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    match backend {
+        GemmBackend::Naive => gemm_naive(a, b),
+        GemmBackend::Blocked => gemm_blocked(a, b),
+        GemmBackend::Parallel => gemm_parallel(a, b),
+    }
+}
+
+/// Triple loop in the natural (i, k, j) order. This is the `f2jblas`
+/// analog: correct, portable, no tiling. (i,k,j) rather than (i,j,k) so
+/// the inner loop is still a contiguous saxpy — honest baseline, not a
+/// strawman.
+pub fn gemm_naive(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows, "gemm inner dims");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = DenseMatrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (p, &aip) in arow.iter().enumerate().take(k) {
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = b.row(p);
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Cache-tiled GEMM: (ii, pp, jj) tile loops, micro-kernel is the same
+/// saxpy row update but confined to a TILE×TILE working set so B's panel
+/// stays in L1/L2 across the ii loop.
+pub fn gemm_blocked(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows, "gemm inner dims");
+    let (m, n) = (a.rows, b.cols);
+    let mut c = DenseMatrix::zeros(m, n);
+    gemm_blocked_into(a, b, &mut c, 0, m);
+    c
+}
+
+/// Tiled update of C rows [row0, row1) — shared by the serial and
+/// parallel drivers (the parallel backend splits the row range).
+fn gemm_blocked_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, row0: usize, row1: usize) {
+    let (k, n) = (a.cols, b.cols);
+    let nc = c.cols;
+    let bn = b.cols;
+    for pp in (0..k).step_by(TILE) {
+        let p_end = (pp + TILE).min(k);
+        for jj in (0..n).step_by(TILE) {
+            let j_end = (jj + TILE).min(n);
+            let jw = j_end - jj;
+            for i in row0..row1 {
+                let arow = a.row(i);
+                let crow = &mut c.data[i * nc + jj..i * nc + j_end];
+                // k-unrolled micro-kernel: 4 rows of B per pass over the
+                // C tile ⇒ 8 flops per C load+store instead of 2 (the
+                // §Perf register-blocking change; see EXPERIMENTS.md).
+                let mut p = pp;
+                while p + 4 <= p_end {
+                    let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+                    let b0 = &b.data[p * bn + jj..p * bn + j_end];
+                    let b1 = &b.data[(p + 1) * bn + jj..(p + 1) * bn + j_end];
+                    let b2 = &b.data[(p + 2) * bn + jj..(p + 2) * bn + j_end];
+                    let b3 = &b.data[(p + 3) * bn + jj..(p + 3) * bn + j_end];
+                    for j in 0..jw {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    p += 4;
+                }
+                while p < p_end {
+                    let aip = arow[p];
+                    if aip != 0.0 {
+                        let brow = &b.row(p)[jj..j_end];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += aip * bv;
+                        }
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Blocked + multi-threaded over row bands (the OpenBLAS analog).
+/// Threads write disjoint row ranges of C, so no synchronization is
+/// needed beyond the scoped join.
+pub fn gemm_parallel(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows, "gemm inner dims");
+    let (m, n) = (a.rows, b.cols);
+    let threads = pool::local_threads().min(m.max(1));
+    if threads <= 1 || m * n < 64 * 64 {
+        return gemm_blocked(a, b);
+    }
+    let mut c = DenseMatrix::zeros(m, n);
+    // split C's rows into `threads` contiguous bands
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut c.data;
+        let mut row0 = 0;
+        while row0 < m {
+            let band = rows_per.min(m - row0);
+            let (chunk, tail) = rest.split_at_mut(band * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || {
+                // compute the band into a local matrix, then copy into C's
+                // disjoint slice (the tiled driver wants a DenseMatrix)
+                let mut local = DenseMatrix { rows: band, cols: n, data: vec![0.0; band * n] };
+                let a_band = a_rows_view(a, r0, band);
+                gemm_blocked_into(&a_band, b, &mut local, 0, band);
+                chunk.copy_from_slice(&local.data);
+            });
+            row0 += band;
+        }
+    });
+    c
+}
+
+/// Copy of rows [row0, row0+band) of A (bands are reused across all B
+/// tiles, so one copy per thread is cheap relative to the multiply).
+fn a_rows_view(a: &DenseMatrix, row0: usize, band: usize) -> DenseMatrix {
+    DenseMatrix {
+        rows: band,
+        cols: a.cols,
+        data: a.data[row0 * a.cols..(row0 + band) * a.cols].to_vec(),
+    }
+}
+
+/// FLOP count of a GEMM (2·m·k·n) — used by the bench harness to report
+/// GFLOP/s like the paper's Fig. 2 y-axis.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn all_backends_agree_property() {
+        check("naive == blocked == parallel", 15, |g| {
+            let m = g.int(1, 40);
+            let k = g.int(1, 40);
+            let n = g.int(1, 40);
+            let a = DenseMatrix::randn(m, k, g.rng());
+            let b = DenseMatrix::randn(k, n, g.rng());
+            let c1 = gemm_naive(&a, &b);
+            let c2 = gemm_blocked(&a, &b);
+            let c3 = gemm_parallel(&a, &b);
+            assert_allclose(&c1.data, &c2.data, 1e-10, "naive vs blocked");
+            assert_allclose(&c1.data, &c3.data, 1e-10, "naive vs parallel");
+        });
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let a = DenseMatrix::randn(7, 7, &mut SplitMix64::new(1));
+        let i = DenseMatrix::eye(7);
+        for backend in [GemmBackend::Naive, GemmBackend::Blocked, GemmBackend::Parallel] {
+            let c = gemm(backend, &a, &i);
+            assert!(c.max_abs_diff(&a) < 1e-12, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn non_square_tile_boundaries() {
+        // shapes straddling TILE boundaries exercise edge tiles
+        let mut rng = SplitMix64::new(2);
+        for (m, k, n) in [(TILE - 1, TILE + 1, 2 * TILE), (1, 200, 3), (130, 65, 129)] {
+            let a = DenseMatrix::randn(m, k, &mut rng);
+            let b = DenseMatrix::randn(k, n, &mut rng);
+            let c1 = gemm_naive(&a, &b);
+            let c2 = gemm_blocked(&a, &b);
+            let c3 = gemm_parallel(&a, &b);
+            assert!(c1.max_abs_diff(&c2) < 1e-10);
+            assert!(c1.max_abs_diff(&c3) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parallel_handles_more_threads_than_rows() {
+        let mut rng = SplitMix64::new(3);
+        let a = DenseMatrix::randn(2, 100, &mut rng);
+        let b = DenseMatrix::randn(100, 100, &mut rng);
+        let c = gemm_parallel(&a, &b);
+        assert!(c.max_abs_diff(&gemm_naive(&a, &b)) < 1e-10);
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn dim_mismatch_panics() {
+        let a = DenseMatrix::zeros(2, 3);
+        let b = DenseMatrix::zeros(4, 2);
+        gemm_naive(&a, &b);
+    }
+}

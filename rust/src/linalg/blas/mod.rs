@@ -1,0 +1,40 @@
+//! BLAS-style dense kernels — the local compute the paper pushes to
+//! hardware (§4). Three GEMM backends mirror the paper's Fig. 2 ladder:
+//!
+//! * [`level3::gemm_naive`] — the `f2jblas` analog: straight triple loop.
+//! * [`level3::gemm_blocked`] — cache-tiled single-thread (what a good
+//!   portable BLAS does).
+//! * [`level3::gemm_parallel`] — blocked + threads (the OpenBLAS analog).
+//!
+//! The fourth and fifth backends of our Fig.-2 reproduction — XLA HLO and
+//! the Pallas-lowered HLO — live in `runtime::ops` (they need PJRT).
+
+pub mod level1;
+pub mod level2;
+pub mod level3;
+
+/// Which GEMM backend to use — selectable per call and benchmarked
+/// head-to-head in `bench_gemm` (Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmBackend {
+    /// Triple loop, no tiling (f2jblas analog).
+    Naive,
+    /// Cache-tiled, single thread.
+    Blocked,
+    /// Cache-tiled, multi-threaded (OpenBLAS analog).
+    Parallel,
+}
+
+impl std::str::FromStr for GemmBackend {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "naive" => Ok(GemmBackend::Naive),
+            "blocked" => Ok(GemmBackend::Blocked),
+            "parallel" => Ok(GemmBackend::Parallel),
+            other => Err(crate::error::Error::InvalidArgument(format!(
+                "unknown gemm backend {other:?} (naive|blocked|parallel)"
+            ))),
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Cholesky factorization + triangular solves — driver-side tools used by
+//! the TSQR R-factor path and the smoothed-LP dual recovery.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+
+/// Lower-triangular L with A = L Lᵀ. Errors if A is not (numerically) PD.
+pub fn cholesky(a: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = a.rows;
+    if a.cols != n {
+        return Err(Error::dim(format!("cholesky needs square, got {}x{}", a.rows, a.cols)));
+    }
+    let mut l = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::InvalidArgument(format!(
+                        "cholesky: pivot {i} non-positive ({sum:.3e}) — matrix not PD"
+                    )));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L x = b with L lower triangular (forward substitution).
+pub fn solve_lower(l: &DenseMatrix, b: &Vector) -> Result<Vector> {
+    let n = l.rows;
+    crate::ensure_dims!(n, b.len(), "solve_lower dims");
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l.get(i, j) * x[j];
+        }
+        let d = l.get(i, i);
+        if d.abs() < 1e-300 {
+            return Err(Error::InvalidArgument(format!("solve_lower: zero pivot at {i}")));
+        }
+        x[i] = s / d;
+    }
+    Ok(Vector(x))
+}
+
+/// Solve U x = b with U upper triangular (back substitution).
+pub fn solve_upper(u: &DenseMatrix, b: &Vector) -> Result<Vector> {
+    let n = u.rows;
+    crate::ensure_dims!(n, b.len(), "solve_upper dims");
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in i + 1..n {
+            s -= u.get(i, j) * x[j];
+        }
+        let d = u.get(i, i);
+        if d.abs() < 1e-300 {
+            return Err(Error::InvalidArgument(format!("solve_upper: zero pivot at {i}")));
+        }
+        x[i] = s / d;
+    }
+    Ok(Vector(x))
+}
+
+/// Solve A x = b for symmetric positive-definite A via Cholesky.
+pub fn solve_spd(a: &DenseMatrix, b: &Vector) -> Result<Vector> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b)?;
+    solve_upper(&l.transpose(), &y)
+}
+
+/// Invert an upper-triangular matrix (for TSQR's R⁻¹ when forming Q).
+pub fn invert_upper(u: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = u.rows;
+    let mut inv = DenseMatrix::zeros(n, n);
+    for col in 0..n {
+        let mut e = Vector::zeros(n);
+        e[col] = 1.0;
+        let x = solve_upper(u, &e)?;
+        for i in 0..n {
+            inv.set(i, col, x[i]);
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    fn random_spd(n: usize, rng: &mut SplitMix64) -> DenseMatrix {
+        let a = DenseMatrix::randn(n + 2, n, rng);
+        let mut g = a.gram();
+        for i in 0..n {
+            g.set(i, i, g.get(i, i) + 0.5); // bump diagonal for conditioning
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs_property() {
+        check("L L^T == A", 20, |g| {
+            let n = g.int(1, 10);
+            let a = random_spd(n, g.rng());
+            let l = cholesky(&a).unwrap();
+            let back = l.matmul(&l.transpose()).unwrap();
+            assert!(back.max_abs_diff(&a) < 1e-8 * (1.0 + a.frob_norm()));
+            // L is lower triangular
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.get(i, j), 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]).unwrap(); // eigs 3,-1
+        assert!(cholesky(&a).is_err());
+        assert!(cholesky(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn spd_solve_property() {
+        check("solve_spd residual small", 20, |g| {
+            let n = g.int(1, 10);
+            let a = random_spd(n, g.rng());
+            let b = Vector((0..n).map(|_| g.normal()).collect());
+            let x = solve_spd(&a, &b).unwrap();
+            let r = a.matvec(&x).unwrap().sub(&b);
+            assert!(r.norm2() < 1e-7 * (1.0 + b.norm2()), "residual {}", r.norm2());
+        });
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let l = DenseMatrix::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]).unwrap();
+        let x = solve_lower(&l, &Vector::from(&[4.0, 11.0])).unwrap();
+        assert_allclose(&x.0, &[2.0, 3.0], 1e-12, "fwd");
+        let u = l.transpose();
+        let x = solve_upper(&u, &Vector::from(&[7.0, 9.0])).unwrap();
+        assert_allclose(&x.0, &[2.0, 3.0], 1e-12, "bwd");
+    }
+
+    #[test]
+    fn invert_upper_property() {
+        check("U U^-1 == I", 15, |g| {
+            let n = g.int(1, 8);
+            let a = random_spd(n, g.rng());
+            let l = cholesky(&a).unwrap();
+            let u = l.transpose();
+            let uinv = invert_upper(&u).unwrap();
+            let eye = u.matmul(&uinv).unwrap();
+            assert!(eye.max_abs_diff(&DenseMatrix::eye(n)) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn zero_pivot_rejected() {
+        let u = DenseMatrix::from_rows(&[vec![1.0, 1.0], vec![0.0, 0.0]]).unwrap();
+        assert!(solve_upper(&u, &Vector::from(&[1.0, 1.0])).is_err());
+    }
+}

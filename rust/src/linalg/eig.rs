@@ -1,0 +1,302 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization + implicit
+//! QL with Wilkinson shifts (EISPACK `tred2`/`tql2` lineage — fitting,
+//! given the paper's theme of reusing decades-old numerics).
+//!
+//! This is the *driver-local* eigensolver used by the tall-skinny SVD
+//! (paper §3.1.2): A^T A is n×n with n small, so an O(n³) dense solve on
+//! the driver is the right tool.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+
+/// Eigendecomposition A = V diag(λ) Vᵀ of a symmetric matrix.
+/// `values` are sorted DESCENDING (the order SVD wants); `vectors`
+/// columns correspond.
+#[derive(Debug, Clone)]
+pub struct EigResult {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Column i of `vectors` is the eigenvector for `values[i]`.
+    pub vectors: DenseMatrix,
+}
+
+/// Symmetric eigendecomposition. Input must be square and (numerically)
+/// symmetric; asymmetry beyond 1e-8·‖A‖ is rejected.
+pub fn eig_sym(a: &DenseMatrix) -> Result<EigResult> {
+    let n = a.rows;
+    if a.cols != n {
+        return Err(Error::dim(format!("eig_sym needs square, got {}x{}", a.rows, a.cols)));
+    }
+    if n == 0 {
+        return Ok(EigResult { values: vec![], vectors: DenseMatrix::zeros(0, 0) });
+    }
+    let scale = a.frob_norm().max(1e-300);
+    for i in 0..n {
+        for j in 0..i {
+            if (a.get(i, j) - a.get(j, i)).abs() > 1e-8 * scale {
+                return Err(Error::InvalidArgument(format!(
+                    "eig_sym: asymmetric at ({i},{j}): {} vs {}",
+                    a.get(i, j),
+                    a.get(j, i)
+                )));
+            }
+        }
+    }
+    // --- tred2: tridiagonalize, accumulating transforms in z ---
+    let mut z = a.clone();
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // sub-diagonal
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z.get(i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = z.get(i, l);
+            } else {
+                for k in 0..=l {
+                    let v = z.get(i, k) / scale;
+                    z.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = z.get(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z.set(i, l, f - g);
+                f = 0.0;
+                for j in 0..=l {
+                    z.set(j, i, z.get(i, j) / h);
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z.get(j, k) * z.get(i, k);
+                    }
+                    for k in j + 1..=l {
+                        g += z.get(k, j) * z.get(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z.get(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z.get(i, j);
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let v = z.get(j, k) - (f * e[k] + g * z.get(i, k));
+                        z.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = z.get(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z.get(i, k) * z.get(k, j);
+                }
+                for k in 0..i {
+                    let v = z.get(k, j) - g * z.get(k, i);
+                    z.set(k, j, v);
+                }
+            }
+        }
+        d[i] = z.get(i, i);
+        z.set(i, i, 1.0);
+        for j in 0..i {
+            z.set(j, i, 0.0);
+            z.set(i, j, 0.0);
+        }
+    }
+    // --- tql2: implicit QL on the tridiagonal, rotating z ---
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small subdiagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::NoConvergence(format!(
+                    "tql2: eigenvalue {l} not converged after 50 sweeps"
+                )));
+            }
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sgn = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sgn);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // deflate: rotation underflowed before reaching l
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate rotation into z
+                for k in 0..n {
+                    f = z.get(k, i + 1);
+                    let v = z.get(k, i);
+                    z.set(k, i + 1, s * v + c * f);
+                    z.set(k, i, c * v - s * f);
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    // sort descending, permuting columns of z
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vectors = DenseMatrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors.set(i, new_j, z.get(i, old_j));
+        }
+    }
+    Ok(EigResult { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    fn random_symmetric(n: usize, rng: &mut SplitMix64) -> DenseMatrix {
+        let a = DenseMatrix::randn(n, n, rng);
+        a.add(&a.transpose()).unwrap().scale(0.5)
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = DenseMatrix::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -1.0);
+        a.set(2, 2, 7.0);
+        let e = eig_sym(&a).unwrap();
+        assert_allclose(&e.values, &[7.0, 3.0, -1.0], 1e-12, "diag eigs");
+    }
+
+    #[test]
+    fn reconstruction_property() {
+        check("V diag(l) V^T == A", 15, |g| {
+            let n = g.int(1, 12);
+            let a = random_symmetric(n, g.rng());
+            let e = eig_sym(&a).unwrap();
+            // rebuild
+            let mut lam = DenseMatrix::zeros(n, n);
+            for i in 0..n {
+                lam.set(i, i, e.values[i]);
+            }
+            let back = e.vectors.matmul(&lam).unwrap().matmul(&e.vectors.transpose()).unwrap();
+            assert!(
+                back.max_abs_diff(&a) < 1e-8 * (1.0 + a.frob_norm()),
+                "reconstruction err {}",
+                back.max_abs_diff(&a)
+            );
+        });
+    }
+
+    #[test]
+    fn vectors_orthonormal_property() {
+        check("V^T V == I", 15, |g| {
+            let n = g.int(1, 12);
+            let a = random_symmetric(n, g.rng());
+            let e = eig_sym(&a).unwrap();
+            let vtv = e.vectors.transpose().matmul(&e.vectors).unwrap();
+            assert!(vtv.max_abs_diff(&DenseMatrix::eye(n)) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        let a = random_symmetric(10, &mut SplitMix64::new(4));
+        let e = eig_sym(&a).unwrap();
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_matrix_eigs_nonnegative() {
+        // A^T A is PSD — eigenvalues must be >= 0 (up to roundoff); this is
+        // what the tall-skinny SVD relies on.
+        let mut rng = SplitMix64::new(5);
+        let a = DenseMatrix::randn(30, 8, &mut rng);
+        let e = eig_sym(&a.gram()).unwrap();
+        for &v in &e.values {
+            assert!(v > -1e-8, "negative PSD eigenvalue {v}");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigs 3, 1
+        let a = DenseMatrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]).unwrap();
+        let e = eig_sym(&a).unwrap();
+        assert_allclose(&e.values, &[3.0, 1.0], 1e-12, "2x2 eigs");
+        // eigenvector for 3 is [1,1]/sqrt(2) up to sign
+        let v0 = (e.vectors.get(0, 0), e.vectors.get(1, 0));
+        assert!((v0.0.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v0.0 - v0.1).abs() < 1e-10 || (v0.0 + v0.1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn asymmetric_rejected() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]).unwrap();
+        assert!(eig_sym(&a).is_err());
+        assert!(eig_sym(&DenseMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(eig_sym(&DenseMatrix::zeros(0, 0)).unwrap().values.is_empty());
+        let a = DenseMatrix::from_rows(&[vec![5.0]]).unwrap();
+        let e = eig_sym(&a).unwrap();
+        assert_allclose(&e.values, &[5.0], 1e-15, "1x1");
+    }
+}

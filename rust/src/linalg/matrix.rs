@@ -1,0 +1,380 @@
+//! Row-major dense matrix — the local matrix type (paper §2.4) and the
+//! in-memory form of one `RowMatrix` partition / one `BlockMatrix` block.
+
+use crate::error::{Error, Result};
+use crate::linalg::vector::{blas_dot, Vector};
+use crate::util::rng::SplitMix64;
+
+/// Dense row-major `f64` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (or rectangular eye).
+    pub fn eye(n: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_row_major(rows: usize, cols: usize, data: Vec<f64>) -> Result<DenseMatrix> {
+        if data.len() != rows * cols {
+            return Err(Error::dim(format!(
+                "from_row_major: {}x{} needs {} values, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+
+    /// From a list of rows.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<DenseMatrix> {
+        if rows.is_empty() {
+            return Ok(DenseMatrix::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != cols {
+                return Err(Error::dim(format!("row {i} has len {} != {cols}", r.len())));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(DenseMatrix { rows: rows.len(), cols, data })
+    }
+
+    /// i.i.d. standard normal entries (deterministic under seed).
+    pub fn randn(rows: usize, cols: usize, rng: &mut SplitMix64) -> DenseMatrix {
+        DenseMatrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Element write.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row i as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row i.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column j out.
+    pub fn col(&self, j: usize) -> Vector {
+        Vector((0..self.rows).map(|i| self.get(i, j)).collect())
+    }
+
+    /// Transpose (allocating).
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Matrix–vector product `A x`.
+    pub fn matvec(&self, x: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(self.cols, x.len(), "matvec A.cols vs x.len");
+        Ok(Vector(
+            (0..self.rows).map(|i| blas_dot(self.row(i), x.as_slice())).collect(),
+        ))
+    }
+
+    /// Transposed matrix–vector product `Aᵀ y` (single pass over rows —
+    /// this is the executor-side op in gramvec).
+    pub fn tmatvec(&self, y: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(self.rows, y.len(), "tmatvec A.rows vs y.len");
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let yi = y[i];
+            if yi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += yi * a;
+            }
+        }
+        Ok(Vector(out))
+    }
+
+    /// Gram matrix `AᵀA` (n×n, symmetric; only upper triangle computed
+    /// then mirrored).
+    pub fn gram(&self) -> DenseMatrix {
+        let n = self.cols;
+        let mut g = DenseMatrix::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let gi = &mut g.data[i * n..(i + 1) * n];
+                for j in i..n {
+                    gi[j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g.data[i * n + j] = g.data[j * n + i];
+            }
+        }
+        g
+    }
+
+    /// Matrix product via the default blocked kernel (see `blas::level3`).
+    pub fn matmul(&self, o: &DenseMatrix) -> Result<DenseMatrix> {
+        crate::ensure_dims!(self.cols, o.rows, "matmul inner dims");
+        Ok(crate::linalg::blas::level3::gemm_blocked(self, o))
+    }
+
+    /// self + other.
+    pub fn add(&self, o: &DenseMatrix) -> Result<DenseMatrix> {
+        crate::ensure_dims!(self.rows, o.rows, "add rows");
+        crate::ensure_dims!(self.cols, o.cols, "add cols");
+        Ok(DenseMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&o.data).map(|(a, b)| a + b).collect(),
+        })
+    }
+
+    /// self - other.
+    pub fn sub(&self, o: &DenseMatrix) -> Result<DenseMatrix> {
+        crate::ensure_dims!(self.rows, o.rows, "sub rows");
+        crate::ensure_dims!(self.cols, o.cols, "sub cols");
+        Ok(DenseMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&o.data).map(|(a, b)| a - b).collect(),
+        })
+    }
+
+    /// alpha * self.
+    pub fn scale(&self, alpha: f64) -> DenseMatrix {
+        DenseMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| alpha * x).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry| difference to another matrix (test helper).
+    pub fn max_abs_diff(&self, o: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        self.data
+            .iter()
+            .zip(&o.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Extract a sub-block (for BlockMatrix construction).
+    pub fn block(&self, row0: usize, col0: usize, n_rows: usize, n_cols: usize) -> DenseMatrix {
+        assert!(row0 + n_rows <= self.rows && col0 + n_cols <= self.cols);
+        let mut b = DenseMatrix::zeros(n_rows, n_cols);
+        for i in 0..n_rows {
+            b.row_mut(i)
+                .copy_from_slice(&self.row(row0 + i)[col0..col0 + n_cols]);
+        }
+        b
+    }
+
+    /// Vertically stack.
+    pub fn vstack(blocks: &[&DenseMatrix]) -> Result<DenseMatrix> {
+        if blocks.is_empty() {
+            return Ok(DenseMatrix::zeros(0, 0));
+        }
+        let cols = blocks[0].cols;
+        let mut data = vec![];
+        let mut rows = 0;
+        for b in blocks {
+            crate::ensure_dims!(b.cols, cols, "vstack cols");
+            data.extend_from_slice(&b.data);
+            rows += b.rows;
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+
+    /// Pad with zero rows/cols to (r, c) — the XLA artifact-shape adapter.
+    pub fn pad_to(&self, r: usize, c: usize) -> DenseMatrix {
+        assert!(r >= self.rows && c >= self.cols);
+        let mut out = DenseMatrix::zeros(r, c);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Row-major f32 copy (XLA literal transfer).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+}
+
+impl std::fmt::Display for DenseMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "DenseMatrix {}x{}", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            let vals: Vec<String> =
+                (0..show_c).map(|j| format!("{:>10.4}", self.get(i, j))).collect();
+            let ell = if self.cols > show_c { " ..." } else { "" };
+            writeln!(f, "  [{}{}]", vals.join(" "), ell)?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, assert_close, check};
+
+    fn small() -> DenseMatrix {
+        DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]).unwrap()
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = small();
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.get(2, 1), 6.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col(0).0, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(DenseMatrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(DenseMatrix::from_row_major(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = small();
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn matvec_and_tmatvec() {
+        let m = small();
+        let x = Vector::from(&[1.0, -1.0]);
+        assert_eq!(m.matvec(&x).unwrap().0, vec![-1.0, -1.0, -1.0]);
+        let y = Vector::from(&[1.0, 0.0, -1.0]);
+        assert_eq!(m.tmatvec(&y).unwrap().0, vec![-4.0, -4.0]);
+        assert!(m.matvec(&Vector::zeros(3)).is_err());
+        assert!(m.tmatvec(&Vector::zeros(2)).is_err());
+    }
+
+    #[test]
+    fn gram_matches_transpose_matmul() {
+        check("gram == A^T * A", 25, |g| {
+            let r = g.int(1, 12);
+            let c = g.int(1, 8);
+            let m = DenseMatrix::randn(r, c, g.rng());
+            let gram = m.gram();
+            let gram2 = m.transpose().matmul(&m).unwrap();
+            assert_allclose(&gram.data, &gram2.data, 1e-10, "gram");
+        });
+    }
+
+    #[test]
+    fn tmatvec_consistent_with_transpose_matvec() {
+        check("A^T y == (A^T) y", 25, |g| {
+            let r = g.int(1, 12);
+            let c = g.int(1, 9);
+            let m = DenseMatrix::randn(r, c, g.rng());
+            let y = Vector(g.vec_f64(0, 0).into_iter().chain((0..r).map(|_| g.normal())).collect());
+            let a = m.tmatvec(&y).unwrap();
+            let b = m.transpose().matvec(&y).unwrap();
+            assert_allclose(&a.0, &b.0, 1e-10, "tmatvec");
+        });
+    }
+
+    #[test]
+    fn block_and_vstack_roundtrip() {
+        let m = DenseMatrix::randn(6, 4, &mut SplitMix64::new(1));
+        let top = m.block(0, 0, 3, 4);
+        let bot = m.block(3, 0, 3, 4);
+        let back = DenseMatrix::vstack(&[&top, &bot]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn pad_preserves_content_and_zero_fills() {
+        let m = small();
+        let p = m.pad_to(5, 4);
+        assert_eq!(p.get(2, 1), 6.0);
+        assert_eq!(p.get(4, 3), 0.0);
+        assert_close(p.frob_norm(), m.frob_norm(), 1e-15, "pad norm");
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let m = small();
+        let s = m.add(&m).unwrap();
+        assert_eq!(s, m.scale(2.0));
+        let d = s.sub(&m).unwrap();
+        assert_eq!(d, m);
+        assert!(m.add(&DenseMatrix::zeros(1, 1)).is_err());
+    }
+
+    #[test]
+    fn display_does_not_panic() {
+        let m = DenseMatrix::randn(10, 12, &mut SplitMix64::new(2));
+        let s = format!("{m}");
+        assert!(s.contains("10x12"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Local (single-node) linear algebra — the paper's §2.4 "Local Vectors
+//! and Matrices" plus the dense/sparse kernels that back both the driver
+//! computations and the per-partition executor work when XLA artifacts are
+//! not in play.
+//!
+//! Layout conventions: [`DenseMatrix`] is **row-major** (a `RowMatrix`
+//! partition is a contiguous block of rows), [`SparseMatrix`] is CCS
+//! (Compressed Column Storage), exactly the format §4.2 describes.
+
+pub mod vector;
+pub mod matrix;
+pub mod sparse;
+pub mod blas;
+pub mod qr;
+pub mod eig;
+pub mod cholesky;
+pub mod svd_local;
+
+pub use matrix::DenseMatrix;
+pub use sparse::{SparseMatrix, SparseVector};
+pub use vector::Vector;

@@ -1,0 +1,199 @@
+//! Householder QR — the local factor kernel behind the distributed TSQR
+//! (paper §3.4, ref \[2\]: "Direct QR factorizations for tall-and-skinny
+//! matrices in MapReduce architectures").
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+
+/// Result of a thin QR: `q` is m×n with orthonormal columns, `r` is n×n
+/// upper triangular, A = Q R. Requires m >= n.
+#[derive(Debug, Clone)]
+pub struct QrResult {
+    /// Orthonormal factor (m×n).
+    pub q: DenseMatrix,
+    /// Upper-triangular factor (n×n).
+    pub r: DenseMatrix,
+}
+
+/// Thin Householder QR of an m×n matrix with m >= n.
+pub fn qr_thin(a: &DenseMatrix) -> Result<QrResult> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        return Err(Error::InvalidArgument(format!(
+            "qr_thin needs rows >= cols, got {m}x{n}"
+        )));
+    }
+    // Work on a copy; accumulate Householder vectors in-place (LAPACK
+    // dgeqrf layout: v's below the diagonal, R on and above).
+    let mut work = a.clone();
+    let mut betas = vec![0.0f64; n];
+    for k in 0..n {
+        // Householder vector for column k, rows k..m
+        let mut alpha = 0.0;
+        for i in k..m {
+            let v = work.get(i, k);
+            alpha += v * v;
+        }
+        alpha = alpha.sqrt();
+        if alpha == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let akk = work.get(k, k);
+        let sign = if akk >= 0.0 { 1.0 } else { -1.0 };
+        let v0 = akk + sign * alpha;
+        // normalize so v[k] = 1 implicitly; beta = 2 / (v^T v) with v scaled
+        let mut vtv = 1.0;
+        for i in k + 1..m {
+            let vi = work.get(i, k) / v0;
+            work.set(i, k, vi);
+            vtv += vi * vi;
+        }
+        betas[k] = 2.0 / vtv;
+        work.set(k, k, -sign * alpha); // R(k,k)
+        // apply H = I - beta v v^T to remaining columns
+        for j in k + 1..n {
+            let mut dot = work.get(k, j); // v[k] = 1
+            for i in k + 1..m {
+                dot += work.get(i, k) * work.get(i, j);
+            }
+            let bd = betas[k] * dot;
+            work.set(k, j, work.get(k, j) - bd);
+            for i in k + 1..m {
+                let w = work.get(i, j) - bd * work.get(i, k);
+                work.set(i, j, w);
+            }
+        }
+    }
+    // extract R
+    let mut r = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r.set(i, j, work.get(i, j));
+        }
+    }
+    // form thin Q by applying H_k ... H_1 to the first n columns of I
+    let mut q = DenseMatrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        if betas[k] == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = q.get(k, j);
+            for i in k + 1..m {
+                dot += work.get(i, k) * q.get(i, j);
+            }
+            let bd = betas[k] * dot;
+            q.set(k, j, q.get(k, j) - bd);
+            for i in k + 1..m {
+                let w = q.get(i, j) - bd * work.get(i, k);
+                q.set(i, j, w);
+            }
+        }
+    }
+    Ok(QrResult { q, r })
+}
+
+/// Force R to have a non-negative diagonal (flips matching Q columns) —
+/// makes the factorization unique, which TSQR's tests rely on.
+pub fn canonicalize(qr: &mut QrResult) {
+    let n = qr.r.cols;
+    for j in 0..n {
+        if qr.r.get(j, j) < 0.0 {
+            for jj in j..n {
+                let v = qr.r.get(j, jj);
+                qr.r.set(j, jj, -v);
+            }
+            for i in 0..qr.q.rows {
+                let v = qr.q.get(i, j);
+                qr.q.set(i, j, -v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::SplitMix64;
+
+    fn assert_orthonormal(q: &DenseMatrix, tol: f64) {
+        let qtq = q.transpose().matmul(q).unwrap();
+        let eye = DenseMatrix::eye(q.cols);
+        assert!(
+            qtq.max_abs_diff(&eye) < tol,
+            "Q^T Q != I (err {})",
+            qtq.max_abs_diff(&eye)
+        );
+    }
+
+    #[test]
+    fn reconstructs_a_property() {
+        check("QR reconstructs A", 20, |g| {
+            let n = g.int(1, 10);
+            let m = n + g.int(0, 20);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let qr = qr_thin(&a).unwrap();
+            let back = qr.q.matmul(&qr.r).unwrap();
+            assert!(back.max_abs_diff(&a) < 1e-9, "A != QR");
+            assert_orthonormal(&qr.q, 1e-9);
+        });
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = DenseMatrix::randn(8, 5, &mut SplitMix64::new(1));
+        let qr = qr_thin(&a).unwrap();
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(qr.r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_matrix_rejected() {
+        let a = DenseMatrix::zeros(2, 5);
+        assert!(qr_thin(&a).is_err());
+    }
+
+    #[test]
+    fn rank_deficient_survives() {
+        // two identical columns
+        let mut a = DenseMatrix::randn(6, 3, &mut SplitMix64::new(2));
+        for i in 0..6 {
+            let v = a.get(i, 0);
+            a.set(i, 1, v);
+        }
+        let qr = qr_thin(&a).unwrap();
+        let back = qr.q.matmul(&qr.r).unwrap();
+        assert!(back.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn canonical_r_diag_nonnegative() {
+        let a = DenseMatrix::randn(7, 4, &mut SplitMix64::new(3));
+        let mut qr = qr_thin(&a).unwrap();
+        canonicalize(&mut qr);
+        for j in 0..4 {
+            assert!(qr.r.get(j, j) >= 0.0);
+        }
+        let back = qr.q.matmul(&qr.r).unwrap();
+        assert!(back.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn square_identity() {
+        // Householder sign convention gives Q = R = -I; canonicalize
+        // (non-negative R diagonal) recovers exactly I.
+        let i5 = DenseMatrix::eye(5);
+        let mut qr = qr_thin(&i5).unwrap();
+        canonicalize(&mut qr);
+        assert!(qr.q.max_abs_diff(&i5) < 1e-12);
+        assert!(qr.r.max_abs_diff(&i5) < 1e-12);
+    }
+}

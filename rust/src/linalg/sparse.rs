@@ -1,0 +1,371 @@
+//! Sparse local types: `SparseVector` (parallel index/value arrays, the
+//! paper's §2.4 format) and `SparseMatrix` in CCS (Compressed Column
+//! Storage, §4.2), with the specialized kernels the paper benchmarks:
+//! Sparse×DenseVector and Sparse×DenseMatrix, optionally transposed.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+use crate::util::rng::SplitMix64;
+
+/// Sparse vector: sorted `indices` with matching `values` (paper §2.4:
+/// "(3, [0, 2], [1.0, 3.0])").
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVector {
+    /// Logical length.
+    pub size: usize,
+    /// Sorted nonzero indices.
+    pub indices: Vec<u32>,
+    /// Values parallel to `indices`.
+    pub values: Vec<f64>,
+}
+
+impl SparseVector {
+    /// Build, validating sortedness and bounds.
+    pub fn new(size: usize, indices: Vec<u32>, values: Vec<f64>) -> Result<SparseVector> {
+        if indices.len() != values.len() {
+            return Err(Error::dim(format!(
+                "sparse vector: {} indices vs {} values",
+                indices.len(),
+                values.len()
+            )));
+        }
+        for w in indices.windows(2) {
+            if w[0] >= w[1] {
+                return Err(Error::InvalidArgument("indices must be strictly increasing".into()));
+            }
+        }
+        if let Some(&last) = indices.last() {
+            if last as usize >= size {
+                return Err(Error::InvalidArgument(format!("index {last} >= size {size}")));
+            }
+        }
+        Ok(SparseVector { size, indices, values })
+    }
+
+    /// From a dense slice, dropping zeros.
+    pub fn from_dense(xs: &[f64]) -> SparseVector {
+        let mut indices = vec![];
+        let mut values = vec![];
+        for (i, &x) in xs.iter().enumerate() {
+            if x != 0.0 {
+                indices.push(i as u32);
+                values.push(x);
+            }
+        }
+        SparseVector { size: xs.len(), indices, values }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Vector {
+        let mut v = vec![0.0; self.size];
+        for (&i, &x) in self.indices.iter().zip(&self.values) {
+            v[i as usize] = x;
+        }
+        Vector(v)
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Dot with a dense vector.
+    pub fn dot_dense(&self, d: &Vector) -> f64 {
+        debug_assert_eq!(self.size, d.len());
+        self.indices
+            .iter()
+            .zip(&self.values)
+            .map(|(&i, &x)| x * d[i as usize])
+            .sum()
+    }
+
+    /// Squared 2-norm.
+    pub fn norm2_sq(&self) -> f64 {
+        self.values.iter().map(|x| x * x).sum()
+    }
+}
+
+/// CCS sparse matrix (MLlib `SparseMatrix`): `col_ptrs` of length
+/// `cols + 1`; `row_indices[col_ptrs[j]..col_ptrs[j+1]]` are the (sorted)
+/// row indices of column j.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseMatrix {
+    /// Rows.
+    pub rows: usize,
+    /// Cols.
+    pub cols: usize,
+    /// Column pointers, len cols+1.
+    pub col_ptrs: Vec<usize>,
+    /// Row index per stored value.
+    pub row_indices: Vec<u32>,
+    /// Stored values.
+    pub values: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// From COO triplets (unsorted ok; duplicates summed).
+    pub fn from_coo(rows: usize, cols: usize, mut entries: Vec<(usize, usize, f64)>) -> Result<SparseMatrix> {
+        for &(i, j, _) in &entries {
+            if i >= rows || j >= cols {
+                return Err(Error::InvalidArgument(format!(
+                    "entry ({i},{j}) out of bounds {rows}x{cols}"
+                )));
+            }
+        }
+        entries.sort_unstable_by_key(|&(i, j, _)| (j, i));
+        let mut col_ptrs = vec![0usize; cols + 1];
+        let mut row_indices: Vec<u32> = vec![];
+        let mut values: Vec<f64> = vec![];
+        let mut prev: Option<(usize, usize)> = None;
+        for (i, j, v) in entries {
+            if prev == Some((i, j)) {
+                *values.last_mut().expect("dup follows a stored entry") += v;
+                continue;
+            }
+            row_indices.push(i as u32);
+            values.push(v);
+            col_ptrs[j + 1] = row_indices.len();
+            prev = Some((i, j));
+        }
+        // make col_ptrs cumulative (forward-fill columns with no entries)
+        for j in 1..=cols {
+            if col_ptrs[j] < col_ptrs[j - 1] {
+                col_ptrs[j] = col_ptrs[j - 1];
+            }
+        }
+        Ok(SparseMatrix { rows, cols, col_ptrs, row_indices, values })
+    }
+
+    /// Random sparse matrix with a target density (deterministic per seed).
+    pub fn rand(rows: usize, cols: usize, density: f64, rng: &mut SplitMix64) -> SparseMatrix {
+        let mut entries = vec![];
+        // per-column expected count keeps generation O(nnz)
+        let per_col = ((rows as f64 * density).ceil() as usize).max(1);
+        for j in 0..cols {
+            let mut seen = std::collections::BTreeSet::new();
+            for _ in 0..per_col {
+                seen.insert(rng.next_usize(rows));
+            }
+            for i in seen {
+                entries.push((i, j, rng.normal()));
+            }
+        }
+        SparseMatrix::from_coo(rows, cols, entries).expect("in-bounds by construction")
+    }
+
+    /// Stored nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// y = A x (dense x). CCS iterates columns, scattering into y —
+    /// the §4.2 "Sparse Matrix × Dense Vector" kernel.
+    pub fn spmv(&self, x: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(self.cols, x.len(), "spmv cols vs x");
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                y[self.row_indices[p] as usize] += self.values[p] * xj;
+            }
+        }
+        Ok(Vector(y))
+    }
+
+    /// y = Aᵀ x. CCS makes the transposed product a per-column *gather*
+    /// (dot of column j with x) — no scatter, cache-friendly.
+    pub fn spmv_t(&self, x: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(self.rows, x.len(), "spmv_t rows vs x");
+        let mut y = vec![0.0; self.cols];
+        for (j, yj) in y.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                acc += self.values[p] * x[self.row_indices[p] as usize];
+            }
+            *yj = acc;
+        }
+        Ok(Vector(y))
+    }
+
+    /// C = A B for dense B — §4.2 "Sparse × Dense Matrix".
+    pub fn spmm(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        crate::ensure_dims!(self.cols, b.rows, "spmm inner dims");
+        let mut c = DenseMatrix::zeros(self.rows, b.cols);
+        for j in 0..self.cols {
+            let brow = b.row(j);
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                let i = self.row_indices[p] as usize;
+                let v = self.values[p];
+                let crow = c.row_mut(i);
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += v * bv;
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// C = Aᵀ B for dense B.
+    pub fn spmm_t(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        crate::ensure_dims!(self.rows, b.rows, "spmm_t inner dims");
+        let mut c = DenseMatrix::zeros(self.cols, b.cols);
+        for j in 0..self.cols {
+            let crow = c.row_mut(j);
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                let i = self.row_indices[p] as usize;
+                let v = self.values[p];
+                for (cv, &bv) in crow.iter_mut().zip(b.row(i)) {
+                    *cv += v * bv;
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// Densify (test helper; O(rows*cols)).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                m.set(self.row_indices[p] as usize, j, self.values[p]);
+            }
+        }
+        m
+    }
+
+    /// Iterate stored entries as (row, col, value).
+    pub fn iter_entries(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.cols).flat_map(move |j| {
+            (self.col_ptrs[j]..self.col_ptrs[j + 1])
+                .map(move |p| (self.row_indices[p] as usize, j, self.values[p]))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+
+    #[test]
+    fn sparse_vector_roundtrip() {
+        let d = [1.0, 0.0, 3.0, 0.0];
+        let s = SparseVector::from_dense(&d);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.indices, vec![0, 2]);
+        assert_eq!(s.to_dense().0, d.to_vec());
+    }
+
+    #[test]
+    fn sparse_vector_validation() {
+        assert!(SparseVector::new(3, vec![0, 0], vec![1.0, 2.0]).is_err()); // dup
+        assert!(SparseVector::new(3, vec![2, 1], vec![1.0, 2.0]).is_err()); // unsorted
+        assert!(SparseVector::new(3, vec![3], vec![1.0]).is_err()); // oob
+        assert!(SparseVector::new(3, vec![1], vec![]).is_err()); // arity
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense() {
+        let s = SparseVector::from_dense(&[1.0, 0.0, -2.0, 0.0, 5.0]);
+        let d = Vector::from(&[2.0, 9.0, 3.0, 9.0, 1.0]);
+        assert_eq!(s.dot_dense(&d), 2.0 - 6.0 + 5.0);
+    }
+
+    #[test]
+    fn coo_roundtrip_and_empty_columns() {
+        let m = SparseMatrix::from_coo(3, 4, vec![(0, 0, 1.0), (2, 0, 2.0), (1, 3, 3.0)]).unwrap();
+        assert_eq!(m.nnz(), 3);
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(2, 0), 2.0);
+        assert_eq!(d.get(1, 3), 3.0);
+        assert_eq!(d.get(1, 1), 0.0);
+        // col 1 and 2 empty
+        assert_eq!(m.col_ptrs, vec![0, 2, 2, 2, 3]);
+    }
+
+    #[test]
+    fn coo_out_of_bounds_rejected() {
+        assert!(SparseMatrix::from_coo(2, 2, vec![(2, 0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn coo_duplicates_summed() {
+        let m = SparseMatrix::from_coo(
+            3,
+            3,
+            vec![(1, 1, 1.0), (1, 1, 2.0), (1, 1, 4.0), (0, 2, 1.0), (0, 2, -1.0)],
+        )
+        .unwrap();
+        assert_eq!(m.to_dense().get(1, 1), 7.0);
+        assert_eq!(m.to_dense().get(0, 2), 0.0); // stored explicit zero
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn spmv_matches_dense_property() {
+        check("spmv == dense matvec", 30, |g| {
+            let r = g.int(1, 20);
+            let c = g.int(1, 15);
+            let m = SparseMatrix::rand(r, c, 0.3, g.rng());
+            let x = Vector((0..c).map(|_| g.normal()).collect());
+            let ys = m.spmv(&x).unwrap();
+            let yd = m.to_dense().matvec(&x).unwrap();
+            assert_allclose(&ys.0, &yd.0, 1e-10, "spmv");
+        });
+    }
+
+    #[test]
+    fn spmv_t_matches_dense_property() {
+        check("spmv_t == dense transpose matvec", 30, |g| {
+            let r = g.int(1, 20);
+            let c = g.int(1, 15);
+            let m = SparseMatrix::rand(r, c, 0.3, g.rng());
+            let x = Vector((0..r).map(|_| g.normal()).collect());
+            let ys = m.spmv_t(&x).unwrap();
+            let yd = m.to_dense().tmatvec(&x).unwrap();
+            assert_allclose(&ys.0, &yd.0, 1e-10, "spmv_t");
+        });
+    }
+
+    #[test]
+    fn spmm_and_spmm_t_match_dense_property() {
+        check("spmm == dense matmul", 20, |g| {
+            let r = g.int(1, 12);
+            let c = g.int(1, 10);
+            let k = g.int(1, 8);
+            let m = SparseMatrix::rand(r, c, 0.4, g.rng());
+            let b = DenseMatrix::randn(c, k, g.rng());
+            let got = m.spmm(&b).unwrap();
+            let want = m.to_dense().matmul(&b).unwrap();
+            assert_allclose(&got.data, &want.data, 1e-10, "spmm");
+
+            let bt = DenseMatrix::randn(r, k, g.rng());
+            let got_t = m.spmm_t(&bt).unwrap();
+            let want_t = m.to_dense().transpose().matmul(&bt).unwrap();
+            assert_allclose(&got_t.data, &want_t.data, 1e-10, "spmm_t");
+        });
+    }
+
+    #[test]
+    fn iter_entries_sorted_by_column() {
+        let m = SparseMatrix::rand(10, 6, 0.3, &mut SplitMix64::new(5));
+        let entries: Vec<_> = m.iter_entries().collect();
+        assert_eq!(entries.len(), m.nnz());
+        for w in entries.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn dim_mismatches_rejected() {
+        let m = SparseMatrix::rand(4, 3, 0.5, &mut SplitMix64::new(6));
+        assert!(m.spmv(&Vector::zeros(4)).is_err());
+        assert!(m.spmv_t(&Vector::zeros(3)).is_err());
+        assert!(m.spmm(&DenseMatrix::zeros(4, 2)).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Local (single-node) SVD via the Gram-eigen route — the same math the
+//! paper's tall-skinny path uses (§3.1.2), applied locally. Serves as the
+//! reference oracle for the distributed SVD tests and as the driver-side
+//! finish step.
+
+use crate::error::{Error, Result};
+use crate::linalg::eig::eig_sym;
+use crate::linalg::matrix::DenseMatrix;
+
+/// Thin SVD: A = U diag(s) Vᵀ with k = min(requested, rank-ish) columns.
+#[derive(Debug, Clone)]
+pub struct SvdResult {
+    /// Left singular vectors (m×k).
+    pub u: DenseMatrix,
+    /// Singular values, descending (k).
+    pub s: Vec<f64>,
+    /// Right singular vectors (n×k).
+    pub v: DenseMatrix,
+}
+
+impl SvdResult {
+    /// Reconstruct U diag(s) Vᵀ (test helper).
+    pub fn reconstruct(&self) -> DenseMatrix {
+        let k = self.s.len();
+        let mut us = self.u.clone();
+        for j in 0..k {
+            for i in 0..us.rows {
+                let v = us.get(i, j) * self.s[j];
+                us.set(i, j, v);
+            }
+        }
+        us.matmul(&self.v.transpose()).expect("shapes agree")
+    }
+}
+
+/// Rank-k SVD of a dense matrix via eig(AᵀA) (requires m >= n to be
+/// efficient; callers should transpose wide matrices — the paper makes
+/// the same note in §3.1).
+///
+/// `rcond`: singular values below `rcond * s_max` are dropped (their
+/// singular vectors are numerical noise — U columns would blow up in the
+/// `A V Σ⁻¹` recovery).
+pub fn svd_via_gram(a: &DenseMatrix, k: usize, rcond: f64) -> Result<SvdResult> {
+    if k == 0 {
+        return Err(Error::InvalidArgument("svd: k must be >= 1".into()));
+    }
+    let g = a.gram();
+    svd_from_gram(a, &g, k, rcond)
+}
+
+/// Same, but with a precomputed Gram matrix (the distributed path computes
+/// G on the cluster and finishes here on the driver).
+pub fn svd_from_gram(a: &DenseMatrix, g: &DenseMatrix, k: usize, rcond: f64) -> Result<SvdResult> {
+    let n = a.cols;
+    crate::ensure_dims!(g.rows, n, "gram rows");
+    crate::ensure_dims!(g.cols, n, "gram cols");
+    let eig = eig_sym(g)?;
+    let k = k.min(n);
+    // eigenvalues of A^T A = squared singular values
+    let s_max = eig.values.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+    let mut s = vec![];
+    let mut keep = vec![];
+    for i in 0..k {
+        let sv = eig.values[i].max(0.0).sqrt();
+        if sv > rcond * s_max && sv > 0.0 {
+            s.push(sv);
+            keep.push(i);
+        }
+    }
+    if s.is_empty() {
+        return Err(Error::InvalidArgument(
+            "svd: matrix is (numerically) zero — no singular triplets above rcond".into(),
+        ));
+    }
+    let kk = s.len();
+    let mut v = DenseMatrix::zeros(n, kk);
+    for (jj, &i) in keep.iter().enumerate() {
+        for r in 0..n {
+            v.set(r, jj, eig.vectors.get(r, i));
+        }
+    }
+    // U = A V Σ^{-1}
+    let mut vs = v.clone();
+    for j in 0..kk {
+        let inv = 1.0 / s[j];
+        for i in 0..n {
+            let val = vs.get(i, j) * inv;
+            vs.set(i, j, val);
+        }
+    }
+    let u = a.matmul(&vs)?;
+    Ok(SvdResult { u, s, v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn full_rank_reconstruction_property() {
+        check("U s V^T == A (full k)", 15, |g| {
+            let n = g.int(1, 8);
+            let m = n + g.int(0, 15);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let svd = svd_via_gram(&a, n, 1e-12).unwrap();
+            let back = svd.reconstruct();
+            assert!(
+                back.max_abs_diff(&a) < 1e-7 * (1.0 + a.frob_norm()),
+                "err {}",
+                back.max_abs_diff(&a)
+            );
+        });
+    }
+
+    #[test]
+    fn singular_values_match_known() {
+        // A = diag(3, 2) stacked with zeros: singular values 3, 2
+        let a = DenseMatrix::from_rows(&[
+            vec![3.0, 0.0],
+            vec![0.0, 2.0],
+            vec![0.0, 0.0],
+        ])
+        .unwrap();
+        let svd = svd_via_gram(&a, 2, 1e-12).unwrap();
+        assert_allclose(&svd.s, &[3.0, 2.0], 1e-10, "sv");
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        let mut rng = SplitMix64::new(1);
+        let a = DenseMatrix::randn(40, 6, &mut rng);
+        let svd = svd_via_gram(&a, 6, 1e-12).unwrap();
+        let utu = svd.u.transpose().matmul(&svd.u).unwrap();
+        let vtv = svd.v.transpose().matmul(&svd.v).unwrap();
+        assert!(utu.max_abs_diff(&DenseMatrix::eye(6)) < 1e-8, "U orth");
+        assert!(vtv.max_abs_diff(&DenseMatrix::eye(6)) < 1e-8, "V orth");
+    }
+
+    #[test]
+    fn rank_deficient_truncates() {
+        // rank-2 matrix from outer products
+        let mut rng = SplitMix64::new(2);
+        let b = DenseMatrix::randn(20, 2, &mut rng);
+        let c = DenseMatrix::randn(2, 5, &mut rng);
+        let a = b.matmul(&c).unwrap();
+        let svd = svd_via_gram(&a, 5, 1e-9).unwrap();
+        assert_eq!(svd.s.len(), 2, "rank-2 should keep 2 triplets, got {:?}", svd.s);
+        let back = svd.reconstruct();
+        assert!(back.max_abs_diff(&a) < 1e-7 * (1.0 + a.frob_norm()));
+    }
+
+    #[test]
+    fn top_k_truncation_is_best_approx() {
+        let mut rng = SplitMix64::new(3);
+        let a = DenseMatrix::randn(30, 8, &mut rng);
+        let svd_full = svd_via_gram(&a, 8, 1e-14).unwrap();
+        let svd_k = svd_via_gram(&a, 3, 1e-14).unwrap();
+        assert_eq!(svd_k.s.len(), 3);
+        assert_allclose(&svd_k.s, &svd_full.s[..3], 1e-9, "top-3 match");
+        // Eckart–Young: residual^2 == sum of dropped squared singular values
+        let resid = a.sub(&svd_k.reconstruct()).unwrap().frob_norm();
+        let dropped: f64 = svd_full.s[3..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((resid - dropped).abs() < 1e-6 * (1.0 + dropped));
+    }
+
+    #[test]
+    fn zero_matrix_rejected() {
+        let a = DenseMatrix::zeros(5, 3);
+        assert!(svd_via_gram(&a, 2, 1e-12).is_err());
+        assert!(svd_via_gram(&DenseMatrix::eye(3), 0, 1e-12).is_err());
+    }
+}

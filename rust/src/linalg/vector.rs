@@ -1,0 +1,228 @@
+//! Dense vector type + the vector-space operations the driver performs
+//! locally (the "vector operations" half of the paper's core split).
+
+use crate::error::{Error, Result};
+
+/// A dense `f64` vector. Thin newtype over `Vec<f64>` so the driver-side
+/// algebra reads like the math in the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Vector(pub Vec<f64>);
+
+impl Vector {
+    /// All zeros.
+    pub fn zeros(n: usize) -> Vector {
+        Vector(vec![0.0; n])
+    }
+
+    /// All ones.
+    pub fn ones(n: usize) -> Vector {
+        Vector(vec![1.0; n])
+    }
+
+    /// From a slice.
+    pub fn from(xs: &[f64]) -> Vector {
+        Vector(xs.to_vec())
+    }
+
+    /// Length.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Is empty.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Borrow as slice.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.0
+    }
+
+    /// Dot product.
+    pub fn dot(&self, o: &Vector) -> f64 {
+        debug_assert_eq!(self.len(), o.len());
+        blas_dot(&self.0, &o.0)
+    }
+
+    /// Euclidean norm.
+    pub fn norm2(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    /// L1 norm.
+    pub fn norm1(&self) -> f64 {
+        self.0.iter().map(|x| x.abs()).sum()
+    }
+
+    /// Infinity norm.
+    pub fn norm_inf(&self) -> f64 {
+        self.0.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// self += alpha * other (BLAS axpy).
+    pub fn axpy(&mut self, alpha: f64, o: &Vector) {
+        debug_assert_eq!(self.len(), o.len());
+        for (a, b) in self.0.iter_mut().zip(o.0.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha (BLAS scal).
+    pub fn scale_mut(&mut self, alpha: f64) {
+        for a in &mut self.0 {
+            *a *= alpha;
+        }
+    }
+
+    /// alpha * self (allocating).
+    pub fn scale(&self, alpha: f64) -> Vector {
+        Vector(self.0.iter().map(|x| alpha * x).collect())
+    }
+
+    /// self + other.
+    pub fn add(&self, o: &Vector) -> Vector {
+        debug_assert_eq!(self.len(), o.len());
+        Vector(self.0.iter().zip(o.0.iter()).map(|(a, b)| a + b).collect())
+    }
+
+    /// self - other.
+    pub fn sub(&self, o: &Vector) -> Vector {
+        debug_assert_eq!(self.len(), o.len());
+        Vector(self.0.iter().zip(o.0.iter()).map(|(a, b)| a - b).collect())
+    }
+
+    /// Element-wise product (Hadamard).
+    pub fn hadamard(&self, o: &Vector) -> Vector {
+        debug_assert_eq!(self.len(), o.len());
+        Vector(self.0.iter().zip(o.0.iter()).map(|(a, b)| a * b).collect())
+    }
+
+    /// Linear combination a*x + b*y (one pass; the accelerated-descent
+    /// inner update).
+    pub fn lincomb(a: f64, x: &Vector, b: f64, y: &Vector) -> Vector {
+        debug_assert_eq!(x.len(), y.len());
+        Vector(
+            x.0.iter()
+                .zip(y.0.iter())
+                .map(|(xi, yi)| a * xi + b * yi)
+                .collect(),
+        )
+    }
+
+    /// Normalize to unit 2-norm in place; errors on (near-)zero vectors.
+    pub fn normalize_mut(&mut self) -> Result<f64> {
+        let n = self.norm2();
+        if n < 1e-300 {
+            return Err(Error::InvalidArgument("cannot normalize zero vector".into()));
+        }
+        self.scale_mut(1.0 / n);
+        Ok(n)
+    }
+
+    /// Convert to f32 (for the XLA runtime path).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.0.iter().map(|&x| x as f32).collect()
+    }
+
+    /// From f32 (results coming back from the XLA runtime).
+    pub fn from_f32(xs: &[f32]) -> Vector {
+        Vector(xs.iter().map(|&x| x as f64).collect())
+    }
+}
+
+impl std::ops::Index<usize> for Vector {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.0[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for Vector {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.0[i]
+    }
+}
+
+/// Unrolled dot product — the single hottest driver-side primitive (every
+/// Lanczos orthogonalization and every L-BFGS two-loop pass is dots).
+/// 4-way unrolling gives the compiler independent accumulator chains.
+pub fn blas_dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn dot_and_norms() {
+        let v = Vector::from(&[3.0, 4.0]);
+        assert_close(v.norm2(), 5.0, 1e-15, "norm2");
+        assert_close(v.norm1(), 7.0, 1e-15, "norm1");
+        assert_close(v.norm_inf(), 4.0, 1e-15, "norm_inf");
+        assert_close(v.dot(&v), 25.0, 1e-15, "dot");
+    }
+
+    #[test]
+    fn axpy_scale_add_sub() {
+        let mut a = Vector::from(&[1.0, 2.0]);
+        let b = Vector::from(&[10.0, 20.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.0, vec![6.0, 12.0]);
+        assert_eq!(a.scale(2.0).0, vec![12.0, 24.0]);
+        assert_eq!(a.add(&b).0, vec![16.0, 32.0]);
+        assert_eq!(a.sub(&b).0, vec![-4.0, -8.0]);
+        assert_eq!(a.hadamard(&b).0, vec![60.0, 240.0]);
+    }
+
+    #[test]
+    fn lincomb_matches_manual() {
+        let x = Vector::from(&[1.0, -1.0, 2.0]);
+        let y = Vector::from(&[0.5, 3.0, -2.0]);
+        let z = Vector::lincomb(2.0, &x, -1.0, &y);
+        assert_eq!(z.0, vec![1.5, -5.0, 6.0]);
+    }
+
+    #[test]
+    fn normalize_unit_and_zero() {
+        let mut v = Vector::from(&[0.0, 3.0, 4.0]);
+        let n = v.normalize_mut().unwrap();
+        assert_close(n, 5.0, 1e-15, "returned norm");
+        assert_close(v.norm2(), 1.0, 1e-12, "unit");
+        let mut z = Vector::zeros(3);
+        assert!(z.normalize_mut().is_err());
+    }
+
+    #[test]
+    fn blas_dot_matches_naive_property() {
+        check("blas_dot == naive dot", 40, |g| {
+            let xs = g.vec_f64(0, 200);
+            let ys: Vec<f64> = xs.iter().map(|x| x * 0.5 + g.normal()).collect();
+            let naive: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum();
+            assert_close(blas_dot(&xs, &ys), naive, 1e-10, "dot");
+        });
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let v = Vector::from(&[1.5, -2.25, 0.0]);
+        let back = Vector::from_f32(&v.to_f32());
+        assert_eq!(v, back);
+    }
+}

@@ -1,0 +1,374 @@
+//! `sparkla` CLI — the launcher: subcommands for the paper's headline
+//! computations over the simulated cluster.
+//!
+//! ```text
+//! sparkla svd        --rows 100000 --cols 400 --nnz 2000000 --k 5
+//! sparkla lasso      --rows 10000 --cols 1024 --informative 512
+//! sparkla lp         --vars 50 --constraints 20
+//! sparkla logistic   --rows 10000 --cols 250 --iters 100 --solver lbfgs
+//! sparkla stats      --rows 100000 --cols 100
+//! sparkla metrics-demo  (fault injection + lineage recovery showcase)
+//! ```
+
+use sparkla::config::ClusterConfig;
+use sparkla::coordinator::driver::DriverLoop;
+use sparkla::distributed::{CoordinateMatrix, RowMatrix};
+use sparkla::linalg::vector::Vector;
+use sparkla::optim::accelerated::{accelerated, AccelConfig};
+use sparkla::optim::gd::{gradient_descent, GdConfig};
+use sparkla::optim::lbfgs::{lbfgs, LbfgsConfig};
+use sparkla::optim::problem::synth;
+use sparkla::optim::Regularizer;
+use sparkla::tfocs::linop::LinopLocal;
+use sparkla::util::argparse::ArgSpec;
+use sparkla::util::rng::SplitMix64;
+use sparkla::util::timer::Timer;
+use sparkla::Context;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "svd" => cmd_svd(rest),
+        "lasso" => cmd_lasso(rest),
+        "lp" => cmd_lp(rest),
+        "logistic" => cmd_logistic(rest),
+        "stats" => cmd_stats(rest),
+        "metrics-demo" => cmd_metrics_demo(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "sparkla — distributed matrix computations & optimization (KDD'16 reproduction)\n\n\
+         SUBCOMMANDS:\n  \
+         svd            ARPACK/tall-skinny SVD of a sparse matrix (Table 1)\n  \
+         lasso          TFOCS LASSO on synthetic data (section 3.2.2)\n  \
+         lp             smoothed linear program (section 3.2.3)\n  \
+         logistic       distributed logistic regression (section 3.3)\n  \
+         stats          one-pass distributed column statistics\n  \
+         metrics-demo   fault injection + lineage recovery showcase\n\n\
+         Each subcommand takes --help. Cluster shape: --executors N (default 4).\n\
+         Pass --xla (after `make artifacts`) to route per-partition kernels through PJRT."
+    );
+}
+
+fn cluster_args(spec: ArgSpec) -> ArgSpec {
+    spec.opt("executors", "4", "logical executors")
+        .opt("cores", "2", "cores per executor")
+        .opt("partitions", "8", "data partitions")
+        .opt("seed", "42", "workload RNG seed")
+        .flag("xla", "execute per-partition kernels via XLA/PJRT artifacts")
+}
+
+fn make_ctx(args: &sparkla::util::argparse::Args) -> Context {
+    let mut cfg = ClusterConfig {
+        num_executors: args.usize("executors"),
+        cores_per_executor: args.usize("cores"),
+        use_xla: args.flag("xla"),
+        ..Default::default()
+    };
+    cfg.apply_env().expect("env config");
+    Context::with_config(cfg)
+}
+
+fn cmd_svd(raw: Vec<String>) -> i32 {
+    let spec = cluster_args(ArgSpec::new("sparkla svd", "sparse SVD (Table 1 workload)"))
+        .opt("rows", "230000", "matrix rows")
+        .opt("cols", "380", "matrix cols")
+        .opt("nnz", "510000", "nonzeros")
+        .opt("k", "5", "singular triplets")
+        .flag("arpack", "force the ARPACK path even when tall-skinny applies");
+    let a = match spec.parse_from(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{e}");
+            return 2;
+        }
+    };
+    let ctx = make_ctx(&a);
+    let mut dl = DriverLoop::new("svd");
+    let t = Timer::start();
+    let cm = CoordinateMatrix::sprand(
+        &ctx,
+        a.u64("rows"),
+        a.u64("cols"),
+        a.usize("nnz"),
+        a.usize("partitions"),
+        a.u64("seed"),
+    );
+    let rm = cm.to_row_matrix(a.usize("partitions")).expect("conversion").cache();
+    let k = a.usize("k");
+    let svd = if a.flag("arpack") {
+        sparkla::distributed::svd::arpack_svd(&rm, k, true)
+    } else {
+        rm.compute_svd(k, true)
+    }
+    .expect("svd");
+    for _ in 0..svd.matrix_ops {
+        dl.matrix_op();
+    }
+    dl.end_iteration();
+    println!(
+        "algorithm={} matrix={}x{} nnz={} k={}",
+        svd.algorithm,
+        a.get("rows"),
+        a.get("cols"),
+        a.get("nnz"),
+        k
+    );
+    println!("singular values: {:?}", svd.s);
+    println!(
+        "matrix_ops={} time/op={:.3}s total={:.2}s",
+        svd.matrix_ops,
+        t.secs() / svd.matrix_ops.max(1) as f64,
+        t.secs()
+    );
+    println!("cluster: {}", ctx.metrics().summary());
+    0
+}
+
+fn cmd_lasso(raw: Vec<String>) -> i32 {
+    let spec = cluster_args(ArgSpec::new("sparkla lasso", "TFOCS LASSO (section 3.2.2)"))
+        .opt("rows", "10000", "observations")
+        .opt("cols", "1024", "features")
+        .opt("informative", "512", "features correlated with response")
+        .opt("lambda", "10.0", "L1 weight")
+        .opt("iters", "200", "solver iterations");
+    let a = match spec.parse_from(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{e}");
+            return 2;
+        }
+    };
+    let ctx = make_ctx(&a);
+    let t = Timer::start();
+    let (problem, w_true) = synth::linear(
+        &ctx,
+        a.usize("rows"),
+        a.usize("cols"),
+        a.usize("informative"),
+        Regularizer::L1(a.f64("lambda")),
+        a.usize("partitions"),
+        a.u64("seed"),
+    )
+    .expect("workload");
+    let step = 1.0 / problem.lipschitz_estimate().expect("lipschitz");
+    let cfg = AccelConfig::variant("acc_rb", step, a.usize("iters")).unwrap();
+    let trace =
+        accelerated(&problem, &Vector::zeros(a.usize("cols")), &cfg).expect("solver");
+    let nnz = trace.solution.0.iter().filter(|x| x.abs() > 1e-8).count();
+    let err = trace.solution.sub(&w_true).norm2() / w_true.norm2().max(1e-300);
+    println!(
+        "lasso: obj {} -> {:.6e}, support={nnz}/{}, rel_err_vs_planted={err:.3}",
+        trace.objective[0],
+        trace.objective.last().unwrap(),
+        a.usize("cols")
+    );
+    println!("grad_evals={} time={:.2}s", trace.grad_evals, t.secs());
+    println!("cluster: {}", ctx.metrics().summary());
+    0
+}
+
+fn cmd_lp(raw: Vec<String>) -> i32 {
+    let spec = cluster_args(ArgSpec::new("sparkla lp", "smoothed LP (section 3.2.3)"))
+        .opt("vars", "50", "variables")
+        .opt("constraints", "20", "equality constraints")
+        .opt("iters", "300", "inner iterations")
+        .opt("rounds", "3", "continuation rounds");
+    let a = match spec.parse_from(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{e}");
+            return 2;
+        }
+    };
+    let _ctx = make_ctx(&a);
+    let mut rng = SplitMix64::new(a.u64("seed"));
+    let (nv, nc) = (a.usize("vars"), a.usize("constraints"));
+    // feasible-by-construction LP: x_feas >= 0, b = A x_feas
+    let amat = sparkla::linalg::matrix::DenseMatrix::randn(nc, nv, &mut rng);
+    let x_feas = Vector((0..nv).map(|_| rng.next_f64()).collect());
+    let b = amat.matvec(&x_feas).expect("dims");
+    let c = Vector((0..nv).map(|_| rng.next_f64() + 0.1).collect());
+    let t = Timer::start();
+    let r = sparkla::tfocs::lp::solve_lp_continued(
+        &LinopLocal { a: amat },
+        &b,
+        &c,
+        a.usize("iters"),
+        a.usize("rounds"),
+    )
+    .expect("lp");
+    println!(
+        "lp: {} vars, {} constraints -> objective {:.6}, residual {:.2e}, applies={}",
+        nv,
+        nc,
+        r.primal_objective.last().unwrap(),
+        r.residuals.last().unwrap(),
+        r.linop_applies
+    );
+    println!("feasible objective bound (x_feas): {:.6}", c.dot(&x_feas));
+    println!("time={:.2}s", t.secs());
+    0
+}
+
+fn cmd_logistic(raw: Vec<String>) -> i32 {
+    let spec = cluster_args(ArgSpec::new(
+        "sparkla logistic",
+        "distributed logistic regression (section 3.3)",
+    ))
+    .opt("rows", "10000", "observations")
+    .opt("cols", "250", "features")
+    .opt("iters", "100", "iterations")
+    .opt("solver", "lbfgs", "gra|acc|acc_r|acc_b|acc_rb|lbfgs")
+    .opt("l2", "0.0", "L2 regularization");
+    let a = match spec.parse_from(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{e}");
+            return 2;
+        }
+    };
+    let ctx = make_ctx(&a);
+    let reg = if a.f64("l2") > 0.0 { Regularizer::L2(a.f64("l2")) } else { Regularizer::None };
+    let (problem, _) = synth::logistic(
+        &ctx,
+        a.usize("rows"),
+        a.usize("cols"),
+        reg,
+        a.usize("partitions"),
+        a.u64("seed"),
+    )
+    .expect("workload");
+    let w0 = Vector::zeros(a.usize("cols"));
+    let step = 1.0 / problem.lipschitz_estimate().expect("lipschitz");
+    let t = Timer::start();
+    let trace = match a.get("solver") {
+        "gra" => gradient_descent(
+            &problem,
+            &w0,
+            &GdConfig { step_size: step, max_iters: a.usize("iters"), tol: 0.0 },
+        ),
+        "lbfgs" => lbfgs(
+            &problem,
+            &w0,
+            &LbfgsConfig { max_iters: a.usize("iters"), ..Default::default() },
+        ),
+        name => {
+            let cfg = match AccelConfig::variant(name, step, a.usize("iters")) {
+                Some(c) => c,
+                None => {
+                    eprintln!("unknown solver {name:?}");
+                    return 2;
+                }
+            };
+            accelerated(&problem, &w0, &cfg)
+        }
+    }
+    .expect("solver");
+    println!(
+        "logistic[{}]: obj {:.4} -> {:.6} in {} iters ({} grad evals), {:.2}s",
+        trace.name,
+        trace.objective[0],
+        trace.objective.last().unwrap(),
+        trace.objective.len() - 1,
+        trace.grad_evals,
+        t.secs()
+    );
+    println!("cluster: {}", ctx.metrics().summary());
+    0
+}
+
+fn cmd_stats(raw: Vec<String>) -> i32 {
+    let spec = cluster_args(ArgSpec::new("sparkla stats", "distributed column statistics"))
+        .opt("rows", "100000", "rows")
+        .opt("cols", "100", "cols");
+    let a = match spec.parse_from(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{e}");
+            return 2;
+        }
+    };
+    let ctx = make_ctx(&a);
+    let (rows, cols) = (a.usize("rows"), a.usize("cols"));
+    let parts = a.usize("partitions");
+    let seed = a.u64("seed");
+    let rm = RowMatrix::generate(&ctx, "stats_workload", parts, cols, move |p| {
+        let mut rng = SplitMix64::new(seed).split(p as u64);
+        let per = rows.div_ceil(parts);
+        let count = per.min(rows.saturating_sub(p * per));
+        (0..count)
+            .map(|_| {
+                sparkla::distributed::Row::Dense(
+                    (0..cols).map(|j| rng.normal() * (j + 1) as f64).collect(),
+                )
+            })
+            .collect()
+    });
+    let t = Timer::start();
+    let s = rm.column_stats().expect("stats");
+    println!(
+        "stats over {}x{}: count={} mean[0]={:.4} var[last]={:.1} time={:.2}s",
+        rows,
+        cols,
+        s.count,
+        s.mean()[0],
+        s.variance()[cols - 1],
+        t.secs()
+    );
+    println!("cluster: {}", ctx.metrics().summary());
+    0
+}
+
+fn cmd_metrics_demo(raw: Vec<String>) -> i32 {
+    let spec = cluster_args(ArgSpec::new(
+        "sparkla metrics-demo",
+        "fault injection + lineage recovery showcase",
+    ))
+    .opt("fail-prob", "0.05", "task fault probability")
+    .opt("kill-prob", "0.02", "executor crash probability");
+    let a = match spec.parse_from(raw) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("{e}");
+            return 2;
+        }
+    };
+    let mut cfg = ClusterConfig {
+        num_executors: a.usize("executors"),
+        cores_per_executor: a.usize("cores"),
+        ..Default::default()
+    };
+    cfg.fault.task_fail_prob = a.f64("fail-prob");
+    cfg.fault.executor_kill_prob = a.f64("kill-prob");
+    cfg.fault.seed = a.u64("seed");
+    let ctx = Context::with_config(cfg);
+    // a cached matrix hammered by repeated gram jobs under injected faults
+    let mut rng = SplitMix64::new(a.u64("seed"));
+    let local = sparkla::linalg::matrix::DenseMatrix::randn(2000, 32, &mut rng);
+    let rm = RowMatrix::from_local(&ctx, &local, a.usize("partitions")).cache();
+    let want = local.gram();
+    let mut ok = 0;
+    for _ in 0..20 {
+        let g = rm.gram().expect("recovers despite faults");
+        assert!(g.max_abs_diff(&want) < 1e-9, "fault corrupted a result!");
+        ok += 1;
+    }
+    println!("{ok}/20 gram jobs returned BIT-IDENTICAL results under injected faults");
+    println!("cluster: {}", ctx.metrics().summary());
+    0
+}

@@ -1,0 +1,227 @@
+//! Nesterov-accelerated (proximal) gradient — the TFOCS AT
+//! (Auslender–Teboulle) variant the paper ports (§3.2, §3.3), with the
+//! two switches Figure 1 ablates:
+//!
+//! * **backtracking** Lipschitz estimation (`acc_b`, `acc_rb`): grow the
+//!   local L estimate until the quadratic upper bound holds, shrink it
+//!   slowly between iterations (TFOCS's α=0.9/β=0.5 schedule);
+//! * **automatic restart** by the gradient test (`acc_r`, `acc_rb`):
+//!   reset momentum when ∇f(y)ᵀ(x⁺ − x) > 0 (O'Donoghue–Candès \[8\]).
+
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+use crate::optim::problem::DistProblem;
+use crate::optim::Trace;
+
+/// Accelerated-method configuration.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// Initial step (1/L₀). All Fig.-1 runs share this.
+    pub step_size: f64,
+    /// Outer iterations.
+    pub max_iters: usize,
+    /// Enable backtracking line search.
+    pub backtracking: bool,
+    /// Enable gradient-test restart.
+    pub restart: bool,
+    /// Step growth factor between iterations when backtracking (TFOCS α).
+    pub alpha: f64,
+    /// Step shrink factor inside backtracking (TFOCS β).
+    pub beta: f64,
+}
+
+impl AccelConfig {
+    /// The four Fig.-1 variants by name.
+    pub fn variant(name: &str, step_size: f64, max_iters: usize) -> Option<AccelConfig> {
+        let (backtracking, restart) = match name {
+            "acc" => (false, false),
+            "acc_r" => (false, true),
+            "acc_b" => (true, false),
+            "acc_rb" => (true, true),
+            _ => return None,
+        };
+        Some(AccelConfig { step_size, max_iters, backtracking, restart, alpha: 0.9, beta: 0.5 })
+    }
+
+    fn name(&self) -> &'static str {
+        match (self.backtracking, self.restart) {
+            (false, false) => "acc",
+            (false, true) => "acc_r",
+            (true, false) => "acc_b",
+            (true, true) => "acc_rb",
+        }
+    }
+}
+
+/// Run the AT accelerated method from `w0`.
+pub fn accelerated(problem: &DistProblem, w0: &Vector, cfg: &AccelConfig) -> Result<Trace> {
+    let mut x = w0.clone();
+    let mut z = w0.clone();
+    let mut theta: f64 = 1.0;
+    let mut step = cfg.step_size;
+    let mut objective = vec![problem.full_objective(&x)?];
+    let mut grad_evals = 1;
+    for _ in 0..cfg.max_iters {
+        // y = (1-θ)x + θz
+        let y = Vector::lincomb(1.0 - theta, &x, theta, &z);
+        let (fy, gy) = problem.loss_grad(&y)?;
+        grad_evals += 1;
+        // inner: possibly backtrack the step
+        let (x_next, z_next) = loop {
+            // z⁺ = prox_{step/θ}(z − (step/θ)∇f(y))
+            let tz = step / theta;
+            let mut z_arg = z.clone();
+            z_arg.axpy(-tz, &gy);
+            let z_new = problem.regularizer.prox(&z_arg, tz);
+            // x⁺ = (1-θ)x + θz⁺
+            let x_new = Vector::lincomb(1.0 - theta, &x, theta, &z_new);
+            if !cfg.backtracking {
+                break (x_new, z_new);
+            }
+            // quadratic upper-bound test at x⁺ about y
+            let (fx_new, _) = problem.loss_grad(&x_new)?;
+            grad_evals += 1;
+            let d = x_new.sub(&y);
+            let bound = fy + gy.dot(&d) + d.dot(&d) / (2.0 * step);
+            if fx_new <= bound + 1e-12 * bound.abs().max(1.0) {
+                break (x_new, z_new);
+            }
+            step *= cfg.beta;
+            if step < 1e-18 {
+                break (x_new, z_new); // numerical floor; accept
+            }
+        };
+        // gradient-test restart (O'Donoghue–Candès)
+        if cfg.restart && gy.dot(&x_next.sub(&x)) > 0.0 {
+            theta = 1.0;
+            z = x.clone(); // momentum reset: z re-anchored at x
+            // objective value unchanged this iteration (pure reset);
+            // record and continue
+            objective.push(*objective.last().unwrap());
+            continue;
+        }
+        x = x_next;
+        z = z_next;
+        // θₖ₊₁ = 2 / (1 + sqrt(1 + 4/θₖ²))
+        theta = 2.0 / (1.0 + (1.0 + 4.0 / (theta * theta)).sqrt());
+        if cfg.backtracking {
+            step /= cfg.alpha; // slow re-growth
+        }
+        objective.push(problem.full_objective(&x)?);
+        grad_evals += 1;
+    }
+    Ok(Trace { name: cfg.name().into(), objective, solution: x, grad_evals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::optim::gd::{gradient_descent, GdConfig};
+    use crate::optim::objective::Regularizer;
+    use crate::optim::problem::synth;
+
+    fn ctx() -> Context {
+        Context::local("accel_test", 2)
+    }
+
+    fn setup(reg: Regularizer, seed: u64) -> (crate::optim::problem::DistProblem, f64) {
+        let c = ctx();
+        let (p, _) = synth::linear(&c, 150, 8, 4, reg, 3, seed).unwrap();
+        let lip = p.lipschitz_estimate().unwrap();
+        (p, 1.0 / lip)
+    }
+
+    #[test]
+    fn all_variants_decrease_objective() {
+        let (p, step) = setup(Regularizer::None, 1);
+        for name in ["acc", "acc_r", "acc_b", "acc_rb"] {
+            let cfg = AccelConfig::variant(name, step, 40).unwrap();
+            let t = accelerated(&p, &Vector::zeros(8), &cfg).unwrap();
+            assert_eq!(t.name, name);
+            assert!(
+                t.objective.last().unwrap() < &(t.objective[0] * 0.5),
+                "{name}: {:?}",
+                (t.objective[0], t.objective.last().unwrap())
+            );
+        }
+    }
+
+    #[test]
+    fn acceleration_beats_gd_at_same_budget() {
+        // the paper's first Fig.-1 observation
+        let (p, step) = setup(Regularizer::None, 2);
+        let iters = 60;
+        let gd = gradient_descent(
+            &p,
+            &Vector::zeros(8),
+            &GdConfig { step_size: step, max_iters: iters, tol: 0.0 },
+        )
+        .unwrap();
+        let acc = accelerated(
+            &p,
+            &Vector::zeros(8),
+            &AccelConfig::variant("acc_r", step, iters).unwrap(),
+        )
+        .unwrap();
+        assert!(
+            acc.best() <= gd.best() + 1e-12,
+            "acc_r {} should beat gra {}",
+            acc.best(),
+            gd.best()
+        );
+    }
+
+    #[test]
+    fn backtracking_survives_too_large_initial_step() {
+        let (p, step) = setup(Regularizer::None, 3);
+        // 100x too large: plain acc diverges or stalls, acc_b recovers
+        let cfg = AccelConfig::variant("acc_b", step * 100.0, 60).unwrap();
+        let t = accelerated(&p, &Vector::zeros(8), &cfg).unwrap();
+        assert!(
+            t.objective.last().unwrap().is_finite()
+                && t.objective.last().unwrap() < &t.objective[0],
+            "backtracking failed: {:?}",
+            t.objective.last()
+        );
+        assert!(t.grad_evals > 62, "backtracking must spend extra evals");
+    }
+
+    #[test]
+    fn lasso_variant_converges_to_sparse_solution() {
+        let (p, step) = setup(Regularizer::L1(30.0), 4);
+        let cfg = AccelConfig::variant("acc_rb", step, 150).unwrap();
+        let t = accelerated(&p, &Vector::zeros(8), &cfg).unwrap();
+        let zeros = t.solution.0.iter().filter(|x| x.abs() < 1e-8).count();
+        assert!(zeros >= 2, "expected some sparsity: {:?}", t.solution.0);
+    }
+
+    #[test]
+    fn restart_traces_not_worse_on_strongly_convex() {
+        let (p, step) = setup(Regularizer::L2(1.0), 5);
+        let plain = accelerated(
+            &p,
+            &Vector::zeros(8),
+            &AccelConfig::variant("acc", step, 80).unwrap(),
+        )
+        .unwrap();
+        let restarted = accelerated(
+            &p,
+            &Vector::zeros(8),
+            &AccelConfig::variant("acc_r", step, 80).unwrap(),
+        )
+        .unwrap();
+        // paper: "automatic restarts are indeed helpful"
+        assert!(
+            restarted.best() <= plain.best() * 1.01 + 1e-12,
+            "restart {} vs plain {}",
+            restarted.best(),
+            plain.best()
+        );
+    }
+
+    #[test]
+    fn unknown_variant_is_none() {
+        assert!(AccelConfig::variant("acc_x", 1.0, 1).is_none());
+    }
+}

@@ -1,0 +1,111 @@
+//! Full-batch (proximal) gradient descent — Fig. 1's `gra` baseline
+//! (paper ref \[7\], MLlib's `GradientDescent` with full miniBatchFraction).
+//!
+//! One distributed gradient per iteration; the step is a driver-side
+//! vector op. Nonsmooth regularizers are handled by a prox step, making
+//! this ISTA when L1 is present (which is how MLlib's `updater` applies
+//! L1 too).
+
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+use crate::optim::problem::DistProblem;
+use crate::optim::Trace;
+
+/// Configuration for gradient descent.
+#[derive(Debug, Clone)]
+pub struct GdConfig {
+    /// Fixed step size (the paper gives all methods "the same initial
+    /// step size" in Fig. 1).
+    pub step_size: f64,
+    /// Outer iterations.
+    pub max_iters: usize,
+    /// Stop when ‖wₜ₊₁ − wₜ‖ / max(1, ‖wₜ‖) falls below this.
+    pub tol: f64,
+}
+
+impl Default for GdConfig {
+    fn default() -> Self {
+        GdConfig { step_size: 1.0, max_iters: 100, tol: 0.0 }
+    }
+}
+
+/// Run (proximal) gradient descent from `w0`.
+pub fn gradient_descent(problem: &DistProblem, w0: &Vector, cfg: &GdConfig) -> Result<Trace> {
+    let mut w = w0.clone();
+    let mut objective = vec![problem.full_objective(&w)?];
+    let mut grad_evals = 1;
+    for _ in 0..cfg.max_iters {
+        let (_, g) = problem.loss_grad(&w)?;
+        grad_evals += 1;
+        let mut next = w.clone();
+        next.axpy(-cfg.step_size, &g);
+        let next = problem.regularizer.prox(&next, cfg.step_size);
+        let delta = next.sub(&w).norm2() / w.norm2().max(1.0);
+        w = next;
+        objective.push(problem.full_objective(&w)?);
+        grad_evals += 1;
+        if cfg.tol > 0.0 && delta < cfg.tol {
+            break;
+        }
+    }
+    Ok(Trace { name: "gra".into(), objective, solution: w, grad_evals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::optim::objective::Regularizer;
+    use crate::optim::problem::synth;
+
+    fn ctx() -> Context {
+        Context::local("gd_test", 2)
+    }
+
+    #[test]
+    fn decreases_least_squares_objective() {
+        let c = ctx();
+        let (p, _) = synth::linear(&c, 80, 6, 3, Regularizer::None, 3, 1).unwrap();
+        let lip = p.lipschitz_estimate().unwrap();
+        let cfg = GdConfig { step_size: 1.0 / lip, max_iters: 50, tol: 0.0 };
+        let t = gradient_descent(&p, &Vector::zeros(6), &cfg).unwrap();
+        assert!(t.objective.last().unwrap() < &t.objective[0], "{:?}", t.objective);
+        // monotone with 1/L step
+        for w in t.objective.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "non-monotone: {} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn recovers_planted_linear_model() {
+        let c = ctx();
+        let (p, w_true) = synth::linear(&c, 400, 5, 5, Regularizer::None, 4, 2).unwrap();
+        let lip = p.lipschitz_estimate().unwrap();
+        let cfg = GdConfig { step_size: 1.0 / lip, max_iters: 400, tol: 1e-10 };
+        let t = gradient_descent(&p, &Vector::zeros(5), &cfg).unwrap();
+        let err = t.solution.sub(&w_true).norm2() / w_true.norm2();
+        assert!(err < 0.15, "relative recovery error {err}");
+    }
+
+    #[test]
+    fn lasso_prox_yields_sparsity() {
+        let c = ctx();
+        // only 2 of 10 features informative + strong L1 ⇒ sparse solution
+        let (p, _) = synth::linear(&c, 300, 10, 2, Regularizer::L1(40.0), 3, 3).unwrap();
+        let lip = p.lipschitz_estimate().unwrap();
+        let cfg = GdConfig { step_size: 1.0 / lip, max_iters: 300, tol: 0.0 };
+        let t = gradient_descent(&p, &Vector::zeros(10), &cfg).unwrap();
+        let zeros = t.solution.0.iter().filter(|x| x.abs() < 1e-9).count();
+        assert!(zeros >= 5, "expected sparsity, got {:?}", t.solution.0);
+    }
+
+    #[test]
+    fn tol_stops_early() {
+        let c = ctx();
+        let (p, _) = synth::linear(&c, 60, 4, 4, Regularizer::None, 2, 4).unwrap();
+        let lip = p.lipschitz_estimate().unwrap();
+        let cfg = GdConfig { step_size: 1.0 / lip, max_iters: 10_000, tol: 1e-3 };
+        let t = gradient_descent(&p, &Vector::zeros(4), &cfg).unwrap();
+        assert!(t.objective.len() < 10_000, "tol should trigger early stop");
+    }
+}

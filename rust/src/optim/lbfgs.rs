@@ -1,0 +1,203 @@
+//! L-BFGS (two-loop recursion, Armijo backtracking line search) — Fig. 1's
+//! `lbfgs` (paper ref \[13\]; MLlib's `LBFGS` is the same construction over
+//! breeze). The inverse-Hessian approximation lives on the driver (it is
+//! m pairs of d-vectors — vector ops); every function/gradient evaluation
+//! is the one distributed pass.
+
+use std::collections::VecDeque;
+
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+use crate::optim::problem::DistProblem;
+use crate::optim::Trace;
+
+/// L-BFGS configuration.
+#[derive(Debug, Clone)]
+pub struct LbfgsConfig {
+    /// History pairs kept (MLlib default 10).
+    pub memory: usize,
+    /// Outer iterations.
+    pub max_iters: usize,
+    /// Armijo sufficient-decrease constant.
+    pub c1: f64,
+    /// Line-search shrink factor.
+    pub shrink: f64,
+    /// Max line-search steps per iteration.
+    pub max_ls: usize,
+    /// Gradient-norm stopping tolerance (relative).
+    pub tol: f64,
+}
+
+impl Default for LbfgsConfig {
+    fn default() -> Self {
+        LbfgsConfig { memory: 10, max_iters: 100, c1: 1e-4, shrink: 0.5, max_ls: 20, tol: 0.0 }
+    }
+}
+
+/// Run L-BFGS from `w0` (smooth objectives only — use the accelerated
+/// prox methods for L1).
+pub fn lbfgs(problem: &DistProblem, w0: &Vector, cfg: &LbfgsConfig) -> Result<Trace> {
+    if !problem.regularizer.is_smooth() {
+        return Err(crate::error::Error::InvalidArgument(
+            "lbfgs requires a smooth objective (L1 needs prox methods — use accelerated or OWL-QN)"
+                .into(),
+        ));
+    }
+    let mut w = w0.clone();
+    let (mut f, mut g) = problem.loss_grad(&w)?;
+    let mut grad_evals = 1;
+    let mut objective = vec![f];
+    let g0_norm = g.norm2().max(1e-300);
+    // (s, y, rho) history
+    let mut hist: VecDeque<(Vector, Vector, f64)> = VecDeque::new();
+    for _ in 0..cfg.max_iters {
+        // --- two-loop recursion: d = -H g (driver-side vector ops) ---
+        let mut q = g.clone();
+        let mut alphas = Vec::with_capacity(hist.len());
+        for (s, y, rho) in hist.iter().rev() {
+            let a = rho * s.dot(&q);
+            q.axpy(-a, y);
+            alphas.push(a);
+        }
+        // initial scaling γ = sᵀy / yᵀy (Nocedal 7.20)
+        if let Some((s, y, _)) = hist.back() {
+            let gamma = s.dot(y) / y.dot(y).max(1e-300);
+            q.scale_mut(gamma);
+        }
+        for ((s, y, rho), a) in hist.iter().zip(alphas.iter().rev()) {
+            let b = rho * y.dot(&q);
+            q.axpy(a - b, s);
+        }
+        let mut d = q;
+        d.scale_mut(-1.0);
+        // ensure descent (fall back to steepest if history is garbage)
+        let mut dg = d.dot(&g);
+        if dg >= 0.0 {
+            d = g.scale(-1.0);
+            dg = -g.dot(&g);
+            hist.clear();
+        }
+        // --- Armijo backtracking ---
+        let mut t = 1.0;
+        let mut accepted = None;
+        for _ in 0..cfg.max_ls {
+            let mut w_new = w.clone();
+            w_new.axpy(t, &d);
+            let (f_new, g_new) = problem.loss_grad(&w_new)?;
+            grad_evals += 1;
+            if f_new <= f + cfg.c1 * t * dg {
+                accepted = Some((w_new, f_new, g_new));
+                break;
+            }
+            t *= cfg.shrink;
+        }
+        let Some((w_new, f_new, g_new)) = accepted else {
+            // line search failed: local floor reached
+            break;
+        };
+        // --- history update ---
+        let s = w_new.sub(&w);
+        let yv = g_new.sub(&g);
+        let sy = s.dot(&yv);
+        if sy > 1e-12 * s.norm2() * yv.norm2() {
+            let rho = 1.0 / sy;
+            hist.push_back((s, yv, rho));
+            if hist.len() > cfg.memory {
+                hist.pop_front();
+            }
+        }
+        w = w_new;
+        f = f_new;
+        g = g_new;
+        objective.push(f);
+        if cfg.tol > 0.0 && g.norm2() <= cfg.tol * g0_norm {
+            break;
+        }
+    }
+    Ok(Trace { name: "lbfgs".into(), objective, solution: w, grad_evals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::optim::accelerated::{accelerated, AccelConfig};
+    use crate::optim::objective::Regularizer;
+    use crate::optim::problem::synth;
+
+    fn ctx() -> Context {
+        Context::local("lbfgs_test", 2)
+    }
+
+    #[test]
+    fn solves_least_squares_to_high_accuracy() {
+        let c = ctx();
+        let (p, w_true) = synth::linear(&c, 300, 6, 6, Regularizer::None, 3, 1).unwrap();
+        let t = lbfgs(&p, &Vector::zeros(6), &LbfgsConfig { max_iters: 80, ..Default::default() })
+            .unwrap();
+        let err = t.solution.sub(&w_true).norm2() / w_true.norm2();
+        assert!(err < 0.1, "recovery err {err}");
+        // objective strictly decreased a lot
+        // noise floor: 0.5^2/2 per row remains; initial/final ratio ~50x+
+        assert!(t.objective.last().unwrap() < &(t.objective[0] * 0.02));
+    }
+
+    #[test]
+    fn outperforms_accelerated_per_iteration() {
+        // the paper's Fig.-1 note: "LBFGS generally outperformed
+        // accelerated gradient descent"
+        let c = ctx();
+        let (p, _) = synth::logistic(&c, 200, 10, Regularizer::L2(0.01), 3, 2).unwrap();
+        let step = 1.0 / p.lipschitz_estimate().unwrap();
+        let iters = 30;
+        let acc = accelerated(
+            &p,
+            &Vector::zeros(10),
+            &AccelConfig::variant("acc_rb", step, iters).unwrap(),
+        )
+        .unwrap();
+        let lb = lbfgs(
+            &p,
+            &Vector::zeros(10),
+            &LbfgsConfig { max_iters: iters, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            lb.best() <= acc.best() + 1e-9,
+            "lbfgs {} vs acc_rb {}",
+            lb.best(),
+            acc.best()
+        );
+    }
+
+    #[test]
+    fn rejects_l1() {
+        let c = ctx();
+        let (p, _) = synth::linear(&c, 30, 4, 2, Regularizer::L1(1.0), 2, 3).unwrap();
+        assert!(lbfgs(&p, &Vector::zeros(4), &LbfgsConfig::default()).is_err());
+    }
+
+    #[test]
+    fn monotone_decrease_with_armijo() {
+        let c = ctx();
+        let (p, _) = synth::logistic(&c, 120, 6, Regularizer::None, 2, 4).unwrap();
+        let t = lbfgs(&p, &Vector::zeros(6), &LbfgsConfig { max_iters: 40, ..Default::default() })
+            .unwrap();
+        for w in t.objective.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "armijo guarantees decrease");
+        }
+    }
+
+    #[test]
+    fn tol_terminates_early() {
+        let c = ctx();
+        let (p, _) = synth::linear(&c, 100, 5, 5, Regularizer::L2(0.1), 2, 5).unwrap();
+        let t = lbfgs(
+            &p,
+            &Vector::zeros(5),
+            &LbfgsConfig { max_iters: 10_000, tol: 1e-6, ..Default::default() },
+        )
+        .unwrap();
+        assert!(t.objective.len() < 1000, "should stop on gradient tol");
+    }
+}

@@ -1,0 +1,53 @@
+//! Convex optimization over distributed data — the paper's §3.3.
+//!
+//! Objectives are *separable*: `F(w) = Σᵢ Fᵢ(w)` over training rows, so
+//! the gradient is a sum of per-partition contributions computed **on the
+//! cluster** (XLA fused loss+grad kernels when available) and
+//! tree-aggregated to the driver, where the (cheap, d-dimensional)
+//! **vector** update runs locally. All six Figure-1 optimizers share that
+//! one distributed primitive ([`problem::DistProblem::loss_grad`]):
+//!
+//! * `gra` — full-batch gradient descent ([`gd`])
+//! * `acc` / `acc_r` / `acc_b` / `acc_rb` — Nesterov-accelerated variants
+//!   (± backtracking, ± gradient-test restart) ([`accelerated`])
+//! * `lbfgs` — limited-memory BFGS ([`lbfgs`])
+
+pub mod objective;
+pub mod problem;
+pub mod gd;
+pub mod accelerated;
+pub mod lbfgs;
+
+pub use objective::{Objective, Regularizer};
+pub use problem::DistProblem;
+
+/// A recorded optimization run: per-iteration objective values (the
+/// Figure 1 y-axis is `log10(f - f*)`).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Solver label (`gra`, `acc_rb`, ...).
+    pub name: String,
+    /// Objective value after each outer iteration (index 0 = initial).
+    pub objective: Vec<f64>,
+    /// Final iterate.
+    pub solution: crate::linalg::vector::Vector,
+    /// Distributed gradient evaluations (≈ map-reduce jobs; Fig. 1 notes
+    /// backtracking's extra cost is *not* in the outer-loop count — we
+    /// track it here honestly).
+    pub grad_evals: usize,
+}
+
+impl Trace {
+    /// `log10(f_t − f_best + eps)` series for plotting.
+    pub fn log_error(&self, f_star: f64) -> Vec<f64> {
+        self.objective
+            .iter()
+            .map(|&f| (f - f_star).max(1e-16).log10())
+            .collect()
+    }
+
+    /// Best objective seen.
+    pub fn best(&self) -> f64 {
+        self.objective.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}

@@ -1,0 +1,140 @@
+//! Separable objectives and regularizers (paper §3.3 / Figure 1's four
+//! test problems: linear, linear+L1, logistic, logistic+L2).
+
+use crate::linalg::vector::Vector;
+
+/// The data-fit term: which per-row loss the distributed pass computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// ½ Σ (aᵢᵀw − bᵢ)² — least squares ("linear" in Fig. 1).
+    LeastSquares,
+    /// Σ log(1 + exp(−yᵢ aᵢᵀw)) — logistic, labels in {−1, +1}.
+    Logistic,
+}
+
+/// The regularization term, applied **on the driver** (it is a vector op;
+/// the paper's split keeps it out of the distributed pass).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Regularizer {
+    /// No regularization.
+    None,
+    /// λ‖w‖₁ (LASSO) — nonsmooth; handled by proximal steps.
+    L1(f64),
+    /// (λ/2)‖w‖₂² — smooth; folded into gradient.
+    L2(f64),
+}
+
+impl Regularizer {
+    /// Regularization value at `w`.
+    pub fn value(&self, w: &Vector) -> f64 {
+        match *self {
+            Regularizer::None => 0.0,
+            Regularizer::L1(lambda) => lambda * w.norm1(),
+            Regularizer::L2(lambda) => 0.5 * lambda * w.dot(w),
+        }
+    }
+
+    /// Add the smooth part's gradient into `g` (L1 contributes nothing —
+    /// it is handled by [`Regularizer::prox`]).
+    pub fn add_smooth_grad(&self, w: &Vector, g: &mut Vector) {
+        if let Regularizer::L2(lambda) = *self {
+            g.axpy(lambda, w);
+        }
+    }
+
+    /// Proximal operator with step `t`: `argmin_u (1/2t)‖u−w‖² + r(u)`.
+    /// L1 ⇒ soft-thresholding; L2 ⇒ shrinkage; None ⇒ identity.
+    pub fn prox(&self, w: &Vector, t: f64) -> Vector {
+        match *self {
+            Regularizer::None => w.clone(),
+            Regularizer::L1(lambda) => soft_threshold(w, lambda * t),
+            Regularizer::L2(lambda) => w.scale(1.0 / (1.0 + lambda * t)),
+        }
+    }
+
+    /// True when the regularizer is smooth (gradient-only methods apply).
+    pub fn is_smooth(&self) -> bool {
+        !matches!(self, Regularizer::L1(_))
+    }
+}
+
+/// Soft-thresholding: sign(w)·max(|w|−κ, 0).
+pub fn soft_threshold(w: &Vector, kappa: f64) -> Vector {
+    Vector(
+        w.0.iter()
+            .map(|&x| {
+                if x > kappa {
+                    x - kappa
+                } else if x < -kappa {
+                    x + kappa
+                } else {
+                    0.0
+                }
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, assert_close, check};
+
+    #[test]
+    fn soft_threshold_cases() {
+        let w = Vector::from(&[3.0, -3.0, 0.5, -0.5, 0.0]);
+        let s = soft_threshold(&w, 1.0);
+        assert_allclose(&s.0, &[2.0, -2.0, 0.0, 0.0, 0.0], 1e-15, "soft");
+    }
+
+    #[test]
+    fn l1_prox_is_soft_threshold() {
+        let w = Vector::from(&[2.0, -0.1]);
+        let r = Regularizer::L1(0.5);
+        let p = r.prox(&w, 2.0); // kappa = 1.0
+        assert_allclose(&p.0, &[1.0, 0.0], 1e-15, "l1 prox");
+        assert_close(r.value(&w), 0.5 * 2.1, 1e-15, "l1 value");
+    }
+
+    #[test]
+    fn l2_prox_minimizes_objective_property() {
+        check("l2 prox is the analytic minimizer", 20, |g| {
+            let n = 1 + g.int(0, 8);
+            let w = Vector(g.rng().normal_vec(n));
+            let lambda = g.f64(0.01, 5.0);
+            let t = g.f64(0.01, 3.0);
+            let r = Regularizer::L2(lambda);
+            let p = r.prox(&w, t);
+            // objective h(u) = 1/(2t)||u-w||^2 + λ/2||u||^2; check p beats
+            // small perturbations
+            let h = |u: &Vector| {
+                let d = u.sub(&w);
+                d.dot(&d) / (2.0 * t) + r.value(u)
+            };
+            let hp = h(&p);
+            for j in 0..n {
+                let mut u = p.clone();
+                u[j] += 1e-4;
+                assert!(h(&u) >= hp - 1e-12, "not a minimum at {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn l2_grad_added() {
+        let w = Vector::from(&[1.0, -2.0]);
+        let mut g = Vector::zeros(2);
+        Regularizer::L2(0.5).add_smooth_grad(&w, &mut g);
+        assert_allclose(&g.0, &[0.5, -1.0], 1e-15, "l2 grad");
+        let mut g2 = Vector::zeros(2);
+        Regularizer::L1(0.5).add_smooth_grad(&w, &mut g2);
+        assert_allclose(&g2.0, &[0.0, 0.0], 1e-15, "l1 contributes nothing");
+    }
+
+    #[test]
+    fn smoothness_classification() {
+        assert!(Regularizer::None.is_smooth());
+        assert!(Regularizer::L2(1.0).is_smooth());
+        assert!(!Regularizer::L1(1.0).is_smooth());
+    }
+}

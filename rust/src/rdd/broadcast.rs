@@ -1,0 +1,56 @@
+//! Broadcast variables — the driver→executor one-to-all primitive the
+//! paper's optimizers use every iteration (ship the current weight vector
+//! `w` to all partitions; §3.3).
+//!
+//! In-process, a broadcast is an `Arc<T>`; what the abstraction buys us is
+//! (a) API parity so algorithm code reads like the paper's, and (b) a
+//! byte-count metric so benches can report "broadcast traffic" the way the
+//! paper discusses communication cost.
+
+use std::sync::Arc;
+
+/// A read-only value shared with every task.
+#[derive(Debug)]
+pub struct Broadcast<T: ?Sized> {
+    /// Unique id (metrics/debugging).
+    pub id: usize,
+    value: Arc<T>,
+}
+
+impl<T> Broadcast<T> {
+    /// Wrap a value (normally via `Context::broadcast`).
+    pub fn new(id: usize, value: T) -> Broadcast<T> {
+        Broadcast { id, value: Arc::new(value) }
+    }
+
+    /// Access the broadcast value.
+    pub fn value(&self) -> &T {
+        &self.value
+    }
+
+    /// Clone the inner Arc (for moving into task closures).
+    pub fn handle(&self) -> Arc<T> {
+        Arc::clone(&self.value)
+    }
+}
+
+impl<T: ?Sized> Clone for Broadcast<T> {
+    fn clone(&self) -> Self {
+        Broadcast { id: self.id, value: Arc::clone(&self.value) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shared_not_copied() {
+        let b = Broadcast::new(1, vec![1.0f64; 1000]);
+        let h1 = b.handle();
+        let b2 = b.clone();
+        assert!(Arc::ptr_eq(&h1, &b2.handle()));
+        assert_eq!(b.value().len(), 1000);
+        assert_eq!(b2.id, 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Block manager: in-memory cache of computed partitions, tagged with the
+//! executor that produced them so a simulated executor crash can evict
+//! exactly that executor's blocks — making lineage recompute observable.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A cached partition: type-erased `Arc<Vec<T>>`.
+type Block = Arc<dyn Any + Send + Sync>;
+
+/// Key: (rdd id, partition index).
+pub type BlockId = (usize, usize);
+
+/// Thread-safe block store.
+pub struct BlockManager {
+    blocks: Mutex<HashMap<BlockId, (usize, Block)>>,
+}
+
+impl BlockManager {
+    /// Empty store.
+    pub fn new() -> BlockManager {
+        BlockManager { blocks: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fetch a block if present, downcasting to the expected type.
+    pub fn get<T: Send + Sync + 'static>(&self, id: BlockId) -> Option<Arc<Vec<T>>> {
+        let guard = self.blocks.lock().expect("block map");
+        guard.get(&id).and_then(|(_exec, b)| Arc::clone(b).downcast::<Vec<T>>().ok())
+    }
+
+    /// Store a block computed by `executor`.
+    pub fn put<T: Send + Sync + 'static>(&self, id: BlockId, executor: usize, data: Arc<Vec<T>>) {
+        let mut guard = self.blocks.lock().expect("block map");
+        guard.insert(id, (executor, data));
+    }
+
+    /// Evict everything `executor` held; returns the count (metric).
+    pub fn evict_executor(&self, executor: usize) -> usize {
+        let mut guard = self.blocks.lock().expect("block map");
+        let before = guard.len();
+        guard.retain(|_, (e, _)| *e != executor);
+        before - guard.len()
+    }
+
+    /// Drop all blocks of one RDD (unpersist).
+    pub fn evict_rdd(&self, rdd_id: usize) -> usize {
+        let mut guard = self.blocks.lock().expect("block map");
+        let before = guard.len();
+        guard.retain(|(r, _), _| *r != rdd_id);
+        before - guard.len()
+    }
+
+    /// Number of cached blocks.
+    pub fn len(&self) -> usize {
+        self.blocks.lock().expect("block map").len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for BlockManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let bm = BlockManager::new();
+        bm.put((1, 0), 2, Arc::new(vec![1.0f64, 2.0]));
+        let got: Arc<Vec<f64>> = bm.get((1, 0)).unwrap();
+        assert_eq!(*got, vec![1.0, 2.0]);
+        assert!(bm.get::<f64>((1, 1)).is_none());
+    }
+
+    #[test]
+    fn wrong_type_is_none() {
+        let bm = BlockManager::new();
+        bm.put((1, 0), 0, Arc::new(vec![1u32]));
+        assert!(bm.get::<f64>((1, 0)).is_none());
+    }
+
+    #[test]
+    fn evict_by_executor() {
+        let bm = BlockManager::new();
+        bm.put((1, 0), 0, Arc::new(vec![1]));
+        bm.put((1, 1), 1, Arc::new(vec![2]));
+        bm.put((2, 0), 0, Arc::new(vec![3]));
+        assert_eq!(bm.evict_executor(0), 2);
+        assert_eq!(bm.len(), 1);
+        assert!(bm.get::<i32>((1, 1)).is_some());
+    }
+
+    #[test]
+    fn evict_by_rdd() {
+        let bm = BlockManager::new();
+        bm.put((1, 0), 0, Arc::new(vec![1]));
+        bm.put((1, 1), 1, Arc::new(vec![2]));
+        bm.put((2, 0), 2, Arc::new(vec![3]));
+        assert_eq!(bm.evict_rdd(1), 2);
+        assert_eq!(bm.len(), 1);
+    }
+}

@@ -1,0 +1,423 @@
+//! `Rdd<T>`: a partitioned, lazily-computed, lineage-carrying collection.
+//!
+//! Lineage is *structural*: every transformation's compute closure
+//! captures its parent `Rdd` (an `Arc`), so recomputing a lost partition
+//! simply re-runs the closure chain — the same mechanism Spark describes
+//! in §1.1(3). Caching short-circuits the chain; evicting a cached block
+//! (executor crash) transparently falls back to recompute.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::rdd::exec::Cluster;
+
+/// Per-partition compute: (partition, executor_id) -> records.
+pub type Compute<T> = dyn Fn(usize, usize) -> Result<Vec<T>> + Send + Sync;
+
+/// Stage preparation: runs upstream shuffle map stages (driver-side,
+/// before the consuming job is scheduled) — the DAG-scheduler boundary.
+pub type Prep = dyn Fn() -> Result<()> + Send + Sync;
+
+pub(crate) struct RddInner<T> {
+    pub id: usize,
+    pub name: String,
+    pub cluster: Arc<Cluster>,
+    pub num_partitions: usize,
+    pub compute: Box<Compute<T>>,
+    pub preps: Vec<Arc<Prep>>,
+    pub cache_flag: AtomicBool,
+    pub was_cached: AtomicBool,
+}
+
+/// A distributed collection of `T` records.
+pub struct Rdd<T: Send + Sync + 'static> {
+    pub(crate) inner: Arc<RddInner<T>>,
+}
+
+impl<T: Send + Sync + 'static> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T: Send + Sync + 'static> Rdd<T> {
+    /// Construct from raw parts (library-internal; users go through
+    /// `Context::parallelize` and transformations).
+    pub(crate) fn from_parts(
+        cluster: Arc<Cluster>,
+        name: String,
+        num_partitions: usize,
+        preps: Vec<Arc<Prep>>,
+        compute: Box<Compute<T>>,
+    ) -> Rdd<T> {
+        let id = cluster.new_id();
+        Rdd {
+            inner: Arc::new(RddInner {
+                id,
+                name,
+                cluster,
+                num_partitions,
+                compute,
+                preps,
+                cache_flag: AtomicBool::new(false),
+                was_cached: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// RDD id.
+    pub fn id(&self) -> usize {
+        self.inner.id
+    }
+
+    /// Debug name (lineage description).
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Partition count.
+    pub fn num_partitions(&self) -> usize {
+        self.inner.num_partitions
+    }
+
+    /// Owning cluster.
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.inner.cluster
+    }
+
+    /// Mark for caching: partitions computed after this call are stored
+    /// in the block manager keyed by the computing executor.
+    pub fn cache(self) -> Rdd<T> {
+        self.inner.cache_flag.store(true, Ordering::SeqCst);
+        self
+    }
+
+    /// Drop cached blocks.
+    pub fn unpersist(&self) {
+        self.inner.cache_flag.store(false, Ordering::SeqCst);
+        self.inner.cluster.cache.evict_rdd(self.inner.id);
+    }
+
+    /// Compute (or fetch from cache) partition `p` on `executor`.
+    /// This is the lineage entry point: cache miss ⇒ recursive recompute.
+    pub fn materialize(&self, p: usize, executor: usize) -> Result<Arc<Vec<T>>> {
+        let inner = &self.inner;
+        if p >= inner.num_partitions {
+            return Err(Error::InvalidArgument(format!(
+                "partition {p} out of range (rdd {} has {})",
+                inner.id, inner.num_partitions
+            )));
+        }
+        let cached = inner.cache_flag.load(Ordering::SeqCst);
+        if cached {
+            if let Some(b) = inner.cluster.cache.get::<T>((inner.id, p)) {
+                return Ok(b);
+            }
+            if inner.was_cached.load(Ordering::SeqCst) {
+                // a previously-cached block is gone: lineage recovery
+                inner
+                    .cluster
+                    .metrics
+                    .lineage_recomputes
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let data = Arc::new((inner.compute)(p, executor)?);
+        if cached {
+            inner.cluster.cache.put((inner.id, p), executor, Arc::clone(&data));
+            inner.was_cached.store(true, Ordering::SeqCst);
+        }
+        Ok(data)
+    }
+
+    /// Run all upstream stage preparations (shuffle map stages).
+    pub fn prepare(&self) -> Result<()> {
+        for prep in &self.inner.preps {
+            prep()?;
+        }
+        Ok(())
+    }
+
+    fn child_preps(&self) -> Vec<Arc<Prep>> {
+        self.inner.preps.clone()
+    }
+
+    // ------------------------------------------------------- transformations
+
+    /// Element-wise map.
+    pub fn map<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(&T) -> U + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("{}.map", self.name()),
+            self.num_partitions(),
+            self.child_preps(),
+            Box::new(move |p, exec| {
+                let data = parent.materialize(p, exec)?;
+                Ok(data.iter().map(&f).collect())
+            }),
+        )
+    }
+
+    /// Map with access to the whole partition (and its index).
+    pub fn map_partitions_with_index<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(usize, &[T]) -> Vec<U> + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("{}.mapPartitions", self.name()),
+            self.num_partitions(),
+            self.child_preps(),
+            Box::new(move |p, exec| {
+                let data = parent.materialize(p, exec)?;
+                Ok(f(p, &data))
+            }),
+        )
+    }
+
+    /// Keep elements satisfying the predicate.
+    pub fn filter<F>(&self, pred: F) -> Rdd<T>
+    where
+        T: Clone,
+        F: Fn(&T) -> bool + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("{}.filter", self.name()),
+            self.num_partitions(),
+            self.child_preps(),
+            Box::new(move |p, exec| {
+                let data = parent.materialize(p, exec)?;
+                Ok(data.iter().filter(|t| pred(t)).cloned().collect())
+            }),
+        )
+    }
+
+    /// One-to-many map.
+    pub fn flat_map<U, F>(&self, f: F) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+        F: Fn(&T) -> Vec<U> + Send + Sync + 'static,
+    {
+        let parent = self.clone();
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("{}.flatMap", self.name()),
+            self.num_partitions(),
+            self.child_preps(),
+            Box::new(move |p, exec| {
+                let data = parent.materialize(p, exec)?;
+                Ok(data.iter().flat_map(&f).collect())
+            }),
+        )
+    }
+
+    /// Pairwise partition zip (both RDDs must have identical partition
+    /// counts — the BlockMatrix `add` pattern).
+    pub fn zip_partitions<U, V, F>(&self, other: &Rdd<U>, f: F) -> Result<Rdd<V>>
+    where
+        U: Send + Sync + 'static,
+        V: Send + Sync + 'static,
+        F: Fn(&[T], &[U]) -> Vec<V> + Send + Sync + 'static,
+    {
+        crate::ensure_dims!(self.num_partitions(), other.num_partitions(), "zip_partitions");
+        let a = self.clone();
+        let b = other.clone();
+        let mut preps = self.child_preps();
+        preps.extend(other.inner.preps.iter().cloned());
+        Ok(Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("({}⊕{})", self.name(), other.name()),
+            self.num_partitions(),
+            preps,
+            Box::new(move |p, exec| {
+                let da = a.materialize(p, exec)?;
+                let db = b.materialize(p, exec)?;
+                Ok(f(&da, &db))
+            }),
+        ))
+    }
+
+    /// Concatenate two RDDs (partitions of `self` first).
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T>
+    where
+        T: Clone,
+    {
+        let a = self.clone();
+        let b = other.clone();
+        let na = self.num_partitions();
+        let mut preps = self.child_preps();
+        preps.extend(other.inner.preps.iter().cloned());
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("({}∪{})", self.name(), other.name()),
+            na + other.num_partitions(),
+            preps,
+            Box::new(move |p, exec| {
+                let src = if p < na { a.materialize(p, exec) } else { b.materialize(p - na, exec) }?;
+                Ok(src.as_ref().clone())
+            }),
+        )
+    }
+
+    // ------------------------------------------------------------- actions
+
+    /// Gather all records to the driver, in partition order.
+    pub fn collect(&self) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        self.prepare()?;
+        let me = self.clone();
+        let parts = self.cluster().run_job(
+            self.num_partitions(),
+            Arc::new(move |p, exec| me.materialize(p, exec).map(|a| a.as_ref().clone())),
+        )?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    /// Count records.
+    pub fn count(&self) -> Result<usize> {
+        self.prepare()?;
+        let me = self.clone();
+        let parts = self
+            .cluster()
+            .run_job(self.num_partitions(), Arc::new(move |p, exec| Ok(me.materialize(p, exec)?.len())))?;
+        Ok(parts.into_iter().sum())
+    }
+
+    /// Generic aggregate: per-partition fold (`seq`) then driver-side
+    /// combine (`comb`), like Spark's `aggregate`.
+    pub fn aggregate<A, S, C>(&self, zero: A, seq: S, comb: C) -> Result<A>
+    where
+        A: Clone + Send + Sync + 'static,
+        S: Fn(A, &T) -> A + Send + Sync + 'static,
+        C: Fn(A, A) -> A + Send + Sync + 'static,
+    {
+        self.prepare()?;
+        let me = self.clone();
+        let z = zero.clone();
+        let partials = self.cluster().run_job(
+            self.num_partitions(),
+            Arc::new(move |p, exec| {
+                let data = me.materialize(p, exec)?;
+                Ok(data.iter().fold(z.clone(), |acc, t| seq(acc, t)))
+            }),
+        )?;
+        Ok(partials.into_iter().fold(zero, comb))
+    }
+
+    /// Tree aggregation: per-partition fold, then *cluster-side* combine
+    /// rounds of fan-in `fanin` until few enough partials remain for the
+    /// driver (Spark's `treeAggregate`, which MLlib's gradient descent
+    /// uses to keep the driver from becoming the bottleneck).
+    pub fn tree_aggregate<A, S, C>(&self, zero: A, seq: S, comb: C, fanin: usize) -> Result<A>
+    where
+        A: Clone + Send + Sync + 'static,
+        S: Fn(A, &T) -> A + Send + Sync + 'static,
+        C: Fn(A, A) -> A + Send + Sync + 'static + Clone,
+    {
+        if fanin < 2 {
+            return Err(Error::InvalidArgument("tree_aggregate: fanin must be >= 2".into()));
+        }
+        self.prepare()?;
+        let me = self.clone();
+        let z = zero.clone();
+        let mut partials = self.cluster().run_job(
+            self.num_partitions(),
+            Arc::new(move |p, exec| {
+                let data = me.materialize(p, exec)?;
+                Ok(data.iter().fold(z.clone(), |acc, t| seq(acc, t)))
+            }),
+        )?;
+        // combine rounds on the cluster
+        while partials.len() > fanin {
+            let groups: Vec<Vec<A>> = partials
+                .chunks(fanin)
+                .map(|c| c.to_vec())
+                .collect();
+            let groups = Arc::new(groups);
+            let combf = comb.clone();
+            let n = groups.len();
+            partials = self.cluster().run_job(
+                n,
+                Arc::new(move |g, _exec| {
+                    let mut it = groups[g].iter().cloned();
+                    let first = it.next().expect("non-empty group");
+                    Ok(it.fold(first, |a, b| combf(a, b)))
+                }),
+            )?;
+        }
+        Ok(partials.into_iter().fold(zero, comb))
+    }
+
+    /// Reduce with a binary op (error on empty).
+    pub fn reduce<F>(&self, f: F) -> Result<T>
+    where
+        T: Clone,
+        F: Fn(&T, &T) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let f2 = Arc::clone(&f);
+        let out = self.aggregate(
+            None::<T>,
+            move |acc, t| match acc {
+                None => Some(t.clone()),
+                Some(a) => Some(f(&a, t)),
+            },
+            move |a, b| match (a, b) {
+                (None, x) | (x, None) => x,
+                (Some(a), Some(b)) => Some(f2(&a, &b)),
+            },
+        )?;
+        out.ok_or_else(|| Error::InvalidArgument("reduce on empty RDD".into()))
+    }
+
+    /// First `n` records (driver-side truncation; computes all partitions
+    /// — fine at our scales, noted for honesty).
+    pub fn take(&self, n: usize) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        let mut all = self.collect()?;
+        all.truncate(n);
+        Ok(all)
+    }
+}
+
+impl Rdd<f64> {
+    /// Sum of an f64 RDD.
+    pub fn sum(&self) -> Result<f64> {
+        self.aggregate(0.0, |a, &x| a + x, |a, b| a + b)
+    }
+
+    /// Mean (error on empty).
+    pub fn mean(&self) -> Result<f64> {
+        let (s, n) = self.aggregate(
+            (0.0, 0usize),
+            |(s, n), &x| (s + x, n + 1),
+            |(s1, n1), (s2, n2)| (s1 + s2, n1 + n2),
+        )?;
+        if n == 0 {
+            return Err(Error::InvalidArgument("mean of empty RDD".into()));
+        }
+        Ok(s / n as f64)
+    }
+}
+
+/// Build a `Prep` that runs at most once (subsequent calls return the
+/// first result) — the stage-level `Once` guard for shuffle map stages.
+pub fn once_prep(f: impl Fn() -> Result<()> + Send + Sync + 'static) -> Arc<Prep> {
+    let cell: OnceLock<std::result::Result<(), Error>> = OnceLock::new();
+    let cell = Arc::new(cell);
+    Arc::new(move || cell.get_or_init(&f).clone())
+}

@@ -1,0 +1,297 @@
+//! The executor pool + task scheduler + fault injector.
+//!
+//! Topology: `num_executors × cores_per_executor` worker threads. Each
+//! worker carries a logical executor id; cached blocks record which
+//! executor computed them so a simulated *executor crash* can evict that
+//! executor's whole cache (the lineage-recovery trigger).
+//!
+//! Scheduling: a job is a set of independent tasks (one per partition)
+//! pushed onto a shared queue; the driver blocks on a per-job channel.
+//! Injected faults are retried up to `max_task_retries`; real errors
+//! propagate immediately.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::config::ClusterConfig;
+use crate::error::{Error, Result};
+use crate::rdd::cache::BlockManager;
+use crate::rdd::shuffle::ShuffleStore;
+use crate::util::rng::SplitMix64;
+
+/// Counters the scheduler and matrix ops maintain — surfaced by the CLI
+/// and asserted on by the fault-tolerance tests.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs run to completion.
+    pub jobs: AtomicU64,
+    /// Task attempts started.
+    pub tasks_started: AtomicU64,
+    /// Task attempts that failed with an injected fault.
+    pub tasks_failed: AtomicU64,
+    /// Tasks retried after a fault.
+    pub tasks_retried: AtomicU64,
+    /// Simulated executor crashes.
+    pub executor_crashes: AtomicU64,
+    /// Cached blocks evicted by crashes.
+    pub blocks_evicted: AtomicU64,
+    /// Partitions recomputed after eviction (lineage recoveries).
+    pub lineage_recomputes: AtomicU64,
+    /// Records moved through shuffles.
+    pub shuffle_records: AtomicU64,
+    /// XLA executions dispatched by the runtime.
+    pub xla_calls: AtomicU64,
+}
+
+impl Metrics {
+    /// Pretty one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={} tasks={} failed={} retried={} crashes={} evicted={} recomputed={} shuffled={} xla={}",
+            self.jobs.load(Ordering::Relaxed),
+            self.tasks_started.load(Ordering::Relaxed),
+            self.tasks_failed.load(Ordering::Relaxed),
+            self.tasks_retried.load(Ordering::Relaxed),
+            self.executor_crashes.load(Ordering::Relaxed),
+            self.blocks_evicted.load(Ordering::Relaxed),
+            self.lineage_recomputes.load(Ordering::Relaxed),
+            self.shuffle_records.load(Ordering::Relaxed),
+            self.xla_calls.load(Ordering::Relaxed)
+                + crate::runtime::client::XLA_CALLS.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Deterministic fault injector (probabilities from `FaultConfig`).
+pub struct FaultInjector {
+    task_fail_prob: f64,
+    executor_kill_prob: f64,
+    rng: Mutex<SplitMix64>,
+    /// Executors currently "down" (they heal on next task — models fast
+    /// replacement; what matters for lineage is the cache eviction).
+    down: Mutex<HashSet<usize>>,
+    armed: AtomicBool,
+}
+
+impl FaultInjector {
+    fn new(cfg: &ClusterConfig) -> Self {
+        FaultInjector {
+            task_fail_prob: cfg.fault.task_fail_prob,
+            executor_kill_prob: cfg.fault.executor_kill_prob,
+            rng: Mutex::new(SplitMix64::new(cfg.fault.seed)),
+            down: Mutex::new(HashSet::new()),
+            armed: AtomicBool::new(
+                cfg.fault.task_fail_prob > 0.0 || cfg.fault.executor_kill_prob > 0.0,
+            ),
+        }
+    }
+
+    /// Disable injection (used by drivers that need a clean phase, e.g.
+    /// benches measuring the no-fault baseline).
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+
+    /// Re-enable injection.
+    pub fn arm(&self) {
+        self.armed.store(true, Ordering::SeqCst);
+    }
+
+    /// Sample a fault decision for a task attempt on `executor`.
+    /// Returns Some(kind) when the attempt should fail.
+    fn sample(&self, executor: usize) -> Option<&'static str> {
+        if !self.armed.load(Ordering::Relaxed) {
+            return None;
+        }
+        let mut rng = self.rng.lock().expect("injector rng");
+        if self.executor_kill_prob > 0.0 && rng.bernoulli(self.executor_kill_prob) {
+            self.down.lock().expect("down set").insert(executor);
+            return Some("executor-crash");
+        }
+        if self.task_fail_prob > 0.0 && rng.bernoulli(self.task_fail_prob) {
+            return Some("task-fault");
+        }
+        None
+    }
+
+    /// Heal an executor (called when it picks up its next task).
+    fn heal(&self, executor: usize) {
+        self.down.lock().expect("down set").remove(&executor);
+    }
+}
+
+/// A schedulable task: runs on a worker, gets the worker's executor id.
+type Task = Box<dyn FnOnce(usize) + Send>;
+
+/// The simulated cluster: worker pool + block manager + shuffle store +
+/// metrics + fault injector. One per [`crate::Context`].
+pub struct Cluster {
+    /// Configuration snapshot.
+    pub config: ClusterConfig,
+    /// Cached partition blocks.
+    pub cache: BlockManager,
+    /// Shuffle map-output store.
+    pub shuffle: ShuffleStore,
+    /// Scheduler / recovery counters.
+    pub metrics: Metrics,
+    /// Fault injection.
+    pub injector: FaultInjector,
+    sender: Mutex<Option<mpsc::Sender<Task>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next_id: AtomicUsize,
+}
+
+impl Cluster {
+    /// Spin up the worker pool.
+    pub fn start(config: ClusterConfig) -> Arc<Cluster> {
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let cluster = Arc::new(Cluster {
+            injector: FaultInjector::new(&config),
+            cache: BlockManager::new(),
+            shuffle: ShuffleStore::new(),
+            metrics: Metrics::default(),
+            sender: Mutex::new(Some(tx)),
+            workers: Mutex::new(vec![]),
+            next_id: AtomicUsize::new(1),
+            config,
+        });
+        let n_workers = cluster.config.total_cores();
+        let n_exec = cluster.config.num_executors;
+        let mut handles = vec![];
+        for w in 0..n_workers {
+            let executor_id = w % n_exec;
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("executor-{executor_id}-core-{}", w / n_exec))
+                    .spawn(move || loop {
+                        let task = {
+                            let guard = rx.lock().expect("task queue");
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(t) => t(executor_id),
+                            Err(_) => break, // channel closed: shutdown
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        *cluster.workers.lock().expect("workers") = handles;
+        cluster
+    }
+
+    /// Allocate a fresh id (RDDs, shuffles, broadcasts share the space).
+    pub fn new_id(&self) -> usize {
+        self.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Run a job: `task_fn(partition, executor_id)` for each partition,
+    /// returning results in partition order. Injected faults are retried
+    /// (on whatever worker is free — models rescheduling); real errors
+    /// abort the job.
+    pub fn run_job<R: Send + 'static>(
+        self: &Arc<Self>,
+        num_partitions: usize,
+        task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
+    ) -> Result<Vec<R>> {
+        if num_partitions == 0 {
+            return Ok(vec![]);
+        }
+        self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+        // one channel for the whole job; the driver keeps a sender alive so
+        // retries can be wired to the same receiver
+        let (done_tx, done_rx) = mpsc::channel::<(usize, usize, Result<R>)>();
+        for p in 0..num_partitions {
+            self.submit_attempt(p, 1, Arc::clone(&task_fn), done_tx.clone())?;
+        }
+        let mut results: Vec<Option<R>> = (0..num_partitions).map(|_| None).collect();
+        let mut remaining = num_partitions;
+        while remaining > 0 {
+            let (p, attempt, res) = done_rx
+                .recv()
+                .map_err(|_| Error::msg("scheduler: all workers gone"))?;
+            match res {
+                Ok(r) => {
+                    if results[p].is_none() {
+                        results[p] = Some(r);
+                        remaining -= 1;
+                    }
+                }
+                Err(e) if e.is_injected() => {
+                    self.metrics.tasks_failed.fetch_add(1, Ordering::Relaxed);
+                    if attempt >= self.config.max_task_retries {
+                        return Err(Error::TaskFailed {
+                            attempts: attempt,
+                            cause: e.to_string(),
+                        });
+                    }
+                    self.metrics.tasks_retried.fetch_add(1, Ordering::Relaxed);
+                    self.submit_attempt(p, attempt + 1, Arc::clone(&task_fn), done_tx.clone())?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("all partitions done")).collect())
+    }
+
+    fn submit_attempt<R: Send + 'static>(
+        self: &Arc<Self>,
+        partition: usize,
+        attempt: usize,
+        task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
+        done: mpsc::Sender<(usize, usize, Result<R>)>,
+    ) -> Result<()> {
+        let cluster = Arc::clone(self);
+        let task: Task = Box::new(move |executor_id| {
+            cluster.metrics.tasks_started.fetch_add(1, Ordering::Relaxed);
+            cluster.injector.heal(executor_id);
+            // fault decision happens before the work, like a crash at
+            // task start; executor crash also evicts its cached blocks
+            if let Some(kind) = cluster.injector.sample(executor_id) {
+                if kind == "executor-crash" {
+                    cluster.metrics.executor_crashes.fetch_add(1, Ordering::Relaxed);
+                    let evicted = cluster.cache.evict_executor(executor_id);
+                    cluster
+                        .metrics
+                        .blocks_evicted
+                        .fetch_add(evicted as u64, Ordering::Relaxed);
+                }
+                let _ = done.send((
+                    partition,
+                    attempt,
+                    Err(Error::InjectedFault { executor: executor_id, kind: kind.into() }),
+                ));
+                return;
+            }
+            let res = task_fn(partition, executor_id);
+            let _ = done.send((partition, attempt, res));
+        });
+        let guard = self.sender.lock().expect("sender");
+        guard
+            .as_ref()
+            .ok_or_else(|| Error::msg("cluster is shut down"))?
+            .send(task)
+            .map_err(|_| Error::msg("worker pool closed"))
+    }
+
+    /// Graceful shutdown: close the queue and join workers. Called by
+    /// `Context::drop`; safe to call twice.
+    pub fn shutdown(&self) {
+        let mut guard = self.sender.lock().expect("sender");
+        *guard = None; // closes the channel; workers exit
+        drop(guard);
+        let mut ws = self.workers.lock().expect("workers");
+        for w in ws.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

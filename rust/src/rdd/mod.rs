@@ -1,0 +1,29 @@
+//! The dataflow substrate: a deterministic, in-process stand-in for the
+//! Spark engine with the properties the paper's library actually depends
+//! on (§1.1):
+//!
+//! 1. a partitioned, fault-tolerant distributed collection ([`Rdd`]),
+//! 2. user-controllable partitioning + shuffle ([`pair`]),
+//! 3. lineage-based recovery: a lost cached partition is recomputed from
+//!    its parents' compute closures ([`exec::FaultInjector`] simulates
+//!    task and executor failures; the scheduler retries and the cache
+//!    evicts, so recovery flows through the same code path Spark uses),
+//! 4. a high-level, composable API (`map`, `filter`, `aggregate`,
+//!    `tree_aggregate`, `zip_partitions`, `reduce_by_key`, ...).
+//!
+//! Executors are worker threads tagged with logical executor ids; the
+//! "driver" is whatever thread calls an action. Stages split at shuffle
+//! boundaries exactly as in Spark's DAG scheduler: a shuffled RDD carries
+//! a *prep* closure that runs its map stage (a separate job) before the
+//! reduce stage's tasks are scheduled.
+
+pub mod exec;
+pub mod cache;
+pub mod shuffle;
+pub mod broadcast;
+pub mod core;
+pub mod pair;
+
+pub use broadcast::Broadcast;
+pub use core::Rdd;
+pub use exec::{Cluster, Metrics};

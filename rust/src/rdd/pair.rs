@@ -1,0 +1,184 @@
+//! Key–value operations: the shuffle layer (`reduce_by_key`,
+//! `group_by_key`, `partition_by`) — what `CoordinateMatrix` conversions
+//! and `BlockMatrix.multiply` are built on.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::rdd::core::{once_prep, Rdd};
+
+/// Deterministic hash partitioner (FxHash-style; `DefaultHasher` would
+/// also be stable within a run, but we want cross-run determinism for
+/// reproducible experiments).
+pub fn hash_partition<K: Hash>(k: &K, num_partitions: usize) -> usize {
+    let mut h = FxHasher::default();
+    k.hash(&mut h);
+    (h.finish() as usize) % num_partitions.max(1)
+}
+
+/// Minimal FxHash (Firefox hash): multiply-xor over bytes. Deterministic
+/// across runs and platforms (unlike `RandomState`).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl Hasher for FxHasher {
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        for &b in bytes {
+            self.hash = (self.hash.rotate_left(5) ^ b as u64).wrapping_mul(SEED);
+        }
+    }
+}
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Clone + Eq + Hash + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    /// Shuffle + combine values per key. Map-side combining runs first
+    /// (the classic word-count optimization), then each reduce partition
+    /// merges its buckets. Output partition of a key is
+    /// `hash(k) % num_out` — stable across runs.
+    pub fn reduce_by_key<F>(&self, num_out: usize, f: F) -> Rdd<(K, V)>
+    where
+        F: Fn(&V, &V) -> V + Send + Sync + 'static + Clone,
+    {
+        let shuffle_id = self.cluster().new_id();
+        let parent = self.clone();
+        let cluster = Arc::clone(self.cluster());
+        let fmap = f.clone();
+        // map stage: runs once, from the driver, before any reduce task
+        let map_stage = once_prep(move || {
+            parent.prepare()?;
+            let parent2 = parent.clone();
+            let cl = Arc::clone(&cluster);
+            let fm = fmap.clone();
+            cluster.run_job(
+                parent.num_partitions(),
+                Arc::new(move |p, exec| {
+                    let data = parent2.materialize(p, exec)?;
+                    // map-side combine into per-reduce-partition maps
+                    let mut buckets: Vec<HashMap<K, V>> =
+                        (0..num_out).map(|_| HashMap::new()).collect();
+                    for (k, v) in data.iter() {
+                        let b = hash_partition(k, num_out);
+                        match buckets[b].get_mut(k) {
+                            Some(acc) => *acc = fm(acc, v),
+                            None => {
+                                buckets[b].insert(k.clone(), v.clone());
+                            }
+                        }
+                    }
+                    let mut records = 0u64;
+                    for (b, bucket) in buckets.into_iter().enumerate() {
+                        let vec: Vec<(K, V)> = bucket.into_iter().collect();
+                        records += vec.len() as u64;
+                        cl.shuffle.put(shuffle_id, p, b, vec);
+                    }
+                    cl.metrics.shuffle_records.fetch_add(records, Ordering::Relaxed);
+                    Ok(())
+                }),
+            )?;
+            Ok(())
+        });
+        let n_map = self.num_partitions();
+        let cluster2 = Arc::clone(self.cluster());
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("{}.reduceByKey", self.name()),
+            num_out,
+            vec![map_stage],
+            Box::new(move |q, _exec| {
+                let mut acc: HashMap<K, V> = HashMap::new();
+                for m in 0..n_map {
+                    if let Some(bucket) = cluster2.shuffle.get::<(K, V)>(shuffle_id, m, q) {
+                        for (k, v) in bucket.iter() {
+                            match acc.get_mut(k) {
+                                Some(a) => *a = f(a, v),
+                                None => {
+                                    acc.insert(k.clone(), v.clone());
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(acc.into_iter().collect())
+            }),
+        )
+    }
+
+    /// Group values per key (via `reduce_by_key` on singleton Vecs).
+    pub fn group_by_key(&self, num_out: usize) -> Rdd<(K, Vec<V>)> {
+        self.map(|(k, v)| (k.clone(), vec![v.clone()]))
+            .reduce_by_key(num_out, |a: &Vec<V>, b: &Vec<V>| {
+                let mut out = a.clone();
+                out.extend(b.iter().cloned());
+                out
+            })
+    }
+
+    /// Repartition by key hash without combining (values keep duplicates).
+    pub fn partition_by(&self, num_out: usize) -> Rdd<(K, V)> {
+        self.map(|(k, v)| (k.clone(), vec![v.clone()]))
+            .reduce_by_key(num_out, |a: &Vec<V>, b: &Vec<V>| {
+                let mut out = a.clone();
+                out.extend(b.iter().cloned());
+                out
+            })
+            .flat_map(|(k, vs)| vs.iter().map(|v| (k.clone(), v.clone())).collect())
+    }
+
+    /// Collect into a HashMap (driver-side).
+    pub fn collect_as_map(&self) -> Result<HashMap<K, V>> {
+        Ok(self.collect()?.into_iter().collect())
+    }
+
+    /// Join two pair RDDs on key (hash join via co-shuffle).
+    pub fn join<W>(&self, other: &Rdd<(K, W)>, num_out: usize) -> Rdd<(K, (V, W))>
+    where
+        W: Clone + Send + Sync + 'static,
+    {
+        let left = self.group_by_key(num_out);
+        let right = other.group_by_key(num_out);
+        left.zip_partitions(&right, |ls, rs| {
+            let rmap: HashMap<&K, &Vec<W>> = rs.iter().map(|(k, v)| (k, v)).collect();
+            let mut out = vec![];
+            for (k, vs) in ls {
+                if let Some(ws) = rmap.get(k) {
+                    for v in vs {
+                        for w in ws.iter() {
+                            out.push((k.clone(), (v.clone(), w.clone())));
+                        }
+                    }
+                }
+            }
+            out
+        })
+        .expect("group_by_key outputs share partitioning")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fx_hash_deterministic() {
+        let a = hash_partition(&"hello", 16);
+        let b = hash_partition(&"hello", 16);
+        assert_eq!(a, b);
+        assert!(a < 16);
+        // different keys spread (statistically)
+        let spread: std::collections::HashSet<usize> =
+            (0..100).map(|i| hash_partition(&i, 16)).collect();
+        assert!(spread.len() > 8, "hash collapsed: {spread:?}");
+    }
+}

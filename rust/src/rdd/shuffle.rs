@@ -1,0 +1,93 @@
+//! Shuffle store: map-stage outputs bucketed by reduce partition.
+//!
+//! `reduce_by_key(num_out)` runs a map-stage job whose task `p` hash-
+//! partitions (and map-side combines) parent partition `p` into `num_out`
+//! buckets stored here under `(shuffle_id, map_partition, reduce_partition)`.
+//! The reduce-stage task `q` then merges buckets `(_, *, q)`. The map
+//! stage runs exactly once per shuffle (guarded by `Once`-like state in
+//! the owning RDD's prep closure).
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+type Bucket = Arc<dyn Any + Send + Sync>;
+
+/// Thread-safe shuffle map-output tracker.
+pub struct ShuffleStore {
+    buckets: Mutex<HashMap<(usize, usize, usize), Bucket>>,
+}
+
+impl ShuffleStore {
+    /// Empty store.
+    pub fn new() -> ShuffleStore {
+        ShuffleStore { buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Store map output for (shuffle, map partition, reduce partition).
+    pub fn put<T: Send + Sync + 'static>(
+        &self,
+        shuffle: usize,
+        map_p: usize,
+        reduce_p: usize,
+        data: Vec<T>,
+    ) {
+        let mut g = self.buckets.lock().expect("shuffle map");
+        g.insert((shuffle, map_p, reduce_p), Arc::new(data));
+    }
+
+    /// Fetch one bucket (None if the map task produced nothing for it).
+    pub fn get<T: Send + Sync + 'static>(
+        &self,
+        shuffle: usize,
+        map_p: usize,
+        reduce_p: usize,
+    ) -> Option<Arc<Vec<T>>> {
+        let g = self.buckets.lock().expect("shuffle map");
+        g.get(&(shuffle, map_p, reduce_p))
+            .and_then(|b| Arc::clone(b).downcast::<Vec<T>>().ok())
+    }
+
+    /// Drop all buckets of a shuffle (after the consuming RDD is done,
+    /// or on unpersist).
+    pub fn remove_shuffle(&self, shuffle: usize) -> usize {
+        let mut g = self.buckets.lock().expect("shuffle map");
+        let before = g.len();
+        g.retain(|(s, _, _), _| *s != shuffle);
+        before - g.len()
+    }
+
+    /// Bucket count (tests/metrics).
+    pub fn len(&self) -> usize {
+        self.buckets.lock().expect("shuffle map").len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for ShuffleStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_remove() {
+        let s = ShuffleStore::new();
+        s.put(7, 0, 1, vec![("a", 1)]);
+        s.put(7, 1, 1, vec![("b", 2)]);
+        s.put(8, 0, 0, vec![("c", 3)]);
+        let b: Arc<Vec<(&str, i32)>> = s.get(7, 0, 1).unwrap();
+        assert_eq!(*b, vec![("a", 1)]);
+        assert!(s.get::<(&str, i32)>(7, 0, 0).is_none());
+        assert_eq!(s.remove_shuffle(7), 2);
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Artifact manifest: the AOT contract between `python/compile/aot.py`
+//! and the Rust runtime. One line per artifact:
+//!
+//! ```text
+//! name \t file \t f32[1024,256];f32[256] \t f32[1024]
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Shape of one tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Parse `f32[1024,256]` (only f32 is in the contract).
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let s = s.trim();
+        let body = s
+            .strip_prefix("f32[")
+            .and_then(|r| r.strip_suffix(']'))
+            .ok_or_else(|| Error::InvalidArgument(format!("bad tensor spec {s:?}")))?;
+        if body.is_empty() {
+            return Ok(TensorSpec { dims: vec![] });
+        }
+        let dims = body
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::InvalidArgument(format!("bad dim {d:?} in {s:?}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dims })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Registry name (e.g. `gram_1024x256`).
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: PathBuf,
+    /// Input tensor shapes, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor shapes (the HLO returns a tuple).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifacts by name.
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    /// Directory the files live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(format!("manifest {path:?}"), e))?;
+        let mut artifacts = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(Error::InvalidArgument(format!(
+                    "manifest line {}: expected 4 tab-separated fields, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let parse_list = |s: &str| -> Result<Vec<TensorSpec>> {
+                s.split(';').map(TensorSpec::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: cols[0].to_string(),
+                file: PathBuf::from(cols[1]),
+                inputs: parse_list(cols[2])?,
+                outputs: parse_list(cols[3])?,
+            };
+            let full = dir.join(&spec.file);
+            if !full.exists() {
+                return Err(Error::ArtifactMissing(format!("{} ({:?})", spec.name, full)));
+            }
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        if artifacts.is_empty() {
+            return Err(Error::ArtifactMissing(format!("empty manifest at {path:?}")));
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::ArtifactMissing(name.to_string()))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parsing() {
+        assert_eq!(TensorSpec::parse("f32[1024,256]").unwrap().dims, vec![1024, 256]);
+        assert_eq!(TensorSpec::parse(" f32[256] ").unwrap().dims, vec![256]);
+        assert_eq!(TensorSpec::parse("f32[]").unwrap().dims, Vec::<usize>::new());
+        assert!(TensorSpec::parse("f64[2]").is_err());
+        assert!(TensorSpec::parse("f32[a,b]").is_err());
+        assert_eq!(TensorSpec::parse("f32[3,4]").unwrap().elements(), 12);
+    }
+
+    #[test]
+    fn manifest_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sparkla_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "gram\tx.hlo.txt\tf32[8,4]\tf32[4,4]\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.get("gram").unwrap();
+        assert_eq!(spec.inputs[0].dims, vec![8, 4]);
+        assert_eq!(spec.outputs[0].dims, vec![4, 4]);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("sparkla_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "gone\tnot_there.hlo.txt\tf32[1]\tf32[1]\n")
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,192 @@
+//! The PJRT service thread: owns the (non-`Send`) `PjRtClient` and every
+//! compiled executable; serves execute requests from any executor thread
+//! over a channel.
+//!
+//! Protocol: `(artifact_name, inputs)` → `Vec<output tensors>`, all f32
+//! row-major. Executables compile on first use and are cached for the
+//! process lifetime (compilation is the expensive step; see
+//! EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// Process-wide count of artifact executions (all runtimes). Surfaced via
+/// `rdd::Metrics::summary` — the cluster metric is process-global because
+/// the PJRT service thread is shared infrastructure, not per-cluster.
+pub static XLA_CALLS: AtomicU64 = AtomicU64::new(0);
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{ArtifactSpec, Manifest};
+
+/// One input tensor: f32 data + dims (row-major).
+pub struct TensorIn {
+    /// Flattened values.
+    pub data: Vec<f32>,
+    /// Shape.
+    pub dims: Vec<usize>,
+}
+
+type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
+
+enum Request {
+    Execute { artifact: String, inputs: Vec<TensorIn>, reply: Reply },
+    Shutdown,
+}
+
+/// Handle to the runtime service thread. Clone-free; share via `Arc`.
+pub struct RuntimeHandle {
+    tx: Mutex<mpsc::Sender<Request>>,
+    manifest: Manifest,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl RuntimeHandle {
+    /// Start the service thread: loads the manifest, creates the PJRT CPU
+    /// client, and begins serving. Fails fast if the manifest or client
+    /// can't be set up.
+    pub fn start(artifacts_dir: &str) -> Result<RuntimeHandle> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let thread_manifest = manifest.clone();
+        let (tx, rx) = mpsc::channel::<Request>();
+        // client creation happens on the service thread (it stays there);
+        // report startup success/failure back through a oneshot
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_loop(thread_manifest, rx, ready_tx))
+            .map_err(|e| Error::msg(format!("spawn pjrt-service: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::msg("pjrt-service died during startup"))??;
+        Ok(RuntimeHandle { tx: Mutex::new(tx), manifest, join: Mutex::new(Some(join)) })
+    }
+
+    /// The manifest this runtime serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact. Blocks until the service thread replies.
+    /// Input shapes must match the artifact spec exactly (callers pad —
+    /// see `ops`).
+    pub fn execute(&self, artifact: &str, inputs: Vec<TensorIn>) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.get(artifact)?;
+        validate_inputs(spec, &inputs)?;
+        XLA_CALLS.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("runtime tx");
+            tx.send(Request::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::msg("pjrt-service is gone"))?;
+        }
+        reply_rx.recv().map_err(|_| Error::msg("pjrt-service dropped reply"))?
+    }
+
+    /// Stop the service thread (also runs on drop).
+    pub fn shutdown(&self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(j) = self.join.lock().expect("join handle").take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RuntimeHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn validate_inputs(spec: &ArtifactSpec, inputs: &[TensorIn]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        return Err(Error::InvalidArgument(format!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (ti, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if ti.dims != ts.dims {
+            return Err(Error::InvalidArgument(format!(
+                "{} input {i}: shape {:?} != artifact {:?}",
+                spec.name, ti.dims, ts.dims
+            )));
+        }
+        if ti.data.len() != ts.elements() {
+            return Err(Error::InvalidArgument(format!(
+                "{} input {i}: {} values for shape {:?}",
+                spec.name,
+                ti.data.len(),
+                ts.dims
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The service loop — the only code that touches `xla::*` types.
+fn service_loop(manifest: Manifest, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(e.into()));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Execute { artifact, inputs, reply } => {
+                let result = serve_execute(&client, &manifest, &mut executables, &artifact, inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn serve_execute(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    executables: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact: &str,
+    inputs: Vec<TensorIn>,
+) -> Result<Vec<Vec<f32>>> {
+    let spec = manifest.get(artifact)?;
+    if !executables.contains_key(artifact) {
+        let path = manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::msg("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        executables.insert(artifact.to_string(), exe);
+    }
+    let exe = executables.get(artifact).expect("just inserted");
+    let mut literals = Vec::with_capacity(inputs.len());
+    for t in inputs {
+        let lit = xla::Literal::vec1(&t.data);
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        literals.push(if dims.len() == 1 { lit } else { lit.reshape(&dims)? });
+    }
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: always a tuple, even 1-ary
+    let parts = result.to_tuple()?;
+    let mut outputs = Vec::with_capacity(parts.len());
+    for (i, p) in parts.into_iter().enumerate() {
+        let v = p.to_vec::<f32>().map_err(|e| {
+            Error::Xla(format!("{artifact} output {i}: {e}"))
+        })?;
+        outputs.push(v);
+    }
+    Ok(outputs)
+}

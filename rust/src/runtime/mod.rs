@@ -1,0 +1,21 @@
+//! The PJRT runtime: loads the HLO-text artifacts AOT-compiled by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python is never involved at runtime — the artifacts are self-contained.
+//!
+//! Threading: the `xla` crate's types wrap raw PJRT pointers and are not
+//! `Send`, so a dedicated **service thread** owns the `PjRtClient` and all
+//! compiled executables; executor tasks talk to it through a channel
+//! ([`client::RuntimeHandle`]). PJRT's CPU backend parallelizes inside a
+//! single execute call, so one service thread is not the bottleneck at our
+//! partition sizes (measured in EXPERIMENTS.md §Perf).
+//!
+//! Numerics: artifacts are f32 (the MXU-native story); the Rust side is
+//! f64. `ops` converts at the boundary and the distributed callers account
+//! for the precision difference in their tolerances.
+
+pub mod artifact;
+pub mod client;
+pub mod ops;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use client::RuntimeHandle;

@@ -1,0 +1,332 @@
+//! Typed, padded wrappers over the AOT artifacts — the executor-side
+//! kernels of the three-layer stack. Each op:
+//!
+//! 1. pads its partition to the fixed artifact shape (zero rows/cols;
+//!    exact for every op here — see the padding-contract tests in
+//!    `python/tests/test_kernels.py`),
+//! 2. tiles when the partition exceeds the artifact shape,
+//! 3. converts f64 ⇄ f32 at the boundary,
+//! 4. undoes padding effects (the logistic loss `n_pad·ln 2` correction).
+//!
+//! Every op has a native fallback used when the runtime is unavailable;
+//! the distributed layer always goes through these functions, so flipping
+//! `use_xla` swaps the entire compute backend (the Fig. 2 comparison).
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+use crate::runtime::client::{RuntimeHandle, TensorIn};
+
+/// Row/col tile of the `*_1024x256` artifacts.
+pub const TILE_ROWS: usize = 1024;
+/// Column capacity of the `*_1024x256` artifacts.
+pub const TILE_COLS: usize = 256;
+
+/// Resolve the artifact flavor for `base` (e.g. `gram_1024x256`):
+/// prefer the `*_jnp_*` variant (XLA-native lowering — the fast path on
+/// this CPU testbed; see EXPERIMENTS.md §Perf) unless
+/// `SPARKLA_XLA_FLAVOR=pallas` forces the Pallas-kernel artifacts, or the
+/// jnp variant is absent from the manifest.
+fn flavored(rt: &RuntimeHandle, base: &str) -> String {
+    let force_pallas = std::env::var("SPARKLA_XLA_FLAVOR")
+        .map(|v| v == "pallas")
+        .unwrap_or(false);
+    if force_pallas {
+        return base.to_string();
+    }
+    match base.rsplit_once('_') {
+        Some((head, size)) => {
+            let jnp = format!("{head}_jnp_{size}");
+            if rt.manifest().get(&jnp).is_ok() {
+                jnp
+            } else {
+                base.to_string()
+            }
+        }
+        None => base.to_string(),
+    }
+}
+
+fn tensor2(m: &DenseMatrix) -> TensorIn {
+    TensorIn { data: m.to_f32(), dims: vec![m.rows, m.cols] }
+}
+
+fn tensor1(v: &Vector) -> TensorIn {
+    TensorIn { data: v.to_f32(), dims: vec![v.len()] }
+}
+
+fn pad_vec(v: &Vector, n: usize) -> Vector {
+    let mut out = v.0.clone();
+    out.resize(n, 0.0);
+    Vector(out)
+}
+
+/// Does this partition fit the fixed artifact column budget?
+pub fn cols_supported(n: usize) -> bool {
+    n <= TILE_COLS
+}
+
+/// `AᵀA` of a row block via `gram_1024x256`, tiling rows by 1024.
+/// Returns an n×n matrix. Falls back to native when `rt` is `None` or the
+/// column count exceeds the artifact.
+pub fn gram(rt: Option<&Arc<RuntimeHandle>>, a: &DenseMatrix) -> Result<DenseMatrix> {
+    let n = a.cols;
+    match rt {
+        Some(rt) if cols_supported(n) => {
+            let mut g = DenseMatrix::zeros(n, n);
+            for r0 in (0..a.rows.max(1)).step_by(TILE_ROWS) {
+                let rows = (a.rows - r0).min(TILE_ROWS);
+                let tile = a.block(r0, 0, rows, n).pad_to(TILE_ROWS, TILE_COLS);
+                let out = rt.execute(&flavored(rt, "gram_1024x256"), vec![tensor2(&tile)])?;
+                // out[0] is 256x256 row-major; accumulate the n×n corner
+                for i in 0..n {
+                    for j in 0..n {
+                        g.data[i * n + j] += out[0][i * TILE_COLS + j] as f64;
+                    }
+                }
+            }
+            Ok(g)
+        }
+        _ => Ok(a.gram()),
+    }
+}
+
+/// `A x` via `matvec_1024x256`, tiling rows.
+pub fn matvec(rt: Option<&Arc<RuntimeHandle>>, a: &DenseMatrix, x: &Vector) -> Result<Vector> {
+    crate::ensure_dims!(a.cols, x.len(), "runtime matvec dims");
+    match rt {
+        Some(rt) if cols_supported(a.cols) => {
+            let xp = pad_vec(x, TILE_COLS);
+            let mut y = Vec::with_capacity(a.rows);
+            for r0 in (0..a.rows.max(1)).step_by(TILE_ROWS) {
+                let rows = (a.rows - r0).min(TILE_ROWS);
+                let tile = a.block(r0, 0, rows, a.cols).pad_to(TILE_ROWS, TILE_COLS);
+                let out = rt.execute(&flavored(rt, "matvec_1024x256"), vec![tensor2(&tile), tensor1(&xp)])?;
+                y.extend(out[0][..rows].iter().map(|&v| v as f64));
+            }
+            Ok(Vector(y))
+        }
+        _ => a.matvec(x),
+    }
+}
+
+/// `Aᵀ(A x)` via the fused `gramvec_1024x256` (the ARPACK operator op).
+pub fn gramvec(rt: Option<&Arc<RuntimeHandle>>, a: &DenseMatrix, x: &Vector) -> Result<Vector> {
+    crate::ensure_dims!(a.cols, x.len(), "runtime gramvec dims");
+    let n = a.cols;
+    match rt {
+        Some(rt) if cols_supported(n) => {
+            let xp = pad_vec(x, TILE_COLS);
+            let mut acc = vec![0.0f64; n];
+            for r0 in (0..a.rows.max(1)).step_by(TILE_ROWS) {
+                let rows = (a.rows - r0).min(TILE_ROWS);
+                let tile = a.block(r0, 0, rows, n).pad_to(TILE_ROWS, TILE_COLS);
+                let out = rt.execute(&flavored(rt, "gramvec_1024x256"), vec![tensor2(&tile), tensor1(&xp)])?;
+                for (i, s) in acc.iter_mut().enumerate() {
+                    *s += out[0][i] as f64;
+                }
+            }
+            Ok(Vector(acc))
+        }
+        _ => {
+            let ax = a.matvec(x)?;
+            a.tmatvec(&ax)
+        }
+    }
+}
+
+/// `(∇, loss)` of ½‖Aw − b‖² over a row block via `quad_grad_1024x256`.
+/// Zero-padded rows have b = 0 ⇒ contribute nothing (exact).
+pub fn quad_loss_grad(
+    rt: Option<&Arc<RuntimeHandle>>,
+    a: &DenseMatrix,
+    w: &Vector,
+    b: &Vector,
+) -> Result<(Vector, f64)> {
+    crate::ensure_dims!(a.cols, w.len(), "quad grad w dims");
+    crate::ensure_dims!(a.rows, b.len(), "quad grad b dims");
+    let n = a.cols;
+    match rt {
+        Some(rt) if cols_supported(n) => {
+            let wp = pad_vec(w, TILE_COLS);
+            let mut grad = vec![0.0f64; n];
+            let mut loss = 0.0f64;
+            for r0 in (0..a.rows.max(1)).step_by(TILE_ROWS) {
+                let rows = (a.rows - r0).min(TILE_ROWS);
+                let tile = a.block(r0, 0, rows, n).pad_to(TILE_ROWS, TILE_COLS);
+                let bp = pad_vec(&Vector(b.0[r0..r0 + rows].to_vec()), TILE_ROWS);
+                let out = rt.execute(
+                    &flavored(rt, "quad_grad_1024x256"),
+                    vec![tensor2(&tile), tensor1(&wp), tensor1(&bp)],
+                )?;
+                for (i, g) in grad.iter_mut().enumerate() {
+                    *g += out[0][i] as f64;
+                }
+                loss += out[1][0] as f64;
+            }
+            Ok((Vector(grad), loss))
+        }
+        _ => {
+            let r = a.matvec(w)?.sub(b);
+            let g = a.tmatvec(&r)?;
+            Ok((g, 0.5 * r.dot(&r)))
+        }
+    }
+}
+
+/// `(∇, loss)` of Σ log(1+exp(−yᵢ aᵢᵀw)) via `logistic_grad_1024x256`.
+/// Padded rows carry y = +1 and zero features; each contributes exactly
+/// ln 2 to the loss and 0 to the gradient, so we subtract `n_pad · ln 2`.
+pub fn logistic_loss_grad(
+    rt: Option<&Arc<RuntimeHandle>>,
+    a: &DenseMatrix,
+    w: &Vector,
+    y: &Vector,
+) -> Result<(Vector, f64)> {
+    crate::ensure_dims!(a.cols, w.len(), "logistic grad w dims");
+    crate::ensure_dims!(a.rows, y.len(), "logistic grad y dims");
+    let n = a.cols;
+    match rt {
+        Some(rt) if cols_supported(n) => {
+            let wp = pad_vec(w, TILE_COLS);
+            let mut grad = vec![0.0f64; n];
+            let mut loss = 0.0f64;
+            for r0 in (0..a.rows.max(1)).step_by(TILE_ROWS) {
+                let rows = (a.rows - r0).min(TILE_ROWS);
+                let n_pad = TILE_ROWS - rows;
+                let tile = a.block(r0, 0, rows, n).pad_to(TILE_ROWS, TILE_COLS);
+                let mut yp = y.0[r0..r0 + rows].to_vec();
+                yp.resize(TILE_ROWS, 1.0); // padded labels = +1 by contract
+                let out = rt.execute(
+                    &flavored(rt, "logistic_grad_1024x256"),
+                    vec![tensor2(&tile), tensor1(&wp), tensor1(&Vector(yp))],
+                )?;
+                for (i, g) in grad.iter_mut().enumerate() {
+                    *g += out[0][i] as f64;
+                }
+                loss += out[1][0] as f64 - n_pad as f64 * std::f64::consts::LN_2;
+            }
+            Ok((Vector(grad), loss))
+        }
+        _ => {
+            // native: stable formulation matching kernels/grad.py
+            let margin = a.matvec(w)?;
+            let mut loss = 0.0;
+            let mut coeff = Vector::zeros(a.rows);
+            for i in 0..a.rows {
+                let z = y[i] * margin[i];
+                loss += (-z.abs()).exp().ln_1p() + (-z).max(0.0);
+                let s = 1.0 / (1.0 + (-margin[i]).exp());
+                coeff[i] = s - 0.5 * (y[i] + 1.0);
+            }
+            let g = a.tmatvec(&coeff)?;
+            Ok((g, loss))
+        }
+    }
+}
+
+/// Dense `X·Y` via the `gemm_256`/`gemm_512` artifacts with full 3-axis
+/// tiling and accumulation — the Fig. 2 "XLA/Pallas" backend. Arbitrary
+/// shapes supported (zero padding at the edges).
+pub fn gemm(rt: &Arc<RuntimeHandle>, x: &DenseMatrix, y: &DenseMatrix, tile: usize) -> Result<DenseMatrix> {
+    crate::ensure_dims!(x.cols, y.rows, "runtime gemm inner dims");
+    let artifact = match tile {
+        256 => flavored(rt, "gemm_256"),
+        512 => flavored(rt, "gemm_512"),
+        other => {
+            return Err(crate::error::Error::InvalidArgument(format!(
+                "gemm tile {other} has no artifact (256|512)"
+            )))
+        }
+    };
+    let (m, k, n) = (x.rows, x.cols, y.cols);
+    let mut c = DenseMatrix::zeros(m, n);
+    for i0 in (0..m.max(1)).step_by(tile) {
+        let mi = (m - i0).min(tile);
+        for j0 in (0..n.max(1)).step_by(tile) {
+            let nj = (n - j0).min(tile);
+            let mut acc = vec![0.0f64; tile * tile];
+            for k0 in (0..k.max(1)).step_by(tile) {
+                let kk = (k - k0).min(tile);
+                let xt = x.block(i0, k0, mi, kk).pad_to(tile, tile);
+                let yt = y.block(k0, j0, kk, nj).pad_to(tile, tile);
+                let out = rt.execute(&artifact, vec![tensor2(&xt), tensor2(&yt)])?;
+                for (s, &v) in acc.iter_mut().zip(out[0].iter()) {
+                    *s += v as f64;
+                }
+            }
+            for i in 0..mi {
+                for j in 0..nj {
+                    c.set(i0 + i, j0 + j, acc[i * tile + j]);
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Native-fallback paths (`rt = None`) are tested here; the XLA paths
+    //! are exercised by `rust/tests/xla_runtime.rs` (integration, needs
+    //! `make artifacts`).
+    use super::*;
+    use crate::util::prop::{assert_allclose, assert_close, check};
+
+    #[test]
+    fn native_gram_matches_dense() {
+        check("ops::gram native == DenseMatrix::gram", 10, |g| {
+            let a = DenseMatrix::randn(g.int(1, 30), g.int(1, 10), g.rng());
+            let got = gram(None, &a).unwrap();
+            assert_allclose(&got.data, &a.gram().data, 1e-12, "gram");
+        });
+    }
+
+    #[test]
+    fn native_logistic_matches_quadrature() {
+        // finite-difference check of the native logistic gradient
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        let a = DenseMatrix::randn(20, 5, &mut rng);
+        let w = Vector(rng.normal_vec(5)).scale(0.1);
+        let y = Vector((0..20).map(|_| rng.sign()).collect());
+        let (g, l0) = logistic_loss_grad(None, &a, &w, &y).unwrap();
+        let eps = 1e-6;
+        for j in 0..5 {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let (_, lp) = logistic_loss_grad(None, &a, &wp, &y).unwrap();
+            assert_close((lp - l0) / eps, g[j], 1e-4, "fd grad");
+        }
+    }
+
+    #[test]
+    fn native_quad_matches_formula() {
+        let mut rng = crate::util::rng::SplitMix64::new(10);
+        let a = DenseMatrix::randn(12, 4, &mut rng);
+        let w = Vector(rng.normal_vec(4));
+        let b = Vector(rng.normal_vec(12));
+        let (g, l) = quad_loss_grad(None, &a, &w, &b).unwrap();
+        let r = a.matvec(&w).unwrap().sub(&b);
+        assert_close(l, 0.5 * r.dot(&r), 1e-12, "loss");
+        assert_allclose(&g.0, &a.tmatvec(&r).unwrap().0, 1e-12, "grad");
+    }
+
+    #[test]
+    fn gramvec_native_consistency() {
+        let mut rng = crate::util::rng::SplitMix64::new(11);
+        let a = DenseMatrix::randn(15, 6, &mut rng);
+        let x = Vector(rng.normal_vec(6));
+        let got = gramvec(None, &a, &x).unwrap();
+        let want = a.gram().matvec(&x).unwrap();
+        assert_allclose(&got.0, &want.0, 1e-10, "gramvec");
+    }
+
+    #[test]
+    fn dim_checks() {
+        let a = DenseMatrix::zeros(4, 3);
+        assert!(matvec(None, &a, &Vector::zeros(4)).is_err());
+        assert!(quad_loss_grad(None, &a, &Vector::zeros(3), &Vector::zeros(5)).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! `solve_lasso` — the paper's §3.2.2 helper: LASSO on a distributed
+//! matrix via the composite (SmoothQuad ∘ LinopMatrix + ProxL1) template,
+//! mirroring the Scala `SolverL1RLS.run(A, b, lambda)` call.
+
+use crate::distributed::row_matrix::RowMatrix;
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+use crate::tfocs::linop::LinopMatrix;
+use crate::tfocs::prox::ProxL1;
+use crate::tfocs::smooth::SmoothQuad;
+use crate::tfocs::solver::{at, AtConfig, AtResult};
+
+/// Solve `min ½‖Ax − b‖² + λ‖x‖₁` over a distributed A.
+/// `b` is driver-local (the b-space fits in memory — the TFOCS data
+/// pattern the paper supports first).
+pub fn solve_lasso(a: &RowMatrix, b: &Vector, lambda: f64, max_iters: usize) -> Result<AtResult> {
+    let op = LinopMatrix::new(a)?;
+    crate::ensure_dims!(b.len(), a.num_rows()?, "lasso b dims");
+    let x0 = Vector::zeros(a.num_cols()?);
+    // L0 from the Frobenius bound; backtracking refines
+    let stats = a.column_stats()?;
+    let l0: f64 = stats
+        .cols
+        .iter()
+        .map(|c| c.m2 + c.n as f64 * c.mean * c.mean)
+        .sum::<f64>()
+        .max(1.0);
+    at(
+        &op,
+        &SmoothQuad { b: b.clone() },
+        &ProxL1 { lambda },
+        &x0,
+        &AtConfig { l0, max_iters, ..Default::default() },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::linalg::matrix::DenseMatrix;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn recovers_sparse_signal() {
+        // compressed-sensing-style: planted 3-sparse signal, m >> k log n
+        let ctx = Context::local("lasso_test", 2);
+        let mut rng = SplitMix64::new(1);
+        let (m, n) = (120, 20);
+        let a = DenseMatrix::randn(m, n, &mut rng);
+        let mut x_true = Vector::zeros(n);
+        x_true[3] = 2.0;
+        x_true[11] = -1.5;
+        x_true[17] = 1.0;
+        let b = a.matvec(&x_true).unwrap();
+        let rm = RowMatrix::from_local(&ctx, &a, 3);
+        let r = solve_lasso(&rm, &b, 0.8, 800).unwrap();
+        // support recovery
+        for j in 0..n {
+            if x_true[j] != 0.0 {
+                assert!(r.x[j].abs() > 0.3, "lost support at {j}: {}", r.x[j]);
+                assert_eq!(r.x[j].signum(), x_true[j].signum(), "sign at {j}");
+            } else {
+                assert!(r.x[j].abs() < 0.15, "spurious at {j}: {}", r.x[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_zero_reduces_to_least_squares() {
+        let ctx = Context::local("lasso_ls", 2);
+        let mut rng = SplitMix64::new(2);
+        let a = DenseMatrix::randn(40, 5, &mut rng);
+        let b = Vector(rng.normal_vec(40));
+        let rm = RowMatrix::from_local(&ctx, &a, 2);
+        let r = solve_lasso(&rm, &b, 0.0, 1500).unwrap();
+        let x_star =
+            crate::linalg::cholesky::solve_spd(&a.gram(), &a.tmatvec(&b).unwrap()).unwrap();
+        assert!(r.x.sub(&x_star).norm2() < 1e-4, "dist {}", r.x.sub(&x_star).norm2());
+    }
+
+    #[test]
+    fn huge_lambda_gives_zero() {
+        let ctx = Context::local("lasso_zero", 2);
+        let mut rng = SplitMix64::new(3);
+        let a = DenseMatrix::randn(30, 4, &mut rng);
+        let b = Vector(rng.normal_vec(30));
+        let rm = RowMatrix::from_local(&ctx, &a, 2);
+        // λ > ||A'b||_inf forces x = 0
+        let lam = a.tmatvec(&b).unwrap().norm_inf() * 1.5;
+        let r = solve_lasso(&rm, &b, lam, 300).unwrap();
+        assert!(r.x.norm2() < 1e-8, "{:?}", r.x.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Linear-operator components (TFOCS's `linop` family).
+//!
+//! The distributed case (`LinopMatrix`) is the paper's §3.2 "multiple
+//! data distribution patterns. (Currently support is only implemented for
+//! RDD[Vector] row matrices.)": forward `A x` is a broadcast + map +
+//! collect (the image lives on the driver — TFOCS b-space vectors are
+//! small), adjoint `Aᵀ y` is a broadcast + tree-aggregate.
+
+use crate::distributed::row_matrix::{RowMatrix, TREE_FANIN};
+use crate::error::Result;
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+
+/// A linear map with an adjoint.
+pub trait LinearOperator: Send + Sync {
+    /// Domain dimension (x-space).
+    fn domain_dim(&self) -> usize;
+    /// Range dimension (b-space).
+    fn range_dim(&self) -> usize;
+    /// `A x`.
+    fn apply(&self, x: &Vector) -> Result<Vector>;
+    /// `Aᵀ y`.
+    fn apply_adjoint(&self, y: &Vector) -> Result<Vector>;
+}
+
+/// Distributed matrix operator over a RowMatrix.
+pub struct LinopMatrix {
+    a: RowMatrix,
+    m: usize,
+    n: usize,
+}
+
+impl LinopMatrix {
+    /// Wrap a RowMatrix (dimensions computed once here).
+    pub fn new(a: &RowMatrix) -> Result<LinopMatrix> {
+        let m = a.num_rows()?;
+        let n = a.num_cols()?;
+        Ok(LinopMatrix { a: a.cache(), m, n })
+    }
+}
+
+impl LinearOperator for LinopMatrix {
+    fn domain_dim(&self) -> usize {
+        self.n
+    }
+    fn range_dim(&self) -> usize {
+        self.m
+    }
+
+    fn apply(&self, x: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(x.len(), self.n, "linop apply dims");
+        let bx = self.a.context().broadcast(x.clone());
+        let parts = self
+            .a
+            .rows
+            .map_partitions_with_index(move |_p, rows| {
+                let x = bx.value();
+                rows.iter().map(|r| r.dot(x)).collect()
+            })
+            .collect()?;
+        Ok(Vector(parts))
+    }
+
+    fn apply_adjoint(&self, y: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(y.len(), self.m, "linop adjoint dims");
+        let n = self.n;
+        // y must be sliced by the same partitioning as A's rows; compute
+        // partition offsets from per-partition counts
+        let counts = self
+            .a
+            .rows
+            .map_partitions_with_index(|_p, rows| vec![rows.len()])
+            .collect()?;
+        let mut offsets = vec![0usize; counts.len()];
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            offsets[i] = acc;
+            acc += c;
+        }
+        let by = self.a.context().broadcast((y.clone(), offsets));
+        let partial = self.a.rows.map_partitions_with_index(move |p, rows| {
+            let (y, offsets) = by.value();
+            let off = offsets[p];
+            let mut out = vec![0.0; n];
+            for (i, r) in rows.iter().enumerate() {
+                r.axpy_into(y[off + i], &mut out);
+            }
+            vec![out]
+        });
+        let sum = partial.tree_aggregate(
+            vec![0.0; n],
+            |mut a, v| {
+                for (x, y) in a.iter_mut().zip(v) {
+                    *x += y;
+                }
+                a
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
+            TREE_FANIN,
+        )?;
+        Ok(Vector(sum))
+    }
+}
+
+/// Driver-local dense operator (for small problems and tests).
+pub struct LinopLocal {
+    /// The matrix.
+    pub a: DenseMatrix,
+}
+
+impl LinearOperator for LinopLocal {
+    fn domain_dim(&self) -> usize {
+        self.a.cols
+    }
+    fn range_dim(&self) -> usize {
+        self.a.rows
+    }
+    fn apply(&self, x: &Vector) -> Result<Vector> {
+        self.a.matvec(x)
+    }
+    fn apply_adjoint(&self, y: &Vector) -> Result<Vector> {
+        self.a.tmatvec(y)
+    }
+}
+
+/// Identity operator.
+pub struct LinopIdentity(pub usize);
+
+impl LinearOperator for LinopIdentity {
+    fn domain_dim(&self) -> usize {
+        self.0
+    }
+    fn range_dim(&self) -> usize {
+        self.0
+    }
+    fn apply(&self, x: &Vector) -> Result<Vector> {
+        Ok(x.clone())
+    }
+    fn apply_adjoint(&self, y: &Vector) -> Result<Vector> {
+        Ok(y.clone())
+    }
+}
+
+/// Scaled operator `αA`.
+pub struct LinopScale<L: LinearOperator> {
+    /// Inner operator.
+    pub inner: L,
+    /// Scale factor.
+    pub alpha: f64,
+}
+
+impl<L: LinearOperator> LinearOperator for LinopScale<L> {
+    fn domain_dim(&self) -> usize {
+        self.inner.domain_dim()
+    }
+    fn range_dim(&self) -> usize {
+        self.inner.range_dim()
+    }
+    fn apply(&self, x: &Vector) -> Result<Vector> {
+        Ok(self.inner.apply(x)?.scale(self.alpha))
+    }
+    fn apply_adjoint(&self, y: &Vector) -> Result<Vector> {
+        Ok(self.inner.apply_adjoint(y)?.scale(self.alpha))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("linop_test", 2)
+    }
+
+    #[test]
+    fn distributed_matches_local_property() {
+        check("LinopMatrix == LinopLocal", 8, |g| {
+            let c = ctx();
+            let m = 1 + g.int(0, 25);
+            let n = 1 + g.int(0, 10);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let dist = LinopMatrix::new(&RowMatrix::from_local(&c, &a, 1 + g.int(0, 4))).unwrap();
+            let local = LinopLocal { a: a.clone() };
+            let x = Vector((0..n).map(|_| g.normal()).collect());
+            let y = Vector((0..m).map(|_| g.normal()).collect());
+            assert_allclose(&dist.apply(&x).unwrap().0, &local.apply(&x).unwrap().0, 1e-10, "apply");
+            assert_allclose(
+                &dist.apply_adjoint(&y).unwrap().0,
+                &local.apply_adjoint(&y).unwrap().0,
+                1e-10,
+                "adjoint",
+            );
+        });
+    }
+
+    #[test]
+    fn adjoint_identity_property() {
+        // <Ax, y> == <x, A^T y> — the defining property
+        check("adjoint identity", 8, |g| {
+            let c = ctx();
+            let m = 1 + g.int(0, 20);
+            let n = 1 + g.int(0, 8);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let op = LinopMatrix::new(&RowMatrix::from_local(&c, &a, 3)).unwrap();
+            let x = Vector((0..n).map(|_| g.normal()).collect());
+            let y = Vector((0..m).map(|_| g.normal()).collect());
+            let lhs = op.apply(&x).unwrap().dot(&y);
+            let rhs = x.dot(&op.apply_adjoint(&y).unwrap());
+            crate::util::prop::assert_close(lhs, rhs, 1e-10, "<Ax,y> == <x,A'y>");
+        });
+    }
+
+    #[test]
+    fn scale_and_identity() {
+        let mut rng = SplitMix64::new(1);
+        let a = DenseMatrix::randn(5, 3, &mut rng);
+        let op = LinopScale { inner: LinopLocal { a: a.clone() }, alpha: -2.0 };
+        let x = Vector::from(&[1.0, 2.0, 3.0]);
+        assert_allclose(
+            &op.apply(&x).unwrap().0,
+            &a.matvec(&x).unwrap().scale(-2.0).0,
+            1e-12,
+            "scaled",
+        );
+        let id = LinopIdentity(3);
+        assert_allclose(&id.apply(&x).unwrap().0, &x.0, 1e-15, "identity");
+        assert_eq!(id.range_dim(), 3);
+    }
+}

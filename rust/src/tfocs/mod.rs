@@ -1,0 +1,36 @@
+//! Spark TFOCS port (paper §3.2): templates for first-order conic
+//! solvers. A problem is a *composite objective* in three parts —
+//!
+//! ```text
+//! minimize f(A x) + h(x)
+//!          ^ smooth ^ nonsmooth (prox-capable)
+//!             ^ linear operator
+//! ```
+//!
+//! exactly the decomposition §3.2.2 walks through for LASSO
+//! (`SmoothQuad` ∘ `LinopMatrix` + `ProxL1`). The solver ([`solver::at`])
+//! is Nesterov's accelerated method in the Auslender–Teboulle variant
+//! with the features the paper lists: backtracking Lipschitz estimation,
+//! gradient-test automatic restart, and the **linear-operator structure
+//! optimization** (A is applied to the z-iterate only; A·y is recovered
+//! from cached values by affine combination — one operator application
+//! per iteration instead of two).
+//!
+//! [`scd`] adds the Smoothed Conic Dual formulation with continuation;
+//! [`lp`] and [`lasso`] are the §3.2.2/§3.2.3 helper entry points
+//! (`solve_lp`, `solve_lasso`).
+
+pub mod linop;
+pub mod smooth;
+pub mod prox;
+pub mod solver;
+pub mod scd;
+pub mod lp;
+pub mod lasso;
+
+pub use lasso::solve_lasso;
+pub use linop::{LinearOperator, LinopMatrix};
+pub use lp::solve_lp;
+pub use prox::{ProxCapable, ProxL1, ProxProjNonneg, ProxZero};
+pub use smooth::{SmoothFunction, SmoothLinear, SmoothLogLogistic, SmoothQuad};
+pub use solver::{at, AtConfig, AtResult};

@@ -1,0 +1,169 @@
+//! Prox-capable nonsmooth components (TFOCS's `prox_*`/`proj_*` family).
+
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+use crate::optim::objective::soft_threshold;
+
+/// A (possibly nonsmooth) convex function with an efficient prox:
+/// `prox_t(w) = argmin_u h(u) + (1/2t)‖u − w‖²`.
+pub trait ProxCapable: Send + Sync {
+    /// h(x) (may be +∞ for indicator functions — return `f64::INFINITY`).
+    fn value(&self, x: &Vector) -> f64;
+    /// The proximal operator with step t.
+    fn prox(&self, w: &Vector, t: f64) -> Result<Vector>;
+}
+
+/// h ≡ 0 (unconstrained smooth minimization).
+pub struct ProxZero;
+
+impl ProxCapable for ProxZero {
+    fn value(&self, _x: &Vector) -> f64 {
+        0.0
+    }
+    fn prox(&self, w: &Vector, _t: f64) -> Result<Vector> {
+        Ok(w.clone())
+    }
+}
+
+/// h(x) = λ‖x‖₁ (the §3.2.2 `ProxL1`).
+pub struct ProxL1 {
+    /// Regularization weight λ.
+    pub lambda: f64,
+}
+
+impl ProxCapable for ProxL1 {
+    fn value(&self, x: &Vector) -> f64 {
+        self.lambda * x.norm1()
+    }
+    fn prox(&self, w: &Vector, t: f64) -> Result<Vector> {
+        Ok(soft_threshold(w, self.lambda * t))
+    }
+}
+
+/// Indicator of the nonnegative orthant (LP's `x ≥ 0`).
+pub struct ProxProjNonneg;
+
+impl ProxCapable for ProxProjNonneg {
+    fn value(&self, x: &Vector) -> f64 {
+        if x.0.iter().all(|&v| v >= -1e-12) {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn prox(&self, w: &Vector, _t: f64) -> Result<Vector> {
+        Ok(Vector(w.0.iter().map(|&v| v.max(0.0)).collect()))
+    }
+}
+
+/// Indicator of the box [lo, hi]ⁿ.
+pub struct ProxProjBox {
+    /// Lower bound.
+    pub lo: f64,
+    /// Upper bound.
+    pub hi: f64,
+}
+
+impl ProxCapable for ProxProjBox {
+    fn value(&self, x: &Vector) -> f64 {
+        if x.0.iter().all(|&v| v >= self.lo - 1e-12 && v <= self.hi + 1e-12) {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn prox(&self, w: &Vector, _t: f64) -> Result<Vector> {
+        Ok(Vector(w.0.iter().map(|&v| v.clamp(self.lo, self.hi)).collect()))
+    }
+}
+
+/// h(x) = λ‖x‖₁ + (μ/2)‖x − x₀‖² — the *smoothed* L1 prox used by SCD
+/// continuation (TFOCS's strong-convexity smoothing).
+pub struct ProxL1Smoothed {
+    /// L1 weight.
+    pub lambda: f64,
+    /// Smoothing strength μ.
+    pub mu: f64,
+    /// Proximity center x₀.
+    pub x0: Vector,
+}
+
+impl ProxCapable for ProxL1Smoothed {
+    fn value(&self, x: &Vector) -> f64 {
+        let d = x.sub(&self.x0);
+        self.lambda * x.norm1() + 0.5 * self.mu * d.dot(&d)
+    }
+    fn prox(&self, w: &Vector, t: f64) -> Result<Vector> {
+        // argmin λ|u| + μ/2(u−x0)² + 1/(2t)(u−w)²  — closed form:
+        // soft-threshold of the weighted average
+        let denom = 1.0 + t * self.mu;
+        let blended = Vector(
+            w.0.iter()
+                .zip(&self.x0.0)
+                .map(|(&wi, &xi)| (wi + t * self.mu * xi) / denom)
+                .collect(),
+        );
+        Ok(soft_threshold(&blended, self.lambda * t / denom))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    /// Generic prox certificate: p = prox_t(w) must beat nearby points on
+    /// h(u) + 1/(2t)||u - w||^2.
+    fn prox_certificate<P: ProxCapable>(p: &P, w: &Vector, t: f64) {
+        let x = p.prox(w, t).unwrap();
+        let obj = |u: &Vector| {
+            let d = u.sub(w);
+            p.value(u) + d.dot(&d) / (2.0 * t)
+        };
+        let fx = obj(&x);
+        assert!(fx.is_finite(), "prox output must be feasible");
+        for j in 0..w.len() {
+            for delta in [1e-4, -1e-4] {
+                let mut u = x.clone();
+                u[j] += delta;
+                let fu = obj(&u);
+                assert!(fu >= fx - 1e-10, "prox not optimal at coord {j}: {fu} < {fx}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_proxes_satisfy_certificate_property() {
+        check("prox optimality certificates", 10, |g| {
+            let n = 1 + g.int(0, 6);
+            let w = Vector(g.rng().normal_vec(n));
+            let t = g.f64(0.05, 2.0);
+            prox_certificate(&ProxZero, &w, t);
+            prox_certificate(&ProxL1 { lambda: g.f64(0.01, 2.0) }, &w, t);
+            prox_certificate(&ProxProjNonneg, &w, t);
+            prox_certificate(&ProxProjBox { lo: -0.5, hi: 0.5 }, &w, t);
+            let x0 = Vector(g.rng().normal_vec(n));
+            prox_certificate(
+                &ProxL1Smoothed { lambda: g.f64(0.01, 1.0), mu: g.f64(0.1, 2.0), x0 },
+                &w,
+                t,
+            );
+        });
+    }
+
+    #[test]
+    fn nonneg_projection() {
+        let p = ProxProjNonneg;
+        let w = Vector::from(&[1.0, -2.0, 0.0]);
+        assert_eq!(p.prox(&w, 1.0).unwrap().0, vec![1.0, 0.0, 0.0]);
+        assert_eq!(p.value(&w), f64::INFINITY);
+        assert_eq!(p.value(&Vector::from(&[1.0, 0.0, 2.0])), 0.0);
+    }
+
+    #[test]
+    fn box_projection() {
+        let p = ProxProjBox { lo: -1.0, hi: 1.0 };
+        let w = Vector::from(&[2.0, -3.0, 0.5]);
+        assert_eq!(p.prox(&w, 1.0).unwrap().0, vec![1.0, -1.0, 0.5]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Smooth components (TFOCS's `smooth_*` family): evaluated at `A x`
+//! (the b-space), returning value and gradient.
+
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+
+/// A smooth convex function with gradient.
+pub trait SmoothFunction: Send + Sync {
+    /// `(f(z), ∇f(z))`.
+    fn value_grad(&self, z: &Vector) -> Result<(f64, Vector)>;
+
+    /// Value only (default: via value_grad).
+    fn value(&self, z: &Vector) -> Result<f64> {
+        Ok(self.value_grad(z)?.0)
+    }
+}
+
+/// Quadratic loss `½‖z − b‖²` (the §3.2.2 `SmoothQuad`).
+pub struct SmoothQuad {
+    /// Offset b.
+    pub b: Vector,
+}
+
+impl SmoothFunction for SmoothQuad {
+    fn value_grad(&self, z: &Vector) -> Result<(f64, Vector)> {
+        crate::ensure_dims!(z.len(), self.b.len(), "smooth_quad dims");
+        let r = z.sub(&self.b);
+        Ok((0.5 * r.dot(&r), r))
+    }
+}
+
+/// Linear objective `cᵀz` (the LP objective's smooth part).
+pub struct SmoothLinear {
+    /// Cost vector c.
+    pub c: Vector,
+}
+
+impl SmoothFunction for SmoothLinear {
+    fn value_grad(&self, z: &Vector) -> Result<(f64, Vector)> {
+        crate::ensure_dims!(z.len(), self.c.len(), "smooth_linear dims");
+        Ok((self.c.dot(z), self.c.clone()))
+    }
+}
+
+/// Logistic log-likelihood loss `Σ log(1+exp(−yᵢ zᵢ))`, labels in {−1,+1}.
+pub struct SmoothLogLogistic {
+    /// Labels y.
+    pub y: Vector,
+}
+
+impl SmoothFunction for SmoothLogLogistic {
+    fn value_grad(&self, z: &Vector) -> Result<(f64, Vector)> {
+        crate::ensure_dims!(z.len(), self.y.len(), "smooth_logistic dims");
+        let mut val = 0.0;
+        let mut grad = Vector::zeros(z.len());
+        for i in 0..z.len() {
+            let yz = self.y[i] * z[i];
+            val += (-yz.abs()).exp().ln_1p() + (-yz).max(0.0);
+            grad[i] = -self.y[i] / (1.0 + yz.exp());
+        }
+        Ok((val, grad))
+    }
+}
+
+/// Huber loss `Σ huber(zᵢ − bᵢ; τ)` — smooth robust alternative to quad.
+pub struct SmoothHuber {
+    /// Offset b.
+    pub b: Vector,
+    /// Transition width τ.
+    pub tau: f64,
+}
+
+impl SmoothFunction for SmoothHuber {
+    fn value_grad(&self, z: &Vector) -> Result<(f64, Vector)> {
+        crate::ensure_dims!(z.len(), self.b.len(), "smooth_huber dims");
+        let mut val = 0.0;
+        let mut grad = Vector::zeros(z.len());
+        for i in 0..z.len() {
+            let r = z[i] - self.b[i];
+            if r.abs() <= self.tau {
+                val += 0.5 * r * r / self.tau;
+                grad[i] = r / self.tau;
+            } else {
+                val += r.abs() - 0.5 * self.tau;
+                grad[i] = r.signum();
+            }
+        }
+        Ok((val, grad))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    fn fd_check<F: SmoothFunction>(f: &F, z: &Vector, tol: f64) {
+        let (v0, g) = f.value_grad(z).unwrap();
+        let eps = 1e-7;
+        for j in 0..z.len() {
+            let mut zp = z.clone();
+            zp[j] += eps;
+            let vp = f.value(&zp).unwrap();
+            assert_close((vp - v0) / eps, g[j], tol, "fd gradient");
+        }
+    }
+
+    #[test]
+    fn quad_gradient_fd() {
+        check("smooth_quad fd", 10, |g| {
+            let n = 1 + g.int(0, 8);
+            let b = Vector(g.rng().normal_vec(n));
+            let z = Vector(g.rng().normal_vec(n));
+            fd_check(&SmoothQuad { b }, &z, 1e-5);
+        });
+    }
+
+    #[test]
+    fn linear_gradient_is_c() {
+        let c = Vector::from(&[1.0, -2.0, 3.0]);
+        let f = SmoothLinear { c: c.clone() };
+        let z = Vector::from(&[5.0, 5.0, 5.0]);
+        let (v, g) = f.value_grad(&z).unwrap();
+        assert_close(v, 10.0, 1e-15, "c'z");
+        assert_eq!(g.0, c.0);
+    }
+
+    #[test]
+    fn logistic_gradient_fd_and_stability() {
+        check("smooth_logistic fd", 10, |g| {
+            let n = 1 + g.int(0, 6);
+            let y = Vector((0..n).map(|_| g.rng().sign()).collect());
+            let z = Vector(g.rng().normal_vec(n));
+            fd_check(&SmoothLogLogistic { y }, &z, 1e-4);
+        });
+        // extreme margins stay finite
+        let f = SmoothLogLogistic { y: Vector::from(&[1.0, -1.0]) };
+        let (v, g) = f.value_grad(&Vector::from(&[500.0, 500.0])).unwrap();
+        assert!(v.is_finite() && g.norm2().is_finite());
+    }
+
+    #[test]
+    fn huber_gradient_fd_both_regimes() {
+        let f = SmoothHuber { b: Vector::zeros(4), tau: 1.0 };
+        fd_check(&f, &Vector::from(&[0.3, -0.4, 2.5, -3.0]), 1e-5);
+    }
+}

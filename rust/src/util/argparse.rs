@@ -1,0 +1,261 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help`. Used by `main.rs` and every example binary.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative parser: declare options, then `ArgSpec::parse`.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Positional (non-option) arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    /// New spec for `program` with a one-line description.
+    pub fn new(program: &str, about: &str) -> Self {
+        ArgSpec { program: program.into(), about: about.into(), opts: vec![] }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt { name: name.into(), help: help.into(), default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match (&o.default, o.is_flag) {
+                (Some(d), false) => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{left:<26} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+
+    /// Parse from an iterator of raw args (without the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = vec![];
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::Msg(self.help()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::InvalidArgument(format!("unknown option --{name}\n\n{}", self.help())))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        return Err(Error::InvalidArgument(format!("--{name} takes no value")));
+                    }
+                    flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| Error::InvalidArgument(format!("--{name} needs a value")))?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(&o.name) {
+                return Err(Error::InvalidArgument(format!(
+                    "missing required --{}\n\n{}",
+                    o.name,
+                    self.help()
+                )));
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse from the process environment; prints help and exits on --help.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(Error::Msg(help)) => {
+                println!("{help}");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    /// Get a string option (must have been declared).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared or missing"))
+    }
+
+    /// Get and parse an option.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        self.get(name)
+            .parse::<T>()
+            .map_err(|_| Error::InvalidArgument(format!("--{name}: cannot parse {:?}", self.get(name))))
+    }
+
+    /// usize convenience.
+    pub fn usize(&self, name: &str) -> usize {
+        self.get_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// f64 convenience.
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// u64 convenience.
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Flag state.
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("rows", "100", "row count")
+            .opt("name", "x", "a name")
+            .flag("verbose", "chatty")
+            .required("out", "output path")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        spec().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&["--out", "o.csv"]).unwrap();
+        assert_eq!(a.usize("rows"), 100);
+        assert!(!a.flag("verbose"));
+        let a = parse(&["--rows", "7", "--verbose", "--out=o2"]).unwrap();
+        assert_eq!(a.usize("rows"), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), "o2");
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--rows=42", "--out=x"]).unwrap();
+        assert_eq!(a.usize("rows"), 42);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(parse(&["--rows", "5"]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--nope", "1", "--out=x"]).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["--out=x", "pos1", "pos2"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().help();
+        assert!(h.contains("--rows") && h.contains("default: 100"));
+    }
+
+    #[test]
+    fn parse_errors_on_bad_number() {
+        let a = parse(&["--rows", "abc", "--out=x"]).unwrap();
+        assert!(a.get_as::<usize>("rows").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal CSV writer for experiment outputs (`target/experiments/*.csv`)
+//! so the paper's figures can be regenerated with external tooling too.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Streaming CSV writer. Quotes fields only when needed.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+    path: PathBuf,
+}
+
+impl CsvWriter {
+    /// Create (truncating) at `path`, writing `header` first.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).map_err(|e| Error::io("mkdir for csv", e))?;
+        }
+        let f = File::create(&path).map_err(|e| Error::io(format!("create {path:?}"), e))?;
+        let mut w = CsvWriter { out: BufWriter::new(f), cols: header.len(), path };
+        w.write_row(header)?;
+        Ok(w)
+    }
+
+    fn quote(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    /// Write a row of string fields; must match header arity.
+    pub fn write_row(&mut self, fields: &[&str]) -> Result<()> {
+        if fields.len() != self.cols {
+            return Err(Error::InvalidArgument(format!(
+                "csv row has {} fields, header has {}",
+                fields.len(),
+                self.cols
+            )));
+        }
+        let line: Vec<String> = fields.iter().map(|f| Self::quote(f)).collect();
+        writeln!(self.out, "{}", line.join(","))
+            .map_err(|e| Error::io(format!("write {:?}", self.path), e))
+    }
+
+    /// Write a row of display-able values.
+    pub fn write_vals(&mut self, fields: &[&dyn std::fmt::Display]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row(&refs)
+    }
+
+    /// Flush to disk and return the path written.
+    pub fn finish(mut self) -> Result<PathBuf> {
+        self.out
+            .flush()
+            .map_err(|e| Error::io(format!("flush {:?}", self.path), e))?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sparkla_csv_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let p = tmp("basic.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        w.write_row(&["1", "2"]).unwrap();
+        w.write_vals(&[&3.5f64, &"x"]).unwrap();
+        let path = w.finish().unwrap();
+        let text = fs::read_to_string(path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3.5,x\n");
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn quotes_fields_with_commas() {
+        let p = tmp("quote.csv");
+        let mut w = CsvWriter::create(&p, &["v"]).unwrap();
+        w.write_row(&["hello, world"]).unwrap();
+        w.write_row(&["say \"hi\""]).unwrap();
+        w.finish().unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\"hello, world\""));
+        assert!(text.contains("\"say \"\"hi\"\"\""));
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let p = tmp("arity.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        assert!(w.write_row(&["only one"]).is_err());
+        fs::remove_file(&p).ok();
+    }
+}

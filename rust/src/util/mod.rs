@@ -1,0 +1,15 @@
+//! Utilities the crate would normally pull from crates.io (rand, criterion,
+//! proptest, clap, csv, ...) — hand-rolled because this build is fully
+//! offline. Everything here is deterministic under a seed.
+
+pub mod rng;
+pub mod timer;
+pub mod stats;
+pub mod plot;
+pub mod csv;
+pub mod argparse;
+pub mod prop;
+pub mod pool;
+
+pub use rng::SplitMix64;
+pub use timer::Timer;

@@ -1,0 +1,142 @@
+//! ASCII line plots for convergence curves (Figure 1) and bench series
+//! (Figure 2) — the terminal stand-in for the paper's matplotlib figures.
+
+/// A named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label (e.g. "acc_rb").
+    pub name: String,
+    /// Data points.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Build from y-values with x = 0,1,2,...
+    pub fn from_ys(name: &str, ys: &[f64]) -> Series {
+        Series {
+            name: name.to_string(),
+            points: ys.iter().enumerate().map(|(i, &y)| (i as f64, y)).collect(),
+        }
+    }
+}
+
+const MARKS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+/// Render series to a width x height character grid with axis labels.
+/// `log_y` plots log10(y) (clamping at `y_floor`) — used for the paper's
+/// log-error convergence plots.
+pub fn render(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    log_y: bool,
+) -> String {
+    let y_floor = 1e-16f64;
+    let tf = |y: f64| if log_y { y.max(y_floor).log10() } else { y };
+    let mut xs: Vec<f64> = vec![];
+    let mut ys: Vec<f64> = vec![];
+    for s in series {
+        for &(x, y) in &s.points {
+            let ty = tf(y);
+            if ty.is_finite() {
+                xs.push(x);
+                ys.push(ty);
+            }
+        }
+    }
+    if xs.is_empty() {
+        return format!("{title}\n  (no finite data)\n");
+    }
+    let (xmin, xmax) = (
+        xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let (ymin, ymax) = (
+        ys.iter().cloned().fold(f64::INFINITY, f64::min),
+        ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let xspan = (xmax - xmin).max(1e-300);
+    let yspan = (ymax - ymin).max(1e-300);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let ty = tf(y);
+            if !ty.is_finite() {
+                continue;
+            }
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((ty - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            let r = height - 1 - row.min(height - 1);
+            grid[r][col.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let ylab = |v: f64| if log_y { format!("1e{v:>6.1}") } else { format!("{v:>8.2}") };
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - yspan * i as f64 / (height - 1) as f64;
+        let lab = if i == 0 || i == height - 1 || i == height / 2 {
+            ylab(yv)
+        } else {
+            " ".repeat(8)
+        };
+        out.push_str(&format!("{lab} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{} +{}\n{}  {:<10.0}{:>width$.0}\n",
+        " ".repeat(8),
+        "-".repeat(width),
+        " ".repeat(8),
+        xmin,
+        xmax,
+        width = width - 10
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("{} {}", MARKS[i % MARKS.len()], s.name))
+        .collect();
+    out.push_str(&format!("  legend: {}\n", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_single_series() {
+        let s = Series::from_ys("loss", &[10.0, 5.0, 2.0, 1.0, 0.5]);
+        let out = render("test", &[s], 40, 10, false);
+        assert!(out.contains("test"));
+        assert!(out.contains('*'));
+        assert!(out.contains("legend: * loss"));
+    }
+
+    #[test]
+    fn log_scale_handles_tiny_values() {
+        let s = Series::from_ys("err", &[1.0, 1e-4, 1e-9, 1e-14]);
+        let out = render("log", &[s], 30, 8, true);
+        assert!(out.contains("1e"));
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_marks() {
+        let a = Series::from_ys("a", &[1.0, 2.0]);
+        let b = Series::from_ys("b", &[2.0, 1.0]);
+        let out = render("two", &[a, b], 20, 6, false);
+        assert!(out.contains('*') && out.contains('+'));
+    }
+
+    #[test]
+    fn empty_or_nan_data_is_graceful() {
+        let s = Series::from_ys("nan", &[f64::NAN]);
+        let out = render("bad", &[s], 10, 4, false);
+        assert!(out.contains("no finite data"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Scoped data-parallel helpers for the *local* BLAS layer (the
+//! OpenBLAS-thread analog). The cluster-level parallelism lives in
+//! `rdd::exec` — this module is only for intra-task parallel loops such as
+//! the parallel GEMM backend in `linalg::blas::level3`.
+
+/// Number of worker threads to use for local parallel kernels: respects
+/// `SPARKLA_LOCAL_THREADS`, defaults to available parallelism (capped at 8
+/// — beyond that the memory-bound GEMM panels stop scaling).
+pub fn local_threads() -> usize {
+    if let Ok(v) = std::env::var("SPARKLA_LOCAL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+/// Run `f(chunk_index, chunk)` over mutually disjoint mutable chunks of
+/// `data`, split into `n_chunks` contiguous pieces, on scoped threads.
+/// Chunk boundaries are computed by even division (first `rem` chunks get
+/// one extra element).
+pub fn parallel_chunks_mut<T: Send, F>(data: &mut [T], n_chunks: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let n_chunks = n_chunks.clamp(1, n);
+    if n_chunks == 1 {
+        f(0, data);
+        return;
+    }
+    let base = n / n_chunks;
+    let rem = n % n_chunks;
+    std::thread::scope(|s| {
+        let mut rest = data;
+        for i in 0..n_chunks {
+            let len = base + usize::from(i < rem);
+            let (chunk, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(i, chunk));
+        }
+    });
+}
+
+/// Parallel map over indices [0, n): returns results in order.
+pub fn parallel_map<T: Send, F>(n: usize, n_threads: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return vec![];
+    }
+    let n_threads = n_threads.clamp(1, n);
+    if n_threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    parallel_chunks_mut(&mut out, n_threads, |chunk_idx, chunk| {
+        // recover global start index for this chunk
+        let base = n / n_threads;
+        let rem = n % n_threads;
+        let start = chunk_idx * base + chunk_idx.min(rem);
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(start + off));
+        }
+    });
+    out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let mut v = vec![0u32; 103];
+        parallel_chunks_mut(&mut v, 7, |_, c| {
+            for x in c {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(50, 4, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+        let out = parallel_map(3, 16, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+        let mut v: Vec<i32> = vec![];
+        parallel_chunks_mut(&mut v, 4, |_, _| {});
+    }
+
+    #[test]
+    fn local_threads_positive() {
+        assert!(local_threads() >= 1);
+    }
+}

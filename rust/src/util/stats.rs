@@ -1,0 +1,211 @@
+//! Small statistics helpers: online moments (Welford) and sample summaries.
+//!
+//! `OnlineStats` is also the building block for
+//! `distributed::statistics::ColumnSummary` (the paper's column-statistics
+//! primitive) because Welford moments merge associatively — exactly what a
+//! tree aggregation needs.
+
+/// Online mean/variance/min/max via Welford's algorithm; mergeable.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    /// Count of observations.
+    pub n: u64,
+    /// Running mean.
+    pub mean: f64,
+    /// Sum of squared deviations (M2).
+    pub m2: f64,
+    /// Minimum seen (f64::INFINITY when empty).
+    pub min: f64,
+    /// Maximum seen (f64::NEG_INFINITY when empty).
+    pub max: f64,
+    /// Count of nonzero observations (sparsity statistics).
+    pub nnz: u64,
+    /// Sum of absolute values (L1 norm).
+    pub abs_sum: f64,
+}
+
+impl OnlineStats {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            nnz: 0,
+            abs_sum: 0.0,
+        }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x != 0.0 {
+            self.nnz += 1;
+        }
+        self.abs_sum += x.abs();
+    }
+
+    /// Merge another accumulator (Chan et al. parallel update).
+    pub fn merge(&mut self, o: &OnlineStats) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, o.n as f64);
+        let d = o.mean - self.mean;
+        let n = na + nb;
+        self.mean += d * nb / n;
+        self.m2 += o.m2 + d * d * na * nb / n;
+        self.n += o.n;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+        self.nnz += o.nnz;
+        self.abs_sum += o.abs_sum;
+    }
+
+    /// Population variance (0 when n < 2 — matches MLlib's treatment of
+    /// degenerate columns rather than returning NaN).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n as f64 - 1.0)
+        }
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Summary of a sample of timings: used by the bench harness.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    /// Sample count.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median (p50).
+    pub median: f64,
+    /// 5th percentile.
+    pub p05: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+    /// Sample standard deviation.
+    pub std: f64,
+}
+
+impl Summary {
+    /// Compute a summary (sorts a copy).
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty());
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (v.len() - 1) as f64).round() as usize;
+            v[idx]
+        };
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let var = if v.len() < 2 {
+            0.0
+        } else {
+            v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (v.len() - 1) as f64
+        };
+        Summary {
+            n: v.len(),
+            mean,
+            median: q(0.5),
+            p05: q(0.05),
+            p95: q(0.95),
+            min: v[0],
+            max: *v.last().unwrap(),
+            std: var.sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((s.mean - mean).abs() < 1e-12);
+        assert!((s.variance() - var).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.nnz, 5);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut all = OnlineStats::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean - all.mean).abs() < 1e-12);
+        assert!((a.variance() - all.variance()).abs() < 1e-10);
+        assert_eq!(a.n, all.n);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = OnlineStats::new();
+        a.push(5.0);
+        let before = a.clone();
+        a.merge(&OnlineStats::new());
+        assert_eq!(a.n, before.n);
+        assert_eq!(a.mean, before.mean);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.median - 50.0).abs() <= 1.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!(s.p95 >= 94.0 && s.p95 <= 96.0);
+    }
+
+    #[test]
+    fn variance_degenerate_is_zero() {
+        let mut s = OnlineStats::new();
+        s.push(3.0);
+        assert_eq!(s.variance(), 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: distributed matrix types composed across conversions and
+//! computations, checked against local oracles.
+
+use sparkla::distributed::svd::{arpack_svd, compute_svd, reconstruction_error, tall_skinny_svd};
+use sparkla::distributed::{BlockMatrix, CoordinateMatrix, RowMatrix};
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::util::prop::{assert_allclose, check};
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn ctx() -> Context {
+    Context::local("dist_it", 4)
+}
+
+#[test]
+fn coordinate_to_row_to_svd_pipeline() {
+    // the Table-1 pipeline end to end at miniature scale
+    let c = ctx();
+    let cm = CoordinateMatrix::sprand(&c, 2000, 60, 24_000, 8, 11);
+    let rm = cm.to_row_matrix(8).unwrap().cache();
+    assert_eq!(rm.num_rows().unwrap(), rm.rows.count().unwrap());
+    let svd = compute_svd(&rm, 5, true).unwrap();
+    assert_eq!(svd.algorithm, "tall-skinny-gram");
+    assert_eq!(svd.s.len(), 5);
+    for w in svd.s.windows(2) {
+        assert!(w[0] >= w[1]);
+    }
+    // certificate: U/V orthonormal, projection residual consistent
+    let local = cm.to_local().unwrap();
+    let local_svd = sparkla::linalg::svd_local::svd_via_gram(&local, 5, 1e-9).unwrap();
+    assert_allclose(&svd.s, &local_svd.s, 1e-6, "pipeline singular values");
+}
+
+#[test]
+fn arpack_and_tall_skinny_agree_on_same_distributed_matrix() {
+    let c = ctx();
+    let cm = CoordinateMatrix::sprand(&c, 800, 50, 8000, 6, 12);
+    let rm = cm.to_row_matrix(6).unwrap().cache();
+    let ts = tall_skinny_svd(&rm, 4, false).unwrap();
+    let ar = arpack_svd(&rm, 4, false).unwrap();
+    assert_allclose(&ar.s, &ts.s, 1e-6, "two SVD paths");
+}
+
+#[test]
+fn reconstruction_certificate_distributed() {
+    let c = ctx();
+    let mut rng = SplitMix64::new(13);
+    // low-rank + noise: top-3 capture almost everything
+    let base = DenseMatrix::randn(300, 3, &mut rng)
+        .matmul(&DenseMatrix::randn(3, 20, &mut rng))
+        .unwrap();
+    let noise = DenseMatrix::randn(300, 20, &mut rng).scale(0.01);
+    let a = base.add(&noise).unwrap();
+    let rm = RowMatrix::from_local(&c, &a, 6);
+    let svd = compute_svd(&rm, 3, true).unwrap();
+    let err = reconstruction_error(&rm, &svd).unwrap();
+    assert!(err < 0.05, "low-rank reconstruction error {err}");
+}
+
+#[test]
+fn block_matrix_chain_add_multiply_transpose() {
+    check("(A+B)C^T distributed == local", 6, |g| {
+        let c = ctx();
+        let m = 2 + g.int(0, 10);
+        let n = 2 + g.int(0, 10);
+        let k = 2 + g.int(0, 8);
+        let a = DenseMatrix::randn(m, n, g.rng());
+        let b = DenseMatrix::randn(m, n, g.rng());
+        let d = DenseMatrix::randn(k, n, g.rng());
+        let rpb = 1 + g.int(0, 3);
+        let cpb = 1 + g.int(0, 3);
+        let kpb = 1 + g.int(0, 3);
+        let ba = BlockMatrix::from_local(&c, &a, rpb, cpb, 3);
+        let bb = BlockMatrix::from_local(&c, &b, rpb, cpb, 2);
+        let bd = BlockMatrix::from_local(&c, &d, kpb, cpb, 2);
+        let got = ba.add(&bb).unwrap().multiply(&bd.transpose()).unwrap().to_local().unwrap();
+        let want = a.add(&b).unwrap().matmul(&d.transpose()).unwrap();
+        assert!(
+            got.max_abs_diff(&want) < 1e-9 * (1.0 + want.frob_norm()),
+            "err {}",
+            got.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn coordinate_block_row_conversions_consistent() {
+    let c = ctx();
+    let cm = CoordinateMatrix::sprand(&c, 60, 30, 400, 4, 14);
+    let dense = cm.to_local().unwrap();
+    // via BlockMatrix
+    let bm = BlockMatrix::from_coordinate(&cm, 8, 7, 4).unwrap();
+    bm.validate().unwrap();
+    assert!(bm.to_local().unwrap().max_abs_diff(&dense) < 1e-12);
+    // via IndexedRowMatrix -> RowMatrix: gram invariant
+    let rm = cm.to_row_matrix(4).unwrap();
+    let g1 = rm.gram().unwrap();
+    assert!(g1.max_abs_diff(&dense.gram()) < 1e-9);
+    // transpose round trip through coordinates
+    let t = cm.transpose().to_local().unwrap();
+    assert!(t.max_abs_diff(&dense.transpose()) < 1e-12);
+}
+
+#[test]
+fn tsqr_and_gram_svd_consistent() {
+    let c = ctx();
+    let mut rng = SplitMix64::new(15);
+    let a = DenseMatrix::randn(120, 8, &mut rng);
+    let rm = RowMatrix::from_local(&c, &a, 5);
+    // singular values of A == singular values of R (QR invariance)
+    let (_q, r) = rm.qr().unwrap();
+    let r_svd = sparkla::linalg::svd_local::svd_via_gram(&r, 8, 1e-12).unwrap();
+    let svd = compute_svd(&rm, 8, false).unwrap();
+    assert_allclose(&svd.s, &r_svd.s, 1e-7, "sv(A) == sv(R)");
+}
+
+#[test]
+fn column_stats_and_pca_on_generated_matrix() {
+    let c = ctx();
+    let rm = RowMatrix::generate(&c, "gen", 6, 4, move |p| {
+        let mut rng = SplitMix64::new(100).split(p as u64);
+        (0..50)
+            .map(|_| {
+                sparkla::distributed::Row::Dense(vec![
+                    rng.normal(),
+                    rng.normal() * 3.0,
+                    rng.normal() * 0.1,
+                    42.0,
+                ])
+            })
+            .collect()
+    });
+    let stats = rm.column_stats().unwrap();
+    assert_eq!(stats.count, 300);
+    assert!((stats.mean()[3] - 42.0).abs() < 1e-12);
+    assert!(stats.variance()[1] > stats.variance()[2]);
+    let (_comps, vars) = rm.pca(2).unwrap();
+    assert!(vars[0] >= vars[1]);
+    // dominant direction is column 1 (variance ~9)
+    assert!((vars[0] - 9.0).abs() < 2.0, "pca variance {vars:?}");
+}
+
+#[test]
+fn dimsum_on_sparse_coordinate_data() {
+    let c = ctx();
+    let cm = CoordinateMatrix::sprand(&c, 500, 10, 2000, 4, 16);
+    let rm = cm.to_row_matrix(4).unwrap();
+    let exact = rm.column_similarities(None).unwrap();
+    let approx = rm.column_similarities(Some(0.05)).unwrap();
+    for i in 0..10 {
+        assert!((exact.get(i, i) - 1.0).abs() < 1e-9);
+        assert!((approx.get(i, i) - 1.0).abs() < 0.3, "diag {i}: {}", approx.get(i, i));
+    }
+}

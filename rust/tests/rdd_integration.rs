@@ -1,0 +1,216 @@
+//! Integration: the dataflow substrate end-to-end — transformations,
+//! actions, shuffles, caching, broadcast, and the scheduler under load.
+
+use sparkla::config::ClusterConfig;
+use sparkla::util::prop::check;
+use sparkla::Context;
+
+fn ctx(executors: usize) -> Context {
+    Context::local("rdd_it", executors)
+}
+
+#[test]
+fn map_filter_collect_roundtrip() {
+    let c = ctx(4);
+    let rdd = c.parallelize((0..1000).collect::<Vec<i64>>(), 13);
+    let out = rdd.map(|x| x * 2).filter(|x| x % 3 == 0).collect().unwrap();
+    let want: Vec<i64> = (0..1000).map(|x| x * 2).filter(|x| x % 3 == 0).collect();
+    assert_eq!(out, want);
+}
+
+#[test]
+fn collect_preserves_partition_order() {
+    let c = ctx(3);
+    let rdd = c.parallelize((0..257).collect::<Vec<i32>>(), 7);
+    assert_eq!(rdd.collect().unwrap(), (0..257).collect::<Vec<i32>>());
+}
+
+#[test]
+fn aggregate_and_tree_aggregate_agree_property() {
+    check("aggregate == tree_aggregate", 10, |g| {
+        let c = ctx(2);
+        let n = g.int(0, 500);
+        let data: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let parts = 1 + g.int(0, 12);
+        let rdd = c.parallelize(data.clone(), parts);
+        let direct: f64 = data.iter().sum();
+        let agg = rdd.aggregate(0.0, |a, &x| a + x, |a, b| a + b).unwrap();
+        let tree = rdd
+            .tree_aggregate(0.0, |a, &x| a + x, |a, b| a + b, 2 + g.int(0, 4))
+            .unwrap();
+        assert!((agg - direct).abs() < 1e-9);
+        assert!((tree - direct).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn reduce_by_key_matches_local_fold_property() {
+    check("reduce_by_key == local fold", 10, |g| {
+        let c = ctx(2);
+        let n = g.int(0, 300);
+        let data: Vec<(u32, u64)> = (0..n).map(|i| ((i % 17) as u32, i as u64)).collect();
+        let parts_in = 1 + g.int(0, 8);
+        let parts_out = 1 + g.int(0, 8);
+        let rdd = c.parallelize(data.clone(), parts_in);
+        let mut got = rdd.map(|p| *p).reduce_by_key(parts_out, |a, b| a + b).collect().unwrap();
+        got.sort();
+        let mut want = std::collections::BTreeMap::<u32, u64>::new();
+        for (k, v) in data {
+            *want.entry(k).or_default() += v;
+        }
+        let want: Vec<(u32, u64)> = want.into_iter().collect();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn group_by_key_collects_all_values() {
+    let c = ctx(2);
+    let data = vec![(1, "a"), (2, "b"), (1, "c"), (1, "d"), (3, "e")];
+    let rdd = c.parallelize(data, 3).map(|p| (p.0, p.1.to_string()));
+    let grouped = rdd.group_by_key(2).collect_as_map().unwrap();
+    let mut ones = grouped[&1].clone();
+    ones.sort();
+    assert_eq!(ones, vec!["a", "c", "d"]);
+    assert_eq!(grouped[&3], vec!["e"]);
+}
+
+#[test]
+fn join_matches_nested_loop() {
+    let c = ctx(2);
+    let left = c.parallelize(vec![(1, "x"), (2, "y"), (2, "z")], 2).map(|p| (p.0, p.1.to_string()));
+    let right = c.parallelize(vec![(2, 20), (3, 30), (2, 21)], 2).map(|p| *p);
+    let mut out = left.join(&right, 3).collect().unwrap();
+    out.sort_by(|a, b| (a.0, &a.1 .0, a.1 .1).cmp(&(b.0, &b.1 .0, b.1 .1)));
+    assert_eq!(
+        out,
+        vec![
+            (2, ("y".to_string(), 20)),
+            (2, ("y".to_string(), 21)),
+            (2, ("z".to_string(), 20)),
+            (2, ("z".to_string(), 21)),
+        ]
+    );
+}
+
+#[test]
+fn zip_partitions_requires_same_count() {
+    let c = ctx(2);
+    let a = c.parallelize(vec![1, 2, 3, 4], 2);
+    let b = c.parallelize(vec![10, 20, 30, 40], 2);
+    let sum = a
+        .zip_partitions(&b, |xs, ys| xs.iter().zip(ys).map(|(x, y)| x + y).collect::<Vec<i32>>())
+        .unwrap();
+    assert_eq!(sum.collect().unwrap(), vec![11, 22, 33, 44]);
+    let mismatched = c.parallelize(vec![1], 3);
+    assert!(a.zip_partitions(&mismatched, |_, _: &[i32]| Vec::<i32>::new()).is_err());
+}
+
+#[test]
+fn caching_avoids_recompute() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    let c = ctx(2);
+    let counter = Arc::new(AtomicUsize::new(0));
+    let cnt = Arc::clone(&counter);
+    let rdd = c
+        .generate("counted", 4, move |p| {
+            cnt.fetch_add(1, Ordering::SeqCst);
+            vec![p as u64]
+        })
+        .cache();
+    rdd.collect().unwrap();
+    let after_first = counter.load(Ordering::SeqCst);
+    assert_eq!(after_first, 4);
+    rdd.collect().unwrap();
+    rdd.count().unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 4, "cached: no recompute");
+    rdd.unpersist();
+    rdd.collect().unwrap();
+    assert_eq!(counter.load(Ordering::SeqCst), 8, "unpersist: recompute");
+}
+
+#[test]
+fn broadcast_shared_across_tasks() {
+    let c = ctx(4);
+    let big = c.broadcast(vec![1.0f64; 10_000]);
+    let rdd = c.parallelize((0..64).collect::<Vec<usize>>(), 16);
+    let b2 = big.clone();
+    let sums = rdd.map(move |_| b2.value().iter().sum::<f64>()).collect().unwrap();
+    assert!(sums.iter().all(|&s| (s - 10_000.0).abs() < 1e-9));
+}
+
+#[test]
+fn union_concatenates() {
+    let c = ctx(2);
+    let a = c.parallelize(vec![1, 2], 2);
+    let b = c.parallelize(vec![3, 4, 5], 2);
+    let u = a.union(&b);
+    assert_eq!(u.num_partitions(), 4);
+    assert_eq!(u.collect().unwrap(), vec![1, 2, 3, 4, 5]);
+}
+
+#[test]
+fn shuffle_of_empty_rdd() {
+    let c = ctx(2);
+    let empty: Vec<(u32, u32)> = vec![];
+    let rdd = c.parallelize(empty, 3).map(|p| *p);
+    assert_eq!(rdd.reduce_by_key(4, |a, b| a + b).collect().unwrap(), vec![]);
+}
+
+#[test]
+fn many_concurrent_jobs_from_driver_threads() {
+    // multiple "driver" threads submitting jobs against one cluster
+    let c = ctx(4);
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let c = c.clone();
+            s.spawn(move || {
+                let rdd = c.parallelize((0..200).map(|i| i + t).collect::<Vec<usize>>(), 9);
+                let sum = rdd.aggregate(0usize, |a, &x| a + x, |a, b| a + b).unwrap();
+                let want: usize = (0..200).map(|i| i + t).sum();
+                assert_eq!(sum, want);
+            });
+        }
+    });
+}
+
+#[test]
+fn flat_map_and_take() {
+    let c = ctx(2);
+    let rdd = c.parallelize(vec![1usize, 2, 3], 2);
+    let out = rdd.flat_map(|&x| vec![x; x]).collect().unwrap();
+    assert_eq!(out, vec![1, 2, 2, 3, 3, 3]);
+    assert_eq!(rdd.take(2).unwrap(), vec![1, 2]);
+}
+
+#[test]
+fn sum_and_mean_actions() {
+    let c = ctx(2);
+    let rdd = c.parallelize(vec![1.0, 2.0, 3.0, 4.0], 3);
+    assert!((rdd.sum().unwrap() - 10.0).abs() < 1e-12);
+    assert!((rdd.mean().unwrap() - 2.5).abs() < 1e-12);
+    let empty = c.parallelize(Vec::<f64>::new(), 2);
+    assert!(empty.mean().is_err());
+}
+
+#[test]
+fn metrics_count_jobs_and_tasks() {
+    let cfg = ClusterConfig { num_executors: 2, ..Default::default() };
+    let c = Context::with_config(cfg);
+    let rdd = c.parallelize((0..100).collect::<Vec<i32>>(), 10);
+    rdd.count().unwrap();
+    rdd.count().unwrap();
+    let m = c.metrics();
+    assert!(m.jobs.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+    assert!(m.tasks_started.load(std::sync::atomic::Ordering::Relaxed) >= 20);
+}
+
+#[test]
+fn shuffle_metrics_recorded() {
+    let c = ctx(2);
+    let data: Vec<(u32, u32)> = (0..100).map(|i| (i % 5, i)).collect();
+    let rdd = c.parallelize(data, 4).map(|p| *p);
+    rdd.reduce_by_key(3, |a, b| a + b).collect().unwrap();
+    assert!(c.metrics().shuffle_records.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}

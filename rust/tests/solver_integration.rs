@@ -1,0 +1,159 @@
+//! Integration: the optimization stack (optim + tfocs) against the
+//! paper's qualitative claims, on distributed data.
+
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::linalg::vector::Vector;
+use sparkla::distributed::RowMatrix;
+use sparkla::optim::accelerated::{accelerated, AccelConfig};
+use sparkla::optim::gd::{gradient_descent, GdConfig};
+use sparkla::optim::lbfgs::{lbfgs, LbfgsConfig};
+use sparkla::optim::problem::synth;
+use sparkla::optim::Regularizer;
+use sparkla::tfocs::linop::{LinearOperator, LinopMatrix};
+use sparkla::tfocs::{solve_lasso, solve_lp};
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn ctx() -> Context {
+    Context::local("solver_it", 4)
+}
+
+/// Shared miniature Fig.-1 "linear" workload.
+fn linear_problem(reg: Regularizer) -> (sparkla::optim::problem::DistProblem, f64) {
+    let c = ctx();
+    let (p, _) = synth::linear(&c, 600, 32, 16, reg, 6, 21).unwrap();
+    let step = 1.0 / p.lipschitz_estimate().unwrap();
+    (p, step)
+}
+
+#[test]
+fn figure1_ordering_least_squares() {
+    // paper's observations, asserted: acc > gra; restart helps; lbfgs wins
+    let (p, step) = linear_problem(Regularizer::None);
+    let w0 = Vector::zeros(32);
+    let iters = 50;
+    let gra = gradient_descent(&p, &w0, &GdConfig { step_size: step, max_iters: iters, tol: 0.0 }).unwrap();
+    let acc = accelerated(&p, &w0, &AccelConfig::variant("acc", step, iters).unwrap()).unwrap();
+    let acc_r = accelerated(&p, &w0, &AccelConfig::variant("acc_r", step, iters).unwrap()).unwrap();
+    let lb = lbfgs(&p, &w0, &LbfgsConfig { max_iters: iters, ..Default::default() }).unwrap();
+    assert!(acc.best() <= gra.best() + 1e-12, "acceleration beats gra");
+    assert!(acc_r.best() <= acc.best() * 1.05 + 1e-12, "restart no worse");
+    assert!(lb.best() <= acc_r.best() + 1e-9, "lbfgs outperforms");
+}
+
+#[test]
+fn figure1_ordering_logistic_l2() {
+    let c = ctx();
+    let (p, _) = synth::logistic(&c, 600, 24, Regularizer::L2(0.1), 6, 22).unwrap();
+    let step = 1.0 / p.lipschitz_estimate().unwrap();
+    let w0 = Vector::zeros(24);
+    let iters = 40;
+    let gra = gradient_descent(&p, &w0, &GdConfig { step_size: step, max_iters: iters, tol: 0.0 }).unwrap();
+    let acc_rb = accelerated(&p, &w0, &AccelConfig::variant("acc_rb", step, iters).unwrap()).unwrap();
+    let lb = lbfgs(&p, &w0, &LbfgsConfig { max_iters: iters, ..Default::default() }).unwrap();
+    assert!(acc_rb.best() <= gra.best() + 1e-12);
+    assert!(lb.best() <= acc_rb.best() + 1e-9);
+}
+
+#[test]
+fn solve_lasso_on_distributed_matrix_matches_prox_descent() {
+    let c = ctx();
+    let mut rng = SplitMix64::new(23);
+    let a = DenseMatrix::randn(200, 16, &mut rng);
+    let mut x_true = Vector::zeros(16);
+    x_true[2] = 1.5;
+    x_true[9] = -2.0;
+    let b = a.matvec(&x_true).unwrap();
+    let rm = RowMatrix::from_local(&c, &a, 5);
+    let lambda = 1.0;
+    let tf = solve_lasso(&rm, &b, lambda, 600).unwrap();
+    // cross-check against the optim-side prox solver on the same data
+    let rows: Vec<Vec<f64>> = (0..a.rows).map(|i| a.row(i).to_vec()).collect();
+    let p = sparkla::optim::problem::DistProblem::from_dense(
+        &c, rows, b.0.clone(), 5,
+        sparkla::optim::Objective::LeastSquares,
+        Regularizer::L1(lambda),
+    ).unwrap();
+    let step = 1.0 / p.lipschitz_estimate().unwrap();
+    let t = accelerated(&p, &Vector::zeros(16), &AccelConfig::variant("acc_rb", step, 600).unwrap()).unwrap();
+    for j in 0..16 {
+        assert!(
+            (tf.x[j] - t.solution[j]).abs() < 5e-3,
+            "solvers disagree at {j}: {} vs {}",
+            tf.x[j],
+            t.solution[j]
+        );
+    }
+}
+
+#[test]
+fn lp_on_distributed_operator_feasible_and_bounded() {
+    let c = ctx();
+    let mut rng = SplitMix64::new(24);
+    let nc = 6;
+    let nv = 20;
+    let amat = DenseMatrix::randn(nc, nv, &mut rng);
+    let x_feas = Vector((0..nv).map(|_| rng.next_f64()).collect());
+    let b = amat.matvec(&x_feas).unwrap();
+    let cost = Vector((0..nv).map(|_| rng.next_f64() + 0.1).collect());
+    let rm = RowMatrix::from_local(&c, &amat, 2);
+    let op = LinopMatrix::new(&rm).unwrap();
+    let r = solve_lp(&op, &b, &cost, 600).unwrap();
+    assert!(r.residuals[0] < 1e-2, "equality residual {:?}", r.residuals);
+    assert!(r.x.0.iter().all(|&v| v >= -1e-9), "nonnegativity");
+    // smoothed optimum can't beat the plain-LP bound by much and must not
+    // exceed the feasible point's cost
+    assert!(r.primal_objective[0] <= cost.dot(&x_feas) + 1e-6);
+}
+
+#[test]
+fn tfocs_linop_counting_on_distributed_matrix() {
+    // the structure optimization should hold with a distributed operator
+    let c = ctx();
+    let mut rng = SplitMix64::new(25);
+    let a = DenseMatrix::randn(60, 6, &mut rng);
+    let b = Vector(rng.normal_vec(60));
+    let rm = RowMatrix::from_local(&c, &a, 3);
+    let op = LinopMatrix::new(&rm).unwrap();
+    let iters = 30;
+    let r = sparkla::tfocs::at(
+        &op,
+        &sparkla::tfocs::SmoothQuad { b },
+        &sparkla::tfocs::ProxZero,
+        &Vector::zeros(6),
+        &sparkla::tfocs::AtConfig { l0: 500.0, max_iters: iters, backtracking: false, tol: 0.0, ..Default::default() },
+    )
+    .unwrap();
+    assert!(r.linop_applies <= 2 * iters + 2, "{} applies", r.linop_applies);
+    assert_eq!(op.domain_dim(), 6);
+    assert_eq!(op.range_dim(), 60);
+}
+
+#[test]
+fn xla_and_native_gradients_agree_when_artifacts_present() {
+    // the full three-layer check at the DistProblem level
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = sparkla::config::ClusterConfig { num_executors: 2, use_xla: true, ..Default::default() };
+    cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+    let cx = Context::with_config(cfg);
+    let cn = Context::local("native", 2);
+    let (px, _) = synth::logistic(&cx, 500, 40, Regularizer::None, 4, 30).unwrap();
+    let (pn, _) = synth::logistic(&cn, 500, 40, Regularizer::None, 4, 30).unwrap();
+    let w = Vector((0..40).map(|i| (i as f64 * 0.37).sin() * 0.1).collect());
+    let (lx, gx) = px.loss_grad(&w).unwrap();
+    let (ln, gn) = pn.loss_grad(&w).unwrap();
+    assert!((lx - ln).abs() < 5e-3 * ln.abs().max(1.0), "loss {lx} vs {ln}");
+    for j in 0..40 {
+        let scale = 1.0f64.max(gn[j].abs());
+        assert!((gx[j] - gn[j]).abs() < 5e-3 * scale, "grad[{j}]: {} vs {}", gx[j], gn[j]);
+    }
+    assert!(
+        cx.metrics().xla_calls.load(std::sync::atomic::Ordering::Relaxed) == 0
+            || cx.runtime().is_some(),
+        "xla path must actually engage"
+    );
+}

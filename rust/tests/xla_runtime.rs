@@ -1,0 +1,153 @@
+//! Integration: the full AOT bridge — python-lowered HLO artifacts loaded
+//! and executed through the PJRT service thread, validated against the
+//! native f64 kernels. Requires `make artifacts` (skips itself otherwise,
+//! so `cargo test` stays green on a fresh checkout).
+
+use std::sync::Arc;
+
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::linalg::vector::Vector;
+use sparkla::runtime::{ops, RuntimeHandle};
+use sparkla::util::rng::SplitMix64;
+
+fn runtime() -> Option<Arc<RuntimeHandle>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping xla_runtime tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(RuntimeHandle::start(dir.to_str().unwrap()).expect("runtime start")))
+}
+
+/// f32 tolerance scaled for length-~1024 dot products.
+const TOL: f64 = 5e-3;
+
+fn close(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        assert!((x - y).abs() <= TOL * scale, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn gram_xla_matches_native_with_padding_and_tiling() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(1);
+    // sizes exercising: exact fit, col padding, row padding, row tiling
+    for (m, n) in [(1024, 256), (1024, 100), (600, 256), (2500, 77)] {
+        let a = DenseMatrix::randn(m, n, &mut rng);
+        let got = ops::gram(Some(&rt), &a).unwrap();
+        let want = a.gram();
+        close(&got.data, &want.data, &format!("gram {m}x{n}"));
+    }
+}
+
+#[test]
+fn matvec_xla_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(2);
+    for (m, n) in [(1024, 256), (50, 10), (3000, 200)] {
+        let a = DenseMatrix::randn(m, n, &mut rng);
+        let x = Vector(rng.normal_vec(n));
+        let got = ops::matvec(Some(&rt), &a, &x).unwrap();
+        let want = a.matvec(&x).unwrap();
+        close(&got.0, &want.0, &format!("matvec {m}x{n}"));
+    }
+}
+
+#[test]
+fn gramvec_xla_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(3);
+    for (m, n) in [(1024, 256), (900, 64), (2100, 130)] {
+        let a = DenseMatrix::randn(m, n, &mut rng);
+        let x = Vector(rng.normal_vec(n));
+        let got = ops::gramvec(Some(&rt), &a, &x).unwrap();
+        let want = a.tmatvec(&a.matvec(&x).unwrap()).unwrap();
+        close(&got.0, &want.0, &format!("gramvec {m}x{n}"));
+    }
+}
+
+#[test]
+fn quad_grad_xla_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(4);
+    for (m, n) in [(1024, 256), (700, 50), (1500, 256)] {
+        let a = DenseMatrix::randn(m, n, &mut rng);
+        let w = Vector(rng.normal_vec(n)).scale(0.1);
+        let b = Vector(rng.normal_vec(m));
+        let (g, l) = ops::quad_loss_grad(Some(&rt), &a, &w, &b).unwrap();
+        let (gn, ln) = ops::quad_loss_grad(None, &a, &w, &b).unwrap();
+        close(&g.0, &gn.0, &format!("quad grad {m}x{n}"));
+        let scale = 1.0f64.max(ln.abs());
+        assert!((l - ln).abs() <= TOL * scale, "quad loss {m}x{n}: {l} vs {ln}");
+    }
+}
+
+#[test]
+fn logistic_grad_xla_matches_native_including_pad_correction() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(5);
+    for (m, n) in [(1024, 256), (333, 20), (1100, 64)] {
+        let a = DenseMatrix::randn(m, n, &mut rng);
+        let w = Vector(rng.normal_vec(n)).scale(0.05);
+        let y = Vector((0..m).map(|_| rng.sign()).collect());
+        let (g, l) = ops::logistic_loss_grad(Some(&rt), &a, &w, &y).unwrap();
+        let (gn, ln) = ops::logistic_loss_grad(None, &a, &w, &y).unwrap();
+        close(&g.0, &gn.0, &format!("logistic grad {m}x{n}"));
+        let scale = 1.0f64.max(ln.abs());
+        assert!((l - ln).abs() <= TOL * scale, "logistic loss {m}x{n}: {l} vs {ln}");
+    }
+}
+
+#[test]
+fn gemm_xla_matches_native_tiled() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(6);
+    for (m, k, n, tile) in [(256, 256, 256, 256), (300, 500, 120, 256), (512, 512, 512, 512)] {
+        let x = DenseMatrix::randn(m, k, &mut rng);
+        let y = DenseMatrix::randn(k, n, &mut rng);
+        let got = ops::gemm(&rt, &x, &y, tile).unwrap();
+        let want = x.matmul(&y).unwrap();
+        close(&got.data, &want.data, &format!("gemm {m}x{k}x{n} tile{tile}"));
+    }
+}
+
+#[test]
+fn concurrent_requests_from_many_threads() {
+    // The service-thread model must serialize safely under contention —
+    // this is the executor-pool usage pattern.
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(7);
+    let a = Arc::new(DenseMatrix::randn(512, 128, &mut rng));
+    let want = Arc::new(a.gram());
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let rt = Arc::clone(&rt);
+            let a = Arc::clone(&a);
+            let want = Arc::clone(&want);
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let got = ops::gram(Some(&rt), &a).unwrap();
+                    close(&got.data, &want.data, &format!("thread {t}"));
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn unknown_artifact_is_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("no_such_artifact", vec![]).unwrap_err();
+    assert!(err.to_string().contains("no_such_artifact"));
+}
+
+#[test]
+fn wrong_shape_rejected_before_dispatch() {
+    let Some(rt) = runtime() else { return };
+    let bad = sparkla::runtime::client::TensorIn { data: vec![0.0; 4], dims: vec![2, 2] };
+    let err = rt.execute("gram_1024x256", vec![bad]).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
