@@ -6,7 +6,7 @@
 //! cargo run --release --example lasso_tfocs
 //! ```
 
-use sparkla::distributed::RowMatrix;
+use sparkla::distributed::{CoordinateMatrix, RowMatrix};
 use sparkla::linalg::matrix::DenseMatrix;
 use sparkla::linalg::vector::Vector;
 use sparkla::tfocs::solve_lasso;
@@ -51,6 +51,16 @@ fn main() -> sparkla::Result<()> {
     );
     let rel = r.x.sub(&x_true).norm2() / x_true.norm2();
     println!("relative estimation error: {rel:.4}");
+
+    // the same solve through the operator trait on entry storage — the
+    // format the paper could not yet support ("Currently support is only
+    // implemented for RDD[Vector] row matrices")
+    let a_coo = CoordinateMatrix::from_local(&ctx, &a_local, 8);
+    let r_coo = solve_lasso(&a_coo, &b, lambda, 500)?;
+    println!(
+        "coordinate-format solve (no row conversion): |x_row - x_coo| = {:.2e}",
+        r_coo.x.sub(&r.x).norm2()
+    );
     println!("cluster: {}", ctx.metrics().summary());
     Ok(())
 }

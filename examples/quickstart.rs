@@ -30,9 +30,18 @@ fn main() -> sparkla::Result<()> {
     let (_components, variances) = a.pca(3)?;
     println!("top-3 PCA explained variances: {variances:?}");
 
-    // ---- CoordinateMatrix -> conversions ----------------------------
-    let cm = CoordinateMatrix::sprand(&ctx, 10_000, 100, 50_000, 8, 42);
+    // ---- CoordinateMatrix: operator-trait SVD, no conversion --------
+    let cm = CoordinateMatrix::sprand(&ctx, 10_000, 100, 50_000, 8, 42).cache();
     println!("sparse C: {} x {}, nnz={}", cm.num_rows, cm.num_cols, cm.nnz()?);
+    // the ARPACK driver only needs the trait's gramvec — the entries are
+    // never shuffled into row form
+    let sparse_svd = sparkla::distributed::svd::compute_svd(&cm, 5, false)?;
+    println!(
+        "sparse top-5 singular values ({}, {} distributed ops): {:?}",
+        sparse_svd.algorithm, sparse_svd.matrix_ops, sparse_svd.s
+    );
+
+    // conversions are still there when a consumer wants a layout
     let c_rows = cm.to_row_matrix(8)?;
     let sims = c_rows.column_similarities(Some(0.1))?;
     println!("DIMSUM similarity (0,1) = {:+.4}", sims.get(0, 1));

@@ -4,10 +4,13 @@
 //! conversion cost between formats ("may require a global shuffle, which
 //! is quite expensive").
 //!
-//! Also benches tree_aggregate fan-in — the knob the perf pass tunes.
+//! Also benches tree_aggregate fan-in — the knob the perf pass tunes —
+//! and the per-format `matvec`/`gramvec` comparison through the
+//! `DistributedLinearOperator` trait (same matrix, same density, three
+//! storage formats), written to `target/experiments/BENCH_matvec.json`.
 
-use sparkla::bench::{bench, BenchConfig, Table};
-use sparkla::distributed::{BlockMatrix, CoordinateMatrix};
+use sparkla::bench::{bench, BenchConfig, Measurement, Table};
+use sparkla::distributed::{BlockMatrix, CoordinateMatrix, DistributedLinearOperator};
 use sparkla::linalg::vector::Vector;
 use sparkla::util::csv::CsvWriter;
 use sparkla::util::rng::SplitMix64;
@@ -88,9 +91,59 @@ fn main() {
         });
         emit(&format!("gram reduction, tree fan-in {fanin}"), m);
     }
+    // ---- per-format operator benchmark (the trait-API perf surface):
+    // the same matrix at the same density served as matvec/gramvec by
+    // each storage format, no conversion in the timed region
+    let x = Vector(rng.normal_vec(cols as usize));
+    let cmc = cm.cache();
+    cmc.nnz().unwrap(); // materialize
+    let bmc = bm.cache(); // same geometry as the add-bench matrix: reuse, no second shuffle
+    bmc.blocks.count().unwrap(); // materialize
+    let mut op_results: Vec<(String, String, f64)> = vec![];
+    {
+        let mut run = |format: &str, op: &str, m: Measurement| {
+            emit(&format!("{format}: {op} (operator trait)"), m.clone());
+            op_results.push((format.into(), op.into(), m.summary.median));
+        };
+        let xr = x.clone();
+        run("row(cached)", "matvec", bench("row_mv", &cfg, || {
+            std::hint::black_box(rm.matvec(&xr).unwrap());
+        }));
+        run("row(cached)", "gramvec", bench("row_gv", &cfg, || {
+            std::hint::black_box(rm.gramvec(&xr).unwrap());
+        }));
+        run("coordinate(cached)", "matvec", bench("coo_mv", &cfg, || {
+            std::hint::black_box(cmc.matvec(&xr).unwrap());
+        }));
+        run("coordinate(cached)", "gramvec", bench("coo_gv", &cfg, || {
+            std::hint::black_box(cmc.gramvec(&xr).unwrap());
+        }));
+        run("block(cached)", "matvec", bench("blk_mv", &cfg, || {
+            std::hint::black_box(bmc.matvec(&xr).unwrap());
+        }));
+        run("block(cached)", "gramvec", bench("blk_gv", &cfg, || {
+            std::hint::black_box(bmc.gramvec(&xr).unwrap());
+        }));
+    }
+    let json_path = std::path::Path::new("target/experiments/BENCH_matvec.json");
+    std::fs::create_dir_all(json_path.parent().unwrap()).unwrap();
+    let entries: Vec<String> = op_results
+        .iter()
+        .map(|(f, o, t)| {
+            format!("    {{\"format\": \"{f}\", \"op\": \"{o}\", \"median_sec\": {t:.6e}}}")
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"per_format_matvec\",\n  \"rows\": {rows},\n  \"cols\": {cols},\n  \"nnz\": {nnz},\n  \"partitions\": {parts},\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    std::fs::write(json_path, json).unwrap();
+    println!("per-format operator rows -> {json_path:?}");
+
     println!("{}", table.render());
     let p = csv.finish().unwrap();
     println!("rows -> {p:?}");
     println!("shape check vs paper section 2: conversions (shuffles) dominate per-op costs;");
-    println!("cached row format wins for repeated gram/gramvec (the SVD/optimizer pattern).");
+    println!("cached row format wins for repeated gram/gramvec (the SVD/optimizer pattern);");
+    println!("coordinate matvec/gramvec skip the conversion shuffle entirely (the trait's point).");
 }

@@ -101,6 +101,73 @@ impl BlockMatrix {
         Ok(BlockMatrix::new(cm.context(), blocks, rpb, cpb, nr, nc))
     }
 
+    /// Owning context.
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    /// Cache the backing blocks.
+    pub fn cache(&self) -> BlockMatrix {
+        BlockMatrix {
+            blocks: self.blocks.clone().cache(),
+            rows_per_block: self.rows_per_block,
+            cols_per_block: self.cols_per_block,
+            num_rows: self.num_rows,
+            num_cols: self.num_cols,
+            ctx: self.ctx.clone(),
+        }
+    }
+
+    /// Nonzeros stored inside blocks (explicit zeros excluded, matching
+    /// the other formats' accounting).
+    pub fn nnz(&self) -> Result<usize> {
+        self.blocks.aggregate(
+            0usize,
+            |a, (_k, m)| a + m.data.iter().filter(|&&x| x != 0.0).count(),
+            |a, b| a + b,
+        )
+    }
+
+    /// Explode blocks into coordinate entries (no shuffle — entries stay
+    /// in their block's partition; the reverse of `from_coordinate`).
+    pub fn to_coordinate_matrix(&self) -> CoordinateMatrix {
+        let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
+        let entries = self.blocks.flat_map(move |((bi, bj), m)| {
+            let (r0, c0) = (*bi * rpb, *bj * cpb);
+            let mut out = vec![];
+            for i in 0..m.rows {
+                for j in 0..m.cols {
+                    let v = m.get(i, j);
+                    if v != 0.0 {
+                        out.push(MatrixEntry {
+                            i: (r0 + i) as u64,
+                            j: (c0 + j) as u64,
+                            value: v,
+                        });
+                    }
+                }
+            }
+            out
+        });
+        CoordinateMatrix::new(&self.ctx, entries, self.num_rows as u64, self.num_cols as u64)
+    }
+
+    /// Regroup into sparse indexed rows (one shuffle, via coordinates).
+    pub fn to_indexed_row_matrix(
+        &self,
+        num_partitions: usize,
+    ) -> Result<crate::distributed::indexed_row_matrix::IndexedRowMatrix> {
+        self.to_coordinate_matrix().to_indexed_row_matrix(num_partitions)
+    }
+
+    /// Regroup into rows, dropping indices (one shuffle).
+    pub fn to_row_matrix(
+        &self,
+        num_partitions: usize,
+    ) -> Result<crate::distributed::row_matrix::RowMatrix> {
+        Ok(self.to_indexed_row_matrix(num_partitions)?.to_row_matrix())
+    }
+
     /// Block-grid dimensions.
     pub fn grid(&self) -> (usize, usize) {
         (

@@ -68,9 +68,36 @@ impl CoordinateMatrix {
         CoordinateMatrix::new(ctx, entries, num_rows, num_cols)
     }
 
+    /// Build from a driver-local dense matrix's nonzeros (tests, small
+    /// inputs); declared dims match the dense shape even when boundary
+    /// rows/columns are all zero.
+    pub fn from_local(ctx: &Context, a: &crate::linalg::matrix::DenseMatrix, num_partitions: usize) -> CoordinateMatrix {
+        let mut entries = vec![];
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                let v = a.get(i, j);
+                if v != 0.0 {
+                    entries.push(MatrixEntry { i: i as u64, j: j as u64, value: v });
+                }
+            }
+        }
+        let rdd = ctx.parallelize(entries, num_partitions);
+        CoordinateMatrix::new(ctx, rdd, a.rows as u64, a.cols as u64)
+    }
+
     /// Owning context.
     pub fn context(&self) -> &Context {
         &self.ctx
+    }
+
+    /// Cache the backing entries.
+    pub fn cache(&self) -> CoordinateMatrix {
+        CoordinateMatrix {
+            entries: self.entries.clone().cache(),
+            num_rows: self.num_rows,
+            num_cols: self.num_cols,
+            ctx: self.ctx.clone(),
+        }
     }
 
     /// Count stored entries (duplicates included).
@@ -126,6 +153,22 @@ impl CoordinateMatrix {
     /// Straight to a RowMatrix (drops indices after the shuffle).
     pub fn to_row_matrix(&self, num_partitions: usize) -> Result<crate::distributed::row_matrix::RowMatrix> {
         Ok(self.to_indexed_row_matrix(num_partitions)?.to_row_matrix())
+    }
+
+    /// Group entries into dense blocks (one shuffle; the paper's
+    /// `toBlockMatrix`).
+    pub fn to_block_matrix(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<crate::distributed::block_matrix::BlockMatrix> {
+        crate::distributed::block_matrix::BlockMatrix::from_coordinate(
+            self,
+            rows_per_block,
+            cols_per_block,
+            num_partitions,
+        )
     }
 
     /// Collect to a local dense matrix (tests only).

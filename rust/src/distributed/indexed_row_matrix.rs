@@ -2,7 +2,10 @@
 //! meaningful `u64` indices — the bridge between coordinate and row
 //! formats.
 
+use std::sync::{Arc, OnceLock};
+
 use crate::coordinator::context::Context;
+use crate::distributed::block_matrix::BlockMatrix;
 use crate::distributed::coordinate_matrix::{CoordinateMatrix, MatrixEntry};
 use crate::distributed::row::Row;
 use crate::distributed::row_matrix::RowMatrix;
@@ -15,18 +18,49 @@ pub struct IndexedRowMatrix {
     /// (row index, row) records.
     pub rows: Rdd<(u64, Row)>,
     ctx: Context,
-    n_cols: Option<usize>,
+    n_cols: Arc<OnceLock<usize>>,
+    n_rows: Arc<OnceLock<u64>>,
 }
 
 impl IndexedRowMatrix {
     /// Wrap an RDD of indexed rows.
     pub fn new(ctx: &Context, rows: Rdd<(u64, Row)>, n_cols: Option<usize>) -> IndexedRowMatrix {
-        IndexedRowMatrix { rows, ctx: ctx.clone(), n_cols }
+        let cell = OnceLock::new();
+        if let Some(n) = n_cols {
+            let _ = cell.set(n);
+        }
+        IndexedRowMatrix {
+            rows,
+            ctx: ctx.clone(),
+            n_cols: Arc::new(cell),
+            n_rows: Arc::new(OnceLock::new()),
+        }
     }
 
-    /// Column count (declared or scanned).
+    /// Owning context.
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    /// Cache the backing rows.
+    pub fn cache(&self) -> IndexedRowMatrix {
+        IndexedRowMatrix {
+            rows: self.rows.clone().cache(),
+            ctx: self.ctx.clone(),
+            n_cols: Arc::clone(&self.n_cols),
+            n_rows: Arc::clone(&self.n_rows),
+        }
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> Result<usize> {
+        self.rows.aggregate(0usize, |a, (_, r)| a + r.nnz(), |a, b| a + b)
+    }
+
+    /// Column count (declared or scanned; cached — iterative operator
+    /// consumers call this every pass).
     pub fn num_cols(&self) -> Result<usize> {
-        if let Some(n) = self.n_cols {
+        if let Some(&n) = self.n_cols.get() {
             return Ok(n);
         }
         let n = self
@@ -35,12 +69,15 @@ impl IndexedRowMatrix {
         if n == 0 {
             return Err(Error::InvalidArgument("empty IndexedRowMatrix".into()));
         }
-        Ok(n)
+        Ok(*self.n_cols.get_or_init(|| n))
     }
 
     /// Logical row count: max index + 1 (MLlib semantics — indices may be
-    /// sparse).
+    /// sparse). Cached after the first cluster pass.
     pub fn num_rows(&self) -> Result<u64> {
+        if let Some(&n) = self.n_rows.get() {
+            return Ok(n);
+        }
         let max_idx = self
             .rows
             .aggregate(None::<u64>, |acc, (i, _)| Some(acc.map_or(*i, |a| a.max(*i))), |a, b| {
@@ -49,15 +86,16 @@ impl IndexedRowMatrix {
                     (Some(a), Some(b)) => Some(a.max(b)),
                 }
             })?;
-        max_idx
+        let n = max_idx
             .map(|i| i + 1)
-            .ok_or_else(|| Error::InvalidArgument("empty IndexedRowMatrix".into()))
+            .ok_or_else(|| Error::InvalidArgument("empty IndexedRowMatrix".into()))?;
+        Ok(*self.n_rows.get_or_init(|| n))
     }
 
     /// Drop the indices (paper: `toRowMatrix`).
     pub fn to_row_matrix(&self) -> RowMatrix {
         let rdd = self.rows.map(|(_, r)| r.clone());
-        RowMatrix::new(&self.ctx, rdd, self.n_cols)
+        RowMatrix::new(&self.ctx, rdd, self.n_cols.get().copied())
     }
 
     /// Explode into coordinate entries (`toCoordinateMatrix`).
@@ -82,6 +120,17 @@ impl IndexedRowMatrix {
             }
         });
         Ok(CoordinateMatrix::new(&self.ctx, entries, n_rows, n_cols))
+    }
+
+    /// Re-block into a [`BlockMatrix`] (one shuffle, via coordinates).
+    pub fn to_block_matrix(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        self.to_coordinate_matrix()?
+            .to_block_matrix(rows_per_block, cols_per_block, num_partitions)
     }
 
     /// Multiply by a small local matrix (index-preserving).

@@ -1,12 +1,24 @@
-//! Distributed matrices — the paper's §2: three representations, each for
+//! Distributed matrices — the paper's §2: four representations, each for
 //! a sparsity/shape regime, plus the §3 computations built on them.
 //!
-//! | type | backing | regime |
-//! |---|---|---|
-//! | [`RowMatrix`] | `Rdd<Row>` | many rows, few enough cols that a row fits in memory |
-//! | [`IndexedRowMatrix`] | `Rdd<(u64, Row)>` | as above, with meaningful row ids |
-//! | [`CoordinateMatrix`] | `Rdd<MatrixEntry>` | both dims huge, very sparse |
-//! | [`BlockMatrix`] | `Rdd<((i,j), DenseMatrix)>` | dense blocks; supports add/multiply |
+//! | type | backing | regime | fused gram? |
+//! |---|---|---|---|
+//! | [`RowMatrix`] | `Rdd<Row>` | many rows, few enough cols that a row fits in memory | yes (1 pass) |
+//! | [`IndexedRowMatrix`] | `Rdd<(u64, Row)>` | as above, with meaningful row ids | gramvec only |
+//! | [`CoordinateMatrix`] | `Rdd<MatrixEntry>` | both dims huge, very sparse | no (2-pass gramvec) |
+//! | [`BlockMatrix`] | `Rdd<((i,j), DenseMatrix)>` | dense blocks; add/multiply | yes (stripe join) |
+//!
+//! All four implement [`operator::DistributedLinearOperator`]
+//! (`matvec`/`rmatvec`/`gramvec`), which is the only contract the SVD
+//! ([`svd::compute_svd`]) and the TFOCS/optim solvers need — so e.g.
+//! `compute_svd(&coordinate_matrix, k, true)` runs entry-streaming SpMV
+//! with **no conversion shuffle**. The conversion lattice is complete in
+//! both directions when a specific layout is wanted:
+//!
+//! ```text
+//! RowMatrix ⇄ IndexedRowMatrix ⇄ CoordinateMatrix ⇄ BlockMatrix
+//!     └──────────── to_block_matrix / to_row_matrix ────────────┘
+//! ```
 //!
 //! Conversions mirror MLlib (`to_indexed_row_matrix`, `to_block_matrix`,
 //! ...) — each may shuffle, which is why choosing the right initial format
@@ -18,6 +30,7 @@ pub mod row_matrix;
 pub mod indexed_row_matrix;
 pub mod coordinate_matrix;
 pub mod block_matrix;
+pub mod operator;
 pub mod statistics;
 pub mod dimsum;
 pub mod tsqr;
@@ -26,6 +39,7 @@ pub mod svd;
 pub use block_matrix::BlockMatrix;
 pub use coordinate_matrix::{CoordinateMatrix, MatrixEntry};
 pub use indexed_row_matrix::IndexedRowMatrix;
+pub use operator::{DistributedLinearOperator, DistributedMatrix};
 pub use row::Row;
 pub use row_matrix::RowMatrix;
 pub use svd::SingularValueDecomposition;

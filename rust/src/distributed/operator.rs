@@ -1,0 +1,751 @@
+//! `DistributedLinearOperator` — the operator-centric API at the heart of
+//! the paper's thesis: ARPACK and TFOCS never need the matrix itself, only
+//! a matvec contract (`matvec`/`rmatvec`, plus the fused `gramvec` for
+//! `AᵀA·x` in one cluster pass). Every distributed format implements this
+//! trait, so the SVD and the convex solvers run over dense-row,
+//! indexed-row, coordinate, or block storage directly — a sparse workload
+//! stays in entry form and skips the shuffle into row form entirely.
+//!
+//! [`DistributedMatrix`] is the storage-aware super-trait: caching plus
+//! the complete conversion lattice, so any format can still reach any
+//! other when a consumer wants a specific layout.
+
+use crate::coordinator::context::Context;
+use crate::distributed::block_matrix::BlockMatrix;
+use crate::distributed::coordinate_matrix::CoordinateMatrix;
+use crate::distributed::indexed_row_matrix::IndexedRowMatrix;
+use crate::distributed::row::Row;
+use crate::distributed::row_matrix::{RowMatrix, TREE_FANIN};
+use crate::error::Result;
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::vector::Vector;
+use crate::rdd::Rdd;
+
+/// A distributed linear map `A : ℝⁿ → ℝᵐ` with an adjoint. Vectors live
+/// on the driver (the paper's §1.2(2) split); every method body is one or
+/// two cluster passes.
+pub trait DistributedLinearOperator: Send + Sync {
+    /// Row count `m` (may cost a cluster pass; formats cache or declare).
+    fn num_rows(&self) -> Result<usize>;
+
+    /// Column count `n`.
+    fn num_cols(&self) -> Result<usize>;
+
+    /// `A·x` (one cluster pass; result length `m`).
+    fn matvec(&self, x: &Vector) -> Result<Vector>;
+
+    /// `Aᵀ·y` (one cluster pass; result length `n`).
+    fn rmatvec(&self, y: &Vector) -> Result<Vector>;
+
+    /// `AᵀA·x` — the ARPACK operator op. The default is the two-pass
+    /// composition `rmatvec(matvec(x))`; row formats override it with the
+    /// fused one-pass kernel (per-partition `Aᵀ(A x)`, tree-summed).
+    fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        self.rmatvec(&self.matvec(x)?)
+    }
+
+    /// The dense Gram matrix `AᵀA` when the format has a fused kernel for
+    /// it (this is what drives the tall-skinny SVD path). `None` means
+    /// consumers fall back to `gramvec` iteration (ARPACK).
+    fn dense_gram(&self) -> Result<Option<DenseMatrix>> {
+        Ok(None)
+    }
+
+    /// Squared Frobenius norm `‖A‖²_F` — an upper bound on `λ_max(AᵀA)`,
+    /// used to seed solver step sizes.
+    fn frob_norm_sq(&self) -> Result<f64>;
+
+    /// `A·B` for a small driver-local `B` (n×k), returned as distributed
+    /// rows — how `U = A(VΣ⁻¹)` is recovered in the SVD. The result
+    /// always has exactly `num_rows` rows (all-zero rows of `A` produce
+    /// zero rows of the product). **Row order** matches storage order for
+    /// row formats; coordinate and block formats emit rows in shuffle
+    /// order, so only row-permutation-invariant consumers (orthonormality
+    /// / Gram / subspace checks) should rely on the result's ordering —
+    /// convert to a row format first when positional alignment with `A`
+    /// is required.
+    fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix>;
+}
+
+/// A stored distributed matrix: an operator plus caching and the format
+/// conversion lattice (each conversion may shuffle — §2's "choose the
+/// initial format wisely" still applies; the lattice just guarantees
+/// every format can reach every consumer).
+pub trait DistributedMatrix: DistributedLinearOperator + Clone {
+    /// Owning context.
+    fn context(&self) -> &Context;
+
+    /// Cache the backing records (iterative consumers call this once).
+    fn cached(&self) -> Self;
+
+    /// Stored nonzeros (Table 1's workload descriptor).
+    fn nnz(&self) -> Result<usize>;
+
+    /// Convert to [`RowMatrix`] (no-op when already row-form).
+    fn to_row(&self, num_partitions: usize) -> Result<RowMatrix>;
+
+    /// Convert to [`IndexedRowMatrix`].
+    fn to_indexed(&self, num_partitions: usize) -> Result<IndexedRowMatrix>;
+
+    /// Convert to [`CoordinateMatrix`].
+    fn to_coordinate(&self, num_partitions: usize) -> Result<CoordinateMatrix>;
+
+    /// Convert to [`BlockMatrix`] with the given block geometry.
+    fn to_block(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix>;
+}
+
+/// Tree-sum an RDD of equal-length partial vectors (the reduction behind
+/// every distributed mat-vec here).
+pub(crate) fn tree_sum_vec(partial: &Rdd<Vec<f64>>, len: usize) -> Result<Vec<f64>> {
+    partial.tree_aggregate(
+        vec![0.0; len],
+        |mut acc: Vec<f64>, v: &Vec<f64>| {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+            acc
+        },
+        |mut a: Vec<f64>, b: Vec<f64>| {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+            a
+        },
+        TREE_FANIN,
+    )
+}
+
+fn row_norm_sq(r: &Row) -> f64 {
+    match r {
+        Row::Dense(v) => v.iter().map(|x| x * x).sum::<f64>(),
+        Row::Sparse(s) => s.norm2_sq(),
+    }
+}
+
+// ---------------------------------------------------------------- RowMatrix
+
+impl DistributedLinearOperator for RowMatrix {
+    fn num_rows(&self) -> Result<usize> {
+        RowMatrix::num_rows(self)
+    }
+
+    fn num_cols(&self) -> Result<usize> {
+        RowMatrix::num_cols(self)
+    }
+
+    fn matvec(&self, x: &Vector) -> Result<Vector> {
+        RowMatrix::matvec(self, x)
+    }
+
+    fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        RowMatrix::rmatvec(self, y)
+    }
+
+    /// Fused one-pass `AᵀA·x` (XLA when available).
+    fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        RowMatrix::gramvec(self, x)
+    }
+
+    /// Fused one-pass Gram (tree-aggregated) — enables tall-skinny SVD.
+    fn dense_gram(&self) -> Result<Option<DenseMatrix>> {
+        self.gram().map(Some)
+    }
+
+    fn frob_norm_sq(&self) -> Result<f64> {
+        self.rows.aggregate(0.0, |a, r| a + row_norm_sq(r), |a, b| a + b)
+    }
+
+    fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
+        RowMatrix::multiply_local(self, b)
+    }
+}
+
+impl DistributedMatrix for RowMatrix {
+    fn context(&self) -> &Context {
+        RowMatrix::context(self)
+    }
+
+    fn cached(&self) -> Self {
+        self.cache()
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        RowMatrix::nnz(self)
+    }
+
+    fn to_row(&self, _num_partitions: usize) -> Result<RowMatrix> {
+        Ok(self.clone())
+    }
+
+    fn to_indexed(&self, _num_partitions: usize) -> Result<IndexedRowMatrix> {
+        self.to_indexed_row_matrix()
+    }
+
+    fn to_coordinate(&self, _num_partitions: usize) -> Result<CoordinateMatrix> {
+        self.to_coordinate_matrix()
+    }
+
+    fn to_block(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        self.to_block_matrix(rows_per_block, cols_per_block, num_partitions)
+    }
+}
+
+// --------------------------------------------------------- IndexedRowMatrix
+
+impl DistributedLinearOperator for IndexedRowMatrix {
+    fn num_rows(&self) -> Result<usize> {
+        Ok(IndexedRowMatrix::num_rows(self)? as usize)
+    }
+
+    fn num_cols(&self) -> Result<usize> {
+        IndexedRowMatrix::num_cols(self)
+    }
+
+    fn matvec(&self, x: &Vector) -> Result<Vector> {
+        let n = IndexedRowMatrix::num_cols(self)?;
+        crate::ensure_dims!(x.len(), n, "indexed matvec dims");
+        let m = IndexedRowMatrix::num_rows(self)? as usize;
+        let bx = self.context().broadcast(x.clone());
+        let pairs = self.rows.map(move |(i, r)| (*i, r.dot(bx.value())));
+        let mut y = vec![0.0; m];
+        for (i, d) in pairs.collect()? {
+            y[i as usize] += d;
+        }
+        Ok(Vector(y))
+    }
+
+    fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        let n = IndexedRowMatrix::num_cols(self)?;
+        let m = IndexedRowMatrix::num_rows(self)? as usize;
+        crate::ensure_dims!(y.len(), m, "indexed rmatvec dims");
+        let by = self.context().broadcast(y.clone());
+        let partial = self.rows.map_partitions_with_index(move |_p, rows| {
+            let y = by.value();
+            let mut acc = vec![0.0; n];
+            for (i, r) in rows {
+                r.axpy_into(y[*i as usize], &mut acc);
+            }
+            vec![acc]
+        });
+        tree_sum_vec(&partial, n).map(Vector)
+    }
+
+    /// Fused one-pass `AᵀA·x` — row indices are irrelevant to the Gram
+    /// product, so this is the RowMatrix kernel over indexed records.
+    fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        let n = IndexedRowMatrix::num_cols(self)?;
+        crate::ensure_dims!(x.len(), n, "indexed gramvec dims");
+        let bx = self.context().broadcast(x.clone());
+        let partial = self.rows.map_partitions_with_index(move |_p, rows| {
+            let x = bx.value();
+            let mut acc = vec![0.0; n];
+            for (_i, r) in rows {
+                let dot = r.dot(x);
+                r.axpy_into(dot, &mut acc);
+            }
+            vec![acc]
+        });
+        tree_sum_vec(&partial, n).map(Vector)
+    }
+
+    fn frob_norm_sq(&self) -> Result<f64> {
+        self.rows.aggregate(0.0, |a, (_i, r)| a + row_norm_sq(r), |a, b| a + b)
+    }
+
+    fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
+        Ok(IndexedRowMatrix::multiply_local(self, b)?.to_row_matrix())
+    }
+}
+
+impl DistributedMatrix for IndexedRowMatrix {
+    fn context(&self) -> &Context {
+        IndexedRowMatrix::context(self)
+    }
+
+    fn cached(&self) -> Self {
+        self.cache()
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        IndexedRowMatrix::nnz(self)
+    }
+
+    fn to_row(&self, _num_partitions: usize) -> Result<RowMatrix> {
+        Ok(self.to_row_matrix())
+    }
+
+    fn to_indexed(&self, _num_partitions: usize) -> Result<IndexedRowMatrix> {
+        Ok(self.clone())
+    }
+
+    fn to_coordinate(&self, _num_partitions: usize) -> Result<CoordinateMatrix> {
+        self.to_coordinate_matrix()
+    }
+
+    fn to_block(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        self.to_block_matrix(rows_per_block, cols_per_block, num_partitions)
+    }
+}
+
+// -------------------------------------------------------- CoordinateMatrix
+
+impl DistributedLinearOperator for CoordinateMatrix {
+    fn num_rows(&self) -> Result<usize> {
+        Ok(self.num_rows as usize)
+    }
+
+    fn num_cols(&self) -> Result<usize> {
+        Ok(self.num_cols as usize)
+    }
+
+    /// Entry-streaming SpMV: each partition scatters `v·x[j]` into a
+    /// local m-accumulator, tree-summed — no conversion shuffle, the
+    /// format's whole point for huge-and-sparse workloads.
+    fn matvec(&self, x: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(x.len(), self.num_cols as usize, "coordinate matvec dims");
+        let m = self.num_rows as usize;
+        let bx = self.context().broadcast(x.clone());
+        let partial = self.entries.map_partitions_with_index(move |_p, entries| {
+            let x = bx.value();
+            let mut acc = vec![0.0; m];
+            for e in entries {
+                acc[e.i as usize] += e.value * x[e.j as usize];
+            }
+            vec![acc]
+        });
+        tree_sum_vec(&partial, m).map(Vector)
+    }
+
+    fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(y.len(), self.num_rows as usize, "coordinate rmatvec dims");
+        let n = self.num_cols as usize;
+        let by = self.context().broadcast(y.clone());
+        let partial = self.entries.map_partitions_with_index(move |_p, entries| {
+            let y = by.value();
+            let mut acc = vec![0.0; n];
+            for e in entries {
+                acc[e.j as usize] += e.value * y[e.i as usize];
+            }
+            vec![acc]
+        });
+        tree_sum_vec(&partial, n).map(Vector)
+    }
+
+    /// Entry lists may contain duplicate `(i, j)` pairs (summed on read);
+    /// this counts each stored entry separately, so the result is exact
+    /// only for duplicate-free matrices — still a valid step-size seed,
+    /// which is all consumers use it for.
+    fn frob_norm_sq(&self) -> Result<f64> {
+        self.entries.aggregate(0.0, |a, e| a + e.value * e.value, |a, b| a + b)
+    }
+
+    fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
+        let n = self.num_cols as usize;
+        crate::ensure_dims!(b.rows, n, "coordinate multiply_local dims");
+        let k = b.cols;
+        let m = self.num_rows as usize;
+        let parts = self.entries.num_partitions().max(1);
+        let bb = self.context().broadcast(b.clone());
+        let pairs = self.entries.map(move |e| {
+            let b = bb.value();
+            let j = e.j as usize;
+            let scaled: Vec<f64> = (0..k).map(|c| e.value * b.get(j, c)).collect();
+            (e.i, scaled)
+        });
+        // seed every row index with zeros so all-zero rows of A still
+        // produce (zero) rows of the product — the result always has
+        // exactly `num_rows` rows (the O(m·k) seeds are the size of the
+        // output anyway)
+        let per = m.div_ceil(parts);
+        let zeros = self.context().generate("multiply_local_zeros", parts, move |p| {
+            let lo = (p * per).min(m);
+            let hi = ((p + 1) * per).min(m);
+            (lo..hi).map(|i| (i as u64, vec![0.0; k])).collect()
+        });
+        let reduced = pairs.union(&zeros).reduce_by_key(parts, |a: &Vec<f64>, b: &Vec<f64>| {
+            a.iter().zip(b).map(|(x, y)| x + y).collect()
+        });
+        let rows = reduced.map(|(_i, v)| Row::Dense(v.clone()));
+        Ok(RowMatrix::new(self.context(), rows, Some(k)))
+    }
+}
+
+impl DistributedMatrix for CoordinateMatrix {
+    fn context(&self) -> &Context {
+        CoordinateMatrix::context(self)
+    }
+
+    fn cached(&self) -> Self {
+        self.cache()
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        CoordinateMatrix::nnz(self)
+    }
+
+    fn to_row(&self, num_partitions: usize) -> Result<RowMatrix> {
+        self.to_row_matrix(num_partitions)
+    }
+
+    fn to_indexed(&self, num_partitions: usize) -> Result<IndexedRowMatrix> {
+        self.to_indexed_row_matrix(num_partitions)
+    }
+
+    fn to_coordinate(&self, _num_partitions: usize) -> Result<CoordinateMatrix> {
+        Ok(self.clone())
+    }
+
+    fn to_block(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        self.to_block_matrix(rows_per_block, cols_per_block, num_partitions)
+    }
+}
+
+// ------------------------------------------------------------- BlockMatrix
+
+impl DistributedLinearOperator for BlockMatrix {
+    fn num_rows(&self) -> Result<usize> {
+        Ok(self.num_rows)
+    }
+
+    fn num_cols(&self) -> Result<usize> {
+        Ok(self.num_cols)
+    }
+
+    /// Block-partitioned SpMV: each block multiplies its x-slice into the
+    /// matching y-slice of a local accumulator, tree-summed.
+    fn matvec(&self, x: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(x.len(), self.num_cols, "block matvec dims");
+        let m = self.num_rows;
+        let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
+        let bx = self.context().broadcast(x.clone());
+        let partial = self.blocks.map_partitions_with_index(move |_p, blocks| {
+            let x = bx.value();
+            let mut acc = vec![0.0; m];
+            for ((bi, bj), blk) in blocks {
+                let (r0, c0) = (*bi * rpb, *bj * cpb);
+                for i in 0..blk.rows {
+                    let row = blk.row(i);
+                    let mut s = 0.0;
+                    for (j, &v) in row.iter().enumerate() {
+                        s += v * x[c0 + j];
+                    }
+                    acc[r0 + i] += s;
+                }
+            }
+            vec![acc]
+        });
+        tree_sum_vec(&partial, m).map(Vector)
+    }
+
+    fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        crate::ensure_dims!(y.len(), self.num_rows, "block rmatvec dims");
+        let n = self.num_cols;
+        let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
+        let by = self.context().broadcast(y.clone());
+        let partial = self.blocks.map_partitions_with_index(move |_p, blocks| {
+            let y = by.value();
+            let mut acc = vec![0.0; n];
+            for ((bi, bj), blk) in blocks {
+                let (r0, c0) = (*bi * rpb, *bj * cpb);
+                for i in 0..blk.rows {
+                    let alpha = y[r0 + i];
+                    if alpha == 0.0 {
+                        continue;
+                    }
+                    let row = blk.row(i);
+                    for (j, &v) in row.iter().enumerate() {
+                        acc[c0 + j] += alpha * v;
+                    }
+                }
+            }
+            vec![acc]
+        });
+        tree_sum_vec(&partial, n).map(Vector)
+    }
+
+    /// Gram via row stripes: group blocks by block-row (one shuffle),
+    /// each stripe contributes `Σ blkᵀ₁·blk₂` at the matching column
+    /// offsets, tree-summed. Enables the tall-skinny SVD path without
+    /// converting to rows.
+    fn dense_gram(&self) -> Result<Option<DenseMatrix>> {
+        let n = self.num_cols;
+        let cpb = self.cols_per_block;
+        let parts = self.blocks.num_partitions().max(1);
+        let stripes = self
+            .blocks
+            .map(|((bi, bj), m)| (*bi, (*bj, m.clone())))
+            .group_by_key(parts);
+        let partial = stripes.map(move |(_bi, blks)| {
+            let mut g = DenseMatrix::zeros(n, n);
+            for (bj1, m1) in blks {
+                let t = m1.transpose();
+                for (bj2, m2) in blks {
+                    let p = t.matmul(m2).expect("stripe blocks share row count");
+                    let (c1, c2) = (*bj1 * cpb, *bj2 * cpb);
+                    for i in 0..p.rows {
+                        for j in 0..p.cols {
+                            let cur = g.get(c1 + i, c2 + j);
+                            g.set(c1 + i, c2 + j, cur + p.get(i, j));
+                        }
+                    }
+                }
+            }
+            g
+        });
+        let g = partial.tree_aggregate(
+            DenseMatrix::zeros(n, n),
+            |acc, g| acc.add(g).expect("gram shapes agree"),
+            |a, b| a.add(&b).expect("gram shapes agree"),
+            TREE_FANIN,
+        )?;
+        Ok(Some(g))
+    }
+
+    fn frob_norm_sq(&self) -> Result<f64> {
+        self.blocks.aggregate(
+            0.0,
+            |a, (_k, m)| {
+                let f = m.frob_norm();
+                a + f * f
+            },
+            |a, b| a + b,
+        )
+    }
+
+    fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
+        crate::ensure_dims!(b.rows, self.num_cols, "block multiply_local dims");
+        let k = b.cols;
+        let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
+        let (grid_rows, _) = self.grid();
+        let m = self.num_rows;
+        let parts = self.blocks.num_partitions().max(1);
+        let bb = self.context().broadcast(b.clone());
+        let partials = self.blocks.map(move |((bi, bj), blk)| {
+            let b = bb.value();
+            let c0 = *bj * cpb;
+            let mut out = DenseMatrix::zeros(blk.rows, k);
+            for i in 0..blk.rows {
+                let row = blk.row(i);
+                for (j, &v) in row.iter().enumerate() {
+                    if v != 0.0 {
+                        for c in 0..k {
+                            let cur = out.get(i, c);
+                            out.set(i, c, cur + v * b.get(c0 + j, c));
+                        }
+                    }
+                }
+            }
+            (*bi, out)
+        });
+        // seed every block-row with zeros so stripes with no stored
+        // blocks still emit their (zero) rows — exactly `num_rows` rows out
+        let per = grid_rows.div_ceil(parts);
+        let zeros = self.context().generate("block_multiply_local_zeros", parts, move |p| {
+            let lo = (p * per).min(grid_rows);
+            let hi = ((p + 1) * per).min(grid_rows);
+            (lo..hi)
+                .map(|bi| (bi, DenseMatrix::zeros(rpb.min(m - bi * rpb), k)))
+                .collect()
+        });
+        let reduced = partials.union(&zeros).reduce_by_key(parts, |a: &DenseMatrix, b: &DenseMatrix| {
+            a.add(b).expect("partial U blocks share shape")
+        });
+        let rows = reduced.flat_map(|(_bi, m)| {
+            (0..m.rows).map(|i| Row::Dense(m.row(i).to_vec())).collect::<Vec<_>>()
+        });
+        Ok(RowMatrix::new(self.context(), rows, Some(k)))
+    }
+}
+
+impl DistributedMatrix for BlockMatrix {
+    fn context(&self) -> &Context {
+        BlockMatrix::context(self)
+    }
+
+    fn cached(&self) -> Self {
+        self.cache()
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        BlockMatrix::nnz(self)
+    }
+
+    fn to_row(&self, num_partitions: usize) -> Result<RowMatrix> {
+        Ok(self.to_indexed_row_matrix(num_partitions)?.to_row_matrix())
+    }
+
+    fn to_indexed(&self, num_partitions: usize) -> Result<IndexedRowMatrix> {
+        self.to_indexed_row_matrix(num_partitions)
+    }
+
+    fn to_coordinate(&self, _num_partitions: usize) -> Result<CoordinateMatrix> {
+        Ok(self.to_coordinate_matrix())
+    }
+
+    fn to_block(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        if rows_per_block == self.rows_per_block && cols_per_block == self.cols_per_block {
+            return Ok(self.clone());
+        }
+        self.to_coordinate_matrix()
+            .to_block_matrix(rows_per_block, cols_per_block, num_partitions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("operator_test", 2)
+    }
+
+    /// Build the same random matrix in all four formats.
+    fn all_formats(
+        c: &Context,
+        a: &DenseMatrix,
+    ) -> (RowMatrix, IndexedRowMatrix, CoordinateMatrix, BlockMatrix) {
+        let rm = RowMatrix::from_local(c, a, 3);
+        let irm = rm.to_indexed_row_matrix().unwrap();
+        let cm = CoordinateMatrix::from_local(c, a, 3);
+        let bm = BlockMatrix::from_local(c, a, 3, 2, 3);
+        (rm, irm, cm, bm)
+    }
+
+    fn operator_checks<Op: DistributedLinearOperator>(
+        label: &str,
+        op: &Op,
+        a: &DenseMatrix,
+        x: &Vector,
+        y: &Vector,
+    ) {
+        assert_eq!(op.num_rows().unwrap(), a.rows, "{label} rows");
+        assert_eq!(op.num_cols().unwrap(), a.cols, "{label} cols");
+        let mv = op.matvec(x).unwrap();
+        assert_allclose(&mv.0, &a.matvec(x).unwrap().0, 1e-10, &format!("{label} matvec"));
+        let rv = op.rmatvec(y).unwrap();
+        assert_allclose(&rv.0, &a.tmatvec(y).unwrap().0, 1e-10, &format!("{label} rmatvec"));
+        let gv = op.gramvec(x).unwrap();
+        let want = a.gram().matvec(x).unwrap();
+        assert_allclose(&gv.0, &want.0, 1e-9, &format!("{label} gramvec"));
+        let f = op.frob_norm_sq().unwrap();
+        let want_f = a.frob_norm() * a.frob_norm();
+        assert!((f - want_f).abs() < 1e-8 * (1.0 + want_f), "{label} frob");
+    }
+
+    #[test]
+    fn all_four_formats_agree_with_local_property() {
+        check("operator trait == local linear algebra", 6, |g| {
+            let c = ctx();
+            let m = 2 + g.int(0, 15);
+            let n = 1 + g.int(0, 7);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let x = Vector((0..n).map(|_| g.normal()).collect());
+            let y = Vector((0..m).map(|_| g.normal()).collect());
+            let (rm, irm, cm, bm) = all_formats(&c, &a);
+            operator_checks("row", &rm, &a, &x, &y);
+            operator_checks("indexed", &irm, &a, &x, &y);
+            operator_checks("coordinate", &cm, &a, &x, &y);
+            operator_checks("block", &bm, &a, &x, &y);
+        });
+    }
+
+    #[test]
+    fn dense_gram_row_and_block_agree() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(21);
+        let a = DenseMatrix::randn(17, 6, &mut rng);
+        let (rm, irm, cm, bm) = all_formats(&c, &a);
+        let want = a.gram();
+        let gr = DistributedLinearOperator::dense_gram(&rm).unwrap().unwrap();
+        assert!(gr.max_abs_diff(&want) < 1e-9, "row gram");
+        let gb = bm.dense_gram().unwrap().unwrap();
+        assert!(gb.max_abs_diff(&want) < 1e-9, "block stripe gram");
+        // formats without a fused gram report None (ARPACK fallback)
+        assert!(irm.dense_gram().unwrap().is_none());
+        assert!(cm.dense_gram().unwrap().is_none());
+    }
+
+    #[test]
+    fn multiply_local_gram_invariant_across_formats() {
+        // coordinate/block emit rows in shuffle order, so compare the
+        // row-permutation-invariant Gram of A·B instead of rows directly
+        let c = ctx();
+        let mut rng = SplitMix64::new(22);
+        let a = DenseMatrix::randn(14, 5, &mut rng);
+        let b = DenseMatrix::randn(5, 3, &mut rng);
+        let want = a.matmul(&b).unwrap().gram();
+        let (rm, irm, cm, bm) = all_formats(&c, &a);
+        for (label, got) in [
+            ("row", DistributedLinearOperator::multiply_local(&rm, &b).unwrap()),
+            ("indexed", DistributedLinearOperator::multiply_local(&irm, &b).unwrap()),
+            ("coordinate", cm.multiply_local(&b).unwrap()),
+            ("block", bm.multiply_local(&b).unwrap()),
+        ] {
+            let g = got.gram().unwrap();
+            assert!(g.max_abs_diff(&want) < 1e-9, "{label} multiply_local gram");
+        }
+    }
+
+    #[test]
+    fn multiply_local_keeps_zero_rows() {
+        // an all-zero row (and an entire empty block stripe) must still
+        // appear as a zero row of A·B — U would otherwise lose rows
+        let c = ctx();
+        let mut a = DenseMatrix::zeros(7, 3);
+        a.set(0, 1, 2.0);
+        a.set(2, 0, -1.0);
+        a.set(2, 2, 4.0); // rows 1, 3..6 all zero; block stripes beyond 2 empty
+        let b = DenseMatrix::eye(3);
+        let cm = CoordinateMatrix::from_local(&c, &a, 2);
+        // from_coordinate stores only blocks with entries, so stripes
+        // covering rows 4..7 are genuinely absent here
+        let bm = BlockMatrix::from_coordinate(&cm, 2, 2, 2).unwrap();
+        for (label, got) in [
+            ("coordinate", cm.multiply_local(&b).unwrap()),
+            ("block", bm.multiply_local(&b).unwrap()),
+        ] {
+            assert_eq!(got.num_rows().unwrap(), 7, "{label} row count");
+            let g = got.gram().unwrap();
+            assert!(g.max_abs_diff(&a.gram()) < 1e-12, "{label} values");
+        }
+    }
+
+    #[test]
+    fn operator_dims_checked() {
+        let c = ctx();
+        let a = DenseMatrix::randn(6, 4, &mut SplitMix64::new(23));
+        let cm = CoordinateMatrix::from_local(&c, &a, 2);
+        assert!(cm.matvec(&Vector::zeros(5)).is_err());
+        assert!(cm.rmatvec(&Vector::zeros(5)).is_err());
+        let bm = BlockMatrix::from_local(&c, &a, 2, 2, 2);
+        assert!(bm.matvec(&Vector::zeros(3)).is_err());
+        assert!(bm.rmatvec(&Vector::zeros(7)).is_err());
+    }
+}

@@ -12,6 +12,9 @@
 use std::sync::{Arc, OnceLock};
 
 use crate::coordinator::context::Context;
+use crate::distributed::block_matrix::BlockMatrix;
+use crate::distributed::coordinate_matrix::CoordinateMatrix;
+use crate::distributed::indexed_row_matrix::IndexedRowMatrix;
 use crate::distributed::row::{rows_to_block, Row};
 use crate::distributed::statistics::ColumnSummaries;
 use crate::error::{Error, Result};
@@ -189,23 +192,61 @@ impl RowMatrix {
             }
             vec![acc]
         });
-        let out = partial.tree_aggregate(
-            vec![0.0; n],
-            |mut acc: Vec<f64>, v| {
-                for (a, b) in acc.iter_mut().zip(v) {
-                    *a += b;
-                }
-                acc
-            },
-            |mut a, b| {
-                for (x, y) in a.iter_mut().zip(b) {
-                    *x += y;
-                }
-                a
-            },
-            TREE_FANIN,
-        )?;
-        Ok(Vector(out))
+        crate::distributed::operator::tree_sum_vec(&partial, n).map(Vector)
+    }
+
+    /// `A·x` — forward mat-vec: broadcast x, each partition dots its
+    /// rows, collected in partition (= row) order. One cluster pass; the
+    /// TFOCS forward map (b-space vectors are driver-resident).
+    pub fn matvec(&self, x: &Vector) -> Result<Vector> {
+        let n = self.num_cols()?;
+        crate::ensure_dims!(x.len(), n, "matvec x dims");
+        let bx = self.ctx.broadcast(x.clone());
+        let parts = self
+            .rows
+            .map_partitions_with_index(move |_p, rows| {
+                let x = bx.value();
+                rows.iter().map(|r| r.dot(x)).collect()
+            })
+            .collect()?;
+        Ok(Vector(parts))
+    }
+
+    /// Per-partition starting row offsets (one cheap count pass) —
+    /// shared by `rmatvec` and `to_indexed_row_matrix`.
+    fn partition_offsets(&self) -> Result<Vec<usize>> {
+        let counts = self
+            .rows
+            .map_partitions_with_index(|_p, rows| vec![rows.len()])
+            .collect()?;
+        let mut offsets = vec![0usize; counts.len()];
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            offsets[i] = acc;
+            acc += c;
+        }
+        Ok(offsets)
+    }
+
+    /// `Aᵀ·y` — adjoint mat-vec: slice y by partition offsets, scatter
+    /// `y[i]·rowᵢ` per partition, tree-sum. One cluster pass (plus a
+    /// cheap count pass for the offsets).
+    pub fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        let m = self.num_rows()?;
+        crate::ensure_dims!(y.len(), m, "rmatvec y dims");
+        let n = self.num_cols()?;
+        let offsets = self.partition_offsets()?;
+        let by = self.ctx.broadcast((y.clone(), offsets));
+        let partial = self.rows.map_partitions_with_index(move |p, rows| {
+            let (y, offsets) = by.value();
+            let off = offsets[p];
+            let mut out = vec![0.0; n];
+            for (i, r) in rows.iter().enumerate() {
+                r.axpy_into(y[off + i], &mut out);
+            }
+            vec![out]
+        });
+        crate::distributed::operator::tree_sum_vec(&partial, n).map(Vector)
     }
 
     /// `A · B` for a small local `B` (n×k): broadcast B, each partition
@@ -266,6 +307,36 @@ impl RowMatrix {
         self.rows.aggregate(0usize, |a, r| a + r.nnz(), |a, b| a + b)
     }
 
+    /// Attach sequential row indices (partition offsets computed in one
+    /// cheap count pass) — `RowMatrix → IndexedRowMatrix`, no shuffle.
+    pub fn to_indexed_row_matrix(&self) -> Result<IndexedRowMatrix> {
+        let offsets = self.partition_offsets()?;
+        let rdd = self.rows.map_partitions_with_index(move |p, rows| {
+            rows.iter()
+                .enumerate()
+                .map(|(i, r)| ((offsets[p] + i) as u64, r.clone()))
+                .collect()
+        });
+        Ok(IndexedRowMatrix::new(&self.ctx, rdd, self.n_cols.get().copied()))
+    }
+
+    /// Explode into coordinate entries (via the indexed form; no shuffle
+    /// — entries stay in their source partitions).
+    pub fn to_coordinate_matrix(&self) -> Result<CoordinateMatrix> {
+        self.to_indexed_row_matrix()?.to_coordinate_matrix()
+    }
+
+    /// Re-block into a [`BlockMatrix`] (one shuffle, via coordinates).
+    pub fn to_block_matrix(
+        &self,
+        rows_per_block: usize,
+        cols_per_block: usize,
+        num_partitions: usize,
+    ) -> Result<BlockMatrix> {
+        self.to_coordinate_matrix()?
+            .to_block_matrix(rows_per_block, cols_per_block, num_partitions)
+    }
+
     /// Rank-k SVD; dispatches tall-skinny vs ARPACK automatically
     /// (§3.1's `computeSVD`). See [`crate::distributed::svd`].
     pub fn compute_svd(&self, k: usize, compute_u: bool) -> Result<SingularValueDecompositionView> {
@@ -324,6 +395,11 @@ impl RowMatrix {
 /// `SingularValueDecomposition[RowMatrix, Matrix]`.
 pub struct SingularValueDecompositionView {
     /// Left singular vectors as a RowMatrix (None unless requested).
+    /// Always exactly `num_rows` rows; row *order* aligns with A's
+    /// storage order only when A was a row format — for coordinate/block
+    /// operators the rows arrive in shuffle order (see
+    /// [`crate::distributed::DistributedLinearOperator::multiply_local`]),
+    /// so use `u` for subspace/orthonormality purposes there.
     pub u: Option<RowMatrix>,
     /// Singular values, descending.
     pub s: Vec<f64>,

@@ -9,8 +9,15 @@
 //!
 //! `computeSVD` on the paper's `RowMatrix` makes the same choice
 //! automatically "so the user does not need to make that decision".
+//!
+//! Both drivers are generic over [`DistributedLinearOperator`]: the
+//! Lanczos reverse-communication loop only ever asks for `gramvec`, and
+//! the tall-skinny path only needs a fused `dense_gram` — so the same
+//! `compute_svd` runs over row, indexed-row, coordinate, or block
+//! storage, with no conversion to row form.
 
 use crate::arpack::{Lanczos, LanczosStep};
+use crate::distributed::operator::DistributedLinearOperator;
 use crate::distributed::row_matrix::{RowMatrix, SingularValueDecompositionView};
 use crate::error::{Error, Result};
 use crate::linalg::matrix::DenseMatrix;
@@ -31,27 +38,51 @@ pub const TALL_SKINNY_MAX_COLS: usize = 1024;
 /// from rank deficiency (same reasoning as MLlib's computeSVD rCond).
 pub const RCOND: f64 = 1e-6;
 
-/// Compute the rank-k SVD of a distributed RowMatrix.
-pub fn compute_svd(a: &RowMatrix, k: usize, compute_u: bool) -> Result<SingularValueDecomposition> {
+/// Compute the rank-k SVD of any distributed operator: tall-skinny when
+/// the format has a fused Gram kernel and n is small enough for the
+/// driver, ARPACK (gramvec iteration) otherwise.
+pub fn compute_svd<Op: DistributedLinearOperator>(
+    a: &Op,
+    k: usize,
+    compute_u: bool,
+) -> Result<SingularValueDecomposition> {
     let n = a.num_cols()?;
     if k == 0 || k > n {
         return Err(Error::InvalidArgument(format!("svd: k={k} out of range (n={n})")));
     }
     if n <= TALL_SKINNY_MAX_COLS {
-        tall_skinny_svd(a, k, compute_u)
-    } else {
-        arpack_svd(a, k, compute_u)
+        if let Some(g) = a.dense_gram()? {
+            return tall_skinny_from_gram(a, &g, k, compute_u);
+        }
     }
+    arpack_svd(a, k, compute_u)
 }
 
 /// §3.1.2: Gram on the cluster, eigen on the driver, U distributed.
-pub fn tall_skinny_svd(
-    a: &RowMatrix,
+/// Errors for formats without a fused Gram kernel (entry formats go
+/// through [`arpack_svd`] / [`compute_svd`] instead).
+pub fn tall_skinny_svd<Op: DistributedLinearOperator>(
+    a: &Op,
     k: usize,
     compute_u: bool,
 ) -> Result<SingularValueDecomposition> {
-    let g = a.gram()?; // 1 distributed matrix op
-    let eig = crate::linalg::eig::eig_sym(&g)?;
+    let g = a.dense_gram()?.ok_or_else(|| {
+        Error::InvalidArgument(
+            "tall-skinny SVD needs a fused Gram kernel (RowMatrix / BlockMatrix); \
+             use compute_svd, which falls back to ARPACK"
+                .into(),
+        )
+    })?;
+    tall_skinny_from_gram(a, &g, k, compute_u)
+}
+
+fn tall_skinny_from_gram<Op: DistributedLinearOperator>(
+    a: &Op,
+    g: &DenseMatrix,
+    k: usize,
+    compute_u: bool,
+) -> Result<SingularValueDecomposition> {
+    let eig = crate::linalg::eig::eig_sym(g)?;
     let (s, v) = triplets_from_gram_eig(&eig, k)?;
     let u = if compute_u { Some(recover_u(a, &s, &v)?) } else { None };
     Ok(SingularValueDecomposition {
@@ -64,8 +95,13 @@ pub fn tall_skinny_svd(
 }
 
 /// §3.1.1: ARPACK-style. The eigensolver runs on the driver and only ever
-/// asks for `AᵀA·x`; each request becomes a cluster job.
-pub fn arpack_svd(a: &RowMatrix, k: usize, compute_u: bool) -> Result<SingularValueDecomposition> {
+/// asks for `AᵀA·x`; each request becomes a cluster job (one fused pass
+/// for row formats, two for entry formats).
+pub fn arpack_svd<Op: DistributedLinearOperator>(
+    a: &Op,
+    k: usize,
+    compute_u: bool,
+) -> Result<SingularValueDecomposition> {
     let n = a.num_cols()?;
     let mut solver = Lanczos::new(n, k, 1e-10, 100 * k.max(10))?;
     loop {
@@ -127,8 +163,13 @@ fn svd_rcond() -> f64 {
 }
 
 /// `U = A (V Σ⁻¹)` — broadcast the small n×k factor, one map (§3.1.2:
-/// "from there it is embarrassingly parallel").
-fn recover_u(a: &RowMatrix, s: &[f64], v: &DenseMatrix) -> Result<RowMatrix> {
+/// "from there it is embarrassingly parallel"). Row order follows the
+/// operator's `multiply_local` contract.
+fn recover_u<Op: DistributedLinearOperator>(
+    a: &Op,
+    s: &[f64],
+    v: &DenseMatrix,
+) -> Result<RowMatrix> {
     let mut vs = v.clone();
     for j in 0..s.len() {
         let inv = 1.0 / s[j];

@@ -33,6 +33,23 @@
 //! let svd = mat.compute_svd(5, true).unwrap();
 //! println!("top singular values: {:?}", svd.s);
 //! ```
+//!
+//! The drivers are generic over
+//! [`distributed::DistributedLinearOperator`] — the same SVD (and the
+//! TFOCS/optim solvers) runs over a sparse entry-format matrix with no
+//! conversion shuffle:
+//!
+//! ```no_run
+//! use sparkla::Context;
+//! use sparkla::distributed::svd::compute_svd;
+//! use sparkla::distributed::CoordinateMatrix;
+//!
+//! let ctx = Context::local("sparse-svd", 4);
+//! // 1M x 100k, ~10M nonzeros, never converted to rows
+//! let a = CoordinateMatrix::sprand(&ctx, 1_000_000, 100_000, 10_000_000, 64, 7);
+//! let svd = compute_svd(&a, 10, false).unwrap();
+//! println!("{} via {}", svd.s.len(), svd.algorithm); // "arpack-gramvec"
+//! ```
 
 pub mod error;
 pub mod util;

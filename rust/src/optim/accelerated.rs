@@ -10,8 +10,7 @@
 
 use crate::error::Result;
 use crate::linalg::vector::Vector;
-use crate::optim::problem::DistProblem;
-use crate::optim::Trace;
+use crate::optim::{Problem, Trace};
 
 /// Accelerated-method configuration.
 #[derive(Debug, Clone)]
@@ -53,8 +52,8 @@ impl AccelConfig {
     }
 }
 
-/// Run the AT accelerated method from `w0`.
-pub fn accelerated(problem: &DistProblem, w0: &Vector, cfg: &AccelConfig) -> Result<Trace> {
+/// Run the AT accelerated method from `w0` — over any [`Problem`].
+pub fn accelerated<P: Problem>(problem: &P, w0: &Vector, cfg: &AccelConfig) -> Result<Trace> {
     let mut x = w0.clone();
     let mut z = w0.clone();
     let mut theta: f64 = 1.0;
@@ -72,7 +71,7 @@ pub fn accelerated(problem: &DistProblem, w0: &Vector, cfg: &AccelConfig) -> Res
             let tz = step / theta;
             let mut z_arg = z.clone();
             z_arg.axpy(-tz, &gy);
-            let z_new = problem.regularizer.prox(&z_arg, tz);
+            let z_new = problem.regularizer().prox(&z_arg, tz);
             // x⁺ = (1-θ)x + θz⁺
             let x_new = Vector::lincomb(1.0 - theta, &x, theta, &z_new);
             if !cfg.backtracking {

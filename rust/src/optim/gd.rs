@@ -8,8 +8,7 @@
 
 use crate::error::Result;
 use crate::linalg::vector::Vector;
-use crate::optim::problem::DistProblem;
-use crate::optim::Trace;
+use crate::optim::{Problem, Trace};
 
 /// Configuration for gradient descent.
 #[derive(Debug, Clone)]
@@ -29,8 +28,9 @@ impl Default for GdConfig {
     }
 }
 
-/// Run (proximal) gradient descent from `w0`.
-pub fn gradient_descent(problem: &DistProblem, w0: &Vector, cfg: &GdConfig) -> Result<Trace> {
+/// Run (proximal) gradient descent from `w0` — over any [`Problem`]
+/// (labeled rows or an operator-backed least squares).
+pub fn gradient_descent<P: Problem>(problem: &P, w0: &Vector, cfg: &GdConfig) -> Result<Trace> {
     let mut w = w0.clone();
     let mut objective = vec![problem.full_objective(&w)?];
     let mut grad_evals = 1;
@@ -39,7 +39,7 @@ pub fn gradient_descent(problem: &DistProblem, w0: &Vector, cfg: &GdConfig) -> R
         grad_evals += 1;
         let mut next = w.clone();
         next.axpy(-cfg.step_size, &g);
-        let next = problem.regularizer.prox(&next, cfg.step_size);
+        let next = problem.regularizer().prox(&next, cfg.step_size);
         let delta = next.sub(&w).norm2() / w.norm2().max(1.0);
         w = next;
         objective.push(problem.full_objective(&w)?);

@@ -8,8 +8,7 @@ use std::collections::VecDeque;
 
 use crate::error::Result;
 use crate::linalg::vector::Vector;
-use crate::optim::problem::DistProblem;
-use crate::optim::Trace;
+use crate::optim::{Problem, Trace};
 
 /// L-BFGS configuration.
 #[derive(Debug, Clone)]
@@ -36,8 +35,8 @@ impl Default for LbfgsConfig {
 
 /// Run L-BFGS from `w0` (smooth objectives only — use the accelerated
 /// prox methods for L1).
-pub fn lbfgs(problem: &DistProblem, w0: &Vector, cfg: &LbfgsConfig) -> Result<Trace> {
-    if !problem.regularizer.is_smooth() {
+pub fn lbfgs<P: Problem>(problem: &P, w0: &Vector, cfg: &LbfgsConfig) -> Result<Trace> {
+    if !problem.regularizer().is_smooth() {
         return Err(crate::error::Error::InvalidArgument(
             "lbfgs requires a smooth objective (L1 needs prox methods — use accelerated or OWL-QN)"
                 .into(),

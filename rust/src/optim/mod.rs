@@ -14,12 +14,47 @@
 
 pub mod objective;
 pub mod problem;
+pub mod operator_problem;
 pub mod gd;
 pub mod accelerated;
 pub mod lbfgs;
 
 pub use objective::{Objective, Regularizer};
+pub use operator_problem::OperatorProblem;
 pub use problem::DistProblem;
+
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+
+/// The solver-facing contract: anything that can serve the §3.3 loop
+/// body — a distributed (loss, gradient) pass plus driver-side
+/// regularizer metadata. [`DistProblem`] (labeled rows, fused kernels)
+/// and [`OperatorProblem`] (least squares over any
+/// [`crate::distributed::DistributedLinearOperator`]) both implement it,
+/// so all six Figure-1 optimizers run over either.
+pub trait Problem: Send + Sync {
+    /// Parameter dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// The (driver-side) regularizer.
+    fn regularizer(&self) -> Regularizer;
+
+    /// **The distributed pass**: smooth loss + gradient at `w` (data
+    /// term + smooth regularizer). The Fig. 1 x-axis unit.
+    fn loss_grad(&self, w: &Vector) -> Result<(f64, Vector)>;
+
+    /// Full objective including nonsmooth terms (for reporting).
+    fn full_objective(&self, w: &Vector) -> Result<f64> {
+        let (smooth, _) = self.loss_grad(w)?;
+        Ok(match self.regularizer() {
+            Regularizer::L1(_) => smooth + self.regularizer().value(w),
+            _ => smooth, // L2 already included by loss_grad
+        })
+    }
+
+    /// Crude Lipschitz bound for initial step sizes.
+    fn lipschitz_estimate(&self) -> Result<f64>;
+}
 
 /// A recorded optimization run: per-iteration objective values (the
 /// Figure 1 y-axis is `log10(f - f*)`).

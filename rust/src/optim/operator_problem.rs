@@ -1,0 +1,154 @@
+//! `OperatorProblem` — the §3.3 gradient pass over **any**
+//! [`DistributedLinearOperator`]: least squares `½‖Aw − b‖²` (+
+//! regularizer) where the data term's gradient `Aᵀ(Aw − b)` is served by
+//! the operator contract (one `matvec` + one `rmatvec` per iteration).
+//!
+//! Where [`crate::optim::DistProblem`] fuses loss and gradient into one
+//! pass over labeled rows, this trades a second pass for format freedom:
+//! a coordinate or block matrix never converts to row form to be
+//! optimized over.
+
+use crate::distributed::operator::DistributedLinearOperator;
+use crate::error::Result;
+use crate::linalg::vector::Vector;
+use crate::optim::objective::Regularizer;
+use crate::optim::Problem;
+
+/// Distributed least-squares problem over an arbitrary operator.
+pub struct OperatorProblem<Op: DistributedLinearOperator> {
+    op: Op,
+    b: Vector,
+    regularizer: Regularizer,
+    n: usize,
+}
+
+impl<Op: DistributedLinearOperator> OperatorProblem<Op> {
+    /// Wrap an operator and a driver-local target `b` (length = rows).
+    pub fn new(op: Op, b: Vector, regularizer: Regularizer) -> Result<OperatorProblem<Op>> {
+        let m = op.num_rows()?;
+        let n = op.num_cols()?;
+        crate::ensure_dims!(b.len(), m, "operator problem b dims");
+        Ok(OperatorProblem { op, b, regularizer, n })
+    }
+
+    /// The wrapped operator.
+    pub fn operator(&self) -> &Op {
+        &self.op
+    }
+}
+
+impl<Op: DistributedLinearOperator> Problem for OperatorProblem<Op> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn regularizer(&self) -> Regularizer {
+        self.regularizer
+    }
+
+    fn loss_grad(&self, w: &Vector) -> Result<(f64, Vector)> {
+        // r = Aw − b (one cluster pass); loss = ½‖r‖² is a driver-side
+        // vector op; grad = Aᵀr (second cluster pass)
+        let mut r = self.op.matvec(w)?;
+        r.axpy(-1.0, &self.b);
+        let mut loss = 0.5 * r.dot(&r);
+        let mut grad = self.op.rmatvec(&r)?;
+        if let Regularizer::L2(_) = self.regularizer {
+            loss += self.regularizer.value(w);
+        }
+        self.regularizer.add_smooth_grad(w, &mut grad);
+        Ok((loss, grad))
+    }
+
+    /// Loss-only evaluation: one `matvec` pass (the default would pay an
+    /// `rmatvec` for a gradient it throws away — a 33% per-iteration
+    /// cluster-cost overhead for gd/accelerated, which call this every
+    /// step for reporting).
+    fn full_objective(&self, w: &Vector) -> Result<f64> {
+        let mut r = self.op.matvec(w)?;
+        r.axpy(-1.0, &self.b);
+        Ok(0.5 * r.dot(&r) + self.regularizer.value(w))
+    }
+
+    fn lipschitz_estimate(&self) -> Result<f64> {
+        let l2 = if let Regularizer::L2(lambda) = self.regularizer { lambda } else { 0.0 };
+        Ok((self.op.frob_norm_sq()? + l2).max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::context::Context;
+    use crate::distributed::coordinate_matrix::CoordinateMatrix;
+    use crate::distributed::row_matrix::RowMatrix;
+    use crate::linalg::matrix::DenseMatrix;
+    use crate::optim::gd::{gradient_descent, GdConfig};
+    use crate::optim::objective::Objective;
+    use crate::optim::problem::DistProblem;
+    use crate::util::prop::{assert_allclose, assert_close};
+    use crate::util::rng::SplitMix64;
+
+    fn ctx() -> Context {
+        Context::local("op_problem_test", 2)
+    }
+
+    #[test]
+    fn matches_dist_problem_least_squares() {
+        let c = ctx();
+        let mut rng = SplitMix64::new(1);
+        let a = DenseMatrix::randn(40, 5, &mut rng);
+        let b = Vector(rng.normal_vec(40));
+        let rows: Vec<Vec<f64>> = (0..a.rows).map(|i| a.row(i).to_vec()).collect();
+        let dist = DistProblem::from_dense(
+            &c,
+            rows,
+            b.0.clone(),
+            3,
+            Objective::LeastSquares,
+            Regularizer::L2(0.3),
+        )
+        .unwrap();
+        let op = OperatorProblem::new(
+            RowMatrix::from_local(&c, &a, 3),
+            b.clone(),
+            Regularizer::L2(0.3),
+        )
+        .unwrap();
+        let w = Vector::from(&[0.2, -0.1, 0.4, 0.0, -0.5]);
+        let (l1, g1) = DistProblem::loss_grad(&dist, &w).unwrap();
+        let (l2, g2) = Problem::loss_grad(&op, &w).unwrap();
+        assert_close(l1, l2, 1e-9, "loss agreement");
+        assert_allclose(&g1.0, &g2.0, 1e-9, "grad agreement");
+    }
+
+    #[test]
+    fn gradient_descent_over_coordinate_matrix() {
+        // the satellite claim: optim runs over an entry-format matrix
+        // with no conversion to row form
+        let c = ctx();
+        let mut rng = SplitMix64::new(2);
+        let a = DenseMatrix::randn(60, 4, &mut rng);
+        let w_true = Vector::from(&[1.0, -2.0, 0.5, 3.0]);
+        let b = a.matvec(&w_true).unwrap();
+        let cm = CoordinateMatrix::from_local(&c, &a, 3);
+        let p = OperatorProblem::new(cm, b, Regularizer::None).unwrap();
+        let step = 1.0 / p.lipschitz_estimate().unwrap();
+        let t = gradient_descent(
+            &p,
+            &Vector::zeros(4),
+            &GdConfig { step_size: step, max_iters: 800, tol: 1e-12 },
+        )
+        .unwrap();
+        let err = t.solution.sub(&w_true).norm2() / w_true.norm2();
+        assert!(err < 1e-3, "recovery err {err}");
+    }
+
+    #[test]
+    fn b_dims_checked() {
+        let c = ctx();
+        let a = DenseMatrix::randn(10, 3, &mut SplitMix64::new(3));
+        let rm = RowMatrix::from_local(&c, &a, 2);
+        assert!(OperatorProblem::new(rm, Vector::zeros(9), Regularizer::None).is_err());
+    }
+}

@@ -194,6 +194,28 @@ impl DistProblem {
     }
 }
 
+impl crate::optim::Problem for DistProblem {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn regularizer(&self) -> Regularizer {
+        self.regularizer
+    }
+
+    fn loss_grad(&self, w: &Vector) -> Result<(f64, Vector)> {
+        DistProblem::loss_grad(self, w)
+    }
+
+    fn full_objective(&self, w: &Vector) -> Result<f64> {
+        DistProblem::full_objective(self, w)
+    }
+
+    fn lipschitz_estimate(&self) -> Result<f64> {
+        DistProblem::lipschitz_estimate(self)
+    }
+}
+
 /// Synthetic problem generators matching the paper's Figure-1 workloads.
 pub mod synth {
     use super::*;

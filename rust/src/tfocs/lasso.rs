@@ -1,30 +1,31 @@
 //! `solve_lasso` — the paper's §3.2.2 helper: LASSO on a distributed
-//! matrix via the composite (SmoothQuad ∘ LinopMatrix + ProxL1) template,
-//! mirroring the Scala `SolverL1RLS.run(A, b, lambda)` call.
+//! matrix via the composite (SmoothQuad ∘ Linop + ProxL1) template,
+//! mirroring the Scala `SolverL1RLS.run(A, b, lambda)` call — over **any**
+//! distributed format (row, indexed-row, coordinate, block) through the
+//! operator trait, with no conversion to row form.
 
-use crate::distributed::row_matrix::RowMatrix;
+use crate::distributed::operator::{DistributedLinearOperator, DistributedMatrix};
 use crate::error::Result;
 use crate::linalg::vector::Vector;
-use crate::tfocs::linop::LinopMatrix;
+use crate::tfocs::linop::Linop;
 use crate::tfocs::prox::ProxL1;
 use crate::tfocs::smooth::SmoothQuad;
 use crate::tfocs::solver::{at, AtConfig, AtResult};
 
-/// Solve `min ½‖Ax − b‖² + λ‖x‖₁` over a distributed A.
+/// Solve `min ½‖Ax − b‖² + λ‖x‖₁` over any distributed A.
 /// `b` is driver-local (the b-space fits in memory — the TFOCS data
 /// pattern the paper supports first).
-pub fn solve_lasso(a: &RowMatrix, b: &Vector, lambda: f64, max_iters: usize) -> Result<AtResult> {
-    let op = LinopMatrix::new(a)?;
-    crate::ensure_dims!(b.len(), a.num_rows()?, "lasso b dims");
-    let x0 = Vector::zeros(a.num_cols()?);
-    // L0 from the Frobenius bound; backtracking refines
-    let stats = a.column_stats()?;
-    let l0: f64 = stats
-        .cols
-        .iter()
-        .map(|c| c.m2 + c.n as f64 * c.mean * c.mean)
-        .sum::<f64>()
-        .max(1.0);
+pub fn solve_lasso<Op: DistributedMatrix>(
+    a: &Op,
+    b: &Vector,
+    lambda: f64,
+    max_iters: usize,
+) -> Result<AtResult> {
+    let op = Linop::new(a)?;
+    crate::ensure_dims!(b.len(), op.operator().num_rows()?, "lasso b dims");
+    let x0 = Vector::zeros(op.operator().num_cols()?);
+    // L0 from the Frobenius bound ‖A‖²_F ≥ λ_max(AᵀA); backtracking refines
+    let l0 = op.operator().frob_norm_sq()?.max(1.0);
     at(
         &op,
         &SmoothQuad { b: b.clone() },

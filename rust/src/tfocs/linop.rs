@@ -1,12 +1,16 @@
 //! Linear-operator components (TFOCS's `linop` family).
 //!
-//! The distributed case (`LinopMatrix`) is the paper's §3.2 "multiple
-//! data distribution patterns. (Currently support is only implemented for
-//! RDD[Vector] row matrices.)": forward `A x` is a broadcast + map +
-//! collect (the image lives on the driver — TFOCS b-space vectors are
-//! small), adjoint `Aᵀ y` is a broadcast + tree-aggregate.
+//! The distributed case is the paper's §3.2 "multiple data distribution
+//! patterns": [`Linop`] is a blanket adapter lifting **any**
+//! [`DistributedLinearOperator`] — row, indexed-row, coordinate, or
+//! block storage — into the TFOCS [`LinearOperator`] contract. (The
+//! original port, like the paper's Scala code, supported only
+//! `RDD[Vector]` row matrices; the operator trait removes that
+//! restriction.) Forward `A x` and adjoint `Aᵀ y` are each one cluster
+//! pass; the images live on the driver — TFOCS b-space vectors are small.
 
-use crate::distributed::row_matrix::{RowMatrix, TREE_FANIN};
+use crate::distributed::operator::{DistributedLinearOperator, DistributedMatrix};
+use crate::distributed::row_matrix::RowMatrix;
 use crate::error::Result;
 use crate::linalg::matrix::DenseMatrix;
 use crate::linalg::vector::Vector;
@@ -23,23 +27,40 @@ pub trait LinearOperator: Send + Sync {
     fn apply_adjoint(&self, y: &Vector) -> Result<Vector>;
 }
 
-/// Distributed matrix operator over a RowMatrix.
-pub struct LinopMatrix {
-    a: RowMatrix,
+/// Distributed operator adapter: any [`DistributedLinearOperator`] as a
+/// TFOCS linear map (dimensions computed once at construction).
+pub struct Linop<Op: DistributedLinearOperator> {
+    op: Op,
     m: usize,
     n: usize,
 }
 
-impl LinopMatrix {
-    /// Wrap a RowMatrix (dimensions computed once here).
-    pub fn new(a: &RowMatrix) -> Result<LinopMatrix> {
-        let m = a.num_rows()?;
-        let n = a.num_cols()?;
-        Ok(LinopMatrix { a: a.cache(), m, n })
+impl<Op: DistributedLinearOperator> Linop<Op> {
+    /// Wrap an operator, resolving its dimensions once.
+    pub fn from_operator(op: Op) -> Result<Linop<Op>> {
+        let m = op.num_rows()?;
+        let n = op.num_cols()?;
+        Ok(Linop { op, m, n })
+    }
+
+    /// The wrapped operator.
+    pub fn operator(&self) -> &Op {
+        &self.op
     }
 }
 
-impl LinearOperator for LinopMatrix {
+impl<Op: DistributedMatrix> Linop<Op> {
+    /// Wrap a stored distributed matrix, caching its backing records
+    /// first (every TFOCS solve is iterative).
+    pub fn new(a: &Op) -> Result<Linop<Op>> {
+        Linop::from_operator(a.cached())
+    }
+}
+
+/// Backwards-compatible name for the row-matrix case.
+pub type LinopMatrix = Linop<RowMatrix>;
+
+impl<Op: DistributedLinearOperator> LinearOperator for Linop<Op> {
     fn domain_dim(&self) -> usize {
         self.n
     }
@@ -49,61 +70,12 @@ impl LinearOperator for LinopMatrix {
 
     fn apply(&self, x: &Vector) -> Result<Vector> {
         crate::ensure_dims!(x.len(), self.n, "linop apply dims");
-        let bx = self.a.context().broadcast(x.clone());
-        let parts = self
-            .a
-            .rows
-            .map_partitions_with_index(move |_p, rows| {
-                let x = bx.value();
-                rows.iter().map(|r| r.dot(x)).collect()
-            })
-            .collect()?;
-        Ok(Vector(parts))
+        self.op.matvec(x)
     }
 
     fn apply_adjoint(&self, y: &Vector) -> Result<Vector> {
         crate::ensure_dims!(y.len(), self.m, "linop adjoint dims");
-        let n = self.n;
-        // y must be sliced by the same partitioning as A's rows; compute
-        // partition offsets from per-partition counts
-        let counts = self
-            .a
-            .rows
-            .map_partitions_with_index(|_p, rows| vec![rows.len()])
-            .collect()?;
-        let mut offsets = vec![0usize; counts.len()];
-        let mut acc = 0;
-        for (i, c) in counts.iter().enumerate() {
-            offsets[i] = acc;
-            acc += c;
-        }
-        let by = self.a.context().broadcast((y.clone(), offsets));
-        let partial = self.a.rows.map_partitions_with_index(move |p, rows| {
-            let (y, offsets) = by.value();
-            let off = offsets[p];
-            let mut out = vec![0.0; n];
-            for (i, r) in rows.iter().enumerate() {
-                r.axpy_into(y[off + i], &mut out);
-            }
-            vec![out]
-        });
-        let sum = partial.tree_aggregate(
-            vec![0.0; n],
-            |mut a, v| {
-                for (x, y) in a.iter_mut().zip(v) {
-                    *x += y;
-                }
-                a
-            },
-            |mut a, b| {
-                for (x, y) in a.iter_mut().zip(b) {
-                    *x += y;
-                }
-                a
-            },
-            TREE_FANIN,
-        )?;
-        Ok(Vector(sum))
+        self.op.rmatvec(y)
     }
 }
 
@@ -198,6 +170,43 @@ mod tests {
                 1e-10,
                 "adjoint",
             );
+        });
+    }
+
+    #[test]
+    fn linop_over_entry_and_block_formats_property() {
+        // the lifted restriction: the same TFOCS operator contract served
+        // by coordinate and block storage, no row conversion
+        check("Linop<Coordinate/Block> == LinopLocal", 6, |g| {
+            let c = ctx();
+            let m = 1 + g.int(0, 20);
+            let n = 1 + g.int(0, 8);
+            let a = DenseMatrix::randn(m, n, g.rng());
+            let local = LinopLocal { a: a.clone() };
+            let x = Vector((0..n).map(|_| g.normal()).collect());
+            let y = Vector((0..m).map(|_| g.normal()).collect());
+            let coo = Linop::new(&crate::distributed::CoordinateMatrix::from_local(&c, &a, 3))
+                .unwrap();
+            let blk =
+                Linop::new(&crate::distributed::BlockMatrix::from_local(&c, &a, 3, 2, 2)).unwrap();
+            for (label, op) in
+                [("coordinate", &coo as &dyn LinearOperator), ("block", &blk as &dyn LinearOperator)]
+            {
+                assert_eq!(op.domain_dim(), n, "{label} domain");
+                assert_eq!(op.range_dim(), m, "{label} range");
+                assert_allclose(
+                    &op.apply(&x).unwrap().0,
+                    &local.apply(&x).unwrap().0,
+                    1e-10,
+                    label,
+                );
+                assert_allclose(
+                    &op.apply_adjoint(&y).unwrap().0,
+                    &local.apply_adjoint(&y).unwrap().0,
+                    1e-10,
+                    label,
+                );
+            }
         });
     }
 

@@ -29,7 +29,7 @@ pub mod lp;
 pub mod lasso;
 
 pub use lasso::solve_lasso;
-pub use linop::{LinearOperator, LinopMatrix};
+pub use linop::{LinearOperator, Linop, LinopMatrix};
 pub use lp::solve_lp;
 pub use prox::{ProxCapable, ProxL1, ProxProjNonneg, ProxZero};
 pub use smooth::{SmoothFunction, SmoothLinear, SmoothLogLogistic, SmoothQuad};
