@@ -92,6 +92,30 @@ impl Context {
         Broadcast::new(self.cluster.new_id(), value)
     }
 
+    /// Broadcast a driver-side vector through the cluster workspace pool:
+    /// the backing buffer is recycled once every task releases it, so an
+    /// iterative solver re-broadcasting its updated iterate each pass
+    /// allocates nothing proportional to the vector length in steady
+    /// state. Pair with [`Context::reclaim_pooled`] after the job.
+    pub fn broadcast_pooled(&self, src: &[f64]) -> Broadcast<crate::linalg::vector::Vector> {
+        let v = crate::linalg::vector::Vector(self.cluster.workspace.take_copy(src));
+        Broadcast::from_shared(self.cluster.new_id(), Arc::new(v))
+    }
+
+    /// Return a pooled broadcast's buffer to the workspace pool (no-op
+    /// when a task still holds a reference — correctness never depends on
+    /// the reclaim landing).
+    pub fn reclaim_pooled(&self, b: Broadcast<crate::linalg::vector::Vector>) {
+        if let Ok(v) = Arc::try_unwrap(b.into_shared()) {
+            self.cluster.workspace.put(v.0);
+        }
+    }
+
+    /// The cluster's recycled work-buffer pool (mat-vec partials).
+    pub fn workspace(&self) -> &Arc<crate::rdd::exec::VecPool> {
+        &self.cluster.workspace
+    }
+
     /// The XLA runtime handle, if artifacts are present and `use_xla` is
     /// set (or if artifacts exist at the configured path). Returns `None`
     /// when unavailable — callers fall back to native kernels.

@@ -10,6 +10,9 @@
 //! the complete conversion lattice, so any format can still reach any
 //! other when a consumer wants a specific layout.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::coordinator::context::Context;
 use crate::distributed::block_matrix::BlockMatrix;
 use crate::distributed::coordinate_matrix::CoordinateMatrix;
@@ -42,6 +45,32 @@ pub trait DistributedLinearOperator: Send + Sync {
     /// fused one-pass kernel (per-partition `Aᵀ(A x)`, tree-summed).
     fn gramvec(&self, x: &Vector) -> Result<Vector> {
         self.rmatvec(&self.matvec(x)?)
+    }
+
+    /// `A·x` written into a caller-owned buffer (resized to `m`) — the
+    /// iterative hot path. All four stored formats override this with
+    /// kernels whose broadcast iterate and partial accumulators are
+    /// leased from the cluster workspace pool, so the per-iteration
+    /// steady state performs zero driver-side allocations proportional
+    /// to the problem dimensions. The default delegates to `matvec`.
+    fn matvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        *out = self.matvec(x)?;
+        Ok(())
+    }
+
+    /// `Aᵀ·y` written into a caller-owned buffer (resized to `n`). See
+    /// [`DistributedLinearOperator::matvec_into`].
+    fn rmatvec_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
+        *out = self.rmatvec(y)?;
+        Ok(())
+    }
+
+    /// `AᵀA·x` written into a caller-owned buffer (resized to `n`) —
+    /// what the ARPACK driver calls every Lanczos step. See
+    /// [`DistributedLinearOperator::matvec_into`].
+    fn gramvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        *out = self.gramvec(x)?;
+        Ok(())
     }
 
     /// The dense Gram matrix `AᵀA` when the format has a fused kernel for
@@ -99,25 +128,36 @@ pub trait DistributedMatrix: DistributedLinearOperator + Clone {
     ) -> Result<BlockMatrix>;
 }
 
-/// Tree-sum an RDD of equal-length partial vectors (the reduction behind
-/// every distributed mat-vec here).
-pub(crate) fn tree_sum_vec(partial: &Rdd<Vec<f64>>, len: usize) -> Result<Vec<f64>> {
-    partial.tree_aggregate(
-        vec![0.0; len],
-        |mut acc: Vec<f64>, v: &Vec<f64>| {
-            for (a, b) in acc.iter_mut().zip(v) {
-                *a += b;
-            }
-            acc
-        },
-        |mut a: Vec<f64>, b: Vec<f64>| {
-            for (x, y) in a.iter_mut().zip(b) {
+/// Tree-sum partial vectors *into* a caller-owned accumulator, returning
+/// every consumed partial to the cluster workspace pool. One record per
+/// partition arrives owned (moved, never cloned); combine rounds of
+/// fan-in [`TREE_FANIN`] run on the cluster while more than one round's
+/// worth remains; the driver folds the final few in partition order.
+/// With pooled partials this makes the whole mat-vec reduction
+/// allocation-free in steady state.
+pub(crate) fn tree_sum_vec_into(partial: &Rdd<Vec<f64>>, out: &mut [f64]) -> Result<()> {
+    let partials: Vec<Vec<f64>> = partial.collect()?;
+    let pool = Arc::clone(&partial.cluster().workspace);
+    let pool_comb = Arc::clone(&pool);
+    let partials = crate::rdd::core::tree_combine(
+        partial.cluster(),
+        partials,
+        move |mut a: Vec<f64>, b: Vec<f64>| {
+            for (x, y) in a.iter_mut().zip(&b) {
                 *x += y;
             }
+            pool_comb.put(b);
             a
         },
         TREE_FANIN,
-    )
+    )?;
+    for v in partials {
+        for (o, x) in out.iter_mut().zip(&v) {
+            *o += x;
+        }
+        pool.put(v);
+    }
+    Ok(())
 }
 
 fn row_norm_sq(r: &Row) -> f64 {
@@ -149,6 +189,18 @@ impl DistributedLinearOperator for RowMatrix {
     /// Fused one-pass `AᵀA·x` (XLA when available).
     fn gramvec(&self, x: &Vector) -> Result<Vector> {
         RowMatrix::gramvec(self, x)
+    }
+
+    fn matvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        RowMatrix::matvec_into(self, x, out)
+    }
+
+    fn rmatvec_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
+        RowMatrix::rmatvec_into(self, y, out)
+    }
+
+    fn gramvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        RowMatrix::gramvec_into(self, x, out)
     }
 
     /// Fused one-pass Gram (tree-aggregated) — enables tall-skinny SVD.
@@ -212,50 +264,103 @@ impl DistributedLinearOperator for IndexedRowMatrix {
     }
 
     fn matvec(&self, x: &Vector) -> Result<Vector> {
-        let n = IndexedRowMatrix::num_cols(self)?;
-        crate::ensure_dims!(x.len(), n, "indexed matvec dims");
-        let m = IndexedRowMatrix::num_rows(self)? as usize;
-        let bx = self.context().broadcast(x.clone());
-        let pairs = self.rows.map(move |(i, r)| (*i, r.dot(bx.value())));
-        let mut y = vec![0.0; m];
-        for (i, d) in pairs.collect()? {
-            y[i as usize] += d;
-        }
-        Ok(Vector(y))
+        let mut out = Vector(Vec::new());
+        self.matvec_into(x, &mut out)?;
+        Ok(out)
     }
 
     fn rmatvec(&self, y: &Vector) -> Result<Vector> {
-        let n = IndexedRowMatrix::num_cols(self)?;
-        let m = IndexedRowMatrix::num_rows(self)? as usize;
-        crate::ensure_dims!(y.len(), m, "indexed rmatvec dims");
-        let by = self.context().broadcast(y.clone());
-        let partial = self.rows.map_partitions_with_index(move |_p, rows| {
-            let y = by.value();
-            let mut acc = vec![0.0; n];
-            for (i, r) in rows {
-                r.axpy_into(y[*i as usize], &mut acc);
-            }
-            vec![acc]
-        });
-        tree_sum_vec(&partial, n).map(Vector)
+        let mut out = Vector(Vec::new());
+        self.rmatvec_into(y, &mut out)?;
+        Ok(out)
     }
 
     /// Fused one-pass `AᵀA·x` — row indices are irrelevant to the Gram
     /// product, so this is the RowMatrix kernel over indexed records.
     fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.gramvec_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// Index-scatter SpMV: each partition streams its rows into
+    /// `(index, rᵢᵀx)` pairs (traffic ∝ stored rows — indices may be far
+    /// sparser than the declared `m`, so no dense m-length partials),
+    /// moved to the driver and scattered into `out` (duplicate indices
+    /// sum, as before).
+    fn matvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        let n = IndexedRowMatrix::num_cols(self)?;
+        crate::ensure_dims!(x.len(), n, "indexed matvec dims");
+        let m = IndexedRowMatrix::num_rows(self)? as usize;
+        out.0.clear();
+        out.0.resize(m, 0.0);
+        let bx = self.context().broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
+        let pairs = self.rows.fold_partitions(
+            |_p| Vec::new(),
+            move |acc: &mut Vec<(u64, f64)>, ir: &(u64, Row)| {
+                acc.push((ir.0, ir.1.dot(bxt.value())));
+            },
+            |acc| acc,
+        );
+        for part in pairs.collect()? {
+            for (i, d) in part {
+                out.0[i as usize] += d;
+            }
+        }
+        // the pair RDD's closures hold the last broadcast clone — drop
+        // them so the pooled iterate buffer actually recycles
+        drop(pairs);
+        self.context().reclaim_pooled(bx);
+        Ok(())
+    }
+
+    fn rmatvec_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
+        let n = IndexedRowMatrix::num_cols(self)?;
+        let m = IndexedRowMatrix::num_rows(self)? as usize;
+        crate::ensure_dims!(y.len(), m, "indexed rmatvec dims");
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let by = self.context().broadcast_pooled(y.as_slice());
+        let byt = by.clone();
+        let pool = Arc::clone(self.context().workspace());
+        let partial = self.rows.fold_partitions(
+            move |_p| pool.take_zeroed(n),
+            move |acc: &mut Vec<f64>, ir: &(u64, Row)| {
+                ir.1.axpy_into(byt.value()[ir.0 as usize], acc);
+            },
+            |acc| acc,
+        );
+        tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.context().reclaim_pooled(by);
+        Ok(())
+    }
+
+    fn gramvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
         let n = IndexedRowMatrix::num_cols(self)?;
         crate::ensure_dims!(x.len(), n, "indexed gramvec dims");
-        let bx = self.context().broadcast(x.clone());
-        let partial = self.rows.map_partitions_with_index(move |_p, rows| {
-            let x = bx.value();
-            let mut acc = vec![0.0; n];
-            for (_i, r) in rows {
-                let dot = r.dot(x);
-                r.axpy_into(dot, &mut acc);
-            }
-            vec![acc]
-        });
-        tree_sum_vec(&partial, n).map(Vector)
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let bx = self.context().broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
+        let pool = Arc::clone(self.context().workspace());
+        let partial = self.rows.fold_partitions(
+            move |_p| pool.take_zeroed(n),
+            move |acc: &mut Vec<f64>, ir: &(u64, Row)| {
+                let dot = ir.1.dot(bxt.value());
+                ir.1.axpy_into(dot, acc);
+            },
+            |acc| acc,
+        );
+        tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.context().reclaim_pooled(bx);
+        Ok(())
     }
 
     fn frob_norm_sq(&self) -> Result<f64> {
@@ -314,36 +419,80 @@ impl DistributedLinearOperator for CoordinateMatrix {
     }
 
     /// Entry-streaming SpMV: each partition scatters `v·x[j]` into a
-    /// local m-accumulator, tree-summed — no conversion shuffle, the
-    /// format's whole point for huge-and-sparse workloads.
+    /// pooled local m-accumulator, tree-summed — no conversion shuffle,
+    /// the format's whole point for huge-and-sparse workloads.
     fn matvec(&self, x: &Vector) -> Result<Vector> {
-        crate::ensure_dims!(x.len(), self.num_cols as usize, "coordinate matvec dims");
-        let m = self.num_rows as usize;
-        let bx = self.context().broadcast(x.clone());
-        let partial = self.entries.map_partitions_with_index(move |_p, entries| {
-            let x = bx.value();
-            let mut acc = vec![0.0; m];
-            for e in entries {
-                acc[e.i as usize] += e.value * x[e.j as usize];
-            }
-            vec![acc]
-        });
-        tree_sum_vec(&partial, m).map(Vector)
+        let mut out = Vector(Vec::new());
+        self.matvec_into(x, &mut out)?;
+        Ok(out)
     }
 
     fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.rmatvec_into(y, &mut out)?;
+        Ok(out)
+    }
+
+    /// `AᵀA·x`: two entry-streaming passes through a pooled intermediate.
+    fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.gramvec_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    fn matvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        crate::ensure_dims!(x.len(), self.num_cols as usize, "coordinate matvec dims");
+        let m = self.num_rows as usize;
+        out.0.clear();
+        out.0.resize(m, 0.0);
+        let bx = self.context().broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
+        let pool = Arc::clone(self.context().workspace());
+        let partial = self.entries.fold_partitions(
+            move |_p| pool.take_zeroed(m),
+            move |acc: &mut Vec<f64>, e| {
+                acc[e.i as usize] += e.value * bxt.value()[e.j as usize];
+            },
+            |acc| acc,
+        );
+        tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.context().reclaim_pooled(bx);
+        Ok(())
+    }
+
+    fn rmatvec_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
         crate::ensure_dims!(y.len(), self.num_rows as usize, "coordinate rmatvec dims");
         let n = self.num_cols as usize;
-        let by = self.context().broadcast(y.clone());
-        let partial = self.entries.map_partitions_with_index(move |_p, entries| {
-            let y = by.value();
-            let mut acc = vec![0.0; n];
-            for e in entries {
-                acc[e.j as usize] += e.value * y[e.i as usize];
-            }
-            vec![acc]
-        });
-        tree_sum_vec(&partial, n).map(Vector)
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let by = self.context().broadcast_pooled(y.as_slice());
+        let byt = by.clone();
+        let pool = Arc::clone(self.context().workspace());
+        let partial = self.entries.fold_partitions(
+            move |_p| pool.take_zeroed(n),
+            move |acc: &mut Vec<f64>, e| {
+                acc[e.j as usize] += e.value * byt.value()[e.i as usize];
+            },
+            |acc| acc,
+        );
+        tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.context().reclaim_pooled(by);
+        Ok(())
+    }
+
+    fn gramvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        let pool = Arc::clone(self.context().workspace());
+        let mut mid = Vector(pool.take_empty());
+        self.matvec_into(x, &mut mid)?;
+        self.rmatvec_into(&mid, out)?;
+        pool.put(mid.0);
+        Ok(())
     }
 
     /// Entry lists may contain duplicate `(i, j)` pairs (summed on read);
@@ -361,11 +510,20 @@ impl DistributedLinearOperator for CoordinateMatrix {
         let m = self.num_rows as usize;
         let parts = self.entries.num_partitions().max(1);
         let bb = self.context().broadcast(b.clone());
-        let pairs = self.entries.map(move |e| {
+        // accumulate `e.value · b[j, ·]` in place into one partial row
+        // buffer per distinct row index per partition (map-side combine;
+        // was one fresh Vec per nonzero entry)
+        let pairs = self.entries.map_partitions_with_index(move |_p, entries| {
             let b = bb.value();
-            let j = e.j as usize;
-            let scaled: Vec<f64> = (0..k).map(|c| e.value * b.get(j, c)).collect();
-            (e.i, scaled)
+            let mut acc: HashMap<u64, Vec<f64>> = HashMap::new();
+            for e in entries {
+                let j = e.j as usize;
+                let row = acc.entry(e.i).or_insert_with(|| vec![0.0; k]);
+                for (c, rv) in row.iter_mut().enumerate() {
+                    *rv += e.value * b.get(j, c);
+                }
+            }
+            acc.into_iter().collect()
         });
         // seed every row index with zeros so all-zero rows of A still
         // produce (zero) rows of the product — the result always has
@@ -432,16 +590,40 @@ impl DistributedLinearOperator for BlockMatrix {
     }
 
     /// Block-partitioned SpMV: each block multiplies its x-slice into the
-    /// matching y-slice of a local accumulator, tree-summed.
+    /// matching y-slice of a pooled local accumulator, tree-summed.
     fn matvec(&self, x: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.matvec_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.rmatvec_into(y, &mut out)?;
+        Ok(out)
+    }
+
+    /// `AᵀA·x`: two block passes through a pooled intermediate.
+    fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.gramvec_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    fn matvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
         crate::ensure_dims!(x.len(), self.num_cols, "block matvec dims");
         let m = self.num_rows;
         let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
-        let bx = self.context().broadcast(x.clone());
-        let partial = self.blocks.map_partitions_with_index(move |_p, blocks| {
-            let x = bx.value();
-            let mut acc = vec![0.0; m];
-            for ((bi, bj), blk) in blocks {
+        out.0.clear();
+        out.0.resize(m, 0.0);
+        let bx = self.context().broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
+        let pool = Arc::clone(self.context().workspace());
+        let partial = self.blocks.fold_partitions(
+            move |_p| pool.take_zeroed(m),
+            move |acc: &mut Vec<f64>, kb: &((usize, usize), DenseMatrix)| {
+                let ((bi, bj), blk) = kb;
+                let x = bxt.value();
                 let (r0, c0) = (*bi * rpb, *bj * cpb);
                 for i in 0..blk.rows {
                     let row = blk.row(i);
@@ -451,21 +633,31 @@ impl DistributedLinearOperator for BlockMatrix {
                     }
                     acc[r0 + i] += s;
                 }
-            }
-            vec![acc]
-        });
-        tree_sum_vec(&partial, m).map(Vector)
+            },
+            |acc| acc,
+        );
+        tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.context().reclaim_pooled(bx);
+        Ok(())
     }
 
-    fn rmatvec(&self, y: &Vector) -> Result<Vector> {
+    fn rmatvec_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
         crate::ensure_dims!(y.len(), self.num_rows, "block rmatvec dims");
         let n = self.num_cols;
         let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
-        let by = self.context().broadcast(y.clone());
-        let partial = self.blocks.map_partitions_with_index(move |_p, blocks| {
-            let y = by.value();
-            let mut acc = vec![0.0; n];
-            for ((bi, bj), blk) in blocks {
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let by = self.context().broadcast_pooled(y.as_slice());
+        let byt = by.clone();
+        let pool = Arc::clone(self.context().workspace());
+        let partial = self.blocks.fold_partitions(
+            move |_p| pool.take_zeroed(n),
+            move |acc: &mut Vec<f64>, kb: &((usize, usize), DenseMatrix)| {
+                let ((bi, bj), blk) = kb;
+                let y = byt.value();
                 let (r0, c0) = (*bi * rpb, *bj * cpb);
                 for i in 0..blk.rows {
                     let alpha = y[r0 + i];
@@ -477,10 +669,24 @@ impl DistributedLinearOperator for BlockMatrix {
                         acc[c0 + j] += alpha * v;
                     }
                 }
-            }
-            vec![acc]
-        });
-        tree_sum_vec(&partial, n).map(Vector)
+            },
+            |acc| acc,
+        );
+        tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.context().reclaim_pooled(by);
+        Ok(())
+    }
+
+    fn gramvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        let pool = Arc::clone(self.context().workspace());
+        let mut mid = Vector(pool.take_empty());
+        self.matvec_into(x, &mut mid)?;
+        self.rmatvec_into(&mid, out)?;
+        pool.put(mid.0);
+        Ok(())
     }
 
     /// Gram via row stripes: group blocks by block-row (one shuffle),

@@ -31,6 +31,9 @@ pub struct RowMatrix {
     ctx: Context,
     n_cols: Arc<OnceLock<usize>>,
     n_rows: Arc<OnceLock<usize>>,
+    /// Cumulative per-partition row offsets (`parts + 1` entries, last =
+    /// total rows) — computed once, reused by every `matvec`/`rmatvec`.
+    offsets: Arc<OnceLock<Arc<Vec<usize>>>>,
 }
 
 /// Default tree-aggregate fan-in (tuned in EXPERIMENTS.md §Perf).
@@ -49,6 +52,7 @@ impl RowMatrix {
             ctx: ctx.clone(),
             n_cols: Arc::new(cell),
             n_rows: Arc::new(OnceLock::new()),
+            offsets: Arc::new(OnceLock::new()),
         }
     }
 
@@ -118,6 +122,7 @@ impl RowMatrix {
             ctx: self.ctx.clone(),
             n_cols: Arc::clone(&self.n_cols),
             n_rows: Arc::clone(&self.n_rows),
+            offsets: Arc::clone(&self.offsets),
         }
     }
 
@@ -172,12 +177,26 @@ impl RowMatrix {
     /// (per-partition fused `Aᵀ(A x)`, tree-summed). The driver-side
     /// Lanczos only ever sees this closure — the paper's §3.1.1 pattern.
     pub fn gramvec(&self, x: &Vector) -> Result<Vector> {
+        let mut out = Vector(Vec::new());
+        self.gramvec_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// `AᵀA·x` written into `out` — the iterative steady state: the
+    /// broadcast iterate and every partial accumulator come from (and
+    /// return to) the cluster workspace pool, so repeated calls allocate
+    /// nothing proportional to `n` on the driver.
+    pub fn gramvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
         let n = self.num_cols()?;
         crate::ensure_dims!(x.len(), n, "gramvec x dims");
-        let bx = self.ctx.broadcast(x.clone());
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let bx = self.ctx.broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
         let rt = self.ctx.runtime();
+        let pool = Arc::clone(self.ctx.workspace());
         let partial = self.rows.map_partitions_with_index(move |_p, rows| {
-            let x = bx.value();
+            let x = bxt.value();
             if rt.is_some() && ops::cols_supported(n) {
                 let block = rows_to_block(rows, n);
                 if let Ok(v) = ops::gramvec(rt.as_ref(), &block, x) {
@@ -185,68 +204,122 @@ impl RowMatrix {
                 }
             }
             // native: acc += (rᵀx) r  per row
-            let mut acc = vec![0.0; n];
+            let mut acc = pool.take_zeroed(n);
             for r in rows {
                 let dot = r.dot(x);
                 r.axpy_into(dot, &mut acc);
             }
             vec![acc]
         });
-        crate::distributed::operator::tree_sum_vec(&partial, n).map(Vector)
+        crate::distributed::operator::tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.ctx.reclaim_pooled(bx);
+        Ok(())
     }
 
     /// `A·x` — forward mat-vec: broadcast x, each partition dots its
-    /// rows, collected in partition (= row) order. One cluster pass; the
-    /// TFOCS forward map (b-space vectors are driver-resident).
+    /// rows, scattered into partition (= row) order. One cluster pass;
+    /// the TFOCS forward map (b-space vectors are driver-resident).
     pub fn matvec(&self, x: &Vector) -> Result<Vector> {
-        let n = self.num_cols()?;
-        crate::ensure_dims!(x.len(), n, "matvec x dims");
-        let bx = self.ctx.broadcast(x.clone());
-        let parts = self
-            .rows
-            .map_partitions_with_index(move |_p, rows| {
-                let x = bx.value();
-                rows.iter().map(|r| r.dot(x)).collect()
-            })
-            .collect()?;
-        Ok(Vector(parts))
+        let mut out = Vector(Vec::new());
+        self.matvec_into(x, &mut out)?;
+        Ok(out)
     }
 
-    /// Per-partition starting row offsets (one cheap count pass) —
-    /// shared by `rmatvec` and `to_indexed_row_matrix`.
-    fn partition_offsets(&self) -> Result<Vec<usize>> {
+    /// `A·x` written into `out` (pooled broadcast + pooled per-partition
+    /// dot buffers; zero driver-side allocation ∝ dimensions in steady
+    /// state).
+    pub fn matvec_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        let n = self.num_cols()?;
+        crate::ensure_dims!(x.len(), n, "matvec x dims");
+        let offsets = self.partition_offsets()?;
+        let m = *offsets.last().expect("offsets non-empty");
+        out.0.clear();
+        out.0.resize(m, 0.0);
+        self.rows.prepare()?;
+        let bx = self.ctx.broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
+        let pool = Arc::clone(self.ctx.workspace());
+        let rows = self.rows.clone();
+        let parts = self.ctx.cluster().run_job(
+            self.rows.num_partitions(),
+            Arc::new(move |p, exec| {
+                let x = bxt.value();
+                let mut dots = pool.take_empty();
+                rows.stream_records(p, exec, &mut |r| dots.push(r.dot(x)))?;
+                Ok(dots)
+            }),
+        )?;
+        for (p, v) in parts.into_iter().enumerate() {
+            out.0[offsets[p]..offsets[p] + v.len()].copy_from_slice(&v);
+            self.ctx.workspace().put(v);
+        }
+        // best-effort: the last worker may still be dropping its task's
+        // clone of the broadcast, in which case this reclaim no-ops and
+        // the buffer is simply freed instead of recycled
+        self.ctx.reclaim_pooled(bx);
+        Ok(())
+    }
+
+    /// Cumulative per-partition row offsets (`parts + 1` entries; the
+    /// last is the total row count). One cheap count pass, cached for the
+    /// matrix's lifetime — shared by `matvec`, `rmatvec`, and
+    /// `to_indexed_row_matrix`.
+    pub(crate) fn partition_offsets(&self) -> Result<Arc<Vec<usize>>> {
+        if let Some(o) = self.offsets.get() {
+            return Ok(Arc::clone(o));
+        }
         let counts = self
             .rows
             .map_partitions_with_index(|_p, rows| vec![rows.len()])
             .collect()?;
-        let mut offsets = vec![0usize; counts.len()];
-        let mut acc = 0;
-        for (i, c) in counts.iter().enumerate() {
-            offsets[i] = acc;
+        let mut offsets = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0usize;
+        for c in &counts {
+            offsets.push(acc);
             acc += c;
         }
-        Ok(offsets)
+        offsets.push(acc);
+        let _ = self.n_rows.set(acc);
+        Ok(Arc::clone(self.offsets.get_or_init(|| Arc::new(offsets))))
     }
 
-    /// `Aᵀ·y` — adjoint mat-vec: slice y by partition offsets, scatter
-    /// `y[i]·rowᵢ` per partition, tree-sum. One cluster pass (plus a
-    /// cheap count pass for the offsets).
+    /// `Aᵀ·y` — adjoint mat-vec: slice y by (cached) partition offsets,
+    /// scatter `y[i]·rowᵢ` per partition, tree-sum. One cluster pass.
     pub fn rmatvec(&self, y: &Vector) -> Result<Vector> {
-        let m = self.num_rows()?;
+        let mut out = Vector(Vec::new());
+        self.rmatvec_into(y, &mut out)?;
+        Ok(out)
+    }
+
+    /// `Aᵀ·y` written into `out` (pooled broadcast + pooled partials).
+    pub fn rmatvec_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
+        let offsets = self.partition_offsets()?;
+        let m = *offsets.last().expect("offsets non-empty");
         crate::ensure_dims!(y.len(), m, "rmatvec y dims");
         let n = self.num_cols()?;
-        let offsets = self.partition_offsets()?;
-        let by = self.ctx.broadcast((y.clone(), offsets));
-        let partial = self.rows.map_partitions_with_index(move |p, rows| {
-            let (y, offsets) = by.value();
-            let off = offsets[p];
-            let mut out = vec![0.0; n];
-            for (i, r) in rows.iter().enumerate() {
-                r.axpy_into(y[off + i], &mut out);
-            }
-            vec![out]
-        });
-        crate::distributed::operator::tree_sum_vec(&partial, n).map(Vector)
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let by = self.ctx.broadcast_pooled(y.as_slice());
+        let byt = by.clone();
+        let pool = Arc::clone(self.ctx.workspace());
+        let offs = Arc::clone(&offsets);
+        let partial = self.rows.fold_partitions(
+            move |p| (pool.take_zeroed(n), offs[p]),
+            move |st: &mut (Vec<f64>, usize), r| {
+                r.axpy_into(byt.value()[st.1], &mut st.0);
+                st.1 += 1;
+            },
+            |st| st.0,
+        );
+        crate::distributed::operator::tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.ctx.reclaim_pooled(by);
+        Ok(())
     }
 
     /// `A · B` for a small local `B` (n×k): broadcast B, each partition

@@ -104,13 +104,20 @@ pub fn arpack_svd<Op: DistributedLinearOperator>(
 ) -> Result<SingularValueDecomposition> {
     let n = a.num_cols()?;
     let mut solver = Lanczos::new(n, k, 1e-10, 100 * k.max(10))?;
+    // reused across every Lanczos step: with the formats' pooled
+    // `gramvec_into` kernels the steady-state iteration performs zero
+    // driver-side allocations proportional to n
+    let mut xbuf = Vector(Vec::new());
+    let mut ybuf = Vector(Vec::new());
     loop {
         match solver.step()? {
             LanczosStep::MatVec { x, y } => {
                 // the paper's moment: control returns to the calling
                 // program, which performs the multiply on the cluster
-                let res = a.gramvec(&Vector::from(x))?;
-                y.copy_from_slice(&res.0);
+                xbuf.0.clear();
+                xbuf.0.extend_from_slice(x);
+                a.gramvec_into(&xbuf, &mut ybuf)?;
+                y.copy_from_slice(&ybuf.0);
             }
             LanczosStep::Converged => break,
         }

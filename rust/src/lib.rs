@@ -34,6 +34,14 @@
 //! println!("top singular values: {:?}", svd.s);
 //! ```
 //!
+//! Chained narrow transformations (`map`/`filter`/`flat_map`) execute as
+//! a single **fused per-partition pipeline** — one materialization per
+//! partition per job, `Metrics::stages_fused` counts the hops — and the
+//! iterative mat-vec kernels recycle their broadcast and partial buffers
+//! through the cluster workspace pool, so per-iteration driver
+//! allocation is independent of the matrix size (DESIGN.md §"Execution
+//! pipeline").
+//!
 //! The drivers are generic over
 //! [`distributed::DistributedLinearOperator`] — the same SVD (and the
 //! TFOCS/optim solvers) runs over a sparse entry-format matrix with no

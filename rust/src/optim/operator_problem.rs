@@ -8,6 +8,8 @@
 //! a coordinate or block matrix never converts to row form to be
 //! optimized over.
 
+use std::sync::Mutex;
+
 use crate::distributed::operator::DistributedLinearOperator;
 use crate::error::Result;
 use crate::linalg::vector::Vector;
@@ -20,6 +22,11 @@ pub struct OperatorProblem<Op: DistributedLinearOperator> {
     b: Vector,
     regularizer: Regularizer,
     n: usize,
+    /// m-length residual scratch reused across iterations (`m` can be
+    /// huge; together with the operators' pooled `matvec_into` kernels,
+    /// the per-iteration gradient pass allocates only the returned
+    /// n-length gradient).
+    residual: Mutex<Vector>,
 }
 
 impl<Op: DistributedLinearOperator> OperatorProblem<Op> {
@@ -28,7 +35,7 @@ impl<Op: DistributedLinearOperator> OperatorProblem<Op> {
         let m = op.num_rows()?;
         let n = op.num_cols()?;
         crate::ensure_dims!(b.len(), m, "operator problem b dims");
-        Ok(OperatorProblem { op, b, regularizer, n })
+        Ok(OperatorProblem { op, b, regularizer, n, residual: Mutex::new(Vector(Vec::new())) })
     }
 
     /// The wrapped operator.
@@ -47,12 +54,14 @@ impl<Op: DistributedLinearOperator> Problem for OperatorProblem<Op> {
     }
 
     fn loss_grad(&self, w: &Vector) -> Result<(f64, Vector)> {
-        // r = Aw − b (one cluster pass); loss = ½‖r‖² is a driver-side
-        // vector op; grad = Aᵀr (second cluster pass)
-        let mut r = self.op.matvec(w)?;
+        // r = Aw − b (one cluster pass, into the reused scratch); loss =
+        // ½‖r‖² is a driver-side vector op; grad = Aᵀr (second pass)
+        let mut r = self.residual.lock().expect("residual scratch");
+        self.op.matvec_into(w, &mut r)?;
         r.axpy(-1.0, &self.b);
         let mut loss = 0.5 * r.dot(&r);
-        let mut grad = self.op.rmatvec(&r)?;
+        let mut grad = Vector(Vec::new());
+        self.op.rmatvec_into(&r, &mut grad)?;
         if let Regularizer::L2(_) = self.regularizer {
             loss += self.regularizer.value(w);
         }
@@ -65,7 +74,8 @@ impl<Op: DistributedLinearOperator> Problem for OperatorProblem<Op> {
     /// cluster-cost overhead for gd/accelerated, which call this every
     /// step for reporting).
     fn full_objective(&self, w: &Vector) -> Result<f64> {
-        let mut r = self.op.matvec(w)?;
+        let mut r = self.residual.lock().expect("residual scratch");
+        self.op.matvec_into(w, &mut r)?;
         r.axpy(-1.0, &self.b);
         Ok(0.5 * r.dot(&r) + self.regularizer.value(w))
     }

@@ -23,6 +23,19 @@ impl<T> Broadcast<T> {
         Broadcast { id, value: Arc::new(value) }
     }
 
+    /// Wrap an already-shared value — the reusable broadcast slot the
+    /// iterative mat-vec hot path uses (`Context::broadcast_pooled`
+    /// leases the backing buffer from the cluster workspace pool).
+    pub fn from_shared(id: usize, value: Arc<T>) -> Broadcast<T> {
+        Broadcast { id, value }
+    }
+
+    /// Unwrap into the shared handle (how pooled broadcast buffers are
+    /// reclaimed after a job completes).
+    pub fn into_shared(self) -> Arc<T> {
+        self.value
+    }
+
     /// Access the broadcast value.
     pub fn value(&self) -> &T {
         &self.value

@@ -5,15 +5,34 @@
 //! simply re-runs the closure chain — the same mechanism Spark describes
 //! in §1.1(3). Caching short-circuits the chain; evicting a cached block
 //! (executor crash) transparently falls back to recompute.
+//!
+//! # Fused narrow stages
+//!
+//! Consecutive narrow transformations (`map`, `filter`, `flat_map`,
+//! `union`, and the output side of `map_partitions_with_index`) compose
+//! into a single per-partition *push pipeline*: each narrow stage
+//! registers a [`Stream`] closure that forwards records by reference into
+//! its consumer's sink, so a `map → filter → flat_map` chain materializes
+//! exactly one Vec per partition per job (at the fusion base) instead of
+//! one per stage — Spark's pipelined narrow dependencies. Fusion breaks
+//! at `cache()` (a cached stage must store/fetch its block so lineage
+//! short-circuits), at shuffle boundaries (shuffle readers have no
+//! stream), and at multi-parent barriers (`zip_partitions`). Every fused
+//! hop increments `Metrics::stages_fused`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::rdd::exec::Cluster;
 
 /// Per-partition compute: (partition, executor_id) -> records.
 pub type Compute<T> = dyn Fn(usize, usize) -> Result<Vec<T>> + Send + Sync;
+
+/// Per-partition push stream: (partition, executor_id, sink). Narrow
+/// stages register one so consumers can pull records through the fused
+/// pipeline without materializing this stage's output.
+pub type Stream<T> = dyn Fn(usize, usize, &mut dyn FnMut(&T)) -> Result<()> + Send + Sync;
 
 /// Stage preparation: runs upstream shuffle map stages (driver-side,
 /// before the consuming job is scheduled) — the DAG-scheduler boundary.
@@ -25,6 +44,9 @@ pub(crate) struct RddInner<T> {
     pub cluster: Arc<Cluster>,
     pub num_partitions: usize,
     pub compute: Box<Compute<T>>,
+    /// Present on narrow (fusable) stages; `None` marks a fusion base
+    /// (source, shuffle reader, multi-parent barrier).
+    pub stream: Option<Box<Stream<T>>>,
     pub preps: Vec<Arc<Prep>>,
     pub cache_flag: AtomicBool,
     pub was_cached: AtomicBool,
@@ -42,14 +64,26 @@ impl<T: Send + Sync + 'static> Clone for Rdd<T> {
 }
 
 impl<T: Send + Sync + 'static> Rdd<T> {
-    /// Construct from raw parts (library-internal; users go through
-    /// `Context::parallelize` and transformations).
+    /// Construct a fusion base from raw parts (library-internal; users go
+    /// through `Context::parallelize` and transformations).
     pub(crate) fn from_parts(
         cluster: Arc<Cluster>,
         name: String,
         num_partitions: usize,
         preps: Vec<Arc<Prep>>,
         compute: Box<Compute<T>>,
+    ) -> Rdd<T> {
+        Rdd::from_parts_narrow(cluster, name, num_partitions, preps, compute, None)
+    }
+
+    /// Construct with an optional fused stream (narrow transformations).
+    pub(crate) fn from_parts_narrow(
+        cluster: Arc<Cluster>,
+        name: String,
+        num_partitions: usize,
+        preps: Vec<Arc<Prep>>,
+        compute: Box<Compute<T>>,
+        stream: Option<Box<Stream<T>>>,
     ) -> Rdd<T> {
         let id = cluster.new_id();
         Rdd {
@@ -59,6 +93,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
                 cluster,
                 num_partitions,
                 compute,
+                stream,
                 preps,
                 cache_flag: AtomicBool::new(false),
                 was_cached: AtomicBool::new(false),
@@ -87,7 +122,9 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     }
 
     /// Mark for caching: partitions computed after this call are stored
-    /// in the block manager keyed by the computing executor.
+    /// in the block manager keyed by the computing executor. Caching is a
+    /// fusion barrier — downstream narrow stages stream from the cached
+    /// block instead of recomputing the upstream pipeline.
     pub fn cache(self) -> Rdd<T> {
         self.inner.cache_flag.store(true, Ordering::SeqCst);
         self
@@ -99,16 +136,21 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         self.inner.cluster.cache.evict_rdd(self.inner.id);
     }
 
+    fn check_partition(&self, p: usize) -> Result<()> {
+        if p >= self.inner.num_partitions {
+            return Err(Error::InvalidArgument(format!(
+                "partition {p} out of range (rdd {} has {})",
+                self.inner.id, self.inner.num_partitions
+            )));
+        }
+        Ok(())
+    }
+
     /// Compute (or fetch from cache) partition `p` on `executor`.
     /// This is the lineage entry point: cache miss ⇒ recursive recompute.
     pub fn materialize(&self, p: usize, executor: usize) -> Result<Arc<Vec<T>>> {
+        self.check_partition(p)?;
         let inner = &self.inner;
-        if p >= inner.num_partitions {
-            return Err(Error::InvalidArgument(format!(
-                "partition {p} out of range (rdd {} has {})",
-                inner.id, inner.num_partitions
-            )));
-        }
         let cached = inner.cache_flag.load(Ordering::SeqCst);
         if cached {
             if let Some(b) = inner.cluster.cache.get::<T>((inner.id, p)) {
@@ -131,6 +173,56 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         Ok(data)
     }
 
+    /// Stream partition `p`'s records into `sink` — the fused narrow
+    /// path. Cached stages short-circuit through `materialize` (storing /
+    /// fetching the block, so lineage and eviction semantics are
+    /// untouched); fusion bases compute once and stream the result;
+    /// narrow stages forward records without materializing anything.
+    pub(crate) fn stream_records(
+        &self,
+        p: usize,
+        executor: usize,
+        sink: &mut dyn FnMut(&T),
+    ) -> Result<()> {
+        self.check_partition(p)?;
+        let inner = &self.inner;
+        if inner.cache_flag.load(Ordering::SeqCst) {
+            let data = self.materialize(p, executor)?;
+            for t in data.iter() {
+                sink(t);
+            }
+            return Ok(());
+        }
+        match &inner.stream {
+            Some(s) => {
+                inner.cluster.metrics.stages_fused.fetch_add(1, Ordering::Relaxed);
+                s(p, executor, sink)
+            }
+            None => {
+                let data = (inner.compute)(p, executor)?;
+                for t in data.iter() {
+                    sink(t);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Compute partition `p` into an owned Vec. Uncached partitions skip
+    /// the block-manager `Arc` and the whole-partition clone actions used
+    /// to pay on top of `materialize`; cached partitions go through
+    /// `materialize` so caching semantics hold.
+    pub(crate) fn compute_owned(&self, p: usize, executor: usize) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        if self.inner.cache_flag.load(Ordering::SeqCst) {
+            return Ok(self.materialize(p, executor)?.as_ref().clone());
+        }
+        self.check_partition(p)?;
+        (self.inner.compute)(p, executor)
+    }
+
     /// Run all upstream stage preparations (shuffle map stages).
     pub fn prepare(&self) -> Result<()> {
         for prep in &self.inner.preps {
@@ -145,84 +237,176 @@ impl<T: Send + Sync + 'static> Rdd<T> {
 
     // ------------------------------------------------------- transformations
 
-    /// Element-wise map.
+    /// Element-wise map (narrow: fuses with adjacent narrow stages).
     pub fn map<U, F>(&self, f: F) -> Rdd<U>
     where
         U: Send + Sync + 'static,
         F: Fn(&T) -> U + Send + Sync + 'static,
     {
-        let parent = self.clone();
-        Rdd::from_parts(
+        let f = Arc::new(f);
+        let fc = Arc::clone(&f);
+        let pc = self.clone();
+        let ps = self.clone();
+        Rdd::from_parts_narrow(
             Arc::clone(self.cluster()),
             format!("{}.map", self.name()),
             self.num_partitions(),
             self.child_preps(),
             Box::new(move |p, exec| {
-                let data = parent.materialize(p, exec)?;
-                Ok(data.iter().map(&f).collect())
+                let mut out = Vec::new();
+                pc.stream_records(p, exec, &mut |t| out.push(fc(t)))?;
+                Ok(out)
             }),
+            Some(Box::new(move |p, exec, sink| {
+                ps.stream_records(p, exec, &mut |t| {
+                    let u = f(t);
+                    sink(&u);
+                })
+            })),
         )
     }
 
-    /// Map with access to the whole partition (and its index).
+    /// Map with access to the whole partition (and its index). The input
+    /// side is a fusion point, not a pass-through: `f` needs a contiguous
+    /// slice, so the upstream pipeline materializes exactly once here;
+    /// the output side streams into downstream narrow stages.
     pub fn map_partitions_with_index<U, F>(&self, f: F) -> Rdd<U>
     where
         U: Send + Sync + 'static,
         F: Fn(usize, &[T]) -> Vec<U> + Send + Sync + 'static,
     {
-        let parent = self.clone();
-        Rdd::from_parts(
+        let f = Arc::new(f);
+        let fc = Arc::clone(&f);
+        let pc = self.clone();
+        let ps = self.clone();
+        Rdd::from_parts_narrow(
             Arc::clone(self.cluster()),
             format!("{}.mapPartitions", self.name()),
             self.num_partitions(),
             self.child_preps(),
             Box::new(move |p, exec| {
-                let data = parent.materialize(p, exec)?;
-                Ok(f(p, &data))
+                let data = pc.materialize(p, exec)?;
+                Ok(fc(p, &data))
             }),
+            Some(Box::new(move |p, exec, sink| {
+                let data = ps.materialize(p, exec)?;
+                for u in f(p, &data) {
+                    sink(&u);
+                }
+                Ok(())
+            })),
         )
     }
 
-    /// Keep elements satisfying the predicate.
+    /// Per-partition streaming fold: like `map_partitions_with_index`
+    /// producing one record per partition, but the parent is *streamed*
+    /// through the fused pipeline instead of materialized into a slice —
+    /// the builder for mat-vec partial accumulators. `init(partition)`
+    /// seeds the accumulator, `fold` absorbs each record, `finish`
+    /// converts the accumulator into the partition's single record.
+    pub fn fold_partitions<A, U>(
+        &self,
+        init: impl Fn(usize) -> A + Send + Sync + 'static,
+        fold: impl Fn(&mut A, &T) + Send + Sync + 'static,
+        finish: impl Fn(A) -> U + Send + Sync + 'static,
+    ) -> Rdd<U>
+    where
+        U: Send + Sync + 'static,
+    {
+        let init = Arc::new(init);
+        let fold = Arc::new(fold);
+        let finish = Arc::new(finish);
+        let (ic, oc, nc) = (Arc::clone(&init), Arc::clone(&fold), Arc::clone(&finish));
+        let pc = self.clone();
+        let ps = self.clone();
+        Rdd::from_parts_narrow(
+            Arc::clone(self.cluster()),
+            format!("{}.foldPartitions", self.name()),
+            self.num_partitions(),
+            self.child_preps(),
+            Box::new(move |p, exec| {
+                let mut acc = ic(p);
+                pc.stream_records(p, exec, &mut |t| oc(&mut acc, t))?;
+                Ok(vec![nc(acc)])
+            }),
+            Some(Box::new(move |p, exec, sink| {
+                let mut acc = init(p);
+                ps.stream_records(p, exec, &mut |t| fold(&mut acc, t))?;
+                let u = finish(acc);
+                sink(&u);
+                Ok(())
+            })),
+        )
+    }
+
+    /// Keep elements satisfying the predicate (narrow; the fused path
+    /// forwards surviving records by reference, clone-free).
     pub fn filter<F>(&self, pred: F) -> Rdd<T>
     where
         T: Clone,
         F: Fn(&T) -> bool + Send + Sync + 'static,
     {
-        let parent = self.clone();
-        Rdd::from_parts(
+        let pred = Arc::new(pred);
+        let predc = Arc::clone(&pred);
+        let pc = self.clone();
+        let ps = self.clone();
+        Rdd::from_parts_narrow(
             Arc::clone(self.cluster()),
             format!("{}.filter", self.name()),
             self.num_partitions(),
             self.child_preps(),
             Box::new(move |p, exec| {
-                let data = parent.materialize(p, exec)?;
-                Ok(data.iter().filter(|t| pred(t)).cloned().collect())
+                let mut out = Vec::new();
+                pc.stream_records(p, exec, &mut |t| {
+                    if predc(t) {
+                        out.push(t.clone());
+                    }
+                })?;
+                Ok(out)
             }),
+            Some(Box::new(move |p, exec, sink| {
+                ps.stream_records(p, exec, &mut |t| {
+                    if pred(t) {
+                        sink(t);
+                    }
+                })
+            })),
         )
     }
 
-    /// One-to-many map.
+    /// One-to-many map (narrow: fuses with adjacent narrow stages).
     pub fn flat_map<U, F>(&self, f: F) -> Rdd<U>
     where
         U: Send + Sync + 'static,
         F: Fn(&T) -> Vec<U> + Send + Sync + 'static,
     {
-        let parent = self.clone();
-        Rdd::from_parts(
+        let f = Arc::new(f);
+        let fc = Arc::clone(&f);
+        let pc = self.clone();
+        let ps = self.clone();
+        Rdd::from_parts_narrow(
             Arc::clone(self.cluster()),
             format!("{}.flatMap", self.name()),
             self.num_partitions(),
             self.child_preps(),
             Box::new(move |p, exec| {
-                let data = parent.materialize(p, exec)?;
-                Ok(data.iter().flat_map(&f).collect())
+                let mut out = Vec::new();
+                pc.stream_records(p, exec, &mut |t| out.extend(fc(t)))?;
+                Ok(out)
             }),
+            Some(Box::new(move |p, exec, sink| {
+                ps.stream_records(p, exec, &mut |t| {
+                    for u in f(t) {
+                        sink(&u);
+                    }
+                })
+            })),
         )
     }
 
     /// Pairwise partition zip (both RDDs must have identical partition
-    /// counts — the BlockMatrix `add` pattern).
+    /// counts — the BlockMatrix `add` pattern). Multi-parent: a fusion
+    /// barrier (each parent materializes its partition).
     pub fn zip_partitions<U, V, F>(&self, other: &Rdd<U>, f: F) -> Result<Rdd<V>>
     where
         U: Send + Sync + 'static,
@@ -247,25 +431,40 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         ))
     }
 
-    /// Concatenate two RDDs (partitions of `self` first).
+    /// Concatenate two RDDs (partitions of `self` first). Narrow: each
+    /// output partition streams straight from exactly one parent.
     pub fn union(&self, other: &Rdd<T>) -> Rdd<T>
     where
         T: Clone,
     {
         let a = self.clone();
         let b = other.clone();
+        let (ac, bc) = (a.clone(), b.clone());
         let na = self.num_partitions();
         let mut preps = self.child_preps();
         preps.extend(other.inner.preps.iter().cloned());
-        Rdd::from_parts(
+        Rdd::from_parts_narrow(
             Arc::clone(self.cluster()),
             format!("({}∪{})", self.name(), other.name()),
             na + other.num_partitions(),
             preps,
             Box::new(move |p, exec| {
-                let src = if p < na { a.materialize(p, exec) } else { b.materialize(p - na, exec) }?;
-                Ok(src.as_ref().clone())
+                let mut out = Vec::new();
+                let sink = &mut |t: &T| out.push(t.clone());
+                if p < na {
+                    ac.stream_records(p, exec, sink)?;
+                } else {
+                    bc.stream_records(p - na, exec, sink)?;
+                }
+                Ok(out)
             }),
+            Some(Box::new(move |p, exec, sink| {
+                if p < na {
+                    a.stream_records(p, exec, sink)
+                } else {
+                    b.stream_records(p - na, exec, sink)
+                }
+            })),
         )
     }
 
@@ -278,25 +477,31 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     {
         self.prepare()?;
         let me = self.clone();
-        let parts = self.cluster().run_job(
-            self.num_partitions(),
-            Arc::new(move |p, exec| me.materialize(p, exec).map(|a| a.as_ref().clone())),
-        )?;
+        let parts = self
+            .cluster()
+            .run_job(self.num_partitions(), Arc::new(move |p, exec| me.compute_owned(p, exec)))?;
         Ok(parts.into_iter().flatten().collect())
     }
 
-    /// Count records.
+    /// Count records (streams through the fused pipeline — nothing is
+    /// materialized for uncached narrow chains).
     pub fn count(&self) -> Result<usize> {
         self.prepare()?;
         let me = self.clone();
-        let parts = self
-            .cluster()
-            .run_job(self.num_partitions(), Arc::new(move |p, exec| Ok(me.materialize(p, exec)?.len())))?;
+        let parts = self.cluster().run_job(
+            self.num_partitions(),
+            Arc::new(move |p, exec| {
+                let mut n = 0usize;
+                me.stream_records(p, exec, &mut |_| n += 1)?;
+                Ok(n)
+            }),
+        )?;
         Ok(parts.into_iter().sum())
     }
 
     /// Generic aggregate: per-partition fold (`seq`) then driver-side
-    /// combine (`comb`), like Spark's `aggregate`.
+    /// combine (`comb`), like Spark's `aggregate`. The per-partition fold
+    /// consumes the fused stream.
     pub fn aggregate<A, S, C>(&self, zero: A, seq: S, comb: C) -> Result<A>
     where
         A: Clone + Send + Sync + 'static,
@@ -309,8 +514,12 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         let partials = self.cluster().run_job(
             self.num_partitions(),
             Arc::new(move |p, exec| {
-                let data = me.materialize(p, exec)?;
-                Ok(data.iter().fold(z.clone(), |acc, t| seq(acc, t)))
+                let mut acc = Some(z.clone());
+                me.stream_records(p, exec, &mut |t| {
+                    let a = acc.take().expect("aggregate accumulator");
+                    acc = Some(seq(a, t));
+                })?;
+                Ok(acc.expect("aggregate accumulator"))
             }),
         )?;
         Ok(partials.into_iter().fold(zero, comb))
@@ -319,7 +528,9 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     /// Tree aggregation: per-partition fold, then *cluster-side* combine
     /// rounds of fan-in `fanin` until few enough partials remain for the
     /// driver (Spark's `treeAggregate`, which MLlib's gradient descent
-    /// uses to keep the driver from becoming the bottleneck).
+    /// uses to keep the driver from becoming the bottleneck). Partials
+    /// are *moved* into the combine rounds — the driver never clones a
+    /// partial aggregate.
     pub fn tree_aggregate<A, S, C>(&self, zero: A, seq: S, comb: C, fanin: usize) -> Result<A>
     where
         A: Clone + Send + Sync + 'static,
@@ -332,31 +543,18 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         self.prepare()?;
         let me = self.clone();
         let z = zero.clone();
-        let mut partials = self.cluster().run_job(
+        let partials = self.cluster().run_job(
             self.num_partitions(),
             Arc::new(move |p, exec| {
-                let data = me.materialize(p, exec)?;
-                Ok(data.iter().fold(z.clone(), |acc, t| seq(acc, t)))
+                let mut acc = Some(z.clone());
+                me.stream_records(p, exec, &mut |t| {
+                    let a = acc.take().expect("tree_aggregate accumulator");
+                    acc = Some(seq(a, t));
+                })?;
+                Ok(acc.expect("tree_aggregate accumulator"))
             }),
         )?;
-        // combine rounds on the cluster
-        while partials.len() > fanin {
-            let groups: Vec<Vec<A>> = partials
-                .chunks(fanin)
-                .map(|c| c.to_vec())
-                .collect();
-            let groups = Arc::new(groups);
-            let combf = comb.clone();
-            let n = groups.len();
-            partials = self.cluster().run_job(
-                n,
-                Arc::new(move |g, _exec| {
-                    let mut it = groups[g].iter().cloned();
-                    let first = it.next().expect("non-empty group");
-                    Ok(it.fold(first, |a, b| combf(a, b)))
-                }),
-            )?;
-        }
+        let partials = tree_combine(self.cluster(), partials, comb.clone(), fanin)?;
         Ok(partials.into_iter().fold(zero, comb))
     }
 
@@ -382,16 +580,84 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         out.ok_or_else(|| Error::InvalidArgument("reduce on empty RDD".into()))
     }
 
-    /// First `n` records (driver-side truncation; computes all partitions
-    /// — fine at our scales, noted for honesty).
+    /// First `n` records: partitions are computed in scheduler-sized
+    /// waves, front to back, stopping as soon as `n` records are
+    /// gathered — trailing partitions are never computed.
     pub fn take(&self, n: usize) -> Result<Vec<T>>
     where
         T: Clone,
     {
-        let mut all = self.collect()?;
-        all.truncate(n);
-        Ok(all)
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        self.prepare()?;
+        let total = self.num_partitions();
+        let wave = self.cluster().config.total_cores().max(1);
+        let mut out: Vec<T> = Vec::new();
+        let mut next = 0usize;
+        while next < total && out.len() < n {
+            let hi = (next + wave).min(total);
+            let me = self.clone();
+            let base = next;
+            let parts = self
+                .cluster()
+                .run_job(hi - next, Arc::new(move |q, exec| me.compute_owned(base + q, exec)))?;
+            for part in parts {
+                for t in part {
+                    if out.len() == n {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            next = hi;
+        }
+        Ok(out)
     }
+}
+
+/// Cluster-side combine rounds for `tree_aggregate`-style reductions:
+/// partials are moved into per-group slots (no driver-side cloning; a
+/// fault-retried task never ran, so each group is taken exactly once)
+/// and folded with `comb` until at most `fanin` remain.
+pub(crate) fn tree_combine<A, C>(
+    cluster: &Arc<Cluster>,
+    mut partials: Vec<A>,
+    comb: C,
+    fanin: usize,
+) -> Result<Vec<A>>
+where
+    A: Send + Sync + 'static,
+    C: Fn(A, A) -> A + Send + Sync + 'static + Clone,
+{
+    while partials.len() > fanin {
+        let mut groups: Vec<Mutex<Option<Vec<A>>>> = Vec::new();
+        let mut it = partials.into_iter();
+        loop {
+            let chunk: Vec<A> = it.by_ref().take(fanin).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            groups.push(Mutex::new(Some(chunk)));
+        }
+        let groups = Arc::new(groups);
+        let combf = comb.clone();
+        let n = groups.len();
+        partials = cluster.run_job(
+            n,
+            Arc::new(move |g, _exec| {
+                let group = groups[g]
+                    .lock()
+                    .expect("combine group")
+                    .take()
+                    .ok_or_else(|| Error::msg("tree_aggregate: combine group consumed twice"))?;
+                let mut it = group.into_iter();
+                let first = it.next().expect("non-empty group");
+                Ok(it.fold(first, |a, b| combf(a, b)))
+            }),
+        )?;
+    }
+    Ok(partials)
 }
 
 impl Rdd<f64> {

@@ -5,14 +5,19 @@
 //! executor computed them so a simulated *executor crash* can evict that
 //! executor's whole cache (the lineage-recovery trigger).
 //!
-//! Scheduling: a job is a set of independent tasks (one per partition)
-//! pushed onto a shared queue; the driver blocks on a per-job channel.
-//! Injected faults are retried up to `max_task_retries`; real errors
-//! propagate immediately.
+//! Scheduling: a job is a set of independent tasks (one per partition).
+//! Each worker owns a deque; submissions are spread round-robin across
+//! the deques and an idle worker first drains its own queue (FIFO), then
+//! *steals* from the back of a sibling's — so one slow task never blocks
+//! the global queue the way the old single `Mutex<mpsc::Receiver>` did.
+//! A job allocates ONE completion channel and ONE type-erased runner;
+//! every attempt enqueues a three-word [`TaskUnit`] instead of a fresh
+//! boxed closure. Injected faults are retried up to `max_task_retries`;
+//! real errors propagate immediately.
 
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::config::ClusterConfig;
 use crate::error::{Error, Result};
@@ -32,6 +37,11 @@ pub struct Metrics {
     pub tasks_failed: AtomicU64,
     /// Tasks retried after a fault.
     pub tasks_retried: AtomicU64,
+    /// Tasks a worker stole from a sibling's queue.
+    pub tasks_stolen: AtomicU64,
+    /// Narrow-stage hops that streamed through the fused per-partition
+    /// pipeline instead of materializing an intermediate partition Vec.
+    pub stages_fused: AtomicU64,
     /// Simulated executor crashes.
     pub executor_crashes: AtomicU64,
     /// Cached blocks evicted by crashes.
@@ -48,11 +58,13 @@ impl Metrics {
     /// Pretty one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} tasks={} failed={} retried={} crashes={} evicted={} recomputed={} shuffled={} xla={}",
+            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffled={} xla={}",
             self.jobs.load(Ordering::Relaxed),
             self.tasks_started.load(Ordering::Relaxed),
             self.tasks_failed.load(Ordering::Relaxed),
             self.tasks_retried.load(Ordering::Relaxed),
+            self.tasks_stolen.load(Ordering::Relaxed),
+            self.stages_fused.load(Ordering::Relaxed),
             self.executor_crashes.load(Ordering::Relaxed),
             self.blocks_evicted.load(Ordering::Relaxed),
             self.lineage_recomputes.load(Ordering::Relaxed),
@@ -121,8 +133,181 @@ impl FaultInjector {
     }
 }
 
-/// A schedulable task: runs on a worker, gets the worker's executor id.
-type Task = Box<dyn FnOnce(usize) + Send>;
+/// One schedulable attempt: the job's shared runner plus (partition,
+/// attempt) — three words per attempt instead of a boxed closure.
+struct TaskUnit {
+    partition: usize,
+    attempt: usize,
+    /// `(executor_id, partition, attempt)` — shared by every attempt of
+    /// one job.
+    run: Arc<dyn Fn(usize, usize, usize) + Send + Sync>,
+}
+
+struct Gate {
+    /// Tasks pushed but not yet claimed by a worker.
+    queued: usize,
+    shutdown: bool,
+}
+
+/// Work-stealing scheduler: per-worker deques plus a gate tracking the
+/// queued-task count (the condvar workers park on).
+struct Scheduler {
+    shards: Vec<Mutex<VecDeque<TaskUnit>>>,
+    gate: Mutex<Gate>,
+    available: Condvar,
+    next_shard: AtomicUsize,
+    metrics: Arc<Metrics>,
+}
+
+impl Scheduler {
+    fn new(n_shards: usize, metrics: Arc<Metrics>) -> Scheduler {
+        Scheduler {
+            shards: (0..n_shards.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gate: Mutex::new(Gate { queued: 0, shutdown: false }),
+            available: Condvar::new(),
+            next_shard: AtomicUsize::new(0),
+            metrics,
+        }
+    }
+
+    /// Enqueue one attempt (round-robin across worker deques). The shard
+    /// push and the queued-count increment happen under the gate lock, so
+    /// a claimant that decremented the count is guaranteed to find a task
+    /// in some deque.
+    fn push(&self, unit: TaskUnit) -> Result<()> {
+        let shard = self.next_shard.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let mut gate = self.gate.lock().expect("scheduler gate");
+        if gate.shutdown {
+            return Err(Error::msg("cluster is shut down"));
+        }
+        self.shards[shard].lock().expect("task shard").push_back(unit);
+        gate.queued += 1;
+        drop(gate);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Claim one task for worker `w`: block until work exists (or return
+    /// None on shutdown with an empty queue — workers drain before
+    /// exiting). Own deque first (FIFO), then steal from the back of a
+    /// sibling's.
+    fn claim(&self, w: usize) -> Option<TaskUnit> {
+        {
+            let mut gate = self.gate.lock().expect("scheduler gate");
+            loop {
+                if gate.queued > 0 {
+                    gate.queued -= 1;
+                    break;
+                }
+                if gate.shutdown {
+                    return None;
+                }
+                gate = self.available.wait(gate).expect("scheduler gate");
+            }
+        }
+        // A task is reserved for this worker somewhere: every decrement
+        // of `queued` matches a task already in a deque, and only
+        // claimants pop, so the scan below terminates.
+        loop {
+            if let Some(t) = self.shards[w].lock().expect("task shard").pop_front() {
+                return Some(t);
+            }
+            for i in 1..self.shards.len() {
+                let s = (w + i) % self.shards.len();
+                if let Some(t) = self.shards[s].lock().expect("task shard").pop_back() {
+                    self.metrics.tasks_stolen.fetch_add(1, Ordering::Relaxed);
+                    return Some(t);
+                }
+            }
+            // another claimant raced us to the nearest task and its own
+            // reservation is still in a deque we already scanned
+            std::thread::yield_now();
+        }
+    }
+
+    fn shutdown(&self) {
+        let mut gate = self.gate.lock().expect("scheduler gate");
+        gate.shutdown = true;
+        drop(gate);
+        self.available.notify_all();
+    }
+}
+
+/// Bounded recycling pool of `f64` work buffers — shared by the iterative
+/// mat-vec hot path (broadcast iterates, per-partition partial
+/// accumulators, driver-side reductions) so steady-state iterations
+/// allocate nothing proportional to the problem dimension.
+pub struct VecPool {
+    bufs: Mutex<Vec<Vec<f64>>>,
+}
+
+impl VecPool {
+    /// Buffers kept for reuse; excess returns are dropped. Bounds pool
+    /// memory to `MAX_POOLED ×` the largest partial a workload produces.
+    const MAX_POOLED: usize = 64;
+
+    /// Empty pool.
+    pub fn new() -> VecPool {
+        VecPool { bufs: Mutex::new(Vec::new()) }
+    }
+
+    fn take_raw(&self) -> Option<Vec<f64>> {
+        self.bufs.lock().expect("vec pool").pop()
+    }
+
+    /// A zeroed buffer of exactly `len` (pooled capacity when available).
+    pub fn take_zeroed(&self, len: usize) -> Vec<f64> {
+        match self.take_raw() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// An empty buffer (pooled capacity when available) for push-style
+    /// accumulation.
+    pub fn take_empty(&self) -> Vec<f64> {
+        match self.take_raw() {
+            Some(mut v) => {
+                v.clear();
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// A buffer holding a copy of `src` (pooled capacity when available).
+    pub fn take_copy(&self, src: &[f64]) -> Vec<f64> {
+        let mut v = self.take_empty();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&self, v: Vec<f64>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut g = self.bufs.lock().expect("vec pool");
+        if g.len() < Self::MAX_POOLED {
+            g.push(v);
+        }
+    }
+
+    /// Buffers currently pooled (observability / tests).
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().expect("vec pool").len()
+    }
+}
+
+impl Default for VecPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// The simulated cluster: worker pool + block manager + shuffle store +
 /// metrics + fault injector. One per [`crate::Context`].
@@ -134,10 +319,12 @@ pub struct Cluster {
     /// Shuffle map-output store.
     pub shuffle: ShuffleStore,
     /// Scheduler / recovery counters.
-    pub metrics: Metrics,
+    pub metrics: Arc<Metrics>,
+    /// Recycled mat-vec work buffers (the zero-alloc iterative hot path).
+    pub workspace: Arc<VecPool>,
     /// Fault injection.
     pub injector: FaultInjector,
-    sender: Mutex<Option<mpsc::Sender<Task>>>,
+    scheduler: Arc<Scheduler>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_id: AtomicUsize,
 }
@@ -145,35 +332,32 @@ pub struct Cluster {
 impl Cluster {
     /// Spin up the worker pool.
     pub fn start(config: ClusterConfig) -> Arc<Cluster> {
-        let (tx, rx) = mpsc::channel::<Task>();
-        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let n_workers = config.total_cores();
+        let scheduler = Arc::new(Scheduler::new(n_workers, Arc::clone(&metrics)));
         let cluster = Arc::new(Cluster {
             injector: FaultInjector::new(&config),
             cache: BlockManager::new(),
             shuffle: ShuffleStore::new(),
-            metrics: Metrics::default(),
-            sender: Mutex::new(Some(tx)),
+            metrics,
+            workspace: Arc::new(VecPool::new()),
+            scheduler: Arc::clone(&scheduler),
             workers: Mutex::new(vec![]),
             next_id: AtomicUsize::new(1),
             config,
         });
-        let n_workers = cluster.config.total_cores();
         let n_exec = cluster.config.num_executors;
         let mut handles = vec![];
         for w in 0..n_workers {
             let executor_id = w % n_exec;
-            let rx = Arc::clone(&rx);
+            // workers hold only the scheduler (no Arc<Cluster> cycle)
+            let sched = Arc::clone(&scheduler);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("executor-{executor_id}-core-{}", w / n_exec))
-                    .spawn(move || loop {
-                        let task = {
-                            let guard = rx.lock().expect("task queue");
-                            guard.recv()
-                        };
-                        match task {
-                            Ok(t) => t(executor_id),
-                            Err(_) => break, // channel closed: shutdown
+                    .spawn(move || {
+                        while let Some(t) = sched.claim(w) {
+                            (t.run)(executor_id, t.partition, t.attempt);
                         }
                     })
                     .expect("spawn worker"),
@@ -201,11 +385,39 @@ impl Cluster {
             return Ok(vec![]);
         }
         self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
-        // one channel for the whole job; the driver keeps a sender alive so
-        // retries can be wired to the same receiver
+        // one channel and one type-erased runner for the whole job; the
+        // runner keeps a sender alive so retries reuse the same receiver
         let (done_tx, done_rx) = mpsc::channel::<(usize, usize, Result<R>)>();
+        let runner: Arc<dyn Fn(usize, usize, usize) + Send + Sync> = {
+            let cluster = Arc::clone(self);
+            let task_fn = Arc::clone(&task_fn);
+            Arc::new(move |executor_id, partition, attempt| {
+                cluster.metrics.tasks_started.fetch_add(1, Ordering::Relaxed);
+                cluster.injector.heal(executor_id);
+                // fault decision happens before the work, like a crash at
+                // task start; executor crash also evicts its cached blocks
+                if let Some(kind) = cluster.injector.sample(executor_id) {
+                    if kind == "executor-crash" {
+                        cluster.metrics.executor_crashes.fetch_add(1, Ordering::Relaxed);
+                        let evicted = cluster.cache.evict_executor(executor_id);
+                        cluster
+                            .metrics
+                            .blocks_evicted
+                            .fetch_add(evicted as u64, Ordering::Relaxed);
+                    }
+                    let _ = done_tx.send((
+                        partition,
+                        attempt,
+                        Err(Error::InjectedFault { executor: executor_id, kind: kind.into() }),
+                    ));
+                    return;
+                }
+                let res = task_fn(partition, executor_id);
+                let _ = done_tx.send((partition, attempt, res));
+            })
+        };
         for p in 0..num_partitions {
-            self.submit_attempt(p, 1, Arc::clone(&task_fn), done_tx.clone())?;
+            self.scheduler.push(TaskUnit { partition: p, attempt: 1, run: Arc::clone(&runner) })?;
         }
         let mut results: Vec<Option<R>> = (0..num_partitions).map(|_| None).collect();
         let mut remaining = num_partitions;
@@ -229,7 +441,11 @@ impl Cluster {
                         });
                     }
                     self.metrics.tasks_retried.fetch_add(1, Ordering::Relaxed);
-                    self.submit_attempt(p, attempt + 1, Arc::clone(&task_fn), done_tx.clone())?;
+                    self.scheduler.push(TaskUnit {
+                        partition: p,
+                        attempt: attempt + 1,
+                        run: Arc::clone(&runner),
+                    })?;
                 }
                 Err(e) => return Err(e),
             }
@@ -237,52 +453,10 @@ impl Cluster {
         Ok(results.into_iter().map(|r| r.expect("all partitions done")).collect())
     }
 
-    fn submit_attempt<R: Send + 'static>(
-        self: &Arc<Self>,
-        partition: usize,
-        attempt: usize,
-        task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
-        done: mpsc::Sender<(usize, usize, Result<R>)>,
-    ) -> Result<()> {
-        let cluster = Arc::clone(self);
-        let task: Task = Box::new(move |executor_id| {
-            cluster.metrics.tasks_started.fetch_add(1, Ordering::Relaxed);
-            cluster.injector.heal(executor_id);
-            // fault decision happens before the work, like a crash at
-            // task start; executor crash also evicts its cached blocks
-            if let Some(kind) = cluster.injector.sample(executor_id) {
-                if kind == "executor-crash" {
-                    cluster.metrics.executor_crashes.fetch_add(1, Ordering::Relaxed);
-                    let evicted = cluster.cache.evict_executor(executor_id);
-                    cluster
-                        .metrics
-                        .blocks_evicted
-                        .fetch_add(evicted as u64, Ordering::Relaxed);
-                }
-                let _ = done.send((
-                    partition,
-                    attempt,
-                    Err(Error::InjectedFault { executor: executor_id, kind: kind.into() }),
-                ));
-                return;
-            }
-            let res = task_fn(partition, executor_id);
-            let _ = done.send((partition, attempt, res));
-        });
-        let guard = self.sender.lock().expect("sender");
-        guard
-            .as_ref()
-            .ok_or_else(|| Error::msg("cluster is shut down"))?
-            .send(task)
-            .map_err(|_| Error::msg("worker pool closed"))
-    }
-
-    /// Graceful shutdown: close the queue and join workers. Called by
-    /// `Context::drop`; safe to call twice.
+    /// Graceful shutdown: flag the scheduler and join workers (queued
+    /// tasks drain first). Called by `Context::drop`; safe to call twice.
     pub fn shutdown(&self) {
-        let mut guard = self.sender.lock().expect("sender");
-        *guard = None; // closes the channel; workers exit
-        drop(guard);
+        self.scheduler.shutdown();
         let mut ws = self.workers.lock().expect("workers");
         for w in ws.drain(..) {
             let _ = w.join();
@@ -293,5 +467,48 @@ impl Cluster {
 impl Drop for Cluster {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_pool_recycles_capacity() {
+        let pool = VecPool::new();
+        let mut v = pool.take_zeroed(100);
+        assert_eq!(v.len(), 100);
+        v[3] = 7.0;
+        let cap = v.capacity();
+        pool.put(v);
+        assert_eq!(pool.pooled(), 1);
+        let v2 = pool.take_zeroed(50);
+        assert_eq!(v2.len(), 50);
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffer must be zeroed");
+        assert!(v2.capacity() >= 50 && v2.capacity() <= cap.max(50));
+        assert_eq!(pool.pooled(), 0);
+        let v3 = pool.take_copy(&[1.0, 2.0]);
+        assert_eq!(v3, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn scheduler_runs_many_tiny_jobs() {
+        let cfg = ClusterConfig { num_executors: 3, ..Default::default() };
+        let cluster = Cluster::start(cfg);
+        for round in 0..50 {
+            let out = cluster
+                .run_job(17, Arc::new(move |p, _e| Ok(p * 2 + round)))
+                .unwrap();
+            assert_eq!(out, (0..17).map(|p| p * 2 + round).collect::<Vec<_>>());
+        }
+        assert!(cluster.metrics.tasks_started.load(Ordering::Relaxed) >= 50 * 17);
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let cluster = Cluster::start(ClusterConfig::default());
+        cluster.shutdown();
+        assert!(cluster.run_job(1, Arc::new(|_p, _e| Ok(0u8))).is_err());
     }
 }

@@ -15,7 +15,12 @@
 //! "driver" is whatever thread calls an action. Stages split at shuffle
 //! boundaries exactly as in Spark's DAG scheduler: a shuffled RDD carries
 //! a *prep* closure that runs its map stage (a separate job) before the
-//! reduce stage's tasks are scheduled.
+//! reduce stage's tasks are scheduled. Within a stage, consecutive
+//! narrow transformations execute as one fused per-partition pipeline
+//! (`Metrics::stages_fused` counts the hops), tasks are scheduled over
+//! per-worker deques with work stealing, and hot-path `f64` buffers are
+//! recycled through [`exec::VecPool`] — see DESIGN.md §"Execution
+//! pipeline".
 
 pub mod exec;
 pub mod cache;
@@ -26,4 +31,4 @@ pub mod pair;
 
 pub use broadcast::Broadcast;
 pub use core::Rdd;
-pub use exec::{Cluster, Metrics};
+pub use exec::{Cluster, Metrics, VecPool};

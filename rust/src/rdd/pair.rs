@@ -64,11 +64,13 @@ where
             cluster.run_job(
                 parent.num_partitions(),
                 Arc::new(move |p, exec| {
-                    let data = parent2.materialize(p, exec)?;
-                    // map-side combine into per-reduce-partition maps
+                    // map-side combine into per-reduce-partition maps;
+                    // the input streams through the fused narrow
+                    // pipeline — a map/filter chain feeding a shuffle
+                    // never materializes its output partition
                     let mut buckets: Vec<HashMap<K, V>> =
                         (0..num_out).map(|_| HashMap::new()).collect();
-                    for (k, v) in data.iter() {
+                    parent2.stream_records(p, exec, &mut |(k, v)| {
                         let b = hash_partition(k, num_out);
                         match buckets[b].get_mut(k) {
                             Some(acc) => *acc = fm(acc, v),
@@ -76,7 +78,7 @@ where
                                 buckets[b].insert(k.clone(), v.clone());
                             }
                         }
-                    }
+                    })?;
                     let mut records = 0u64;
                     for (b, bucket) in buckets.into_iter().enumerate() {
                         let vec: Vec<(K, V)> = bucket.into_iter().collect();

@@ -1,0 +1,196 @@
+//! Fused narrow-stage execution, end to end: a fused `map → filter →
+//! flat_map` chain is record-for-record identical to per-stage
+//! evaluation, `cache()` breaks fusion (and still short-circuits
+//! lineage), injected faults recompute through the fused pipeline, the
+//! `stages_fused` metric proves fusion fires, `take(n)` stops early, and
+//! the workspace pool recycles mat-vec buffers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use sparkla::config::ClusterConfig;
+use sparkla::distributed::{CoordinateMatrix, DistributedLinearOperator, RowMatrix};
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::linalg::vector::Vector;
+use sparkla::util::prop::{assert_allclose, check};
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn fused(c: &Context) -> u64 {
+    c.metrics().stages_fused.load(Ordering::Relaxed)
+}
+
+#[test]
+fn fused_chain_matches_per_stage_reference_property() {
+    check("fused map→filter→flat_map == per-stage reference", 8, |g| {
+        let c = Context::local("fusion_prop", 2);
+        let n = g.int(0, 2000) as i64;
+        let parts = 1 + g.int(0, 12);
+        let data: Vec<i64> = (0..n).collect();
+        let out = c
+            .parallelize(data.clone(), parts)
+            .map(|x| x * 3 + 1)
+            .filter(|x| x % 2 == 0)
+            .flat_map(|&x| vec![x, x + 1])
+            .collect()
+            .unwrap();
+        let want: Vec<i64> = data
+            .iter()
+            .map(|x| x * 3 + 1)
+            .filter(|x| x % 2 == 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect();
+        assert_eq!(out, want);
+        if n > 0 {
+            assert!(fused(&c) > 0, "narrow chain must stream, not materialize");
+        }
+    });
+}
+
+#[test]
+fn fused_actions_agree_with_collect() {
+    // count/aggregate/reduce consume the stream directly; they must see
+    // exactly the records collect sees
+    let c = Context::local("fusion_actions", 2);
+    let chain = c
+        .parallelize((0..997).collect::<Vec<i64>>(), 7)
+        .map(|x| x * 5 - 3)
+        .filter(|x| x % 4 != 1);
+    let collected = chain.collect().unwrap();
+    assert_eq!(chain.count().unwrap(), collected.len());
+    let sum = chain.aggregate(0i64, |a, &x| a + x, |a, b| a + b).unwrap();
+    assert_eq!(sum, collected.iter().sum::<i64>());
+    let max = chain.reduce(|a, b| *a.max(b)).unwrap();
+    assert_eq!(max, *collected.iter().max().unwrap());
+}
+
+#[test]
+fn cache_breaks_fusion_and_short_circuits_lineage() {
+    let c = Context::local("fusion_cache", 2);
+    let counter = Arc::new(AtomicUsize::new(0));
+    let cnt = Arc::clone(&counter);
+    let source = c.generate("counted", 4, move |p| {
+        cnt.fetch_add(1, Ordering::SeqCst);
+        (0..100).map(|i| (p * 100 + i) as i64).collect()
+    });
+    let cached = source.map(|x| x + 1).cache();
+    let chain = cached.map(|x| x * 2).filter(|x| x % 3 != 0);
+    let want: Vec<i64> = (0..400i64)
+        .map(|x| (x + 1) * 2)
+        .filter(|x| x % 3 != 0)
+        .collect();
+    assert_eq!(chain.collect().unwrap(), want);
+    assert_eq!(counter.load(Ordering::SeqCst), 4, "source computed once per partition");
+    // the cached stage is a fusion barrier: downstream jobs stream from
+    // its stored blocks without touching the source
+    assert_eq!(chain.collect().unwrap(), want);
+    assert_eq!(counter.load(Ordering::SeqCst), 4, "cached parent short-circuits lineage");
+    assert!(fused(&c) > 0, "stages downstream of the cache still fuse");
+}
+
+#[test]
+fn fused_pipeline_identical_under_task_faults() {
+    let clean = Context::local("fusion_clean", 4);
+    let data: Vec<i64> = (0..5000).collect();
+    let want = clean
+        .parallelize(data.clone(), 64)
+        .map(|x| x * 7)
+        .filter(|x| x % 5 != 0)
+        .flat_map(|&x| vec![x, -x])
+        .collect()
+        .unwrap();
+    let mut cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    cfg.fault.task_fail_prob = 0.08;
+    cfg.fault.executor_kill_prob = 0.02;
+    cfg.fault.seed = 11;
+    cfg.max_task_retries = 12;
+    let faulty = Context::with_config(cfg);
+    let got = faulty
+        .parallelize(data, 64)
+        .map(|x| x * 7)
+        .filter(|x| x % 5 != 0)
+        .flat_map(|&x| vec![x, -x])
+        .collect()
+        .unwrap();
+    assert_eq!(got, want, "fault-retried fused tasks must replay identically");
+    let m = faulty.metrics();
+    assert!(m.tasks_failed.load(Ordering::Relaxed) > 0, "faults should have fired");
+    assert!(m.stages_fused.load(Ordering::Relaxed) > 0, "retries replay the fused pipeline");
+}
+
+#[test]
+fn lineage_recomputes_through_fused_chain_under_crashes() {
+    let mut cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    cfg.fault.executor_kill_prob = 0.06;
+    cfg.fault.seed = 5;
+    cfg.max_task_retries = 12;
+    let ctx = Context::with_config(cfg);
+    let cached = ctx
+        .parallelize((0..4000).collect::<Vec<i64>>(), 16)
+        .map(|x| x * 3)
+        .cache();
+    let chain = cached.filter(|x| x % 2 == 0).map(|x| x + 1);
+    let want: Vec<i64> = (0..4000i64)
+        .map(|x| x * 3)
+        .filter(|x| x % 2 == 0)
+        .map(|x| x + 1)
+        .collect();
+    for round in 0..10 {
+        assert_eq!(chain.collect().unwrap(), want, "round {round}: corrupted under crashes");
+    }
+    let m = ctx.metrics();
+    assert!(m.executor_crashes.load(Ordering::Relaxed) > 0, "crashes should fire");
+    assert!(
+        m.lineage_recomputes.load(Ordering::Relaxed) > 0,
+        "evicted cached blocks must recompute through the fused upstream pipeline"
+    );
+}
+
+#[test]
+fn take_stops_computing_after_enough_records() {
+    let c = Context::local("take_early", 2);
+    let counter = Arc::new(AtomicUsize::new(0));
+    let cnt = Arc::clone(&counter);
+    let rdd = c.generate("gen", 64, move |p| {
+        cnt.fetch_add(1, Ordering::SeqCst);
+        vec![p as i64; 10]
+    });
+    let out = rdd.take(5).unwrap();
+    assert_eq!(out, vec![0, 0, 0, 0, 0]);
+    let computed = counter.load(Ordering::SeqCst);
+    assert!(computed < 64, "take(5) must not compute all 64 partitions (computed {computed})");
+    // and take past the end still returns everything
+    assert_eq!(rdd.take(10_000).unwrap().len(), 640);
+}
+
+#[test]
+fn pooled_matvec_iteration_reuses_workspace_and_stays_exact() {
+    // the zero-alloc hot path: repeated matvec/gramvec across row and
+    // coordinate formats stays bit-consistent across iterations and the
+    // workspace pool actually recycles buffers
+    let c = Context::local("pool_iter", 2);
+    let mut rng = SplitMix64::new(17);
+    let a = DenseMatrix::randn(120, 9, &mut rng);
+    let rm = RowMatrix::from_local(&c, &a, 5).cache();
+    let cm = CoordinateMatrix::from_local(&c, &a, 5).cache();
+    let x = Vector((0..9).map(|_| rng.normal()).collect());
+    let want_mv = a.matvec(&x).unwrap();
+    let want_gv = a.gram().matvec(&x).unwrap();
+    let mut out = Vector(Vec::new());
+    let first = {
+        rm.matvec_into(&x, &mut out).unwrap();
+        out.0.clone()
+    };
+    for _ in 0..5 {
+        rm.matvec_into(&x, &mut out).unwrap();
+        assert_eq!(out.0, first, "steady-state iterations must be bit-identical");
+        assert_allclose(&out.0, &want_mv.0, 1e-10, "row matvec_into");
+        rm.gramvec_into(&x, &mut out).unwrap();
+        assert_allclose(&out.0, &want_gv.0, 1e-9, "row gramvec_into");
+        cm.matvec_into(&x, &mut out).unwrap();
+        assert_allclose(&out.0, &want_mv.0, 1e-10, "coordinate matvec_into");
+        cm.gramvec_into(&x, &mut out).unwrap();
+        assert_allclose(&out.0, &want_gv.0, 1e-9, "coordinate gramvec_into");
+    }
+    assert!(c.workspace().pooled() > 0, "mat-vec partials must return to the pool");
+}
