@@ -1,0 +1,170 @@
+//! Shuffle-subsystem benchmarks (the perf claims of the partitioner /
+//! simulate-multiply PR, measured):
+//!
+//! 1. grid-partitioned simulate-multiply (ONE shuffle, `Arc`-shipped
+//!    blocks, in-place `gemm_acc` partials) vs the legacy join-based
+//!    two-shuffle multiply at several grid sizes, with the shuffle
+//!    records written by each path;
+//! 2. hash join vs co-partitioned join (zero-shuffle cogroup);
+//! 3. `reduce_by_key` (allocating combiner) vs `reduce_by_key_merge`
+//!    (in-place combiner) on vector-valued records.
+//!
+//! Writes `target/experiments/BENCH_shuffle.json`.
+
+use std::sync::atomic::Ordering;
+
+use sparkla::bench::{bench, BenchConfig, Table};
+use sparkla::distributed::BlockMatrix;
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::rdd::Partitioner;
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn records_written(ctx: &Context) -> u64 {
+    ctx.metrics().shuffle_records_written.load(Ordering::Relaxed)
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let ctx = Context::local("bench_shuffle", 4);
+    let mut table = Table::new(&["benchmark", "time", "detail"]);
+    let mut mul_json = vec![];
+    let mut rng = SplitMix64::new(42);
+
+    // ---- simulate-multiply vs legacy join multiply
+    let cases: Vec<(usize, usize, usize, usize)> = if fast {
+        vec![(48, 48, 48, 12), (64, 48, 32, 16)]
+    } else {
+        vec![(128, 128, 128, 16), (192, 128, 96, 32), (256, 256, 256, 32)]
+    };
+    for &(m, k, n, block) in &cases {
+        let a = DenseMatrix::randn(m, k, &mut rng);
+        let b = DenseMatrix::randn(k, n, &mut rng);
+        let ba = BlockMatrix::from_local(&ctx, &a, block, block, 4).cache();
+        let bb = BlockMatrix::from_local(&ctx, &b, block, block, 4).cache();
+        ba.nnz().unwrap();
+        bb.nnz().unwrap();
+        // shuffle volume of one run of each path
+        let r0 = records_written(&ctx);
+        ba.multiply_join(&bb).unwrap().blocks.count().unwrap();
+        let legacy_records = records_written(&ctx) - r0;
+        let r1 = records_written(&ctx);
+        ba.multiply(&bb).unwrap().blocks.count().unwrap();
+        let sim_records = records_written(&ctx) - r1;
+        // wall clock (fresh lineage per call — nothing latched)
+        let m_old = bench(&format!("join_mul_{m}x{k}x{n}"), &cfg, || {
+            std::hint::black_box(ba.multiply_join(&bb).unwrap().blocks.count().unwrap());
+        });
+        let m_new = bench(&format!("sim_mul_{m}x{k}x{n}"), &cfg, || {
+            std::hint::black_box(ba.multiply(&bb).unwrap().blocks.count().unwrap());
+        });
+        let speedup = m_old.median() / m_new.median();
+        table.row(&[
+            format!("multiply {m}x{k}x{n} (b{block}) join"),
+            format!("{:.1} ms", m_old.median() * 1e3),
+            format!("{legacy_records} recs shuffled"),
+        ]);
+        table.row(&[
+            format!("multiply {m}x{k}x{n} (b{block}) simulate"),
+            format!("{:.1} ms", m_new.median() * 1e3),
+            format!("{sim_records} recs shuffled ({speedup:.2}x)"),
+        ]);
+        mul_json.push(format!(
+            "    {{\"m\": {m}, \"k\": {k}, \"n\": {n}, \"block\": {block}, \"join_median_sec\": {:.6e}, \"simulate_median_sec\": {:.6e}, \"speedup\": {:.3}, \"join_records\": {legacy_records}, \"simulate_records\": {sim_records}, \"records_reduction\": {:.3}}}",
+            m_old.median(),
+            m_new.median(),
+            speedup,
+            legacy_records as f64 / sim_records.max(1) as f64
+        ));
+    }
+
+    // ---- join vs co-partitioned join
+    let n_rec = if fast { 30_000u64 } else { 300_000 };
+    let keys = 512u64;
+    let part = Partitioner::hash(8);
+    let left = ctx
+        .parallelize((0..n_rec).map(|i| (i % keys, i)).collect::<Vec<_>>(), 8)
+        .map(|p| *p);
+    let right = ctx
+        .parallelize((0..n_rec / 2).map(|i| (i % keys, i * 3)).collect::<Vec<_>>(), 8)
+        .map(|p| *p);
+    let m_join = bench("hash_join", &cfg, || {
+        std::hint::black_box(left.join(&right, 8).count().unwrap());
+    });
+    let l_part = left.partition_by_with(part.clone());
+    let r_part = right.partition_by_with(part.clone());
+    l_part.count().unwrap(); // run + latch the co-location shuffles
+    r_part.count().unwrap();
+    let part2 = part.clone();
+    let m_cojoin = bench("copart_join", &cfg, || {
+        std::hint::black_box(l_part.join_with(&r_part, part2.clone()).count().unwrap());
+    });
+    table.row(&[
+        "join (2 shuffles)".into(),
+        format!("{:.1} ms", m_join.median() * 1e3),
+        format!("{n_rec}+{} recs", n_rec / 2),
+    ]);
+    table.row(&[
+        "co-partitioned join (0 shuffles)".into(),
+        format!("{:.1} ms", m_cojoin.median() * 1e3),
+        format!("{:.2}x", m_join.median() / m_cojoin.median()),
+    ]);
+
+    // ---- reduce_by_key vs reduce_by_key_merge (vector values)
+    let n_vec = if fast { 20_000usize } else { 200_000 };
+    let vec_len = 64usize;
+    let vals = ctx
+        .parallelize((0..n_vec).collect::<Vec<usize>>(), 8)
+        .map(move |&i| ((i % 128) as u32, vec![i as f64; vec_len]));
+    let m_rbk = bench("reduce_by_key", &cfg, || {
+        std::hint::black_box(
+            vals.reduce_by_key(8, |a: &Vec<f64>, b: &Vec<f64>| {
+                a.iter().zip(b).map(|(x, y)| x + y).collect()
+            })
+            .count()
+            .unwrap(),
+        );
+    });
+    let m_merge = bench("reduce_by_key_merge", &cfg, || {
+        std::hint::black_box(
+            vals.reduce_by_key_merge(Partitioner::hash(8), |acc: &mut Vec<f64>, v: Vec<f64>| {
+                for (x, y) in acc.iter_mut().zip(&v) {
+                    *x += y;
+                }
+            })
+            .count()
+            .unwrap(),
+        );
+    });
+    table.row(&[
+        "reduce_by_key (alloc combiner)".into(),
+        format!("{:.1} ms", m_rbk.median() * 1e3),
+        format!("{n_vec} x f64[{vec_len}]"),
+    ]);
+    table.row(&[
+        "reduce_by_key_merge (in place)".into(),
+        format!("{:.1} ms", m_merge.median() * 1e3),
+        format!("{:.2}x", m_rbk.median() / m_merge.median()),
+    ]);
+
+    let skipped = ctx.metrics().shuffles_skipped.load(Ordering::Relaxed);
+    let executed = ctx.metrics().shuffles_executed.load(Ordering::Relaxed);
+    let json = format!(
+        "{{\n  \"bench\": \"shuffle\",\n  \"multiply\": [\n{}\n  ],\n  \"join_median_sec\": {:.6e},\n  \"copartitioned_join_median_sec\": {:.6e},\n  \"join_speedup\": {:.3},\n  \"reduce_by_key_median_sec\": {:.6e},\n  \"reduce_by_key_merge_median_sec\": {:.6e},\n  \"merge_speedup\": {:.3},\n  \"shuffles_executed\": {executed},\n  \"shuffles_skipped\": {skipped}\n}}\n",
+        mul_json.join(",\n"),
+        m_join.median(),
+        m_cojoin.median(),
+        m_join.median() / m_cojoin.median(),
+        m_rbk.median(),
+        m_merge.median(),
+        m_rbk.median() / m_merge.median()
+    );
+    let json_path = std::path::Path::new("target/experiments/BENCH_shuffle.json");
+    std::fs::create_dir_all(json_path.parent().unwrap()).unwrap();
+    std::fs::write(json_path, json).unwrap();
+
+    println!("{}", table.render());
+    println!("shuffles executed = {executed}, skipped = {skipped}");
+    println!("results -> {json_path:?}");
+}

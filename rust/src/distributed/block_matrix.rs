@@ -1,12 +1,32 @@
 //! `BlockMatrix` (paper §2.3): dense sub-blocks in an RDD keyed by block
-//! coordinates. Supports `add`, `multiply` (the shuffle-join the paper's
-//! "large linear model parallelism" [4, 9] builds on), `transpose`, and
-//! the paper's `validate` helper.
+//! coordinates. Supports `add`, `multiply` (the paper's "large linear
+//! model parallelism" [4, 9] builds on it), `transpose`, and the paper's
+//! `validate` helper.
+//!
+//! `multiply` is Spark's **simulate multiply**: both operands'
+//! block-key sets are collected (metadata only), the destination
+//! partitions of every block under the result's [`Partitioner::grid`]
+//! are computed on the driver, and each block is shipped — `Arc`-shared,
+//! never deep-cloned — *only* to the reduce partitions it actually
+//! contracts with, in ONE shuffle. Each reduce partition accumulates its
+//! partial products in place with [`gemm_acc`] (`C += A·B`). An operand
+//! already partitioned so that all its blocks sit at their destination
+//! is read in place — zero shuffle for that side
+//! (`Metrics::shuffles_skipped`). The legacy join-based two-shuffle path
+//! survives as [`BlockMatrix::multiply_join`] for benchmarks.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, OnceLock};
 
 use crate::coordinator::context::Context;
 use crate::distributed::coordinate_matrix::{CoordinateMatrix, MatrixEntry};
 use crate::error::{Error, Result};
+use crate::linalg::blas::level3::gemm_acc;
 use crate::linalg::matrix::DenseMatrix;
+use crate::rdd::core::Prep;
+use crate::rdd::pair::Partitioner;
+use crate::rdd::shuffle::ShuffleDep;
 use crate::rdd::Rdd;
 
 /// Block-partitioned distributed matrix.
@@ -67,7 +87,9 @@ impl BlockMatrix {
     }
 
     /// From coordinate entries (one shuffle; the paper's
-    /// `CoordinateMatrix.toBlockMatrix`).
+    /// `CoordinateMatrix.toBlockMatrix`). Output blocks are
+    /// grid-partitioned, so downstream block ops see a known
+    /// [`Partitioner`] and can skip compatible shuffles.
     pub fn from_coordinate(
         cm: &CoordinateMatrix,
         rows_per_block: usize,
@@ -77,27 +99,34 @@ impl BlockMatrix {
         let (nr, nc) = (cm.num_rows as usize, cm.num_cols as usize);
         let rpb = rows_per_block;
         let cpb = cols_per_block;
+        let part =
+            Partitioner::grid(nr.div_ceil(rpb), nc.div_ceil(cpb), num_partitions.max(1));
         let keyed = cm
             .entries
-            .map(move |e| (((e.i as usize / rpb), (e.j as usize / cpb)), vec![*e]));
-        let grouped = keyed.reduce_by_key(num_partitions.max(1), |a: &Vec<MatrixEntry>, b| {
-            let mut v = a.clone();
-            v.extend_from_slice(b);
-            v
-        });
-        let blocks = grouped.map(move |((bi, bj), entries)| {
-            let (bi, bj) = (*bi, *bj);
-            let block_rows = rpb.min(nr - bi * rpb);
-            let block_cols = cpb.min(nc - bj * cpb);
-            let mut m = DenseMatrix::zeros(block_rows, block_cols);
-            for e in entries {
-                let li = e.i as usize - bi * rpb;
-                let lj = e.j as usize - bj * cpb;
-                let cur = m.get(li, lj);
-                m.set(li, lj, cur + e.value);
-            }
-            ((bi, bj), m)
-        });
+            .map(move |e| (((e.i as usize / rpb), (e.j as usize / cpb)), *e));
+        let grouped = keyed.combine_by_key_with(
+            part.clone(),
+            |e| vec![e],
+            |acc: &mut Vec<MatrixEntry>, e| acc.push(e),
+            |acc: &mut Vec<MatrixEntry>, mut other| acc.append(&mut other),
+        );
+        let blocks = grouped
+            .map(move |((bi, bj), entries)| {
+                let (bi, bj) = (*bi, *bj);
+                let block_rows = rpb.min(nr - bi * rpb);
+                let block_cols = cpb.min(nc - bj * cpb);
+                let mut m = DenseMatrix::zeros(block_rows, block_cols);
+                for e in entries {
+                    let li = e.i as usize - bi * rpb;
+                    let lj = e.j as usize - bj * cpb;
+                    let cur = m.get(li, lj);
+                    m.set(li, lj, cur + e.value);
+                }
+                ((bi, bj), m)
+            })
+            // keys are untouched by the block build, so the grid
+            // placement survives the map
+            .with_partitioner(part);
         Ok(BlockMatrix::new(cm.context(), blocks, rpb, cpb, nr, nc))
     }
 
@@ -212,7 +241,10 @@ impl BlockMatrix {
         Ok(())
     }
 
-    /// Element-wise add (blocks co-located by key; one shuffle each side).
+    /// Element-wise add. Identically-partitioned operands (e.g. two
+    /// products over the same grid) add with a partition-local zip —
+    /// zero shuffle; otherwise one grid-partitioned merge shuffle whose
+    /// combiner folds blocks in place (`DenseMatrix::add_assign`).
     pub fn add(&self, other: &BlockMatrix) -> Result<BlockMatrix> {
         if (self.num_rows, self.num_cols) != (other.num_rows, other.num_cols)
             || (self.rows_per_block, self.cols_per_block)
@@ -230,13 +262,49 @@ impl BlockMatrix {
                 other.cols_per_block
             )));
         }
+        if let (Some(p1), Some(p2)) = (self.blocks.partitioner(), other.blocks.partitioner()) {
+            if p1 == p2 && self.blocks.num_partitions() == other.blocks.num_partitions() {
+                let shared = p1.clone();
+                self.ctx
+                    .cluster()
+                    .metrics
+                    .shuffles_skipped
+                    .fetch_add(1, Ordering::Relaxed);
+                let summed = self
+                    .blocks
+                    .zip_partitions(&other.blocks, |ls, rs| {
+                        let mut acc: HashMap<(usize, usize), DenseMatrix> =
+                            ls.iter().map(|(k, m)| (*k, m.clone())).collect();
+                        for (k, m) in rs {
+                            match acc.get_mut(k) {
+                                Some(a) => a.add_assign(m).expect("validated block shapes"),
+                                None => {
+                                    acc.insert(*k, m.clone());
+                                }
+                            }
+                        }
+                        acc.into_iter().collect()
+                    })?
+                    .with_partitioner(shared);
+                return Ok(BlockMatrix::new(
+                    &self.ctx,
+                    summed,
+                    self.rows_per_block,
+                    self.cols_per_block,
+                    self.num_rows,
+                    self.num_cols,
+                ));
+            }
+        }
         let parts = self.blocks.num_partitions().max(other.blocks.num_partitions());
+        let (gr, gc) = self.grid();
+        let part = Partitioner::grid(gr, gc, parts);
         let tagged = self
             .blocks
             .map(|(k, m)| (*k, m.clone()))
             .union(&other.blocks.map(|(k, m)| (*k, m.clone())));
-        let summed = tagged.reduce_by_key(parts, |a: &DenseMatrix, b: &DenseMatrix| {
-            a.add(b).expect("validated block shapes")
+        let summed = tagged.reduce_by_key_merge(part, |acc: &mut DenseMatrix, m| {
+            acc.add_assign(&m).expect("validated block shapes")
         });
         Ok(BlockMatrix::new(
             &self.ctx,
@@ -248,10 +316,200 @@ impl BlockMatrix {
         ))
     }
 
-    /// Distributed matrix multiply: join on the contraction index k —
-    /// map each A(i,k) and B(k,j) to key k, join, emit partial products
-    /// keyed (i,j), reduce by sum. (The classic SUMMA-over-shuffle.)
+    /// Re-partition blocks spatially with a [`Partitioner::grid`] sized
+    /// for roughly `suggested_partitions` tiles. A no-op (zero shuffle,
+    /// counted in `Metrics::shuffles_skipped`) when the blocks already
+    /// carry that exact partitioner.
+    pub fn partition_by_grid(&self, suggested_partitions: usize) -> BlockMatrix {
+        let (gr, gc) = self.grid();
+        let part = Partitioner::grid(gr, gc, suggested_partitions.max(1));
+        BlockMatrix::new(
+            &self.ctx,
+            self.blocks.partition_by_with(part),
+            self.rows_per_block,
+            self.cols_per_block,
+            self.num_rows,
+            self.num_cols,
+        )
+    }
+
+    /// Distributed matrix multiply — Spark's **simulate multiply**:
+    ///
+    /// 1. at the first consuming action (the op itself is lazy, like
+    ///    every other transformation), collect both operands' block keys
+    ///    (metadata only) and compute, on the driver, the set of result
+    ///    partitions each block contracts with under the result grid
+    ///    partitioner;
+    /// 2. ONE shuffle routes every block — `Arc`-shared, cloned only by
+    ///    pointer — to exactly those destinations (a side whose blocks
+    ///    already all sit at their destination is read in place, zero
+    ///    shuffle, `Metrics::shuffles_skipped`);
+    /// 3. each result partition runs the local block contraction,
+    ///    accumulating partial products **in place** with
+    ///    [`gemm_acc`] — no per-partial allocations.
+    ///
+    /// The output is grid-partitioned, so follow-up block ops over the
+    /// same grid skip their shuffles. Note the planning key-pass streams
+    /// each *uncached* operand's lineage once before the routing pass
+    /// reads it again — `cache()` operands that are expensive to
+    /// recompute (exactly Spark's guidance for `BlockMatrix.multiply`).
     pub fn multiply(&self, other: &BlockMatrix) -> Result<BlockMatrix> {
+        if self.num_cols != other.num_rows || self.cols_per_block != other.rows_per_block {
+            return Err(Error::dim(format!(
+                "BlockMatrix multiply: inner {} ({}per) vs {} ({}per)",
+                self.num_cols, self.cols_per_block, other.num_rows, other.rows_per_block
+            )));
+        }
+        let (gr_a, _) = self.grid();
+        let (_, gc_b) = other.grid();
+        let suggested = self.blocks.num_partitions().max(other.blocks.num_partitions());
+        let part = Partitioner::grid(gr_a, gc_b, suggested);
+        let num_out = part.num_partitions();
+        let cluster = Arc::clone(self.ctx.cluster());
+        let shuffle_id = cluster.new_id();
+
+        // ---- lazy plan: simulate + route at the first action's prep.
+        // The plan decides per side whether to read in place (already at
+        // its destinations) or to ship under the ONE shared shuffle id.
+        let plan: Arc<OnceLock<(MulSide, MulSide)>> = Arc::new(OnceLock::new());
+        let a_blocks = self.blocks.clone();
+        let b_blocks = other.blocks.clone();
+        let part_plan = part.clone();
+        let cluster_plan = Arc::clone(&cluster);
+        let plan_w = Arc::clone(&plan);
+        let dep = ShuffleDep::new(
+            Arc::clone(&cluster),
+            shuffle_id,
+            Box::new(move || {
+                // simulate: block keys only, destinations on the driver
+                let a_keys: Vec<(usize, usize)> = a_blocks.map(|(k, _m)| *k).collect()?;
+                let b_keys: Vec<(usize, usize)> = b_blocks.map(|(k, _m)| *k).collect()?;
+                let mut a_is_by_k: HashMap<usize, Vec<usize>> = HashMap::new();
+                for &(i, k) in &a_keys {
+                    a_is_by_k.entry(k).or_default().push(i);
+                }
+                let mut b_js_by_k: HashMap<usize, Vec<usize>> = HashMap::new();
+                for &(k, j) in &b_keys {
+                    b_js_by_k.entry(k).or_default().push(j);
+                }
+                let mut a_dests: HashMap<(usize, usize), BTreeSet<usize>> = HashMap::new();
+                for &(i, k) in &a_keys {
+                    let dests = a_dests.entry((i, k)).or_default();
+                    if let Some(js) = b_js_by_k.get(&k) {
+                        for &j in js {
+                            dests.insert(part_plan.partition_coords(i, j));
+                        }
+                    }
+                }
+                let mut b_dests: HashMap<(usize, usize), BTreeSet<usize>> = HashMap::new();
+                for &(k, j) in &b_keys {
+                    let dests = b_dests.entry((k, j)).or_default();
+                    if let Some(is) = a_is_by_k.get(&k) {
+                        for &i in is {
+                            dests.insert(part_plan.partition_coords(i, j));
+                        }
+                    }
+                }
+                let (a_src, a_shuffled) =
+                    route_mul_side(&a_blocks, &part_plan, &a_dests, shuffle_id, 0, &cluster_plan)?;
+                let (b_src, b_shuffled) = route_mul_side(
+                    &b_blocks,
+                    &part_plan,
+                    &b_dests,
+                    shuffle_id,
+                    a_blocks.num_partitions(),
+                    &cluster_plan,
+                )?;
+                let _ = plan_w.set((a_src, b_src));
+                Ok(a_shuffled || b_shuffled)
+            }),
+        );
+        // co-located sides are read in place at reduce time, so both
+        // operands' upstream stages must be prepared before our jobs
+        let mut preps: Vec<Arc<Prep>> = self.blocks.child_preps();
+        preps.extend(other.blocks.child_preps());
+        preps.push(dep.as_prep());
+
+        // ---- reduce: local contraction with in-place accumulation
+        let (rpb, cpb_out) = (self.rows_per_block, other.cols_per_block);
+        let (nr_out, nc_out) = (self.num_rows, other.num_cols);
+        let part_c = part.clone();
+        let cluster2 = Arc::clone(&cluster);
+        let compute = Box::new(move |q: usize, exec: usize| {
+            // `dep` must outlive this RDD so the buckets do too
+            let _keep = &dep;
+            let (a_src, b_src) = plan
+                .get()
+                .ok_or_else(|| Error::msg("BlockMatrix multiply plan not prepared"))?;
+            let (a_buckets, a_local) = gather_mul_side(a_src, &cluster2, shuffle_id, q, exec)?;
+            let (b_buckets, b_local) = gather_mul_side(b_src, &cluster2, shuffle_id, q, exec)?;
+            let mut a_refs: Vec<(usize, usize, &DenseMatrix)> = Vec::new();
+            for bucket in &a_buckets {
+                for ((i, k), m) in bucket.iter() {
+                    a_refs.push((*i, *k, m.as_ref()));
+                }
+            }
+            if let Some(data) = &a_local {
+                for ((i, k), m) in data.iter() {
+                    a_refs.push((*i, *k, m));
+                }
+            }
+            let mut b_by_k: HashMap<usize, Vec<(usize, &DenseMatrix)>> = HashMap::new();
+            for bucket in &b_buckets {
+                for ((k, j), m) in bucket.iter() {
+                    b_by_k.entry(*k).or_default().push((*j, m.as_ref()));
+                }
+            }
+            if let Some(data) = &b_local {
+                for ((k, j), m) in data.iter() {
+                    b_by_k.entry(*k).or_default().push((*j, m));
+                }
+            }
+            let mut out: HashMap<(usize, usize), DenseMatrix> = HashMap::new();
+            for &(i, k, am) in &a_refs {
+                if let Some(bs) = b_by_k.get(&k) {
+                    for &(j, bm) in bs {
+                        // a block pair may co-reside here on behalf of a
+                        // *different* output partition — contract only
+                        // the products this partition owns
+                        if part_c.partition_coords(i, j) != q {
+                            continue;
+                        }
+                        let c = out.entry((i, j)).or_insert_with(|| {
+                            DenseMatrix::zeros(
+                                rpb.min(nr_out - i * rpb),
+                                cpb_out.min(nc_out - j * cpb_out),
+                            )
+                        });
+                        gemm_acc(am, bm, c);
+                    }
+                }
+            }
+            Ok(out.into_iter().collect())
+        });
+        let result = Rdd::from_parts(
+            Arc::clone(&cluster),
+            format!("({}·{})", self.blocks.name(), other.blocks.name()),
+            num_out,
+            preps,
+            compute,
+        )
+        .with_partitioner(part);
+        Ok(BlockMatrix::new(
+            &self.ctx,
+            result,
+            self.rows_per_block,
+            other.cols_per_block,
+            self.num_rows,
+            other.num_cols,
+        ))
+    }
+
+    /// The legacy two-shuffle multiply (join on the contraction index k,
+    /// one fresh matrix per partial product, reduce by allocating add) —
+    /// kept as the regression baseline `bench_shuffle` measures the
+    /// simulate-multiply against.
+    pub fn multiply_join(&self, other: &BlockMatrix) -> Result<BlockMatrix> {
         if self.num_cols != other.num_rows || self.cols_per_block != other.rows_per_block {
             return Err(Error::dim(format!(
                 "BlockMatrix multiply: inner {} ({}per) vs {} ({}per)",
@@ -318,6 +576,111 @@ impl BlockMatrix {
             }
         }
         Ok(out)
+    }
+}
+
+/// One operand of the simulate-multiply: read in place (already at its
+/// destinations) or routed there under the multiply's single shuffle.
+enum MulSide {
+    Colocated(Rdd<((usize, usize), DenseMatrix)>),
+    /// Map partitions of this side live at `base..base + n_map` within
+    /// the shared shuffle id's map-index space.
+    Shuffled { base: usize, n_map: usize },
+}
+
+/// Route one operand toward the result partitions (called from the
+/// multiply's `ShuffleDep` at the first consuming action): skip the
+/// shuffle when every block already sits at its sole destination under
+/// the operand's recorded partitioner, else run the routing map job now
+/// — blocks consumed by value and shipped `Arc`-shared to exactly their
+/// destination set. Returns the side plus whether it actually shuffled.
+///
+/// This intentionally parallels `rdd::pair`'s `SideSource` but is a
+/// separate mechanism: it fans each record out to a *set* of
+/// destinations, shares one payload `Arc` across them, and offsets its
+/// map indices by `base` inside a shuffle id shared with the other
+/// operand.
+fn route_mul_side(
+    blocks: &Rdd<((usize, usize), DenseMatrix)>,
+    part: &Partitioner,
+    dests: &HashMap<(usize, usize), BTreeSet<usize>>,
+    shuffle_id: usize,
+    base: usize,
+    cluster: &Arc<crate::rdd::Cluster>,
+) -> Result<(MulSide, bool)> {
+    let colocated = blocks.partitioner().is_some_and(|p| {
+        p.num_partitions() == part.num_partitions()
+            && blocks.num_partitions() == part.num_partitions()
+            && dests
+                .iter()
+                .all(|(key, ds)| ds.iter().all(|&q| q == p.partition_coords(key.0, key.1)))
+    });
+    if colocated {
+        cluster.metrics.shuffles_skipped.fetch_add(1, Ordering::Relaxed);
+        return Ok((MulSide::Colocated(blocks.clone()), false));
+    }
+    blocks.prepare()?;
+    let parent = blocks.clone();
+    let cl = Arc::clone(cluster);
+    let dests = Arc::new(dests.clone());
+    let num_out = part.num_partitions();
+    let n_map = blocks.num_partitions();
+    cluster.run_job(
+        n_map,
+        Arc::new(move |p, exec| {
+            let mut buckets: Vec<Vec<((usize, usize), Arc<DenseMatrix>)>> =
+                (0..num_out).map(|_| Vec::new()).collect();
+            for (key, m) in parent.compute_owned(p, exec)? {
+                if let Some(ds) = dests.get(&key) {
+                    if ds.is_empty() {
+                        continue; // contracts with nothing: never shipped
+                    }
+                    // one shared payload, pointer-cloned per destination
+                    let shared = Arc::new(m);
+                    for &q in ds.iter() {
+                        buckets[q].push((key, Arc::clone(&shared)));
+                    }
+                }
+            }
+            for (b, bucket) in buckets.into_iter().enumerate() {
+                if !bucket.is_empty() {
+                    cl.shuffle.put(shuffle_id, base + p, b, bucket);
+                }
+            }
+            Ok(())
+        }),
+    )?;
+    Ok((MulSide::Shuffled { base, n_map }, true))
+}
+
+type MulBuckets = Vec<Arc<Vec<((usize, usize), Arc<DenseMatrix>)>>>;
+type MulLocal = Option<Arc<Vec<((usize, usize), DenseMatrix)>>>;
+
+/// Fetch one side's blocks for result partition `q` — shuffle buckets
+/// for a routed side, the in-place partition for a co-located one. Both
+/// come back as keep-alive containers the contraction borrows from, so
+/// no block is ever deep-copied on the read side.
+fn gather_mul_side(
+    side: &MulSide,
+    cluster: &Arc<crate::rdd::Cluster>,
+    shuffle_id: usize,
+    q: usize,
+    exec: usize,
+) -> Result<(MulBuckets, MulLocal)> {
+    match side {
+        MulSide::Colocated(rdd) => Ok((Vec::new(), Some(rdd.materialize(q, exec)?))),
+        MulSide::Shuffled { base, n_map } => {
+            let mut buckets = Vec::new();
+            for m in 0..*n_map {
+                if let Some(b) = cluster
+                    .shuffle
+                    .get::<((usize, usize), Arc<DenseMatrix>)>(shuffle_id, base + m, q)
+                {
+                    buckets.push(b);
+                }
+            }
+            Ok((buckets, None))
+        }
     }
 }
 

@@ -115,37 +115,35 @@ impl CoordinateMatrix {
 
     /// Group entries into sparse indexed rows (paper:
     /// `toIndexedRowMatrix`; one shuffle). Duplicate (i, j) pairs are
-    /// summed, matching local COO semantics.
+    /// summed, matching local COO semantics. The row maps are built with
+    /// in-place merges (`combine_by_key_with`) — no per-merge clones of
+    /// the growing column map.
     pub fn to_indexed_row_matrix(&self, num_partitions: usize) -> Result<IndexedRowMatrix> {
         if self.num_cols > u32::MAX as u64 {
             return Err(Error::InvalidArgument(
                 "to_indexed_row_matrix: column index exceeds u32 (sparse row limit)".into(),
             ));
         }
-        let pairs = self.entries.map(|e| (e.i, (e.j, e.value)));
-        let grouped = pairs.group_by_key(num_partitions.max(1));
-        let rows = grouped.map(move |(i, cols)| {
-            let mut m = std::collections::BTreeMap::<u32, f64>::new();
-            let mut size = 0u32;
-            for &(j, v) in cols {
-                let j32 = j as u32;
-                *m.entry(j32).or_insert(0.0) += v;
-                size = size.max(j32 + 1);
-            }
-            let (indices, values): (Vec<u32>, Vec<f64>) = m.into_iter().unzip();
-            let sv = SparseVector { size: size as usize, indices, values };
-            (*i, Row::Sparse(sv))
-        });
-        // widen each sparse row to the declared column count
-        let n_cols = self.num_cols as usize;
-        let rows = rows.map(move |(i, r)| {
-            let r = match r {
-                Row::Sparse(s) => {
-                    Row::Sparse(SparseVector { size: n_cols, ..s.clone() })
+        let pairs = self.entries.map(|e| (e.i, (e.j as u32, e.value)));
+        let combined = pairs.combine_by_key_with(
+            crate::rdd::pair::Partitioner::hash(num_partitions.max(1)),
+            |(j, v)| {
+                let mut m = std::collections::BTreeMap::<u32, f64>::new();
+                m.insert(j, v);
+                m
+            },
+            |m, (j, v)| *m.entry(j).or_insert(0.0) += v,
+            |m, other| {
+                for (j, v) in other {
+                    *m.entry(j).or_insert(0.0) += v;
                 }
-                other => other.clone(),
-            };
-            (*i, r)
+            },
+        );
+        // sparse rows carry the declared column count
+        let n_cols = self.num_cols as usize;
+        let rows = combined.map(move |(i, m)| {
+            let (indices, values): (Vec<u32>, Vec<f64>) = m.iter().map(|(j, v)| (*j, *v)).unzip();
+            (*i, Row::Sparse(SparseVector { size: n_cols, indices, values }))
         });
         Ok(IndexedRowMatrix::new(&self.ctx, rows, Some(n_cols)))
     }

@@ -22,6 +22,7 @@ use crate::distributed::row_matrix::{RowMatrix, TREE_FANIN};
 use crate::error::Result;
 use crate::linalg::matrix::DenseMatrix;
 use crate::linalg::vector::Vector;
+use crate::rdd::pair::Partitioner;
 use crate::rdd::Rdd;
 
 /// A distributed linear map `A : ℝⁿ → ℝᵐ` with an adjoint. Vectors live
@@ -535,9 +536,16 @@ impl DistributedLinearOperator for CoordinateMatrix {
             let hi = ((p + 1) * per).min(m);
             (lo..hi).map(|i| (i as u64, vec![0.0; k])).collect()
         });
-        let reduced = pairs.union(&zeros).reduce_by_key(parts, |a: &Vec<f64>, b: &Vec<f64>| {
-            a.iter().zip(b).map(|(x, y)| x + y).collect()
-        });
+        // in-place merge: partial row buffers are moved into the
+        // accumulator and summed without a fresh Vec per combine
+        let reduced = pairs.union(&zeros).reduce_by_key_merge(
+            Partitioner::hash(parts),
+            |a: &mut Vec<f64>, b: Vec<f64>| {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+            },
+        );
         let rows = reduced.map(|(_i, v)| Row::Dense(v.clone()));
         Ok(RowMatrix::new(self.context(), rows, Some(k)))
     }
@@ -773,9 +781,12 @@ impl DistributedLinearOperator for BlockMatrix {
                 .map(|bi| (bi, DenseMatrix::zeros(rpb.min(m - bi * rpb), k)))
                 .collect()
         });
-        let reduced = partials.union(&zeros).reduce_by_key(parts, |a: &DenseMatrix, b: &DenseMatrix| {
-            a.add(b).expect("partial U blocks share shape")
-        });
+        let reduced = partials.union(&zeros).reduce_by_key_merge(
+            Partitioner::hash(parts),
+            |a: &mut DenseMatrix, b: DenseMatrix| {
+                a.add_assign(&b).expect("partial U blocks share shape")
+            },
+        );
         let rows = reduced.flat_map(|(_bi, m)| {
             (0..m.rows).map(|i| Row::Dense(m.row(i).to_vec())).collect::<Vec<_>>()
         });

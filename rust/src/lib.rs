@@ -42,6 +42,14 @@
 //! allocation is independent of the matrix size (DESIGN.md §"Execution
 //! pipeline").
 //!
+//! Shuffles are **partitioner-aware** ([`rdd::Partitioner`]): keyed ops
+//! skip their shuffle when the input is already compatibly partitioned
+//! (`Metrics::shuffles_skipped`), `join` is a single co-partitioned
+//! cogroup, and `BlockMatrix::multiply` is the single-shuffle
+//! simulate-multiply — each block ships (`Arc`-shared) only to the
+//! result partitions it contracts with, partials accumulate in place via
+//! `gemm_acc` (DESIGN.md §"Shuffle & partitioning").
+//!
 //! The drivers are generic over
 //! [`distributed::DistributedLinearOperator`] — the same SVD (and the
 //! TFOCS/optim solvers) runs over a sparse entry-format matrix with no

@@ -58,6 +58,15 @@ pub fn gemm_blocked(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
     c
 }
 
+/// Accumulating GEMM `c += a·b` via the blocked tiled driver — the
+/// kernel BlockMatrix's simulate-multiply reduce uses to fold partial
+/// block products **in place** (no fresh matrix per partial).
+pub fn gemm_acc(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix) {
+    assert_eq!(a.cols, b.rows, "gemm inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm_acc output dims");
+    gemm_blocked_into(a, b, c, 0, a.rows);
+}
+
 /// Tiled update of C rows [row0, row1) — shared by the serial and
 /// parallel drivers (the parallel backend splits the row range).
 fn gemm_blocked_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, row0: usize, row1: usize) {
@@ -103,16 +112,88 @@ fn gemm_blocked_into(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, row0
 }
 
 /// Blocked + multi-threaded over row bands (the OpenBLAS analog).
-/// Threads write disjoint row ranges of C, so no synchronization is
-/// needed beyond the scoped join.
+/// Band tasks run on the cluster's work-stealing worker pool when one
+/// is registered (`util::pool::shared_pool`), so a driver-side GEMM
+/// shares cores with cluster tasks instead of spawning ad-hoc threads;
+/// with no pool (pure-local use) it falls back to scoped threads. A
+/// GEMM invoked *from* a pool worker stays serial — the task is already
+/// one of N parallel tasks, and nesting would oversubscribe the cores.
 pub fn gemm_parallel(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
     assert_eq!(a.cols, b.rows, "gemm inner dims");
     let (m, n) = (a.rows, b.cols);
     let threads = pool::local_threads().min(m.max(1));
-    if threads <= 1 || m * n < 64 * 64 {
+    if threads <= 1 || m * n < 64 * 64 || pool::in_pool_worker() {
         return gemm_blocked(a, b);
     }
     let mut c = DenseMatrix::zeros(m, n);
+    if let Some(p) = pool::shared_pool() {
+        if gemm_parallel_pooled(&*p, a, b, &mut c, threads) {
+            return c;
+        }
+        // partial batch (pool shutting down): reset the accumulator
+        // before recomputing — run_batch has quiesced every task
+        c.data.fill(0.0);
+    }
+    gemm_parallel_scoped(a, b, &mut c, threads);
+    c
+}
+
+/// Row-band GEMM on the shared worker pool. Returns false (after all
+/// submitted tasks quiesced) if the pool could not run the whole batch.
+fn gemm_parallel_pooled(
+    p: &dyn pool::TaskPool,
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    c: &mut DenseMatrix,
+    threads: usize,
+) -> bool {
+    let (m, n) = (a.rows, b.cols);
+    /// Raw handles a band task dereferences; Send because the bands are
+    /// disjoint and `run_batch` outlives every task.
+    struct BandTask {
+        a: *const DenseMatrix,
+        b: *const DenseMatrix,
+        c: *mut f64,
+        row0: usize,
+        band: usize,
+        n: usize,
+    }
+    unsafe impl Send for BandTask {}
+    let rows_per = m.div_ceil(threads);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+    let c_ptr = c.data.as_mut_ptr();
+    let mut row0 = 0usize;
+    while row0 < m {
+        let band = rows_per.min(m - row0);
+        let t = BandTask {
+            a: a as *const DenseMatrix,
+            b: b as *const DenseMatrix,
+            c: c_ptr,
+            row0,
+            band,
+            n,
+        };
+        tasks.push(Box::new(move || {
+            // SAFETY: `run_batch` does not return until this task has
+            // finished or been dropped unrun, so `a`, `b`, and `c`
+            // outlive the dereference; each task writes a disjoint
+            // row band of C, so the mutable slices never alias.
+            let (a, b) = unsafe { (&*t.a, &*t.b) };
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(t.c.add(t.row0 * t.n), t.band * t.n) };
+            let a_band = a_rows_view(a, t.row0, t.band);
+            let mut local = DenseMatrix { rows: t.band, cols: t.n, data: vec![0.0; t.band * t.n] };
+            gemm_blocked_into(&a_band, b, &mut local, 0, t.band);
+            chunk.copy_from_slice(&local.data);
+        }));
+        row0 += band;
+    }
+    p.run_batch(tasks)
+}
+
+/// Scoped-thread fallback (no shared pool registered).
+fn gemm_parallel_scoped(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, threads: usize) {
+    let (m, n) = (a.rows, b.cols);
     // split C's rows into `threads` contiguous bands
     let rows_per = m.div_ceil(threads);
     std::thread::scope(|s| {
@@ -134,7 +215,6 @@ pub fn gemm_parallel(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
             row0 += band;
         }
     });
-    c
 }
 
 /// Copy of rows [row0, row0+band) of A (bands are reused across all B
@@ -212,6 +292,50 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn gemm_acc_accumulates_in_place() {
+        let mut rng = SplitMix64::new(9);
+        let a1 = DenseMatrix::randn(13, 7, &mut rng);
+        let a2 = DenseMatrix::randn(13, 7, &mut rng);
+        let b = DenseMatrix::randn(7, 5, &mut rng);
+        let mut c = DenseMatrix::zeros(13, 5);
+        gemm_acc(&a1, &b, &mut c);
+        gemm_acc(&a2, &b, &mut c);
+        let want = gemm_naive(&a1, &b).add(&gemm_naive(&a2, &b)).unwrap();
+        assert!(c.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm_acc output dims")]
+    fn gemm_acc_rejects_bad_output_shape() {
+        let a = DenseMatrix::zeros(2, 3);
+        let b = DenseMatrix::zeros(3, 4);
+        let mut c = DenseMatrix::zeros(2, 3);
+        gemm_acc(&a, &b, &mut c);
+    }
+
+    #[test]
+    fn parallel_gemm_routes_through_cluster_pool() {
+        // a live Context registers its worker pool; the driver-side GEMM
+        // must stay correct through the pooled band path (and through
+        // the serial guard when invoked from a worker)
+        let ctx = crate::Context::local("gemm_pool_test", 2);
+        let mut rng = SplitMix64::new(11);
+        let a = DenseMatrix::randn(150, 90, &mut rng);
+        let b = DenseMatrix::randn(90, 110, &mut rng);
+        let want = gemm_naive(&a, &b);
+        assert!(gemm_parallel(&a, &b).max_abs_diff(&want) < 1e-10);
+        // from inside a cluster task: the in-worker guard goes serial
+        let pair = std::sync::Arc::new((a, b));
+        let p2 = std::sync::Arc::clone(&pair);
+        let from_task = ctx
+            .parallelize(vec![0usize], 1)
+            .map(move |_| gemm_parallel(&p2.0, &p2.1).data.clone())
+            .collect()
+            .unwrap();
+        crate::util::prop::assert_allclose(&from_task[0], &want.data, 1e-10, "in-task gemm");
     }
 
     #[test]

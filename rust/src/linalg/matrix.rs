@@ -180,6 +180,17 @@ impl DenseMatrix {
         })
     }
 
+    /// In-place `self += other` — what shuffle combiners use to merge
+    /// partial blocks without allocating a fresh matrix per merge.
+    pub fn add_assign(&mut self, o: &DenseMatrix) -> Result<()> {
+        crate::ensure_dims!(self.rows, o.rows, "add rows");
+        crate::ensure_dims!(self.cols, o.cols, "add cols");
+        for (a, b) in self.data.iter_mut().zip(&o.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
     /// self - other.
     pub fn sub(&self, o: &DenseMatrix) -> Result<DenseMatrix> {
         crate::ensure_dims!(self.rows, o.rows, "sub rows");
@@ -369,6 +380,10 @@ mod tests {
         let d = s.sub(&m).unwrap();
         assert_eq!(d, m);
         assert!(m.add(&DenseMatrix::zeros(1, 1)).is_err());
+        let mut acc = m.clone();
+        acc.add_assign(&m).unwrap();
+        assert_eq!(acc, m.scale(2.0));
+        assert!(acc.add_assign(&DenseMatrix::zeros(1, 1)).is_err());
     }
 
     #[test]

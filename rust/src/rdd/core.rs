@@ -48,6 +48,10 @@ pub(crate) struct RddInner<T> {
     /// (source, shuffle reader, multi-parent barrier).
     pub stream: Option<Box<Stream<T>>>,
     pub preps: Vec<Arc<Prep>>,
+    /// How records are placed across partitions, when known (shuffle
+    /// outputs and key-preserving narrow descendants). Keyed ops skip
+    /// their shuffle when this already matches the target partitioner.
+    pub partitioner: OnceLock<crate::rdd::pair::Partitioner>,
     pub cache_flag: AtomicBool,
     pub was_cached: AtomicBool,
 }
@@ -95,10 +99,25 @@ impl<T: Send + Sync + 'static> Rdd<T> {
                 compute,
                 stream,
                 preps,
+                partitioner: OnceLock::new(),
                 cache_flag: AtomicBool::new(false),
                 was_cached: AtomicBool::new(false),
             }),
         }
+    }
+
+    /// The partitioner this RDD's records are known to be placed by, if
+    /// any (set on shuffle outputs and propagated through key-preserving
+    /// narrow transformations like `filter` and `map_values`).
+    pub fn partitioner(&self) -> Option<&crate::rdd::pair::Partitioner> {
+        self.inner.partitioner.get()
+    }
+
+    /// Record the partitioner this RDD was built with (construction-time
+    /// only; the setter is a no-op if one is already recorded).
+    pub(crate) fn with_partitioner(self, p: crate::rdd::pair::Partitioner) -> Rdd<T> {
+        let _ = self.inner.partitioner.set(p);
+        self
     }
 
     /// RDD id.
@@ -231,7 +250,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         Ok(())
     }
 
-    fn child_preps(&self) -> Vec<Arc<Prep>> {
+    pub(crate) fn child_preps(&self) -> Vec<Arc<Prep>> {
         self.inner.preps.clone()
     }
 
@@ -340,7 +359,8 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     }
 
     /// Keep elements satisfying the predicate (narrow; the fused path
-    /// forwards surviving records by reference, clone-free).
+    /// forwards surviving records by reference, clone-free). Records
+    /// never move between partitions, so a known partitioner propagates.
     pub fn filter<F>(&self, pred: F) -> Rdd<T>
     where
         T: Clone,
@@ -350,7 +370,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         let predc = Arc::clone(&pred);
         let pc = self.clone();
         let ps = self.clone();
-        Rdd::from_parts_narrow(
+        let out = Rdd::from_parts_narrow(
             Arc::clone(self.cluster()),
             format!("{}.filter", self.name()),
             self.num_partitions(),
@@ -371,7 +391,11 @@ impl<T: Send + Sync + 'static> Rdd<T> {
                     }
                 })
             })),
-        )
+        );
+        match self.partitioner() {
+            Some(p) => out.with_partitioner(p.clone()),
+            None => out,
+        }
     }
 
     /// One-to-many map (narrow: fuses with adjacent narrow stages).
@@ -680,10 +704,3 @@ impl Rdd<f64> {
     }
 }
 
-/// Build a `Prep` that runs at most once (subsequent calls return the
-/// first result) — the stage-level `Once` guard for shuffle map stages.
-pub fn once_prep(f: impl Fn() -> Result<()> + Send + Sync + 'static) -> Arc<Prep> {
-    let cell: OnceLock<std::result::Result<(), Error>> = OnceLock::new();
-    let cell = Arc::new(cell);
-    Arc::new(move || cell.get_or_init(&f).clone())
-}

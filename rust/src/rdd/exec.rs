@@ -48,8 +48,18 @@ pub struct Metrics {
     pub blocks_evicted: AtomicU64,
     /// Partitions recomputed after eviction (lineage recoveries).
     pub lineage_recomputes: AtomicU64,
-    /// Records moved through shuffles.
-    pub shuffle_records: AtomicU64,
+    /// Shuffle map stages executed (one per `ShuffleDep`; BlockMatrix's
+    /// simulate-multiply routes both operands under a single dep).
+    pub shuffles_executed: AtomicU64,
+    /// Shuffles skipped because the input was already partitioned
+    /// compatibly (keyed ops on co-partitioned RDDs, co-located join
+    /// sides, pre-partitioned multiply operands).
+    pub shuffles_skipped: AtomicU64,
+    /// Records written to the shuffle store (`ShuffleStore::put`).
+    pub shuffle_records_written: AtomicU64,
+    /// Shallow byte estimate of shuffle records written
+    /// (`size_of::<record>() × count`; heap payloads not chased).
+    pub shuffle_bytes_estimate: AtomicU64,
     /// XLA executions dispatched by the runtime.
     pub xla_calls: AtomicU64,
 }
@@ -58,7 +68,7 @@ impl Metrics {
     /// Pretty one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffled={} xla={}",
+            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffles={} skipped={} shuffled_recs={} xla={}",
             self.jobs.load(Ordering::Relaxed),
             self.tasks_started.load(Ordering::Relaxed),
             self.tasks_failed.load(Ordering::Relaxed),
@@ -68,7 +78,9 @@ impl Metrics {
             self.executor_crashes.load(Ordering::Relaxed),
             self.blocks_evicted.load(Ordering::Relaxed),
             self.lineage_recomputes.load(Ordering::Relaxed),
-            self.shuffle_records.load(Ordering::Relaxed),
+            self.shuffles_executed.load(Ordering::Relaxed),
+            self.shuffles_skipped.load(Ordering::Relaxed),
+            self.shuffle_records_written.load(Ordering::Relaxed),
             self.xla_calls.load(Ordering::Relaxed)
                 + crate::runtime::client::XLA_CALLS.load(Ordering::Relaxed),
         )
@@ -338,7 +350,7 @@ impl Cluster {
         let cluster = Arc::new(Cluster {
             injector: FaultInjector::new(&config),
             cache: BlockManager::new(),
-            shuffle: ShuffleStore::new(),
+            shuffle: ShuffleStore::new(Arc::clone(&metrics)),
             metrics,
             workspace: Arc::new(VecPool::new()),
             scheduler: Arc::clone(&scheduler),
@@ -356,6 +368,9 @@ impl Cluster {
                 std::thread::Builder::new()
                     .name(format!("executor-{executor_id}-core-{}", w / n_exec))
                     .spawn(move || {
+                        // local kernels (parallel GEMM) detect pool
+                        // workers and stay serial instead of nesting
+                        crate::util::pool::enter_pool_worker();
                         while let Some(t) = sched.claim(w) {
                             (t.run)(executor_id, t.partition, t.attempt);
                         }
@@ -364,6 +379,11 @@ impl Cluster {
             );
         }
         *cluster.workers.lock().expect("workers") = handles;
+        // advertise the worker pool to local kernels (weak: a shut-down
+        // cluster simply stops resolving and kernels fall back to
+        // scoped threads)
+        let weak: std::sync::Weak<dyn crate::util::pool::TaskPool> = Arc::downgrade(&cluster);
+        crate::util::pool::register_shared_pool(weak);
         cluster
     }
 
@@ -470,6 +490,57 @@ impl Drop for Cluster {
     }
 }
 
+/// Local-kernel bridge: run a batch of one-shot tasks on the
+/// work-stealing worker pool (parallel GEMM row bands route here so
+/// nested parallelism never oversubscribes the cores). Batch tasks are
+/// intra-task parallelism, not lineage-tracked work: they bypass the
+/// fault injector and retry machinery (a `FnOnce` cannot be replayed).
+/// The method blocks until every submitted task has finished, so callers
+/// may lend borrowed data to the tasks; it returns `false` — with all
+/// side effects quiesced — when the scheduler rejected part of the batch
+/// (shutdown), and the caller falls back to its own threads.
+impl crate::util::pool::TaskPool for Cluster {
+    fn run_batch(&self, tasks: Vec<Box<dyn FnOnce() + Send>>) -> bool {
+        let n = tasks.len();
+        if n == 0 {
+            return true;
+        }
+        let slots: Arc<Vec<Mutex<Option<Box<dyn FnOnce() + Send>>>>> =
+            Arc::new(tasks.into_iter().map(|t| Mutex::new(Some(t))).collect());
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let runner: Arc<dyn Fn(usize, usize, usize) + Send + Sync> = {
+            let slots = Arc::clone(&slots);
+            Arc::new(move |_exec, p, _attempt| {
+                if let Some(t) = slots[p].lock().expect("batch slot").take() {
+                    t();
+                }
+                let _ = done_tx.send(());
+            })
+        };
+        let mut submitted = 0usize;
+        for p in 0..n {
+            if self
+                .scheduler
+                .push(TaskUnit { partition: p, attempt: 1, run: Arc::clone(&runner) })
+                .is_err()
+            {
+                break;
+            }
+            submitted += 1;
+        }
+        drop(runner);
+        // wait for every submitted task: each pushed TaskUnit is drained
+        // by a worker even during shutdown, and its runner sends exactly
+        // once — recv errors only if all runner clones dropped unrun
+        for _ in 0..submitted {
+            if done_rx.recv().is_err() {
+                return false;
+            }
+        }
+        submitted == n
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -510,5 +581,25 @@ mod tests {
         let cluster = Cluster::start(ClusterConfig::default());
         cluster.shutdown();
         assert!(cluster.run_job(1, Arc::new(|_p, _e| Ok(0u8))).is_err());
+    }
+
+    #[test]
+    fn run_batch_executes_all_tasks_then_reports_shutdown() {
+        use crate::util::pool::TaskPool;
+        let cluster = Cluster::start(ClusterConfig::default());
+        let hits = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..37)
+            .map(|_| {
+                let h = Arc::clone(&hits);
+                Box::new(move || {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        assert!(cluster.run_batch(tasks), "live pool runs the whole batch");
+        assert_eq!(hits.load(Ordering::SeqCst), 37);
+        cluster.shutdown();
+        let after: Vec<Box<dyn FnOnce() + Send>> = vec![Box::new(|| {})];
+        assert!(!cluster.run_batch(after), "shut-down pool reports failure");
     }
 }

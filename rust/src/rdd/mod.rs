@@ -21,6 +21,14 @@
 //! per-worker deques with work stealing, and hot-path `f64` buffers are
 //! recycled through [`exec::VecPool`] — see DESIGN.md §"Execution
 //! pipeline".
+//!
+//! Shuffles are *partitioner-aware*: shuffle outputs record their
+//! [`Partitioner`] (hash, or a spatial grid for block coordinates),
+//! key-preserving narrow ops propagate it, and a keyed op whose input is
+//! already compatibly partitioned skips its shuffle entirely
+//! (`Metrics::shuffles_skipped`). `join` is a single co-partitioned
+//! cogroup, and the `combine_by_key_with` / `reduce_by_key_merge` family
+//! merges values in place — see DESIGN.md §"Shuffle & partitioning".
 
 pub mod exec;
 pub mod cache;
@@ -32,3 +40,4 @@ pub mod pair;
 pub use broadcast::Broadcast;
 pub use core::Rdd;
 pub use exec::{Cluster, Metrics, VecPool};
+pub use pair::{PartitionableKey, Partitioner};

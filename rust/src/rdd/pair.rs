@@ -1,6 +1,30 @@
-//! Key–value operations: the shuffle layer (`reduce_by_key`,
-//! `group_by_key`, `partition_by`) — what `CoordinateMatrix` conversions
-//! and `BlockMatrix.multiply` are built on.
+//! Key–value operations: the partitioner-aware shuffle layer
+//! (`reduce_by_key`, `group_by_key`, `partition_by`, `join`, and the
+//! in-place `combine_by_key_with` / `reduce_by_key_merge` family) — what
+//! `CoordinateMatrix` conversions and `BlockMatrix.multiply` are built on.
+//!
+//! # Partitioner-aware shuffles
+//!
+//! Every shuffle output records the [`Partitioner`] that placed its keys;
+//! key-preserving narrow transformations (`filter`, [`Rdd::map_values`])
+//! propagate it. A keyed op whose input is already partitioned by the
+//! exact partitioner it would shuffle with skips the shuffle entirely and
+//! runs as a narrow per-partition combine (`Metrics::shuffles_skipped`),
+//! and `join` is a single co-partitioned cogroup: one shuffle per
+//! un-co-located side, **zero** for co-located inputs — instead of the
+//! old two-`group_by_key`-shuffles-plus-zip.
+//!
+//! # In-place combining
+//!
+//! [`Rdd::combine_by_key_with`] is the Spark `combineByKey` primitive:
+//! map-side and reduce-side merges *mutate* the per-key combiner
+//! (`Fn(&mut C, V)`) instead of allocating a fresh value per merge. The
+//! map side streams its input through the fused narrow pipeline (the
+//! pre-shuffle partition is never materialized — one clone per absorbed
+//! value, zero allocations per merge); payloads too large to clone even
+//! once per record go through `BlockMatrix::multiply`'s `Arc`-shared
+//! routing instead. `reduce_by_key_merge` and `group_by_key` are thin
+//! wrappers over it.
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -8,7 +32,8 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::error::Result;
-use crate::rdd::core::{once_prep, Rdd};
+use crate::rdd::core::{Prep, Rdd};
+use crate::rdd::shuffle::ShuffleDep;
 
 /// Deterministic hash partitioner (FxHash-style; `DefaultHasher` would
 /// also be stable within a run, but we want cross-run determinism for
@@ -38,75 +63,339 @@ impl Hasher for FxHasher {
     }
 }
 
-impl<K, V> Rdd<(K, V)>
+/// A key a [`Partitioner`] can place: hashable, and optionally carrying
+/// block-grid coordinates (the `(block_row, block_col)` keys a
+/// [`Partitioner::Grid`] places spatially). Implemented for the standard
+/// scalar key types and `(usize, usize)` block coordinates; add an impl
+/// for custom key types (the default makes them hash-only).
+pub trait PartitionableKey: Hash {
+    /// Grid coordinates when the key is a block coordinate.
+    fn grid_coords(&self) -> Option<(usize, usize)> {
+        None
+    }
+}
+
+macro_rules! plain_partition_key {
+    ($($t:ty),* $(,)?) => {
+        $(impl PartitionableKey for $t {})*
+    };
+}
+plain_partition_key!(
+    u8, u16, u32, u64, u128, usize, i8, i16, i32, i64, i128, isize, bool, char, String
+);
+
+impl PartitionableKey for (usize, usize) {
+    fn grid_coords(&self) -> Option<(usize, usize)> {
+        Some(*self)
+    }
+}
+
+/// How keys map to reduce partitions. Carried as metadata on shuffle
+/// outputs so downstream keyed ops can recognize co-partitioned inputs
+/// (equality is structural — same variant, same geometry).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// `hash(k) % parts` — the default for scalar keys.
+    Hash {
+        /// Reduce partition count.
+        parts: usize,
+    },
+    /// Spatial tiling of a `grid_rows × grid_cols` block grid into
+    /// `rows_per_part × cols_per_part` sub-grids (Spark's
+    /// `GridPartitioner`): neighboring blocks land on the same
+    /// partition, which is what makes block-matrix ops local.
+    Grid {
+        /// Block rows in the grid.
+        grid_rows: usize,
+        /// Block cols in the grid.
+        grid_cols: usize,
+        /// Block rows per partition tile.
+        rows_per_part: usize,
+        /// Block cols per partition tile.
+        cols_per_part: usize,
+    },
+}
+
+impl Partitioner {
+    /// Hash partitioner over `parts` partitions (clamped to ≥ 1).
+    pub fn hash(parts: usize) -> Partitioner {
+        Partitioner::Hash { parts: parts.max(1) }
+    }
+
+    /// Grid partitioner with explicit tile geometry.
+    pub fn grid_exact(
+        grid_rows: usize,
+        grid_cols: usize,
+        rows_per_part: usize,
+        cols_per_part: usize,
+    ) -> Partitioner {
+        Partitioner::Grid {
+            grid_rows: grid_rows.max(1),
+            grid_cols: grid_cols.max(1),
+            rows_per_part: rows_per_part.clamp(1, grid_rows.max(1)),
+            cols_per_part: cols_per_part.clamp(1, grid_cols.max(1)),
+        }
+    }
+
+    /// Grid partitioner sized for roughly `suggested_partitions` square
+    /// tiles (Spark's `GridPartitioner.apply` heuristic: tile edges
+    /// scale with `1/√p`).
+    pub fn grid(grid_rows: usize, grid_cols: usize, suggested_partitions: usize) -> Partitioner {
+        let scale = 1.0 / (suggested_partitions.max(1) as f64).sqrt();
+        let rpp = ((grid_rows as f64 * scale).round() as usize).max(1);
+        let cpp = ((grid_cols as f64 * scale).round() as usize).max(1);
+        Partitioner::grid_exact(grid_rows, grid_cols, rpp, cpp)
+    }
+
+    /// Total reduce partitions this partitioner produces.
+    pub fn num_partitions(&self) -> usize {
+        match self {
+            Partitioner::Hash { parts } => *parts,
+            Partitioner::Grid { grid_rows, grid_cols, rows_per_part, cols_per_part } => {
+                grid_rows.div_ceil(*rows_per_part) * grid_cols.div_ceil(*cols_per_part)
+            }
+        }
+    }
+
+    /// Partition of a block coordinate (for `Hash` this is the hash of
+    /// the `(i, j)` tuple, consistent with [`Partitioner::partition`]).
+    pub fn partition_coords(&self, i: usize, j: usize) -> usize {
+        match self {
+            Partitioner::Hash { parts } => hash_partition(&(i, j), *parts),
+            Partitioner::Grid { grid_cols, rows_per_part, cols_per_part, .. } => {
+                let col_tiles = grid_cols.div_ceil(*cols_per_part);
+                (i / rows_per_part) * col_tiles + j / cols_per_part
+            }
+        }
+    }
+
+    /// Partition of a key.
+    pub fn partition<K: PartitionableKey>(&self, k: &K) -> usize {
+        match self {
+            Partitioner::Hash { parts } => hash_partition(k, *parts),
+            Partitioner::Grid { .. } => match k.grid_coords() {
+                Some((i, j)) => self.partition_coords(i, j),
+                None => panic!("GridPartitioner requires (block_row, block_col) keys"),
+            },
+        }
+    }
+}
+
+/// One input side of a co-partitioned read (`cogroup` / `partition_by`):
+/// either already living at the right partitions (read directly — a
+/// narrow dependency) or routed there by a verbatim shuffle.
+enum SideSource<K: Send + Sync + 'static, V: Send + Sync + 'static> {
+    Colocated(Rdd<(K, V)>),
+    Shuffled {
+        /// Keeps the shuffle's buckets alive while this side can read them.
+        _dep: Arc<ShuffleDep>,
+        shuffle_id: usize,
+        n_map: usize,
+    },
+}
+
+impl<K, V> SideSource<K, V>
 where
-    K: Clone + Eq + Hash + Send + Sync + 'static,
+    K: Clone + Eq + Hash + PartitionableKey + Send + Sync + 'static,
     V: Clone + Send + Sync + 'static,
 {
-    /// Shuffle + combine values per key. Map-side combining runs first
-    /// (the classic word-count optimization), then each reduce partition
-    /// merges its buckets. Output partition of a key is
-    /// `hash(k) % num_out` — stable across runs.
-    pub fn reduce_by_key<F>(&self, num_out: usize, f: F) -> Rdd<(K, V)>
-    where
-        F: Fn(&V, &V) -> V + Send + Sync + 'static + Clone,
-    {
-        let shuffle_id = self.cluster().new_id();
-        let parent = self.clone();
-        let cluster = Arc::clone(self.cluster());
-        let fmap = f.clone();
-        // map stage: runs once, from the driver, before any reduce task
-        let map_stage = once_prep(move || {
-            parent.prepare()?;
-            let parent2 = parent.clone();
-            let cl = Arc::clone(&cluster);
-            let fm = fmap.clone();
-            cluster.run_job(
-                parent.num_partitions(),
-                Arc::new(move |p, exec| {
-                    // map-side combine into per-reduce-partition maps;
-                    // the input streams through the fused narrow
-                    // pipeline — a map/filter chain feeding a shuffle
-                    // never materializes its output partition
-                    let mut buckets: Vec<HashMap<K, V>> =
-                        (0..num_out).map(|_| HashMap::new()).collect();
-                    parent2.stream_records(p, exec, &mut |(k, v)| {
-                        let b = hash_partition(k, num_out);
-                        match buckets[b].get_mut(k) {
-                            Some(acc) => *acc = fm(acc, v),
-                            None => {
-                                buckets[b].insert(k.clone(), v.clone());
+    /// Plan how this side reaches `part`'s partitions, appending the
+    /// stage preps the consuming RDD must run.
+    fn plan(rdd: &Rdd<(K, V)>, part: &Partitioner, preps: &mut Vec<Arc<Prep>>) -> SideSource<K, V> {
+        if rdd.is_partitioned_by(part) {
+            rdd.cluster().metrics.shuffles_skipped.fetch_add(1, Ordering::Relaxed);
+            preps.extend(rdd.child_preps());
+            return SideSource::Colocated(rdd.clone());
+        }
+        let shuffle_id = rdd.cluster().new_id();
+        let parent = rdd.clone();
+        let cluster = Arc::clone(rdd.cluster());
+        let part2 = part.clone();
+        let dep = ShuffleDep::new(
+            Arc::clone(rdd.cluster()),
+            shuffle_id,
+            Box::new(move || {
+                parent.prepare()?;
+                let parent2 = parent.clone();
+                let cl = Arc::clone(&cluster);
+                let part = part2.clone();
+                let num_out = part.num_partitions();
+                cluster.run_job(
+                    parent.num_partitions(),
+                    Arc::new(move |p, exec| {
+                        // verbatim routing off the fused stream — the
+                        // pre-shuffle partition is never materialized
+                        let mut buckets: Vec<Vec<(K, V)>> =
+                            (0..num_out).map(|_| Vec::new()).collect();
+                        parent2.stream_records(p, exec, &mut |(k, v)| {
+                            let b = part.partition(k);
+                            buckets[b].push((k.clone(), v.clone()));
+                        })?;
+                        for (b, bucket) in buckets.into_iter().enumerate() {
+                            if !bucket.is_empty() {
+                                cl.shuffle.put(shuffle_id, p, b, bucket);
                             }
                         }
-                    })?;
-                    let mut records = 0u64;
-                    for (b, bucket) in buckets.into_iter().enumerate() {
-                        let vec: Vec<(K, V)> = bucket.into_iter().collect();
-                        records += vec.len() as u64;
-                        cl.shuffle.put(shuffle_id, p, b, vec);
+                        Ok(())
+                    }),
+                )?;
+                Ok(true)
+            }),
+        );
+        preps.push(dep.as_prep());
+        SideSource::Shuffled { _dep: dep, shuffle_id, n_map: rdd.num_partitions() }
+    }
+
+    /// Feed every record destined for reduce partition `q` to `f`.
+    fn for_each_record(
+        &self,
+        q: usize,
+        exec: usize,
+        f: &mut dyn FnMut((K, V)),
+    ) -> Result<()> {
+        match self {
+            SideSource::Colocated(rdd) => {
+                // narrow read of the co-located partition, through the
+                // fused pipeline
+                rdd.stream_records(q, exec, &mut |(k, v)| f((k.clone(), v.clone())))?;
+            }
+            SideSource::Shuffled { _dep, shuffle_id, n_map } => {
+                let store = _dep.store();
+                for m in 0..*n_map {
+                    if let Some(bucket) = store.get::<(K, V)>(*shuffle_id, m, q) {
+                        for (k, v) in bucket.iter() {
+                            f((k.clone(), v.clone()));
+                        }
                     }
-                    cl.metrics.shuffle_records.fetch_add(records, Ordering::Relaxed);
-                    Ok(())
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Clone + Eq + Hash + PartitionableKey + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    /// True when this RDD is already partitioned exactly as `part` would
+    /// partition it — the shuffle-skip precondition.
+    pub fn is_partitioned_by(&self, part: &Partitioner) -> bool {
+        self.partitioner() == Some(part) && self.num_partitions() == part.num_partitions()
+    }
+
+    /// Spark's `combineByKey`: per-key combiners built with in-place
+    /// merges. `create` seeds a combiner from the first value of a key,
+    /// `merge_value` absorbs further values map-side, `merge_combiners`
+    /// folds shipped combiners reduce-side. The map stage streams its
+    /// input through the fused narrow pipeline — the pre-shuffle
+    /// partition is never materialized; each record's value is cloned
+    /// exactly once into its combiner, and no merge allocates.
+    ///
+    /// When the input is already partitioned by `part`, the whole op
+    /// runs as a narrow per-partition combine with **zero** shuffle work
+    /// (`Metrics::shuffles_skipped`). The output always records `part`
+    /// as its partitioner.
+    pub fn combine_by_key_with<C>(
+        &self,
+        part: Partitioner,
+        create: impl Fn(V) -> C + Send + Sync + 'static,
+        merge_value: impl Fn(&mut C, V) + Send + Sync + 'static,
+        merge_combiners: impl Fn(&mut C, C) + Send + Sync + 'static,
+    ) -> Rdd<(K, C)>
+    where
+        C: Clone + Send + Sync + 'static,
+    {
+        if self.is_partitioned_by(&part) {
+            self.cluster().metrics.shuffles_skipped.fetch_add(1, Ordering::Relaxed);
+            let parent = self.clone();
+            return Rdd::from_parts(
+                Arc::clone(self.cluster()),
+                format!("{}.combineByKey(narrow)", self.name()),
+                self.num_partitions(),
+                self.child_preps(),
+                Box::new(move |p, exec| {
+                    let mut acc: HashMap<K, C> = HashMap::new();
+                    parent.stream_records(p, exec, &mut |(k, v)| match acc.get_mut(k) {
+                        Some(a) => merge_value(a, v.clone()),
+                        None => {
+                            acc.insert(k.clone(), create(v.clone()));
+                        }
+                    })?;
+                    Ok(acc.into_iter().collect())
                 }),
-            )?;
-            Ok(())
-        });
+            )
+            .with_partitioner(part);
+        }
+
+        let shuffle_id = self.cluster().new_id();
+        let num_out = part.num_partitions();
+        let parent = self.clone();
+        let cluster = Arc::clone(self.cluster());
+        let create = Arc::new(create);
+        let merge_value = Arc::new(merge_value);
+        let (create_m, merge_v) = (Arc::clone(&create), Arc::clone(&merge_value));
+        let part_m = part.clone();
+        let dep = ShuffleDep::new(
+            Arc::clone(self.cluster()),
+            shuffle_id,
+            Box::new(move || {
+                parent.prepare()?;
+                let parent2 = parent.clone();
+                let cl = Arc::clone(&cluster);
+                let create = Arc::clone(&create_m);
+                let merge_value = Arc::clone(&merge_v);
+                let part = part_m.clone();
+                cluster.run_job(
+                    parent.num_partitions(),
+                    Arc::new(move |p, exec| {
+                        // map-side combine into per-reduce-partition
+                        // maps, streaming off the fused pipeline —
+                        // combiners are merged in place
+                        let mut buckets: Vec<HashMap<K, C>> =
+                            (0..num_out).map(|_| HashMap::new()).collect();
+                        parent2.stream_records(p, exec, &mut |(k, v)| {
+                            let b = part.partition(k);
+                            match buckets[b].get_mut(k) {
+                                Some(a) => merge_value(a, v.clone()),
+                                None => {
+                                    buckets[b].insert(k.clone(), create(v.clone()));
+                                }
+                            }
+                        })?;
+                        for (b, bucket) in buckets.into_iter().enumerate() {
+                            if !bucket.is_empty() {
+                                let vec: Vec<(K, C)> = bucket.into_iter().collect();
+                                cl.shuffle.put(shuffle_id, p, b, vec);
+                            }
+                        }
+                        Ok(())
+                    }),
+                )?;
+                Ok(true)
+            }),
+        );
         let n_map = self.num_partitions();
         let cluster2 = Arc::clone(self.cluster());
+        let dep_keep = Arc::clone(&dep);
+        let merge_combiners = Arc::new(merge_combiners);
         Rdd::from_parts(
             Arc::clone(self.cluster()),
-            format!("{}.reduceByKey", self.name()),
+            format!("{}.combineByKey", self.name()),
             num_out,
-            vec![map_stage],
+            vec![dep.as_prep()],
             Box::new(move |q, _exec| {
-                let mut acc: HashMap<K, V> = HashMap::new();
+                // `dep_keep` ties the buckets' lifetime to this RDD
+                let _ = dep_keep.shuffle_id();
+                let mut acc: HashMap<K, C> = HashMap::new();
                 for m in 0..n_map {
-                    if let Some(bucket) = cluster2.shuffle.get::<(K, V)>(shuffle_id, m, q) {
-                        for (k, v) in bucket.iter() {
+                    if let Some(bucket) = cluster2.shuffle.get::<(K, C)>(shuffle_id, m, q) {
+                        for (k, c) in bucket.iter() {
                             match acc.get_mut(k) {
-                                Some(a) => *a = f(a, v),
+                                Some(a) => merge_combiners(a, c.clone()),
                                 None => {
-                                    acc.insert(k.clone(), v.clone());
+                                    acc.insert(k.clone(), c.clone());
                                 }
                             }
                         }
@@ -115,27 +404,107 @@ where
                 Ok(acc.into_iter().collect())
             }),
         )
+        .with_partitioner(part)
     }
 
-    /// Group values per key (via `reduce_by_key` on singleton Vecs).
+    /// Shuffle + combine values per key with an explicit partitioner
+    /// (legacy allocating combiner `f(&a, &b) -> c`; prefer
+    /// [`Rdd::reduce_by_key_merge`] for large values).
+    pub fn reduce_by_key_with<F>(&self, part: Partitioner, f: F) -> Rdd<(K, V)>
+    where
+        F: Fn(&V, &V) -> V + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let f2 = Arc::clone(&f);
+        self.combine_by_key_with(
+            part,
+            |v| v,
+            move |acc, v| *acc = f(acc, &v),
+            move |acc, v| *acc = f2(acc, &v),
+        )
+    }
+
+    /// Shuffle + combine values per key. Map-side combining runs first
+    /// (the classic word-count optimization), then each reduce partition
+    /// merges its buckets. Output partition of a key is
+    /// `hash(k) % num_out` — stable across runs.
+    pub fn reduce_by_key<F>(&self, num_out: usize, f: F) -> Rdd<(K, V)>
+    where
+        F: Fn(&V, &V) -> V + Send + Sync + 'static,
+    {
+        self.reduce_by_key_with(Partitioner::hash(num_out), f)
+    }
+
+    /// Fold-style reduce-by-key: `merge(&mut acc, v)` mutates the
+    /// accumulator in place on both the map and reduce side — one clone
+    /// per absorbed value (streamed by reference), zero allocations per
+    /// merge. The combine primitive for block/vector payloads.
+    pub fn reduce_by_key_merge<F>(&self, part: Partitioner, merge: F) -> Rdd<(K, V)>
+    where
+        F: Fn(&mut V, V) + Send + Sync + 'static,
+    {
+        let m = Arc::new(merge);
+        let m2 = Arc::clone(&m);
+        self.combine_by_key_with(part, |v| v, move |acc, v| m(acc, v), move |acc, v| m2(acc, v))
+    }
+
+    /// Group values per key with an explicit partitioner (in-place
+    /// vector accumulation via `combine_by_key_with`).
+    pub fn group_by_key_with(&self, part: Partitioner) -> Rdd<(K, Vec<V>)> {
+        self.combine_by_key_with(
+            part,
+            |v| vec![v],
+            |acc: &mut Vec<V>, v| acc.push(v),
+            |acc: &mut Vec<V>, mut other| acc.append(&mut other),
+        )
+    }
+
+    /// Group values per key (hash-partitioned).
     pub fn group_by_key(&self, num_out: usize) -> Rdd<(K, Vec<V>)> {
-        self.map(|(k, v)| (k.clone(), vec![v.clone()]))
-            .reduce_by_key(num_out, |a: &Vec<V>, b: &Vec<V>| {
-                let mut out = a.clone();
-                out.extend(b.iter().cloned());
-                out
-            })
+        self.group_by_key_with(Partitioner::hash(num_out))
     }
 
-    /// Repartition by key hash without combining (values keep duplicates).
+    /// Repartition by `part` without combining (values keep duplicates).
+    /// A no-op (zero shuffle, `Metrics::shuffles_skipped`) when the
+    /// input is already partitioned by `part`.
+    pub fn partition_by_with(&self, part: Partitioner) -> Rdd<(K, V)> {
+        if self.is_partitioned_by(&part) {
+            self.cluster().metrics.shuffles_skipped.fetch_add(1, Ordering::Relaxed);
+            return self.clone();
+        }
+        let mut preps: Vec<Arc<Prep>> = Vec::new();
+        let src = SideSource::plan(self, &part, &mut preps);
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("{}.partitionBy", self.name()),
+            part.num_partitions(),
+            preps,
+            Box::new(move |q, exec| {
+                let mut out: Vec<(K, V)> = Vec::new();
+                src.for_each_record(q, exec, &mut |rec| out.push(rec))?;
+                Ok(out)
+            }),
+        )
+        .with_partitioner(part)
+    }
+
+    /// Repartition by key hash without combining.
     pub fn partition_by(&self, num_out: usize) -> Rdd<(K, V)> {
-        self.map(|(k, v)| (k.clone(), vec![v.clone()]))
-            .reduce_by_key(num_out, |a: &Vec<V>, b: &Vec<V>| {
-                let mut out = a.clone();
-                out.extend(b.iter().cloned());
-                out
-            })
-            .flat_map(|(k, vs)| vs.iter().map(|v| (k.clone(), v.clone())).collect())
+        self.partition_by_with(Partitioner::hash(num_out))
+    }
+
+    /// Map over values only; keys — and therefore any known
+    /// partitioning — are preserved (Spark's `mapValues`).
+    pub fn map_values<W, F>(&self, f: F) -> Rdd<(K, W)>
+    where
+        W: Send + Sync + 'static,
+        F: Fn(&V) -> W + Send + Sync + 'static,
+    {
+        let out = self.map(move |(k, v)| (k.clone(), f(v)));
+        match self.partitioner() {
+            Some(p) => out.with_partitioner(p.clone()),
+            None => out,
+        }
     }
 
     /// Collect into a HashMap (driver-side).
@@ -143,28 +512,64 @@ where
         Ok(self.collect()?.into_iter().collect())
     }
 
-    /// Join two pair RDDs on key (hash join via co-shuffle).
+    /// Group both RDDs by key into `(values_left, values_right)` pairs —
+    /// one shuffle per side that is not already partitioned by `part`,
+    /// zero for co-located inputs.
+    pub fn cogroup_with<W>(
+        &self,
+        other: &Rdd<(K, W)>,
+        part: Partitioner,
+    ) -> Rdd<(K, (Vec<V>, Vec<W>))>
+    where
+        W: Clone + Send + Sync + 'static,
+    {
+        let mut preps: Vec<Arc<Prep>> = Vec::new();
+        let left = SideSource::plan(self, &part, &mut preps);
+        let right = SideSource::plan(other, &part, &mut preps);
+        Rdd::from_parts(
+            Arc::clone(self.cluster()),
+            format!("({}⋈{})", self.name(), other.name()),
+            part.num_partitions(),
+            preps,
+            Box::new(move |q, exec| {
+                let mut groups: HashMap<K, (Vec<V>, Vec<W>)> = HashMap::new();
+                left.for_each_record(q, exec, &mut |(k, v)| {
+                    groups.entry(k).or_default().0.push(v);
+                })?;
+                right.for_each_record(q, exec, &mut |(k, w)| {
+                    groups.entry(k).or_default().1.push(w);
+                })?;
+                Ok(groups.into_iter().collect())
+            }),
+        )
+        .with_partitioner(part)
+    }
+
+    /// Inner join on key with an explicit partitioner: a single
+    /// co-partitioned cogroup (one shuffle per un-co-located side) —
+    /// not the old two-shuffle `group_by_key` pair.
+    pub fn join_with<W>(&self, other: &Rdd<(K, W)>, part: Partitioner) -> Rdd<(K, (V, W))>
+    where
+        W: Clone + Send + Sync + 'static,
+    {
+        let out = self.cogroup_with(other, part.clone()).flat_map(|(k, (vs, ws))| {
+            let mut out = Vec::with_capacity(vs.len() * ws.len());
+            for v in vs {
+                for w in ws {
+                    out.push((k.clone(), (v.clone(), w.clone())));
+                }
+            }
+            out
+        });
+        out.with_partitioner(part)
+    }
+
+    /// Join two pair RDDs on key (hash join via co-partitioned cogroup).
     pub fn join<W>(&self, other: &Rdd<(K, W)>, num_out: usize) -> Rdd<(K, (V, W))>
     where
         W: Clone + Send + Sync + 'static,
     {
-        let left = self.group_by_key(num_out);
-        let right = other.group_by_key(num_out);
-        left.zip_partitions(&right, |ls, rs| {
-            let rmap: HashMap<&K, &Vec<W>> = rs.iter().map(|(k, v)| (k, v)).collect();
-            let mut out = vec![];
-            for (k, vs) in ls {
-                if let Some(ws) = rmap.get(k) {
-                    for v in vs {
-                        for w in ws.iter() {
-                            out.push((k.clone(), (v.clone(), w.clone())));
-                        }
-                    }
-                }
-            }
-            out
-        })
-        .expect("group_by_key outputs share partitioning")
+        self.join_with(other, Partitioner::hash(num_out))
     }
 }
 
@@ -182,5 +587,33 @@ mod tests {
         let spread: std::collections::HashSet<usize> =
             (0..100).map(|i| hash_partition(&i, 16)).collect();
         assert!(spread.len() > 8, "hash collapsed: {spread:?}");
+    }
+
+    #[test]
+    fn grid_partitioner_tiles_cover_grid() {
+        let p = Partitioner::grid_exact(5, 3, 2, 2);
+        // 3 row tiles × 2 col tiles
+        assert_eq!(p.num_partitions(), 6);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..5 {
+            for j in 0..3 {
+                let q = p.partition_coords(i, j);
+                assert!(q < 6, "({i},{j}) -> {q}");
+                assert_eq!(p.partition(&(i, j)), q, "partition == partition_coords");
+                seen.insert(q);
+            }
+        }
+        assert_eq!(seen.len(), 6, "every tile used");
+        // neighbors inside one tile co-locate
+        assert_eq!(p.partition_coords(0, 0), p.partition_coords(1, 1));
+    }
+
+    #[test]
+    fn grid_auto_respects_suggestion_scale() {
+        let p = Partitioner::grid(8, 8, 16);
+        // 1/√16 scale ⇒ 2×2 tiles ⇒ 16 partitions
+        assert_eq!(p.num_partitions(), 16);
+        assert!(Partitioner::grid(1, 1, 64).num_partitions() == 1);
+        assert!(Partitioner::hash(0).num_partitions() == 1, "hash clamps to >= 1");
     }
 }

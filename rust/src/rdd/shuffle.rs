@@ -1,30 +1,47 @@
 //! Shuffle store: map-stage outputs bucketed by reduce partition.
 //!
-//! `reduce_by_key(num_out)` runs a map-stage job whose task `p` hash-
-//! partitions (and map-side combines) parent partition `p` into `num_out`
-//! buckets stored here under `(shuffle_id, map_partition, reduce_partition)`.
-//! The reduce-stage task `q` then merges buckets `(_, *, q)`. The map
-//! stage runs exactly once per shuffle (guarded by `Once`-like state in
-//! the owning RDD's prep closure).
+//! A keyed op runs a map-stage job whose task `p` partitions (and
+//! map-side combines) parent partition `p` into `num_out` buckets stored
+//! here under `(shuffle_id, map_partition, reduce_partition)`. The
+//! reduce-stage task `q` then merges buckets `(_, *, q)`.
+//!
+//! Lifecycle is managed by [`ShuffleDep`]: the map stage runs exactly
+//! once (first `prepare()`), buckets persist while any consumer RDD is
+//! alive — so reduce partitions can be recomputed after a cache
+//! eviction, exactly like Spark's map-output tracker — and are dropped
+//! eagerly the moment the last RDD referencing the shuffle is dropped
+//! (no manual `remove_shuffle` calls in op code). `ShuffleStore::put`
+//! feeds `Metrics::shuffle_records_written` / `shuffle_bytes_estimate`
+//! so benches and tests can assert shuffle-volume reductions.
 
 use std::any::Any;
 use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::rdd::core::Prep;
+use crate::rdd::exec::{Cluster, Metrics};
 
 type Bucket = Arc<dyn Any + Send + Sync>;
 
 /// Thread-safe shuffle map-output tracker.
 pub struct ShuffleStore {
     buckets: Mutex<HashMap<(usize, usize, usize), Bucket>>,
+    metrics: Arc<Metrics>,
 }
 
 impl ShuffleStore {
-    /// Empty store.
-    pub fn new() -> ShuffleStore {
-        ShuffleStore { buckets: Mutex::new(HashMap::new()) }
+    /// Empty store feeding the given metrics.
+    pub fn new(metrics: Arc<Metrics>) -> ShuffleStore {
+        ShuffleStore { buckets: Mutex::new(HashMap::new()), metrics }
     }
 
     /// Store map output for (shuffle, map partition, reduce partition).
+    /// Counts records written and a shallow (`size_of::<T>()`-based)
+    /// byte estimate — heap payloads behind `Arc`/`Vec` indirection are
+    /// deliberately not chased, so the estimate tracks *record traffic*,
+    /// not deep size.
     pub fn put<T: Send + Sync + 'static>(
         &self,
         shuffle: usize,
@@ -32,6 +49,10 @@ impl ShuffleStore {
         reduce_p: usize,
         data: Vec<T>,
     ) {
+        self.metrics.shuffle_records_written.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.metrics
+            .shuffle_bytes_estimate
+            .fetch_add((data.len() * std::mem::size_of::<T>()) as u64, Ordering::Relaxed);
         let mut g = self.buckets.lock().expect("shuffle map");
         g.insert((shuffle, map_p, reduce_p), Arc::new(data));
     }
@@ -48,8 +69,7 @@ impl ShuffleStore {
             .and_then(|b| Arc::clone(b).downcast::<Vec<T>>().ok())
     }
 
-    /// Drop all buckets of a shuffle (after the consuming RDD is done,
-    /// or on unpersist).
+    /// Drop all buckets of a shuffle (normally via `ShuffleDep::drop`).
     pub fn remove_shuffle(&self, shuffle: usize) -> usize {
         let mut g = self.buckets.lock().expect("shuffle map");
         let before = g.len();
@@ -70,7 +90,73 @@ impl ShuffleStore {
 
 impl Default for ShuffleStore {
     fn default() -> Self {
-        Self::new()
+        Self::new(Arc::new(Metrics::default()))
+    }
+}
+
+/// One shuffle dependency: owns the shuffle id, runs the map stage
+/// exactly once (from the driver, before any consuming job — the
+/// DAG-scheduler stage boundary), counts it in
+/// `Metrics::shuffles_executed`, and removes the shuffle's buckets from
+/// the store when dropped. Both the consuming RDD's prep and its compute
+/// closure hold an `Arc<ShuffleDep>`, so the buckets live exactly as
+/// long as something could still read them.
+pub struct ShuffleDep {
+    cluster: Arc<Cluster>,
+    shuffle_id: usize,
+    run_map: Box<dyn Fn() -> Result<bool> + Send + Sync>,
+    ran: Mutex<bool>,
+}
+
+impl ShuffleDep {
+    /// Wrap a map-stage runner. `run_map` may launch more than one job
+    /// (e.g. BlockMatrix multiply routes both operands under one
+    /// shuffle id) — it still counts as ONE shuffle. It returns whether
+    /// it actually moved data: a runner that found every input already
+    /// in place (fully co-located multiply) returns `false` and is not
+    /// counted in `Metrics::shuffles_executed`.
+    pub fn new(
+        cluster: Arc<Cluster>,
+        shuffle_id: usize,
+        run_map: Box<dyn Fn() -> Result<bool> + Send + Sync>,
+    ) -> Arc<ShuffleDep> {
+        Arc::new(ShuffleDep { cluster, shuffle_id, run_map, ran: Mutex::new(false) })
+    }
+
+    /// The shuffle's bucket-key id.
+    pub fn shuffle_id(&self) -> usize {
+        self.shuffle_id
+    }
+
+    /// The store holding this shuffle's buckets.
+    pub fn store(&self) -> &ShuffleStore {
+        &self.cluster.shuffle
+    }
+
+    /// Run the map stage if it has not run yet. Errors are *not*
+    /// latched — a failed map stage is retried on the next action.
+    pub fn prepare(&self) -> Result<()> {
+        let mut ran = self.ran.lock().expect("shuffle dep state");
+        if *ran {
+            return Ok(());
+        }
+        if (self.run_map)()? {
+            self.cluster.metrics.shuffles_executed.fetch_add(1, Ordering::Relaxed);
+        }
+        *ran = true;
+        Ok(())
+    }
+
+    /// The dep as a stage-prep closure for `Rdd::from_parts`.
+    pub fn as_prep(self: &Arc<Self>) -> Arc<Prep> {
+        let dep = Arc::clone(self);
+        Arc::new(move || dep.prepare())
+    }
+}
+
+impl Drop for ShuffleDep {
+    fn drop(&mut self) {
+        self.cluster.shuffle.remove_shuffle(self.shuffle_id);
     }
 }
 
@@ -80,7 +166,7 @@ mod tests {
 
     #[test]
     fn put_get_remove() {
-        let s = ShuffleStore::new();
+        let s = ShuffleStore::default();
         s.put(7, 0, 1, vec![("a", 1)]);
         s.put(7, 1, 1, vec![("b", 2)]);
         s.put(8, 0, 0, vec![("c", 3)]);
@@ -89,5 +175,14 @@ mod tests {
         assert!(s.get::<(&str, i32)>(7, 0, 0).is_none());
         assert_eq!(s.remove_shuffle(7), 2);
         assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn put_counts_records_and_bytes() {
+        let m = Arc::new(Metrics::default());
+        let s = ShuffleStore::new(Arc::clone(&m));
+        s.put(1, 0, 0, vec![1u64, 2, 3]);
+        assert_eq!(m.shuffle_records_written.load(Ordering::Relaxed), 3);
+        assert_eq!(m.shuffle_bytes_estimate.load(Ordering::Relaxed), 24);
     }
 }

@@ -2,6 +2,58 @@
 //! OpenBLAS-thread analog). The cluster-level parallelism lives in
 //! `rdd::exec` — this module is only for intra-task parallel loops such as
 //! the parallel GEMM backend in `linalg::blas::level3`.
+//!
+//! It also hosts the [`TaskPool`] bridge: the cluster registers itself
+//! here at startup so local kernels (parallel GEMM row bands) can run on
+//! the existing work-stealing worker pool instead of spawning ad-hoc
+//! threads per call — and so a kernel invoked *from* a pool worker can
+//! detect that (`in_pool_worker`) and stay serial rather than
+//! oversubscribing the cores it is already sharing.
+
+use std::cell::Cell;
+use std::sync::{Arc, Mutex, Weak};
+
+/// A sink for independent one-shot tasks. `run_batch` must not return
+/// until every submitted task has either finished or been dropped
+/// *unrun* — callers rely on this quiescence to lend borrowed data to
+/// the tasks (scoped-thread semantics over a shared pool). Returns
+/// `false` when the pool could not run the whole batch (e.g. it is
+/// shutting down); side effects may then be partial, but no task is
+/// still executing.
+pub trait TaskPool: Send + Sync {
+    /// Run every task to completion; see the trait docs for the contract.
+    fn run_batch(&self, tasks: Vec<Box<dyn FnOnce() + Send>>) -> bool;
+}
+
+static SHARED_POOL: Mutex<Option<Weak<dyn TaskPool>>> = Mutex::new(None);
+
+/// Register (or replace) the process-wide shared task pool. The cluster
+/// calls this at startup with a `Weak` so a shut-down cluster never
+/// keeps local kernels captive — `shared_pool` simply stops resolving.
+pub fn register_shared_pool(pool: Weak<dyn TaskPool>) {
+    *SHARED_POOL.lock().expect("shared pool registry") = Some(pool);
+}
+
+/// The currently registered pool, if one is alive.
+pub fn shared_pool() -> Option<Arc<dyn TaskPool>> {
+    SHARED_POOL.lock().expect("shared pool registry").as_ref().and_then(|w| w.upgrade())
+}
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Mark the current thread as a pool worker (called by cluster workers
+/// at startup; never unset — worker threads stay workers for life).
+pub fn enter_pool_worker() {
+    IN_POOL_WORKER.with(|c| c.set(true));
+}
+
+/// True when the current thread is a cluster pool worker — local
+/// kernels use this to avoid nested parallelism.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
 
 /// Number of worker threads to use for local parallel kernels: respects
 /// `SPARKLA_LOCAL_THREADS`, defaults to available parallelism (capped at 8

@@ -212,5 +212,6 @@ fn shuffle_metrics_recorded() {
     let data: Vec<(u32, u32)> = (0..100).map(|i| (i % 5, i)).collect();
     let rdd = c.parallelize(data, 4).map(|p| *p);
     rdd.reduce_by_key(3, |a, b| a + b).collect().unwrap();
-    assert!(c.metrics().shuffle_records.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert!(c.metrics().shuffle_records_written.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert!(c.metrics().shuffles_executed.load(std::sync::atomic::Ordering::Relaxed) > 0);
 }

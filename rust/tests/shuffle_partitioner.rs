@@ -1,0 +1,290 @@
+//! Integration: the partitioner-aware shuffle subsystem — shuffle-skip
+//! on co-partitioned inputs, the single-shuffle simulate-multiply with
+//! destination pruning, the in-place merge combiners, cogroup-based
+//! join semantics, and eager shuffle-bucket cleanup.
+
+use std::sync::atomic::Ordering;
+
+use sparkla::distributed::{BlockMatrix, CoordinateMatrix};
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::rdd::Partitioner;
+use sparkla::util::prop::check;
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn shuffles_executed(c: &Context) -> u64 {
+    c.metrics().shuffles_executed.load(Ordering::Relaxed)
+}
+
+fn shuffles_skipped(c: &Context) -> u64 {
+    c.metrics().shuffles_skipped.load(Ordering::Relaxed)
+}
+
+fn records_written(c: &Context) -> u64 {
+    c.metrics().shuffle_records_written.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------- multiply
+
+#[test]
+fn simulate_multiply_matches_local_gemm_property() {
+    // grids with non-divisible edge blocks, against the gathered-matrix
+    // gemm AND the legacy two-shuffle join path
+    check("simulate multiply == local gemm == join multiply", 8, |g| {
+        let c = Context::local("sim_mul", 2);
+        let m = 1 + g.int(0, 14);
+        let k = 1 + g.int(0, 14);
+        let n = 1 + g.int(0, 14);
+        let a = DenseMatrix::randn(m, k, g.rng());
+        let b = DenseMatrix::randn(k, n, g.rng());
+        let rpb = 1 + g.int(0, 4);
+        let inner = 1 + g.int(0, 4);
+        let cpb = 1 + g.int(0, 4);
+        let ba = BlockMatrix::from_local(&c, &a, rpb, inner, 1 + g.int(0, 3));
+        let bb = BlockMatrix::from_local(&c, &b, inner, cpb, 1 + g.int(0, 3));
+        let want = a.matmul(&b).unwrap();
+        let tol = 1e-9 * (1.0 + want.frob_norm());
+        let got = ba.multiply(&bb).unwrap();
+        got.validate().unwrap();
+        assert!(got.to_local().unwrap().max_abs_diff(&want) < tol, "simulate vs local");
+        let legacy = ba.multiply_join(&bb).unwrap().to_local().unwrap();
+        assert!(legacy.max_abs_diff(&want) < tol, "legacy vs local");
+    });
+}
+
+#[test]
+fn multiply_runs_exactly_one_shuffle_with_pruned_destinations() {
+    let c = Context::local("one_shuffle", 2);
+    // block-diagonal operands built directly (no partitioner metadata):
+    // each stored block contracts with exactly one opposite block, so
+    // destination pruning ships exactly one copy of each
+    let mut rng = SplitMix64::new(7);
+    let d: Vec<DenseMatrix> = (0..4).map(|_| DenseMatrix::randn(2, 2, &mut rng)).collect();
+    let a_blocks = c.parallelize(vec![((0, 0), d[0].clone()), ((1, 1), d[1].clone())], 2);
+    let b_blocks = c.parallelize(vec![((0, 0), d[2].clone()), ((1, 1), d[3].clone())], 2);
+    let a = BlockMatrix::new(&c, a_blocks, 2, 2, 4, 4);
+    let b = BlockMatrix::new(&c, b_blocks, 2, 2, 4, 4);
+    let (ex0, rec0) = (shuffles_executed(&c), records_written(&c));
+    let prod = a.multiply(&b).unwrap();
+    let got = prod.to_local().unwrap();
+    assert_eq!(
+        shuffles_executed(&c) - ex0,
+        1,
+        "simulate-multiply must execute exactly ONE shuffle"
+    );
+    assert_eq!(
+        records_written(&c) - rec0,
+        4,
+        "each of the 4 stored blocks ships to exactly one destination"
+    );
+    let want = a.to_local().unwrap().matmul(&b.to_local().unwrap()).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-12);
+    // a second action on the same product re-reads the latched map
+    // output — still exactly one shuffle
+    assert!(prod.to_local().unwrap().max_abs_diff(&want) < 1e-12);
+    assert_eq!(shuffles_executed(&c) - ex0, 1);
+}
+
+#[test]
+fn prepartitioned_operand_skips_its_multiply_shuffle() {
+    let c = Context::local("mul_skip", 2);
+    let mut rng = SplitMix64::new(8);
+    let a_mat = DenseMatrix::randn(8, 6, &mut rng);
+    let b_mat = DenseMatrix::randn(6, 4, &mut rng);
+    // A: 4×2 block grid (2×3 blocks); B: a single block column (2×1 grid)
+    let a = BlockMatrix::from_local(&c, &a_mat, 2, 3, 2);
+    let b = BlockMatrix::from_local(&c, &b_mat, 3, 4, 1);
+    // pre-partition A so every block already sits at its destination
+    // under the result partitioner grid(4, 1, 2) = 3-row tiles
+    let a_pre = BlockMatrix::new(
+        &c,
+        a.blocks.partition_by_with(Partitioner::grid_exact(4, 2, 3, 2)),
+        2,
+        3,
+        8,
+        6,
+    );
+    a_pre.blocks.collect().unwrap(); // run (and latch) the pre-partition shuffle
+    let (ex0, sk0) = (shuffles_executed(&c), shuffles_skipped(&c));
+    let got = a_pre.multiply(&b).unwrap().to_local().unwrap();
+    assert!(
+        shuffles_skipped(&c) - sk0 >= 1,
+        "pre-partitioned A must be read in place (shuffle skipped)"
+    );
+    assert_eq!(
+        shuffles_executed(&c) - ex0,
+        1,
+        "only B's side of the multiply shuffles"
+    );
+    let want = a_mat.matmul(&b_mat).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-9 * (1.0 + want.frob_norm()));
+}
+
+#[test]
+fn self_add_uses_zip_fast_path_on_shared_grid() {
+    let c = Context::local("self_add", 2);
+    // uncached shuffle output with a grid partitioner
+    let cm = CoordinateMatrix::sprand(&c, 20, 17, 150, 3, 5);
+    let bm = BlockMatrix::from_coordinate(&cm, 3, 4, 3).unwrap();
+    let sk0 = shuffles_skipped(&c);
+    let doubled = bm.add(&bm).unwrap();
+    assert!(shuffles_skipped(&c) > sk0, "identically-partitioned add skips its shuffle");
+    let want = cm.to_local().unwrap().scale(2.0);
+    assert!(doubled.to_local().unwrap().max_abs_diff(&want) < 1e-12);
+    // products over the same grid also co-partition
+    assert!(doubled.blocks.partitioner().is_some());
+}
+
+// ---------------------------------------------------------- keyed-op skips
+
+#[test]
+fn copartitioned_reduce_by_key_skips_shuffle() {
+    let c = Context::local("rbk_skip", 2);
+    let data: Vec<(u32, u64)> = (0..600).map(|i| ((i % 37) as u32, i as u64)).collect();
+    let part = Partitioner::hash(5);
+    let located = c.parallelize(data.clone(), 7).map(|p| *p).partition_by_with(part.clone());
+    located.collect().unwrap(); // run + latch the partition_by shuffle
+    let (ex0, sk0) = (shuffles_executed(&c), shuffles_skipped(&c));
+    let mut got = located.reduce_by_key_with(part.clone(), |a, b| a + b).collect().unwrap();
+    assert_eq!(shuffles_executed(&c) - ex0, 0, "co-partitioned reduce must not shuffle");
+    assert!(shuffles_skipped(&c) - sk0 >= 1);
+    got.sort();
+    let mut want = std::collections::BTreeMap::<u32, u64>::new();
+    for (k, v) in data {
+        *want.entry(k).or_default() += v;
+    }
+    assert_eq!(got, want.into_iter().collect::<Vec<_>>());
+    // partitioner survives key-preserving narrow ops and keeps skipping
+    let derived = located.filter(|_| true).map_values(|v| v * 2);
+    assert!(derived.is_partitioned_by(&part));
+    let ex1 = shuffles_executed(&c);
+    derived.group_by_key_with(part.clone()).collect().unwrap();
+    assert_eq!(shuffles_executed(&c) - ex1, 0, "propagated partitioner skips too");
+}
+
+#[test]
+fn partition_by_on_partitioned_input_is_noop() {
+    let c = Context::local("pby_noop", 2);
+    let part = Partitioner::hash(4);
+    let r = c
+        .parallelize((0..100u64).map(|i| (i % 9, i)).collect::<Vec<_>>(), 5)
+        .map(|p| *p)
+        .partition_by_with(part.clone());
+    r.collect().unwrap();
+    let (ex0, sk0) = (shuffles_executed(&c), shuffles_skipped(&c));
+    let r2 = r.partition_by_with(part);
+    let mut a = r.collect().unwrap();
+    let mut b = r2.collect().unwrap();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b);
+    assert_eq!(shuffles_executed(&c) - ex0, 0);
+    assert!(shuffles_skipped(&c) - sk0 >= 1);
+}
+
+// ------------------------------------------------------------------- join
+
+#[test]
+fn join_matches_reference_semantics_property() {
+    // includes duplicate keys, keys on one side only, and empty sides
+    check("cogroup join == nested-loop reference", 10, |g| {
+        let c = Context::local("join_prop", 2);
+        let nl = g.int(0, 120);
+        let nr = g.int(0, 120);
+        let key_span = 1 + g.int(0, 25) as u64;
+        let left: Vec<(u64, i64)> =
+            (0..nl).map(|i| ((g.int(0, key_span as usize - 1)) as u64, i as i64)).collect();
+        let right: Vec<(u64, i64)> =
+            (0..nr).map(|i| ((g.int(0, key_span as usize - 1)) as u64, -(i as i64))).collect();
+        let lr = c.parallelize(left.clone(), 1 + g.int(0, 4)).map(|p| *p);
+        let rr = c.parallelize(right.clone(), 1 + g.int(0, 4)).map(|p| *p);
+        let mut got = lr.join(&rr, 1 + g.int(0, 5)).collect().unwrap();
+        got.sort();
+        let mut want: Vec<(u64, (i64, i64))> = Vec::new();
+        for &(k, v) in &left {
+            for &(k2, w) in &right {
+                if k == k2 {
+                    want.push((k, (v, w)));
+                }
+            }
+        }
+        want.sort();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn copartitioned_join_runs_zero_shuffles() {
+    let c = Context::local("join_skip", 2);
+    let part = Partitioner::hash(4);
+    let l = c
+        .parallelize((0..200u64).map(|i| (i % 23, i)).collect::<Vec<_>>(), 6)
+        .map(|p| *p)
+        .partition_by_with(part.clone());
+    let r = c
+        .parallelize((0..150u64).map(|i| (i % 23, i * 10)).collect::<Vec<_>>(), 3)
+        .map(|p| *p)
+        .partition_by_with(part.clone());
+    l.collect().unwrap();
+    r.collect().unwrap();
+    let (ex0, sk0) = (shuffles_executed(&c), shuffles_skipped(&c));
+    let joined = l.join_with(&r, part).collect().unwrap();
+    assert_eq!(shuffles_executed(&c) - ex0, 0, "co-located join performs zero shuffles");
+    assert!(shuffles_skipped(&c) - sk0 >= 2, "both sides skipped");
+    let want_pairs: usize = (0..23u64)
+        .map(|k| {
+            let nl = (0..200u64).filter(|i| i % 23 == k).count();
+            let nr = (0..150u64).filter(|i| i % 23 == k).count();
+            nl * nr
+        })
+        .sum();
+    assert_eq!(joined.len(), want_pairs);
+}
+
+// --------------------------------------------------------------- merge API
+
+#[test]
+fn reduce_by_key_merge_matches_allocating_reduce() {
+    let c = Context::local("merge_eq", 2);
+    let data: Vec<(u32, Vec<f64>)> =
+        (0..300).map(|i| ((i % 21) as u32, vec![i as f64; 8])).collect();
+    let rdd = c.parallelize(data, 5).map(|p| p.clone());
+    let mut a = rdd
+        .reduce_by_key(4, |x: &Vec<f64>, y: &Vec<f64>| {
+            x.iter().zip(y).map(|(p, q)| p + q).collect()
+        })
+        .collect()
+        .unwrap();
+    let mut b = rdd
+        .reduce_by_key_merge(Partitioner::hash(4), |acc: &mut Vec<f64>, v: Vec<f64>| {
+            for (x, y) in acc.iter_mut().zip(&v) {
+                *x += y;
+            }
+        })
+        .collect()
+        .unwrap();
+    a.sort_by_key(|(k, _)| *k);
+    b.sort_by_key(|(k, _)| *k);
+    assert_eq!(a, b);
+}
+
+// ------------------------------------------------------------- store hygiene
+
+#[test]
+fn shuffle_buckets_dropped_when_rdd_dropped() {
+    let c = Context::local("bucket_drop", 2);
+    let data: Vec<(u32, u64)> = (0..400).map(|i| ((i % 13) as u32, i as u64)).collect();
+    let reduced = c.parallelize(data, 6).map(|p| *p).reduce_by_key(4, |a, b| a + b);
+    let mut first = reduced.collect().unwrap();
+    assert!(!c.cluster().shuffle.is_empty(), "buckets live while the RDD does");
+    // repeated actions re-read the same buckets (map stage latched)
+    let mut second = reduced.collect().unwrap();
+    first.sort();
+    second.sort();
+    assert_eq!(first, second);
+    drop(reduced);
+    assert!(
+        c.cluster().shuffle.is_empty(),
+        "dropping the consuming RDD frees its shuffle buckets"
+    );
+}
