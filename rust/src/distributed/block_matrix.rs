@@ -1,7 +1,11 @@
-//! `BlockMatrix` (paper §2.3): dense sub-blocks in an RDD keyed by block
+//! `BlockMatrix` (paper §2.3): sub-blocks in an RDD keyed by block
 //! coordinates. Supports `add`, `multiply` (the paper's "large linear
 //! model parallelism" [4, 9] builds on it), `transpose`, and the paper's
 //! `validate` helper.
+//!
+//! Each block is a [`Block`]: dense, or CSR when `from_coordinate` finds
+//! it at or below [`SPARSE_BLOCK_MAX_DENSITY`] fill — sparse inputs stay
+//! sparse through block ops instead of densifying at conversion.
 //!
 //! `multiply` is Spark's **simulate multiply**: both operands'
 //! block-key sets are collected (metadata only), the destination
@@ -9,11 +13,14 @@
 //! are computed on the driver, and each block is shipped — `Arc`-shared,
 //! never deep-cloned — *only* to the reduce partitions it actually
 //! contracts with, in ONE shuffle. Each reduce partition accumulates its
-//! partial products in place with [`gemm_acc`] (`C += A·B`). An operand
-//! already partitioned so that all its blocks sit at their destination
-//! is read in place — zero shuffle for that side
-//! (`Metrics::shuffles_skipped`). The legacy join-based two-shuffle path
-//! survives as [`BlockMatrix::multiply_join`] for benchmarks.
+//! partial products in place, dispatching the `C += A·B` kernel by the
+//! operand pair's formats ([`gemm_acc`] for dense×dense, the
+//! `linalg::sparse` `spmm_acc` family otherwise; per-format counts land
+//! in `Metrics::spmm_*`). An operand already partitioned so that all its
+//! blocks sit at their destination is read in place — zero shuffle for
+//! that side (`Metrics::shuffles_skipped`). The legacy join-based
+//! two-shuffle path survives as [`BlockMatrix::multiply_join`] for
+//! benchmarks.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::Ordering;
@@ -24,16 +31,190 @@ use crate::distributed::coordinate_matrix::{CoordinateMatrix, MatrixEntry};
 use crate::error::{Error, Result};
 use crate::linalg::blas::level3::gemm_acc;
 use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::sparse::{spmm_acc_ds, spmm_acc_ss, CsrMatrix};
 use crate::rdd::core::Prep;
 use crate::rdd::pair::Partitioner;
 use crate::rdd::shuffle::ShuffleDep;
-use crate::rdd::Rdd;
+use crate::rdd::{Metrics, Rdd};
+
+/// `from_coordinate` keeps a block sparse when its fill fraction
+/// (entries / rows·cols) is at or below this threshold; denser blocks
+/// materialize dense. 1-in-4 fill is roughly where the CSR row walk
+/// stops beating the dense row walk for the block sizes in play.
+pub const SPARSE_BLOCK_MAX_DENSITY: f64 = 0.25;
+
+/// One stored sub-block of a [`BlockMatrix`]: dense, or row-compressed
+/// for blocks that arrive sparse from coordinate data.
+#[derive(Debug, Clone)]
+pub enum Block {
+    /// Dense storage.
+    Dense(DenseMatrix),
+    /// CSR storage (block-local indices).
+    Sparse(CsrMatrix),
+}
+
+impl Block {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.rows,
+            Block::Sparse(s) => s.rows,
+        }
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.cols,
+            Block::Sparse(s) => s.cols,
+        }
+    }
+
+    /// True for CSR storage.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Block::Sparse(_))
+    }
+
+    /// Nonzero count (explicit stored zeros excluded, matching the other
+    /// formats' accounting).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.data.iter().filter(|&&x| x != 0.0).count(),
+            Block::Sparse(s) => s.values.iter().filter(|&&x| x != 0.0).count(),
+        }
+    }
+
+    /// Sum of squared stored values.
+    pub fn frob_sq(&self) -> f64 {
+        match self {
+            Block::Dense(m) => {
+                let f = m.frob_norm();
+                f * f
+            }
+            Block::Sparse(s) => s.frob_sq(),
+        }
+    }
+
+    /// Densify (clones for dense blocks).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            Block::Dense(m) => m.clone(),
+            Block::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Transpose, preserving storage format.
+    pub fn transpose(&self) -> Block {
+        match self {
+            Block::Dense(m) => Block::Dense(m.transpose()),
+            Block::Sparse(s) => Block::Sparse(s.transpose()),
+        }
+    }
+
+    /// Scale every value, preserving storage format.
+    pub fn scale(&self, alpha: f64) -> Block {
+        match self {
+            Block::Dense(m) => Block::Dense(m.scale(alpha)),
+            Block::Sparse(s) => Block::Sparse(s.scale(alpha)),
+        }
+    }
+
+    /// `self += other` in place. Dense absorbs sparse by scatter;
+    /// sparse += sparse merges and stays sparse; sparse += dense
+    /// densifies (the sum is as dense as the dense operand).
+    pub fn add_assign(&mut self, other: &Block) -> Result<()> {
+        if (self.rows(), self.cols()) != (other.rows(), other.cols()) {
+            return Err(Error::dim(format!(
+                "block add: {}x{} vs {}x{}",
+                self.rows(),
+                self.cols(),
+                other.rows(),
+                other.cols()
+            )));
+        }
+        if let Block::Sparse(a) = &*self {
+            let merged = match other {
+                Block::Sparse(b) => {
+                    let mut entries: Vec<(usize, usize, f64)> = a.iter_entries().collect();
+                    entries.extend(b.iter_entries());
+                    Block::Sparse(CsrMatrix::from_coo(a.rows, a.cols, entries)?)
+                }
+                Block::Dense(b) => {
+                    let mut d = a.to_dense();
+                    d.add_assign(b)?;
+                    Block::Dense(d)
+                }
+            };
+            *self = merged;
+            return Ok(());
+        }
+        let Block::Dense(a) = self else { unreachable!("sparse handled above") };
+        match other {
+            Block::Dense(b) => a.add_assign(b),
+            Block::Sparse(b) => {
+                for (i, j, v) in b.iter_entries() {
+                    let cur = a.get(i, j);
+                    a.set(i, j, cur + v);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// `self + other`, allocating (the legacy `multiply_join` combiner).
+    pub fn add(&self, other: &Block) -> Result<Block> {
+        let mut out = self.clone();
+        out.add_assign(other)?;
+        Ok(out)
+    }
+
+    /// `c += a·b`, dispatching the kernel by the operand pair's storage
+    /// formats and counting the dispatch in `metrics` — the contraction
+    /// inside simulate-multiply. The accumulator is always dense:
+    /// products of sparse blocks fill in fast, so Gustavson with a dense
+    /// accumulator is the right sparse×sparse shape here.
+    pub fn spmm_acc(a: &Block, b: &Block, c: &mut DenseMatrix, metrics: &Metrics) {
+        match (a, b) {
+            (Block::Dense(am), Block::Dense(bm)) => {
+                metrics.spmm_dense_dense.fetch_add(1, Ordering::Relaxed);
+                gemm_acc(am, bm, c);
+            }
+            (Block::Sparse(am), Block::Dense(bm)) => {
+                metrics.spmm_sparse_dense.fetch_add(1, Ordering::Relaxed);
+                am.spmm_acc(bm, c);
+            }
+            (Block::Dense(am), Block::Sparse(bm)) => {
+                metrics.spmm_dense_sparse.fetch_add(1, Ordering::Relaxed);
+                spmm_acc_ds(am, bm, c);
+            }
+            (Block::Sparse(am), Block::Sparse(bm)) => {
+                metrics.spmm_sparse_sparse.fetch_add(1, Ordering::Relaxed);
+                spmm_acc_ss(am, bm, c);
+            }
+        }
+    }
+
+    /// `self·other` as a fresh dense matrix (stripe Gram, legacy join
+    /// multiply — paths without a shared accumulator or dispatch
+    /// counters).
+    pub fn matmul(&self, other: &Block) -> Result<DenseMatrix> {
+        crate::ensure_dims!(self.cols(), other.rows(), "block matmul inner dims");
+        let mut c = DenseMatrix::zeros(self.rows(), other.cols());
+        match (self, other) {
+            (Block::Dense(am), Block::Dense(bm)) => gemm_acc(am, bm, &mut c),
+            (Block::Sparse(am), Block::Dense(bm)) => am.spmm_acc(bm, &mut c),
+            (Block::Dense(am), Block::Sparse(bm)) => spmm_acc_ds(am, bm, &mut c),
+            (Block::Sparse(am), Block::Sparse(bm)) => spmm_acc_ss(am, bm, &mut c),
+        }
+        Ok(c)
+    }
+}
 
 /// Block-partitioned distributed matrix.
 #[derive(Clone)]
 pub struct BlockMatrix {
     /// ((block_row, block_col), block) records.
-    pub blocks: Rdd<((usize, usize), DenseMatrix)>,
+    pub blocks: Rdd<((usize, usize), Block)>,
     /// Rows per (full) block.
     pub rows_per_block: usize,
     /// Cols per (full) block.
@@ -49,7 +230,7 @@ impl BlockMatrix {
     /// Wrap a blocks RDD (callers promise block sizes; `validate()` checks).
     pub fn new(
         ctx: &Context,
-        blocks: Rdd<((usize, usize), DenseMatrix)>,
+        blocks: Rdd<((usize, usize), Block)>,
         rows_per_block: usize,
         cols_per_block: usize,
         num_rows: usize,
@@ -73,7 +254,7 @@ impl BlockMatrix {
                 let c0 = bj * cols_per_block;
                 let nr = rows_per_block.min(a.rows - r0);
                 let nc = cols_per_block.min(a.cols - c0);
-                blocks.push(((bi, bj), a.block(r0, c0, nr, nc)));
+                blocks.push(((bi, bj), Block::Dense(a.block(r0, c0, nr, nc))));
             }
         }
         BlockMatrix::new(
@@ -90,6 +271,13 @@ impl BlockMatrix {
     /// `CoordinateMatrix.toBlockMatrix`). Output blocks are
     /// grid-partitioned, so downstream block ops see a known
     /// [`Partitioner`] and can skip compatible shuffles.
+    ///
+    /// Blocks whose fill fraction is at or below
+    /// [`SPARSE_BLOCK_MAX_DENSITY`] are stored CSR instead of dense, so
+    /// sparse inputs keep their memory/flops advantage through block
+    /// ops. The decision uses the raw (pre-dedup) entry count — an
+    /// upper bound on distinct nonzeros, so it never misclassifies a
+    /// sparse block as dense.
     pub fn from_coordinate(
         cm: &CoordinateMatrix,
         rows_per_block: usize,
@@ -115,14 +303,27 @@ impl BlockMatrix {
                 let (bi, bj) = (*bi, *bj);
                 let block_rows = rpb.min(nr - bi * rpb);
                 let block_cols = cpb.min(nc - bj * cpb);
-                let mut m = DenseMatrix::zeros(block_rows, block_cols);
-                for e in entries {
-                    let li = e.i as usize - bi * rpb;
-                    let lj = e.j as usize - bj * cpb;
-                    let cur = m.get(li, lj);
-                    m.set(li, lj, cur + e.value);
-                }
-                ((bi, bj), m)
+                let area = block_rows * block_cols;
+                let blk = if entries.len() as f64 <= SPARSE_BLOCK_MAX_DENSITY * area as f64 {
+                    let coo: Vec<(usize, usize, f64)> = entries
+                        .iter()
+                        .map(|e| (e.i as usize - bi * rpb, e.j as usize - bj * cpb, e.value))
+                        .collect();
+                    Block::Sparse(
+                        CsrMatrix::from_coo(block_rows, block_cols, coo)
+                            .expect("block-local indices are in range by construction"),
+                    )
+                } else {
+                    let mut m = DenseMatrix::zeros(block_rows, block_cols);
+                    for e in entries {
+                        let li = e.i as usize - bi * rpb;
+                        let lj = e.j as usize - bj * cpb;
+                        let cur = m.get(li, lj);
+                        m.set(li, lj, cur + e.value);
+                    }
+                    Block::Dense(m)
+                };
+                ((bi, bj), blk)
             })
             // keys are untouched by the block build, so the grid
             // placement survives the map
@@ -150,29 +351,40 @@ impl BlockMatrix {
     /// Nonzeros stored inside blocks (explicit zeros excluded, matching
     /// the other formats' accounting).
     pub fn nnz(&self) -> Result<usize> {
-        self.blocks.aggregate(
-            0usize,
-            |a, (_k, m)| a + m.data.iter().filter(|&&x| x != 0.0).count(),
-            |a, b| a + b,
-        )
+        self.blocks.aggregate(0usize, |a, (_k, m)| a + m.nnz(), |a, b| a + b)
     }
 
     /// Explode blocks into coordinate entries (no shuffle — entries stay
     /// in their block's partition; the reverse of `from_coordinate`).
     pub fn to_coordinate_matrix(&self) -> CoordinateMatrix {
         let (rpb, cpb) = (self.rows_per_block, self.cols_per_block);
-        let entries = self.blocks.flat_map(move |((bi, bj), m)| {
+        let entries = self.blocks.flat_map(move |((bi, bj), blk)| {
             let (r0, c0) = (*bi * rpb, *bj * cpb);
             let mut out = vec![];
-            for i in 0..m.rows {
-                for j in 0..m.cols {
-                    let v = m.get(i, j);
-                    if v != 0.0 {
-                        out.push(MatrixEntry {
-                            i: (r0 + i) as u64,
-                            j: (c0 + j) as u64,
-                            value: v,
-                        });
+            match blk {
+                Block::Dense(m) => {
+                    for i in 0..m.rows {
+                        for j in 0..m.cols {
+                            let v = m.get(i, j);
+                            if v != 0.0 {
+                                out.push(MatrixEntry {
+                                    i: (r0 + i) as u64,
+                                    j: (c0 + j) as u64,
+                                    value: v,
+                                });
+                            }
+                        }
+                    }
+                }
+                Block::Sparse(s) => {
+                    for (i, j, v) in s.iter_entries() {
+                        if v != 0.0 {
+                            out.push(MatrixEntry {
+                                i: (r0 + i) as u64,
+                                j: (c0 + j) as u64,
+                                value: v,
+                            });
+                        }
                     }
                 }
             }
@@ -219,10 +431,11 @@ impl BlockMatrix {
             } else {
                 let want_r = rpb.min(nr - bi * rpb);
                 let want_c = cpb.min(nc - bj * cpb);
-                if (m.rows, m.cols) != (want_r, want_c) {
+                if (m.rows(), m.cols()) != (want_r, want_c) {
                     problems.push(format!(
                         "block ({bi},{bj}) is {}x{}, expected {want_r}x{want_c}",
-                        m.rows, m.cols
+                        m.rows(),
+                        m.cols()
                     ));
                 }
             }
@@ -244,7 +457,8 @@ impl BlockMatrix {
     /// Element-wise add. Identically-partitioned operands (e.g. two
     /// products over the same grid) add with a partition-local zip —
     /// zero shuffle; otherwise one grid-partitioned merge shuffle whose
-    /// combiner folds blocks in place (`DenseMatrix::add_assign`).
+    /// combiner folds blocks in place ([`Block::add_assign`]; sparse
+    /// pairs stay sparse, mixed pairs densify).
     pub fn add(&self, other: &BlockMatrix) -> Result<BlockMatrix> {
         if (self.num_rows, self.num_cols) != (other.num_rows, other.num_cols)
             || (self.rows_per_block, self.cols_per_block)
@@ -273,7 +487,7 @@ impl BlockMatrix {
                 let summed = self
                     .blocks
                     .zip_partitions(&other.blocks, |ls, rs| {
-                        let mut acc: HashMap<(usize, usize), DenseMatrix> =
+                        let mut acc: HashMap<(usize, usize), Block> =
                             ls.iter().map(|(k, m)| (*k, m.clone())).collect();
                         for (k, m) in rs {
                             match acc.get_mut(k) {
@@ -303,7 +517,7 @@ impl BlockMatrix {
             .blocks
             .map(|(k, m)| (*k, m.clone()))
             .union(&other.blocks.map(|(k, m)| (*k, m.clone())));
-        let summed = tagged.reduce_by_key_merge(part, |acc: &mut DenseMatrix, m| {
+        let summed = tagged.reduce_by_key_merge(part, |acc: &mut Block, m| {
             acc.add_assign(&m).expect("validated block shapes")
         });
         Ok(BlockMatrix::new(
@@ -345,8 +559,11 @@ impl BlockMatrix {
     ///    already all sit at their destination is read in place, zero
     ///    shuffle, `Metrics::shuffles_skipped`);
     /// 3. each result partition runs the local block contraction,
-    ///    accumulating partial products **in place** with
-    ///    [`gemm_acc`] — no per-partial allocations.
+    ///    accumulating partial products **in place** into a dense
+    ///    accumulator via [`Block::spmm_acc`] — the kernel is picked per
+    ///    block pair ([`gemm_acc`] only when both sides are dense), with
+    ///    per-format dispatch counts in `Metrics::spmm_*` and no
+    ///    per-partial allocations.
     ///
     /// The output is grid-partitioned, so follow-up block ops over the
     /// same grid skip their shuffles. Note the planning key-pass streams
@@ -443,7 +660,7 @@ impl BlockMatrix {
                 .ok_or_else(|| Error::msg("BlockMatrix multiply plan not prepared"))?;
             let (a_buckets, a_local) = gather_mul_side(a_src, &cluster2, shuffle_id, q, exec)?;
             let (b_buckets, b_local) = gather_mul_side(b_src, &cluster2, shuffle_id, q, exec)?;
-            let mut a_refs: Vec<(usize, usize, &DenseMatrix)> = Vec::new();
+            let mut a_refs: Vec<(usize, usize, &Block)> = Vec::new();
             for bucket in &a_buckets {
                 for ((i, k), m) in bucket.iter() {
                     a_refs.push((*i, *k, m.as_ref()));
@@ -454,7 +671,7 @@ impl BlockMatrix {
                     a_refs.push((*i, *k, m));
                 }
             }
-            let mut b_by_k: HashMap<usize, Vec<(usize, &DenseMatrix)>> = HashMap::new();
+            let mut b_by_k: HashMap<usize, Vec<(usize, &Block)>> = HashMap::new();
             for bucket in &b_buckets {
                 for ((k, j), m) in bucket.iter() {
                     b_by_k.entry(*k).or_default().push((*j, m.as_ref()));
@@ -481,11 +698,11 @@ impl BlockMatrix {
                                 cpb_out.min(nc_out - j * cpb_out),
                             )
                         });
-                        gemm_acc(am, bm, c);
+                        Block::spmm_acc(am, bm, c, &cluster2.metrics);
                     }
                 }
             }
-            Ok(out.into_iter().collect())
+            Ok(out.into_iter().map(|(k, c)| (k, Block::Dense(c))).collect())
         });
         let result = Rdd::from_parts(
             Arc::clone(&cluster),
@@ -521,11 +738,10 @@ impl BlockMatrix {
         let b_by_k = other.blocks.map(|((k, j), m)| (*k, (*j, m.clone())));
         let joined = a_by_k.join(&b_by_k, parts);
         let partials = joined.map(|(_k, ((i, a), (j, b)))| {
-            ((*i, *j), a.matmul(b).expect("inner block dims validated"))
+            ((*i, *j), Block::Dense(a.matmul(b).expect("inner block dims validated")))
         });
-        let reduced = partials.reduce_by_key(parts, |x: &DenseMatrix, y: &DenseMatrix| {
-            x.add(y).expect("partial product shapes agree")
-        });
+        let reduced = partials
+            .reduce_by_key(parts, |x: &Block, y: &Block| x.add(y).expect("partial shapes agree"));
         Ok(BlockMatrix::new(
             &self.ctx,
             reduced,
@@ -565,24 +781,83 @@ impl BlockMatrix {
     /// Collect to a local dense matrix (tests / small results).
     pub fn to_local(&self) -> Result<DenseMatrix> {
         let mut out = DenseMatrix::zeros(self.num_rows, self.num_cols);
-        for ((bi, bj), m) in self.blocks.collect()? {
+        for ((bi, bj), blk) in self.blocks.collect()? {
             let r0 = bi * self.rows_per_block;
             let c0 = bj * self.cols_per_block;
-            for i in 0..m.rows {
-                for j in 0..m.cols {
-                    let cur = out.get(r0 + i, c0 + j);
-                    out.set(r0 + i, c0 + j, cur + m.get(i, j));
+            match blk {
+                Block::Dense(m) => {
+                    for i in 0..m.rows {
+                        for j in 0..m.cols {
+                            let cur = out.get(r0 + i, c0 + j);
+                            out.set(r0 + i, c0 + j, cur + m.get(i, j));
+                        }
+                    }
+                }
+                Block::Sparse(s) => {
+                    for (i, j, v) in s.iter_entries() {
+                        let cur = out.get(r0 + i, c0 + j);
+                        out.set(r0 + i, c0 + j, cur + v);
+                    }
                 }
             }
         }
         Ok(out)
+    }
+
+    /// Force every block dense (same geometry and partitioner) — the
+    /// baseline `bench_sparse` compares the sparse-aware multiply
+    /// against.
+    pub fn densify(&self) -> BlockMatrix {
+        let blocks = self.blocks.map(|(k, b)| (*k, Block::Dense(b.to_dense())));
+        let blocks = match self.blocks.partitioner() {
+            Some(p) => blocks.with_partitioner(p.clone()),
+            None => blocks,
+        };
+        BlockMatrix::new(
+            &self.ctx,
+            blocks,
+            self.rows_per_block,
+            self.cols_per_block,
+            self.num_rows,
+            self.num_cols,
+        )
+    }
+
+    /// Convert dense blocks at or below `max_density` fill to CSR
+    /// (sparse blocks pass through; geometry and partitioner are
+    /// preserved). The inverse pressure of [`BlockMatrix::densify`].
+    pub fn sparsify(&self, max_density: f64) -> BlockMatrix {
+        let blocks = self.blocks.map(move |(k, b)| {
+            let blk = match b {
+                Block::Dense(m)
+                    if (m.data.iter().filter(|&&x| x != 0.0).count() as f64)
+                        <= max_density * (m.rows * m.cols) as f64 =>
+                {
+                    Block::Sparse(CsrMatrix::from_dense(m))
+                }
+                other => other.clone(),
+            };
+            (*k, blk)
+        });
+        let blocks = match self.blocks.partitioner() {
+            Some(p) => blocks.with_partitioner(p.clone()),
+            None => blocks,
+        };
+        BlockMatrix::new(
+            &self.ctx,
+            blocks,
+            self.rows_per_block,
+            self.cols_per_block,
+            self.num_rows,
+            self.num_cols,
+        )
     }
 }
 
 /// One operand of the simulate-multiply: read in place (already at its
 /// destinations) or routed there under the multiply's single shuffle.
 enum MulSide {
-    Colocated(Rdd<((usize, usize), DenseMatrix)>),
+    Colocated(Rdd<((usize, usize), Block)>),
     /// Map partitions of this side live at `base..base + n_map` within
     /// the shared shuffle id's map-index space.
     Shuffled { base: usize, n_map: usize },
@@ -601,7 +876,7 @@ enum MulSide {
 /// map indices by `base` inside a shuffle id shared with the other
 /// operand.
 fn route_mul_side(
-    blocks: &Rdd<((usize, usize), DenseMatrix)>,
+    blocks: &Rdd<((usize, usize), Block)>,
     part: &Partitioner,
     dests: &HashMap<(usize, usize), BTreeSet<usize>>,
     shuffle_id: usize,
@@ -628,7 +903,7 @@ fn route_mul_side(
     cluster.run_job(
         n_map,
         Arc::new(move |p, exec| {
-            let mut buckets: Vec<Vec<((usize, usize), Arc<DenseMatrix>)>> =
+            let mut buckets: Vec<Vec<((usize, usize), Arc<Block>)>> =
                 (0..num_out).map(|_| Vec::new()).collect();
             for (key, m) in parent.compute_owned(p, exec)? {
                 if let Some(ds) = dests.get(&key) {
@@ -653,8 +928,8 @@ fn route_mul_side(
     Ok((MulSide::Shuffled { base, n_map }, true))
 }
 
-type MulBuckets = Vec<Arc<Vec<((usize, usize), Arc<DenseMatrix>)>>>;
-type MulLocal = Option<Arc<Vec<((usize, usize), DenseMatrix)>>>;
+type MulBuckets = Vec<Arc<Vec<((usize, usize), Arc<Block>)>>>;
+type MulLocal = Option<Arc<Vec<((usize, usize), Block)>>>;
 
 /// Fetch one side's blocks for result partition `q` — shuffle buckets
 /// for a routed side, the in-place partition for a co-located one. Both
@@ -674,7 +949,7 @@ fn gather_mul_side(
             for m in 0..*n_map {
                 if let Some(b) = cluster
                     .shuffle
-                    .get::<((usize, usize), Arc<DenseMatrix>)>(shuffle_id, base + m, q)
+                    .get::<((usize, usize), Arc<Block>)>(shuffle_id, base + m, q)
                 {
                     buckets.push(b);
                 }
@@ -784,13 +1059,79 @@ mod tests {
     fn validate_catches_bad_blocks() {
         let c = ctx();
         // block claims index outside the grid
-        let blocks = c.parallelize(vec![((5usize, 0usize), DenseMatrix::zeros(2, 2))], 1);
+        let blocks =
+            c.parallelize(vec![((5usize, 0usize), Block::Dense(DenseMatrix::zeros(2, 2)))], 1);
         let bm = BlockMatrix::new(&c, blocks, 2, 2, 4, 4);
         assert!(bm.validate().is_err());
         // wrong shape
-        let blocks = c.parallelize(vec![((0usize, 0usize), DenseMatrix::zeros(1, 2))], 1);
+        let blocks =
+            c.parallelize(vec![((0usize, 0usize), Block::Dense(DenseMatrix::zeros(1, 2)))], 1);
         let bm = BlockMatrix::new(&c, blocks, 2, 2, 4, 4);
         assert!(bm.validate().is_err());
+    }
+
+    #[test]
+    fn sparse_blocks_survive_block_ops() {
+        let c = ctx();
+        // 80 entries over 25x13 is ~25% fill globally, so most 4x5
+        // blocks land under the sparse threshold
+        let cm = CoordinateMatrix::sprand(&c, 25, 13, 60, 3, 11);
+        let bm = BlockMatrix::from_coordinate(&cm, 4, 5, 3).unwrap();
+        let sparse_blocks = bm
+            .blocks
+            .aggregate(0usize, |a, (_k, b)| a + b.is_sparse() as usize, |a, b| a + b)
+            .unwrap();
+        assert!(sparse_blocks > 0, "expected some CSR blocks from sparse input");
+        let dense_ref = cm.to_local().unwrap();
+        // transpose / scale / add keep values right with sparse blocks
+        assert!(bm.transpose().to_local().unwrap().max_abs_diff(&dense_ref.transpose()) < 1e-12);
+        assert!(bm.scale(2.0).to_local().unwrap().max_abs_diff(&dense_ref.scale(2.0)) < 1e-12);
+        let doubled = bm.add(&bm).unwrap();
+        assert!(doubled.to_local().unwrap().max_abs_diff(&dense_ref.scale(2.0)) < 1e-12);
+        // densify is value-preserving and purely dense
+        let dn = bm.densify();
+        assert_eq!(
+            dn.blocks
+                .aggregate(0usize, |a, (_k, b)| a + b.is_sparse() as usize, |a, b| a + b)
+                .unwrap(),
+            0
+        );
+        assert!(dn.to_local().unwrap().max_abs_diff(&dense_ref) < 1e-12);
+        // sparsify round-trips dense blocks back to CSR
+        let sp = dn.sparsify(1.0);
+        assert!(
+            sp.blocks
+                .aggregate(0usize, |a, (_k, b)| a + b.is_sparse() as usize, |a, b| a + b)
+                .unwrap()
+                > 0
+        );
+        assert!(sp.to_local().unwrap().max_abs_diff(&dense_ref) < 1e-12);
+        assert_eq!(sp.nnz().unwrap(), bm.nnz().unwrap());
+    }
+
+    #[test]
+    fn sparse_multiply_matches_dense_and_counts_kernels() {
+        let c = ctx();
+        let cm_a = CoordinateMatrix::sprand(&c, 18, 10, 40, 2, 21);
+        let cm_b = CoordinateMatrix::sprand(&c, 10, 14, 35, 2, 22);
+        let ba = BlockMatrix::from_coordinate(&cm_a, 3, 4, 2).unwrap();
+        let bb = BlockMatrix::from_coordinate(&cm_b, 4, 5, 2).unwrap();
+        let before = c.metrics().spmm_sparse_sparse.load(Ordering::Relaxed)
+            + c.metrics().spmm_sparse_dense.load(Ordering::Relaxed)
+            + c.metrics().spmm_dense_sparse.load(Ordering::Relaxed);
+        let sparse_prod = ba.multiply(&bb).unwrap().to_local().unwrap();
+        let after = c.metrics().spmm_sparse_sparse.load(Ordering::Relaxed)
+            + c.metrics().spmm_sparse_dense.load(Ordering::Relaxed)
+            + c.metrics().spmm_dense_sparse.load(Ordering::Relaxed);
+        assert!(after > before, "sparse-aware kernels never dispatched");
+        let dense_prod = ba.densify().multiply(&bb.densify()).unwrap().to_local().unwrap();
+        assert!(sparse_prod.max_abs_diff(&dense_prod) < 1e-9);
+        let want = cm_a
+            .to_local()
+            .unwrap()
+            .matmul(&cm_b.to_local().unwrap())
+            .unwrap();
+        assert!(sparse_prod.max_abs_diff(&want) < 1e-9);
     }
 
     #[test]

@@ -2,13 +2,22 @@
 //! the right format "only when both dimensions of the matrix are huge and
 //! the matrix is very sparse". The Netflix-shaped Table-1 workloads are
 //! generated in this format, then converted (one shuffle) to sparse-row
-//! form for the SVD.
+//! form for the SVD — or consumed directly: the operator path compiles
+//! each partition ONCE into a [`PartitionedSparse`] CSR/CSC store
+//! ([`CoordinateMatrix::compiled`]) and every subsequent
+//! `matvec`/`rmatvec`/`multiply_local` runs compressed-sparse kernels
+//! instead of re-streaming raw entries.
+
+use std::sync::{Arc, OnceLock};
 
 use crate::coordinator::context::Context;
 use crate::distributed::indexed_row_matrix::IndexedRowMatrix;
 use crate::distributed::row::Row;
+use crate::distributed::sparse_store::{PartitionedSparse, SparseFormat};
 use crate::error::{Error, Result};
 use crate::linalg::sparse::SparseVector;
+use crate::linalg::vector::Vector;
+use crate::rdd::pair::Partitioner;
 use crate::rdd::Rdd;
 use crate::util::rng::SplitMix64;
 
@@ -33,17 +42,32 @@ pub struct CoordinateMatrix {
     /// Declared column count.
     pub num_cols: u64,
     ctx: Context,
+    /// Lazily-built (and cached) per-partition compiled sparse store —
+    /// shared across clones so one compile serves every consumer of this
+    /// matrix value.
+    compiled: Arc<OnceLock<Rdd<PartitionedSparse>>>,
 }
 
 impl CoordinateMatrix {
     /// Wrap an entries RDD with declared dimensions.
     pub fn new(ctx: &Context, entries: Rdd<MatrixEntry>, num_rows: u64, num_cols: u64) -> CoordinateMatrix {
-        CoordinateMatrix { entries, num_rows, num_cols, ctx: ctx.clone() }
+        CoordinateMatrix {
+            entries,
+            num_rows,
+            num_cols,
+            ctx: ctx.clone(),
+            compiled: Arc::new(OnceLock::new()),
+        }
     }
 
-    /// Generate a uniformly-sparse random matrix with ~`nnz` nonzeros,
+    /// Generate a uniformly-sparse random matrix with exactly `nnz`
+    /// **distinct** `(i, j)` coordinates (clamped to `rows·cols`),
     /// partition-parallel and deterministic under `seed` — the Table-1
-    /// workload generator (Netflix-shaped matrices at configurable scale).
+    /// workload generator (Netflix-shaped matrices at configurable
+    /// scale). Each partition owns a contiguous chunk of the linear cell
+    /// space `[0, rows·cols)` and draws its proportional share of the
+    /// budget by Floyd's combination sampling, so no coordinate can
+    /// repeat within or across partitions.
     pub fn sprand(
         ctx: &Context,
         num_rows: u64,
@@ -53,14 +77,36 @@ impl CoordinateMatrix {
         seed: u64,
     ) -> CoordinateMatrix {
         let parts = num_partitions.max(1);
-        let per = nnz.div_ceil(parts);
+        let total = num_rows as u128 * num_cols as u128;
+        let nnz = (nnz as u128).min(total);
         let entries = ctx.generate("sprand", parts, move |p| {
+            if total == 0 {
+                return vec![];
+            }
             let mut rng = SplitMix64::new(seed).split(p as u64);
-            let count = per.min(nnz.saturating_sub(p * per));
-            (0..count)
-                .map(|_| MatrixEntry {
-                    i: rng.next_usize(num_rows as usize) as u64,
-                    j: rng.next_usize(num_cols as usize) as u64,
+            // chunk [lo, hi) of the linear space; its budget share
+            // floor(nnz·hi/total) − floor(nnz·lo/total) telescopes to
+            // exactly nnz across partitions and never exceeds hi − lo
+            let lo = total * p as u128 / parts as u128;
+            let hi = total * (p as u128 + 1) / parts as u128;
+            let count = nnz * hi / total - nnz * lo / total;
+            let chunk = hi - lo;
+            // Floyd's sampler: `count` distinct offsets in [0, chunk),
+            // O(count) draws even when the chunk is nearly full
+            let mut picked = std::collections::BTreeSet::new();
+            for t in (chunk - count)..chunk {
+                let r = ((rng.next_u64() as u128) << 64 | rng.next_u64() as u128) % (t + 1);
+                if !picked.insert(lo + r) {
+                    picked.insert(lo + t);
+                }
+            }
+            // BTreeSet iterates sorted: the value stream is a
+            // deterministic function of (seed, partition)
+            picked
+                .into_iter()
+                .map(|lin| MatrixEntry {
+                    i: (lin / num_cols as u128) as u64,
+                    j: (lin % num_cols as u128) as u64,
                     value: rng.normal(),
                 })
                 .collect()
@@ -90,19 +136,121 @@ impl CoordinateMatrix {
         &self.ctx
     }
 
-    /// Cache the backing entries.
+    /// Cache the backing entries. The returned matrix starts a fresh
+    /// compile slot: a cached operator signals iterative reuse, so its
+    /// partitions compile to the Dual (CSR + CSC) layout.
     pub fn cache(&self) -> CoordinateMatrix {
         CoordinateMatrix {
             entries: self.entries.clone().cache(),
             num_rows: self.num_rows,
             num_cols: self.num_cols,
             ctx: self.ctx.clone(),
+            compiled: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// The per-partition compiled sparse store (built lazily, once, and
+    /// cached — the RDD itself plus `cache()` on it, so steady-state
+    /// matvec iterations stream the compiled partitions by reference and
+    /// never touch raw `MatrixEntry` records again). Layout per
+    /// partition is auto-selected by [`PartitionedSparse::compile`]:
+    /// COO for tiny partitions, CSR for tall operators, CSC for wide,
+    /// both when the entries RDD is cached (iterative consumers call
+    /// matvec *and* rmatvec every step).
+    pub fn compiled(&self) -> &Rdd<PartitionedSparse> {
+        self.compiled.get_or_init(|| {
+            let (m, n) = (self.num_rows, self.num_cols);
+            let dual = self.entries.is_cached();
+            self.entries
+                .map_partitions_with_index(move |_p, es| {
+                    vec![PartitionedSparse::compile(es, m, n, dual)]
+                })
+                .cache()
+        })
+    }
+
+    /// Force the compile now (it otherwise happens at the first operator
+    /// call) and report the layout chosen for each partition.
+    pub fn compile(&self) -> Result<Vec<SparseFormat>> {
+        self.compiled().map(|ps| ps.format()).collect()
+    }
+
+    /// Re-shuffle entries so each partition holds complete rows, placed
+    /// by `Partitioner::hash` on the row index — and *record* that
+    /// placement on the result. A following `to_indexed_row_matrix` /
+    /// `to_row_matrix` with the same partition count then skips its
+    /// shuffle entirely (`Metrics::shuffles_skipped`). The recorded
+    /// partitioner on an entries RDD always refers to row keys; this is
+    /// the only constructor that sets one.
+    pub fn partition_by_rows(&self, num_partitions: usize) -> CoordinateMatrix {
+        let part = Partitioner::hash(num_partitions.max(1));
+        let placed = self
+            .entries
+            .map(|e| (e.i, (e.j, e.value)))
+            .partition_by_with(part.clone());
+        let entries = placed
+            .map(|(i, (j, v))| MatrixEntry { i: *i, j: *j, value: *v })
+            // the map above is per-record: nothing moves, so the hash
+            // placement by row key survives
+            .with_partitioner(part);
+        CoordinateMatrix::new(&self.ctx, entries, self.num_rows, self.num_cols)
     }
 
     /// Count stored entries (duplicates included).
     pub fn nnz(&self) -> Result<usize> {
         self.entries.count()
+    }
+
+    /// The pre-compile entry-streaming SpMV: `out = A·x`, scattering
+    /// every raw `MatrixEntry` into a pooled m-accumulator on each call
+    /// — kept as the regression baseline `bench_sparse` measures the
+    /// compiled CSR/CSC kernels against.
+    pub fn matvec_streaming_into(&self, x: &Vector, out: &mut Vector) -> Result<()> {
+        crate::ensure_dims!(x.len(), self.num_cols as usize, "coordinate matvec dims");
+        let m = self.num_rows as usize;
+        out.0.clear();
+        out.0.resize(m, 0.0);
+        let bx = self.ctx.broadcast_pooled(x.as_slice());
+        let bxt = bx.clone();
+        let pool = Arc::clone(self.ctx.workspace());
+        let partial = self.entries.fold_partitions(
+            move |_p| pool.take_zeroed(m),
+            move |acc: &mut Vec<f64>, e| {
+                acc[e.i as usize] += e.value * bxt.value()[e.j as usize];
+            },
+            |acc| acc,
+        );
+        crate::distributed::operator::tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.ctx.reclaim_pooled(bx);
+        Ok(())
+    }
+
+    /// Entry-streaming adjoint SpMV baseline: `out = Aᵀ·y`. See
+    /// [`CoordinateMatrix::matvec_streaming_into`].
+    pub fn rmatvec_streaming_into(&self, y: &Vector, out: &mut Vector) -> Result<()> {
+        crate::ensure_dims!(y.len(), self.num_rows as usize, "coordinate rmatvec dims");
+        let n = self.num_cols as usize;
+        out.0.clear();
+        out.0.resize(n, 0.0);
+        let by = self.ctx.broadcast_pooled(y.as_slice());
+        let byt = by.clone();
+        let pool = Arc::clone(self.ctx.workspace());
+        let partial = self.entries.fold_partitions(
+            move |_p| pool.take_zeroed(n),
+            move |acc: &mut Vec<f64>, e| {
+                acc[e.j as usize] += e.value * byt.value()[e.i as usize];
+            },
+            |acc| acc,
+        );
+        crate::distributed::operator::tree_sum_vec_into(&partial, &mut out.0)?;
+        // the partial RDD's closures hold the last broadcast clone —
+        // drop them so the pooled iterate buffer actually recycles
+        drop(partial);
+        self.ctx.reclaim_pooled(by);
+        Ok(())
     }
 
     /// Swap i/j (free — no shuffle until consumed).
@@ -114,19 +262,29 @@ impl CoordinateMatrix {
     }
 
     /// Group entries into sparse indexed rows (paper:
-    /// `toIndexedRowMatrix`; one shuffle). Duplicate (i, j) pairs are
-    /// summed, matching local COO semantics. The row maps are built with
-    /// in-place merges (`combine_by_key_with`) — no per-merge clones of
-    /// the growing column map.
+    /// `toIndexedRowMatrix`; usually one shuffle). Duplicate (i, j)
+    /// pairs are summed, matching local COO semantics. The row maps are
+    /// built with in-place merges (`combine_by_key_with`) — no per-merge
+    /// clones of the growing column map. When the entries already carry
+    /// a compatible hash partitioner on row keys (see
+    /// [`CoordinateMatrix::partition_by_rows`]) the conversion runs
+    /// narrow — zero shuffle, counted in `Metrics::shuffles_skipped`.
     pub fn to_indexed_row_matrix(&self, num_partitions: usize) -> Result<IndexedRowMatrix> {
         if self.num_cols > u32::MAX as u64 {
             return Err(Error::InvalidArgument(
                 "to_indexed_row_matrix: column index exceeds u32 (sparse row limit)".into(),
             ));
         }
+        let part = Partitioner::hash(num_partitions.max(1));
         let pairs = self.entries.map(|e| (e.i, (e.j as u32, e.value)));
+        // the row key IS the entry's row index, so a row-keyed placement
+        // recorded on `entries` holds for `pairs` verbatim — propagate it
+        // and `combine_by_key_with` takes its narrow path
+        let row_placed = self.entries.partitioner() == Some(&part)
+            && self.entries.num_partitions() == part.num_partitions();
+        let pairs = if row_placed { pairs.with_partitioner(part.clone()) } else { pairs };
         let combined = pairs.combine_by_key_with(
-            crate::rdd::pair::Partitioner::hash(num_partitions.max(1)),
+            part,
             |(j, v)| {
                 let mut m = std::collections::BTreeMap::<u32, f64>::new();
                 m.insert(j, v);

@@ -6,14 +6,17 @@
 //! | [`RowMatrix`] | `Rdd<Row>` | many rows, few enough cols that a row fits in memory | yes (1 pass) |
 //! | [`IndexedRowMatrix`] | `Rdd<(u64, Row)>` | as above, with meaningful row ids | gramvec only |
 //! | [`CoordinateMatrix`] | `Rdd<MatrixEntry>` | both dims huge, very sparse | no (2-pass gramvec) |
-//! | [`BlockMatrix`] | `Rdd<((i,j), DenseMatrix)>` | dense blocks; add/multiply | yes (stripe join) |
+//! | [`BlockMatrix`] | `Rdd<((i,j), Block)>` | dense or CSR blocks; add/multiply | yes (stripe join) |
 //!
 //! All four implement [`operator::DistributedLinearOperator`]
 //! (`matvec`/`rmatvec`/`gramvec`), which is the only contract the SVD
 //! ([`svd::compute_svd`]) and the TFOCS/optim solvers need — so e.g.
-//! `compute_svd(&coordinate_matrix, k, true)` runs entry-streaming SpMV
-//! with **no conversion shuffle**. The conversion lattice is complete in
-//! both directions when a specific layout is wanted:
+//! `compute_svd(&coordinate_matrix, k, true)` runs SpMV over the
+//! coordinate format's compiled per-partition CSR/CSC stores
+//! ([`sparse_store::PartitionedSparse`], built once per partition and
+//! reused every iteration) with **no conversion shuffle**. The
+//! conversion lattice is complete in both directions when a specific
+//! layout is wanted:
 //!
 //! ```text
 //! RowMatrix ⇄ IndexedRowMatrix ⇄ CoordinateMatrix ⇄ BlockMatrix
@@ -29,6 +32,7 @@ pub mod row;
 pub mod row_matrix;
 pub mod indexed_row_matrix;
 pub mod coordinate_matrix;
+pub mod sparse_store;
 pub mod block_matrix;
 pub mod operator;
 pub mod statistics;
@@ -36,10 +40,11 @@ pub mod dimsum;
 pub mod tsqr;
 pub mod svd;
 
-pub use block_matrix::BlockMatrix;
+pub use block_matrix::{Block, BlockMatrix, SPARSE_BLOCK_MAX_DENSITY};
 pub use coordinate_matrix::{CoordinateMatrix, MatrixEntry};
 pub use indexed_row_matrix::IndexedRowMatrix;
 pub use operator::{DistributedLinearOperator, DistributedMatrix};
 pub use row::Row;
 pub use row_matrix::RowMatrix;
+pub use sparse_store::{PartitionedSparse, SparseFormat};
 pub use svd::SingularValueDecomposition;

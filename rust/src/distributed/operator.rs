@@ -10,11 +10,11 @@
 //! the complete conversion lattice, so any format can still reach any
 //! other when a consumer wants a specific layout.
 
-use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::coordinator::context::Context;
-use crate::distributed::block_matrix::BlockMatrix;
+use crate::distributed::block_matrix::{Block, BlockMatrix};
 use crate::distributed::coordinate_matrix::CoordinateMatrix;
 use crate::distributed::indexed_row_matrix::IndexedRowMatrix;
 use crate::distributed::row::Row;
@@ -419,9 +419,10 @@ impl DistributedLinearOperator for CoordinateMatrix {
         Ok(self.num_cols as usize)
     }
 
-    /// Entry-streaming SpMV: each partition scatters `v·x[j]` into a
-    /// pooled local m-accumulator, tree-summed — no conversion shuffle,
-    /// the format's whole point for huge-and-sparse workloads.
+    /// Compiled-store SpMV: each partition's CSR/CSC/COO store (built
+    /// once by [`CoordinateMatrix::compiled`]) accumulates into a pooled
+    /// local m-accumulator, tree-summed — no conversion shuffle, no
+    /// per-iteration entry re-streaming.
     fn matvec(&self, x: &Vector) -> Result<Vector> {
         let mut out = Vector(Vec::new());
         self.matvec_into(x, &mut out)?;
@@ -434,7 +435,11 @@ impl DistributedLinearOperator for CoordinateMatrix {
         Ok(out)
     }
 
-    /// `AᵀA·x`: two entry-streaming passes through a pooled intermediate.
+    /// `AᵀA·x`: two compiled-kernel passes through a pooled
+    /// intermediate. Composition is required here (not a fused
+    /// per-partition `A_pᵀ(A_p x)`): coordinate partitions may split a
+    /// row across partitions, so the Gram product has cross-partition
+    /// terms a one-pass fold would drop.
     fn gramvec(&self, x: &Vector) -> Result<Vector> {
         let mut out = Vector(Vec::new());
         self.gramvec_into(x, &mut out)?;
@@ -449,10 +454,11 @@ impl DistributedLinearOperator for CoordinateMatrix {
         let bx = self.context().broadcast_pooled(x.as_slice());
         let bxt = bx.clone();
         let pool = Arc::clone(self.context().workspace());
-        let partial = self.entries.fold_partitions(
+        let metrics = Arc::clone(&self.context().cluster().metrics);
+        let partial = self.compiled().fold_partitions(
             move |_p| pool.take_zeroed(m),
-            move |acc: &mut Vec<f64>, e| {
-                acc[e.i as usize] += e.value * bxt.value()[e.j as usize];
+            move |acc: &mut Vec<f64>, ps: &crate::distributed::sparse_store::PartitionedSparse| {
+                ps.spmv_into(bxt.value().as_slice(), acc, &metrics);
             },
             |acc| acc,
         );
@@ -472,10 +478,11 @@ impl DistributedLinearOperator for CoordinateMatrix {
         let by = self.context().broadcast_pooled(y.as_slice());
         let byt = by.clone();
         let pool = Arc::clone(self.context().workspace());
-        let partial = self.entries.fold_partitions(
+        let metrics = Arc::clone(&self.context().cluster().metrics);
+        let partial = self.compiled().fold_partitions(
             move |_p| pool.take_zeroed(n),
-            move |acc: &mut Vec<f64>, e| {
-                acc[e.j as usize] += e.value * byt.value()[e.i as usize];
+            move |acc: &mut Vec<f64>, ps: &crate::distributed::sparse_store::PartitionedSparse| {
+                ps.rspmv_into(byt.value().as_slice(), acc, &metrics);
             },
             |acc| acc,
         );
@@ -496,12 +503,11 @@ impl DistributedLinearOperator for CoordinateMatrix {
         Ok(())
     }
 
-    /// Entry lists may contain duplicate `(i, j)` pairs (summed on read);
-    /// this counts each stored entry separately, so the result is exact
-    /// only for duplicate-free matrices — still a valid step-size seed,
-    /// which is all consumers use it for.
+    /// Summed over the compiled store, where duplicate `(i, j)` pairs
+    /// were already merged — exact even for entry lists with duplicates
+    /// (the raw-entry path overcounted them).
     fn frob_norm_sq(&self) -> Result<f64> {
-        self.entries.aggregate(0.0, |a, e| a + e.value * e.value, |a, b| a + b)
+        self.compiled().aggregate(0.0, |a, ps| a + ps.frob_sq(), |a, b| a + b)
     }
 
     fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
@@ -511,21 +517,13 @@ impl DistributedLinearOperator for CoordinateMatrix {
         let m = self.num_rows as usize;
         let parts = self.entries.num_partitions().max(1);
         let bb = self.context().broadcast(b.clone());
-        // accumulate `e.value · b[j, ·]` in place into one partial row
-        // buffer per distinct row index per partition (map-side combine;
-        // was one fresh Vec per nonzero entry)
-        let pairs = self.entries.map_partitions_with_index(move |_p, entries| {
-            let b = bb.value();
-            let mut acc: HashMap<u64, Vec<f64>> = HashMap::new();
-            for e in entries {
-                let j = e.j as usize;
-                let row = acc.entry(e.i).or_insert_with(|| vec![0.0; k]);
-                for (c, rv) in row.iter_mut().enumerate() {
-                    *rv += e.value * b.get(j, c);
-                }
-            }
-            acc.into_iter().collect()
-        });
+        let metrics = Arc::clone(&self.context().cluster().metrics);
+        // each compiled partition emits its partial product rows keyed
+        // by global row index (CSR walks rows directly; CSC/COO combine
+        // map-side into one buffer per distinct row)
+        let pairs = self
+            .compiled()
+            .flat_map(move |ps| ps.multiply_rows(bb.value(), &metrics));
         // seed every row index with zeros so all-zero rows of A still
         // produce (zero) rows of the product — the result always has
         // exactly `num_rows` rows (the O(m·k) seeds are the size of the
@@ -627,19 +625,28 @@ impl DistributedLinearOperator for BlockMatrix {
         let bx = self.context().broadcast_pooled(x.as_slice());
         let bxt = bx.clone();
         let pool = Arc::clone(self.context().workspace());
+        let metrics = Arc::clone(&self.context().cluster().metrics);
         let partial = self.blocks.fold_partitions(
             move |_p| pool.take_zeroed(m),
-            move |acc: &mut Vec<f64>, kb: &((usize, usize), DenseMatrix)| {
+            move |acc: &mut Vec<f64>, kb: &((usize, usize), Block)| {
                 let ((bi, bj), blk) = kb;
                 let x = bxt.value();
                 let (r0, c0) = (*bi * rpb, *bj * cpb);
-                for i in 0..blk.rows {
-                    let row = blk.row(i);
-                    let mut s = 0.0;
-                    for (j, &v) in row.iter().enumerate() {
-                        s += v * x[c0 + j];
+                match blk {
+                    Block::Dense(blk) => {
+                        for i in 0..blk.rows {
+                            let row = blk.row(i);
+                            let mut s = 0.0;
+                            for (j, &v) in row.iter().enumerate() {
+                                s += v * x[c0 + j];
+                            }
+                            acc[r0 + i] += s;
+                        }
                     }
-                    acc[r0 + i] += s;
+                    Block::Sparse(s) => {
+                        metrics.kernels_csr.fetch_add(1, Ordering::Relaxed);
+                        s.spmv_into(&x[c0..c0 + s.cols], &mut acc[r0..r0 + s.rows]);
+                    }
                 }
             },
             |acc| acc,
@@ -661,20 +668,29 @@ impl DistributedLinearOperator for BlockMatrix {
         let by = self.context().broadcast_pooled(y.as_slice());
         let byt = by.clone();
         let pool = Arc::clone(self.context().workspace());
+        let metrics = Arc::clone(&self.context().cluster().metrics);
         let partial = self.blocks.fold_partitions(
             move |_p| pool.take_zeroed(n),
-            move |acc: &mut Vec<f64>, kb: &((usize, usize), DenseMatrix)| {
+            move |acc: &mut Vec<f64>, kb: &((usize, usize), Block)| {
                 let ((bi, bj), blk) = kb;
                 let y = byt.value();
                 let (r0, c0) = (*bi * rpb, *bj * cpb);
-                for i in 0..blk.rows {
-                    let alpha = y[r0 + i];
-                    if alpha == 0.0 {
-                        continue;
+                match blk {
+                    Block::Dense(blk) => {
+                        for i in 0..blk.rows {
+                            let alpha = y[r0 + i];
+                            if alpha == 0.0 {
+                                continue;
+                            }
+                            let row = blk.row(i);
+                            for (j, &v) in row.iter().enumerate() {
+                                acc[c0 + j] += alpha * v;
+                            }
+                        }
                     }
-                    let row = blk.row(i);
-                    for (j, &v) in row.iter().enumerate() {
-                        acc[c0 + j] += alpha * v;
+                    Block::Sparse(s) => {
+                        metrics.kernels_csr.fetch_add(1, Ordering::Relaxed);
+                        s.rspmv_into(&y[r0..r0 + s.rows], &mut acc[c0..c0 + s.cols]);
                     }
                 }
             },
@@ -736,14 +752,7 @@ impl DistributedLinearOperator for BlockMatrix {
     }
 
     fn frob_norm_sq(&self) -> Result<f64> {
-        self.blocks.aggregate(
-            0.0,
-            |a, (_k, m)| {
-                let f = m.frob_norm();
-                a + f * f
-            },
-            |a, b| a + b,
-        )
+        self.blocks.aggregate(0.0, |a, (_k, m)| a + m.frob_sq(), |a, b| a + b)
     }
 
     fn multiply_local(&self, b: &DenseMatrix) -> Result<RowMatrix> {
@@ -757,15 +766,26 @@ impl DistributedLinearOperator for BlockMatrix {
         let partials = self.blocks.map(move |((bi, bj), blk)| {
             let b = bb.value();
             let c0 = *bj * cpb;
-            let mut out = DenseMatrix::zeros(blk.rows, k);
-            for i in 0..blk.rows {
-                let row = blk.row(i);
-                for (j, &v) in row.iter().enumerate() {
-                    if v != 0.0 {
-                        for c in 0..k {
-                            let cur = out.get(i, c);
-                            out.set(i, c, cur + v * b.get(c0 + j, c));
+            let mut out = DenseMatrix::zeros(blk.rows(), k);
+            let axpy_row = |out: &mut DenseMatrix, i: usize, j: usize, v: f64| {
+                if v != 0.0 {
+                    for c in 0..k {
+                        let cur = out.get(i, c);
+                        out.set(i, c, cur + v * b.get(c0 + j, c));
+                    }
+                }
+            };
+            match blk {
+                Block::Dense(m) => {
+                    for i in 0..m.rows {
+                        for (j, &v) in m.row(i).iter().enumerate() {
+                            axpy_row(&mut out, i, j, v);
                         }
+                    }
+                }
+                Block::Sparse(s) => {
+                    for (i, j, v) in s.iter_entries() {
+                        axpy_row(&mut out, i, j, v);
                     }
                 }
             }

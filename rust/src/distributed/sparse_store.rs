@@ -1,0 +1,517 @@
+//! `PartitionedSparse` — the compiled per-partition store behind
+//! `CoordinateMatrix`'s iterative hot path. Each entries partition is
+//! converted ONCE (at `CoordinateMatrix::compiled`) from raw
+//! `MatrixEntry` records into a compressed-sparse local store, and every
+//! subsequent `matvec_into`/`rmatvec_into`/`multiply_local` runs the
+//! [`CsrMatrix`]/[`CscMatrix`] kernels over it instead of re-streaming
+//! entries.
+//!
+//! Format auto-selection per partition (see DESIGN.md §"Sparse engine"):
+//!
+//! | condition | store | why |
+//! |---|---|---|
+//! | `nnz < COO_MIN_NNZ` | COO | compression overhead beats the win |
+//! | both dims > u32::MAX | COO | compressed minor index would overflow |
+//! | operator cached (iterative) | Dual (CSR + CSC) | matvec gathers rows, rmatvec gathers columns — pay 2× memory once, gather both ways every iteration |
+//! | `num_rows ≥ num_cols` | CSR | matvec (the dominant direction for tall operators) is the gather |
+//! | `num_rows < num_cols` | CSC | rmatvec is the gather |
+//!
+//! The global matrix dims can dwarf a partition's entry count, so the
+//! major dimension is *compacted*: a CSR store keeps only the rows that
+//! actually appear in this partition, with a parallel `row_ids` array
+//! mapping local row r back to its global index (likewise `col_ids` for
+//! CSC). The minor index is stored globally as `u32` — partitions whose
+//! minor dimension exceeds `u32::MAX` fall back to COO.
+
+use std::collections::HashMap;
+
+use crate::distributed::coordinate_matrix::MatrixEntry;
+use crate::linalg::matrix::DenseMatrix;
+use crate::linalg::sparse::{CscMatrix, CsrMatrix};
+use crate::rdd::Metrics;
+use std::sync::atomic::Ordering;
+
+/// Below this entry count a partition stays in (dedup-summed) COO form —
+/// pointer arrays and id maps cost more than they save.
+pub const COO_MIN_NNZ: usize = 16;
+
+/// Which layout `compile` chose for a partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseFormat {
+    /// Dedup-summed entry list (tiny partitions, u32 overflow fallback).
+    Coo,
+    /// Row-compressed, rows compacted to those present.
+    Csr,
+    /// Column-compressed, columns compacted to those present.
+    Csc,
+    /// Both CSR and CSC (cached operators: iterative solvers call both
+    /// matvec and rmatvec every step).
+    Dual,
+}
+
+#[derive(Debug, Clone)]
+enum Store {
+    Coo(Vec<MatrixEntry>),
+    Csr { row_ids: Vec<u64>, csr: CsrMatrix },
+    Csc { col_ids: Vec<u64>, csc: CscMatrix },
+    Dual { row_ids: Vec<u64>, csr: CsrMatrix, col_ids: Vec<u64>, csc: CscMatrix },
+}
+
+/// One partition's entries, compiled into the auto-selected layout.
+#[derive(Debug, Clone)]
+pub struct PartitionedSparse {
+    num_rows: u64,
+    num_cols: u64,
+    store: Store,
+}
+
+/// Sort by (i, j) and sum duplicate coordinates in place.
+fn dedup_sum(entries: &mut Vec<MatrixEntry>) {
+    entries.sort_unstable_by_key(|e| (e.i, e.j));
+    let mut w = 0usize;
+    for r in 0..entries.len() {
+        if w > 0 && entries[w - 1].i == entries[r].i && entries[w - 1].j == entries[r].j {
+            entries[w - 1].value += entries[r].value;
+        } else {
+            entries[w] = entries[r];
+            w += 1;
+        }
+    }
+    entries.truncate(w);
+}
+
+/// Build a row-compacted CSR from entries sorted by (i, j), duplicates
+/// already summed. Minor (column) indices are global, so the caller
+/// guarantees `num_cols ≤ u32::MAX`.
+fn build_csr(entries: &[MatrixEntry], num_cols: u64) -> (Vec<u64>, CsrMatrix) {
+    debug_assert!(num_cols <= u32::MAX as u64 + 1);
+    let mut row_ids: Vec<u64> = vec![];
+    let mut row_ptrs: Vec<usize> = vec![0];
+    let mut col_indices: Vec<u32> = Vec::with_capacity(entries.len());
+    let mut values: Vec<f64> = Vec::with_capacity(entries.len());
+    for e in entries {
+        if row_ids.last() != Some(&e.i) {
+            row_ids.push(e.i);
+            row_ptrs.push(col_indices.len());
+        }
+        col_indices.push(e.j as u32);
+        values.push(e.value);
+        *row_ptrs.last_mut().expect("row_ptrs nonempty") = col_indices.len();
+    }
+    let csr = CsrMatrix {
+        rows: row_ids.len(),
+        cols: num_cols as usize,
+        row_ptrs,
+        col_indices,
+        values,
+    };
+    (row_ids, csr)
+}
+
+/// Build a column-compacted CSC: re-sorts a copy by (j, i). Caller
+/// guarantees `num_rows ≤ u32::MAX` (row indices are stored globally).
+fn build_csc(entries: &[MatrixEntry], num_rows: u64) -> (Vec<u64>, CscMatrix) {
+    debug_assert!(num_rows <= u32::MAX as u64 + 1);
+    let mut by_col: Vec<MatrixEntry> = entries.to_vec();
+    by_col.sort_unstable_by_key(|e| (e.j, e.i));
+    let mut col_ids: Vec<u64> = vec![];
+    let mut col_ptrs: Vec<usize> = vec![0];
+    let mut row_indices: Vec<u32> = Vec::with_capacity(by_col.len());
+    let mut values: Vec<f64> = Vec::with_capacity(by_col.len());
+    for e in &by_col {
+        if col_ids.last() != Some(&e.j) {
+            col_ids.push(e.j);
+            col_ptrs.push(row_indices.len());
+        }
+        row_indices.push(e.i as u32);
+        values.push(e.value);
+        *col_ptrs.last_mut().expect("col_ptrs nonempty") = row_indices.len();
+    }
+    let csc = CscMatrix {
+        rows: num_rows as usize,
+        cols: col_ids.len(),
+        col_ptrs,
+        row_indices,
+        values,
+    };
+    (col_ids, csc)
+}
+
+impl PartitionedSparse {
+    /// Compile one partition's entries. `dual` selects the Dual layout
+    /// for eligible partitions (set when the operator is cached for an
+    /// iterative solver). Duplicate coordinates are summed here, once,
+    /// for every layout including COO.
+    pub fn compile(
+        entries: &[MatrixEntry],
+        num_rows: u64,
+        num_cols: u64,
+        dual: bool,
+    ) -> PartitionedSparse {
+        let mut es: Vec<MatrixEntry> = entries.to_vec();
+        dedup_sum(&mut es);
+        // compacted CSR keeps global column indices as u32 (and CSC
+        // global rows); a dimension past u32::MAX rules that layout out
+        let csr_ok = num_cols <= u32::MAX as u64;
+        let csc_ok = num_rows <= u32::MAX as u64;
+        let store = if es.len() < COO_MIN_NNZ || (!csr_ok && !csc_ok) {
+            Store::Coo(es)
+        } else if dual && csr_ok && csc_ok {
+            let (col_ids, csc) = build_csc(&es, num_rows);
+            let (row_ids, csr) = build_csr(&es, num_cols);
+            Store::Dual { row_ids, csr, col_ids, csc }
+        } else if csr_ok && (num_rows >= num_cols || !csc_ok) {
+            let (row_ids, csr) = build_csr(&es, num_cols);
+            Store::Csr { row_ids, csr }
+        } else {
+            let (col_ids, csc) = build_csc(&es, num_rows);
+            Store::Csc { col_ids, csc }
+        };
+        PartitionedSparse { num_rows, num_cols, store }
+    }
+
+    /// The layout `compile` selected.
+    pub fn format(&self) -> SparseFormat {
+        match &self.store {
+            Store::Coo(_) => SparseFormat::Coo,
+            Store::Csr { .. } => SparseFormat::Csr,
+            Store::Csc { .. } => SparseFormat::Csc,
+            Store::Dual { .. } => SparseFormat::Dual,
+        }
+    }
+
+    /// Stored nonzeros (duplicates already summed at compile).
+    pub fn nnz(&self) -> usize {
+        match &self.store {
+            Store::Coo(es) => es.len(),
+            Store::Csr { csr, .. } => csr.nnz(),
+            Store::Csc { csc, .. } => csc.nnz(),
+            Store::Dual { csr, .. } => csr.nnz(),
+        }
+    }
+
+    /// `acc += A_p · x` over this partition's entries; `acc` has the full
+    /// `num_rows` length (the caller tree-sums partials across
+    /// partitions). Counts one kernel dispatch in `metrics`.
+    pub fn spmv_into(&self, x: &[f64], acc: &mut [f64], metrics: &Metrics) {
+        match &self.store {
+            Store::Coo(es) => {
+                metrics.kernels_coo.fetch_add(1, Ordering::Relaxed);
+                for e in es {
+                    acc[e.i as usize] += e.value * x[e.j as usize];
+                }
+            }
+            Store::Csr { row_ids, csr } | Store::Dual { row_ids, csr, .. } => {
+                metrics.kernels_csr.fetch_add(1, Ordering::Relaxed);
+                for (r, &gi) in row_ids.iter().enumerate() {
+                    let mut s = 0.0;
+                    for p in csr.row_ptrs[r]..csr.row_ptrs[r + 1] {
+                        s += csr.values[p] * x[csr.col_indices[p] as usize];
+                    }
+                    acc[gi as usize] += s;
+                }
+            }
+            Store::Csc { col_ids, csc } => {
+                metrics.kernels_csc.fetch_add(1, Ordering::Relaxed);
+                for (c, &gj) in col_ids.iter().enumerate() {
+                    let xj = x[gj as usize];
+                    if xj == 0.0 {
+                        continue;
+                    }
+                    for p in csc.col_ptrs[c]..csc.col_ptrs[c + 1] {
+                        acc[csc.row_indices[p] as usize] += csc.values[p] * xj;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `acc += A_pᵀ · y`; `acc` has the full `num_cols` length.
+    pub fn rspmv_into(&self, y: &[f64], acc: &mut [f64], metrics: &Metrics) {
+        match &self.store {
+            Store::Coo(es) => {
+                metrics.kernels_coo.fetch_add(1, Ordering::Relaxed);
+                for e in es {
+                    acc[e.j as usize] += e.value * y[e.i as usize];
+                }
+            }
+            Store::Csc { col_ids, csc } | Store::Dual { col_ids, csc, .. } => {
+                metrics.kernels_csc.fetch_add(1, Ordering::Relaxed);
+                for (c, &gj) in col_ids.iter().enumerate() {
+                    let mut s = 0.0;
+                    for p in csc.col_ptrs[c]..csc.col_ptrs[c + 1] {
+                        s += csc.values[p] * y[csc.row_indices[p] as usize];
+                    }
+                    acc[gj as usize] += s;
+                }
+            }
+            Store::Csr { row_ids, csr } => {
+                metrics.kernels_csr.fetch_add(1, Ordering::Relaxed);
+                for (r, &gi) in row_ids.iter().enumerate() {
+                    let alpha = y[gi as usize];
+                    if alpha == 0.0 {
+                        continue;
+                    }
+                    for p in csr.row_ptrs[r]..csr.row_ptrs[r + 1] {
+                        acc[csr.col_indices[p] as usize] += alpha * csr.values[p];
+                    }
+                }
+            }
+        }
+    }
+
+    /// This partition's contribution to `A·B` for a driver-local dense
+    /// `B` (`num_cols` × k): partial product rows keyed by global row
+    /// index, for the caller's zero-seeded `reduce_by_key_merge`.
+    pub fn multiply_rows(&self, b: &DenseMatrix, metrics: &Metrics) -> Vec<(u64, Vec<f64>)> {
+        let k = b.cols;
+        match &self.store {
+            Store::Coo(es) => {
+                metrics.kernels_coo.fetch_add(1, Ordering::Relaxed);
+                let mut acc: HashMap<u64, Vec<f64>> = HashMap::new();
+                for e in es {
+                    let row = acc.entry(e.i).or_insert_with(|| vec![0.0; k]);
+                    for (rv, &bv) in row.iter_mut().zip(b.row(e.j as usize)) {
+                        *rv += e.value * bv;
+                    }
+                }
+                acc.into_iter().collect()
+            }
+            Store::Csr { row_ids, csr } | Store::Dual { row_ids, csr, .. } => {
+                metrics.kernels_csr.fetch_add(1, Ordering::Relaxed);
+                let mut out = Vec::with_capacity(row_ids.len());
+                for (r, &gi) in row_ids.iter().enumerate() {
+                    let mut row = vec![0.0; k];
+                    for p in csr.row_ptrs[r]..csr.row_ptrs[r + 1] {
+                        let v = csr.values[p];
+                        for (rv, &bv) in
+                            row.iter_mut().zip(b.row(csr.col_indices[p] as usize))
+                        {
+                            *rv += v * bv;
+                        }
+                    }
+                    out.push((gi, row));
+                }
+                out
+            }
+            Store::Csc { col_ids, csc } => {
+                metrics.kernels_csc.fetch_add(1, Ordering::Relaxed);
+                let mut acc: HashMap<u64, Vec<f64>> = HashMap::new();
+                for (c, &gj) in col_ids.iter().enumerate() {
+                    let brow = b.row(gj as usize);
+                    for p in csc.col_ptrs[c]..csc.col_ptrs[c + 1] {
+                        let i = csc.row_indices[p] as u64;
+                        let v = csc.values[p];
+                        let row = acc.entry(i).or_insert_with(|| vec![0.0; k]);
+                        for (rv, &bv) in row.iter_mut().zip(brow) {
+                            *rv += v * bv;
+                        }
+                    }
+                }
+                acc.into_iter().collect()
+            }
+        }
+    }
+
+    /// Sum of squared stored values — exact even when the raw entry list
+    /// had duplicate coordinates (they were summed at compile).
+    pub fn frob_sq(&self) -> f64 {
+        match &self.store {
+            Store::Coo(es) => es.iter().map(|e| e.value * e.value).sum(),
+            Store::Csr { csr, .. } => csr.frob_sq(),
+            Store::Csc { csc, .. } => csc.frob_sq(),
+            Store::Dual { csr, .. } => csr.frob_sq(),
+        }
+    }
+
+    /// Declared global row count.
+    pub fn num_rows(&self) -> u64 {
+        self.num_rows
+    }
+
+    /// Declared global column count.
+    pub fn num_cols(&self) -> u64 {
+        self.num_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+
+    fn metrics() -> Metrics {
+        Metrics::default()
+    }
+
+    fn entry(i: u64, j: u64, value: f64) -> MatrixEntry {
+        MatrixEntry { i, j, value }
+    }
+
+    fn dense_of(entries: &[MatrixEntry], m: usize, n: usize) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(m, n);
+        for e in entries {
+            let cur = d.get(e.i as usize, e.j as usize);
+            d.set(e.i as usize, e.j as usize, cur + e.value);
+        }
+        d
+    }
+
+    #[test]
+    fn format_selection_at_extremes() {
+        let tiny: Vec<MatrixEntry> = (0..5).map(|i| entry(i, i, 1.0)).collect();
+        assert_eq!(PartitionedSparse::compile(&tiny, 100, 100, false).format(), SparseFormat::Coo);
+        let many: Vec<MatrixEntry> = (0..100).map(|i| entry(i % 50, i % 7, 1.0)).collect();
+        // tall → CSR, wide → CSC, cached → Dual
+        assert_eq!(
+            PartitionedSparse::compile(&many, 1000, 10, false).format(),
+            SparseFormat::Csr
+        );
+        assert_eq!(
+            PartitionedSparse::compile(&many, 50, 1000, false).format(),
+            SparseFormat::Csc
+        );
+        assert_eq!(
+            PartitionedSparse::compile(&many, 1000, 10, true).format(),
+            SparseFormat::Dual
+        );
+        // a minor dimension past u32 rules the compressed layout out
+        let huge = u32::MAX as u64 + 10;
+        assert_eq!(
+            PartitionedSparse::compile(&many, huge, 10, false).format(),
+            SparseFormat::Csr,
+            "huge rows still fine for CSR (rows are compacted)"
+        );
+        let wide: Vec<MatrixEntry> = (0..100).map(|i| entry(i % 7, i % 50, 1.0)).collect();
+        assert_eq!(
+            PartitionedSparse::compile(&wide, 10, huge, false).format(),
+            SparseFormat::Csc,
+            "huge cols force the CSC side"
+        );
+    }
+
+    #[test]
+    fn compiled_kernels_match_dense_property() {
+        check("PartitionedSparse kernels == dense", 20, |g| {
+            let m = 1 + g.int(0, 40);
+            let n = 1 + g.int(0, 30);
+            let nnz = g.int(0, 80);
+            let mut entries = vec![];
+            for _ in 0..nnz {
+                entries.push(entry(
+                    g.int(0, m - 1) as u64,
+                    g.int(0, n - 1) as u64,
+                    g.normal(),
+                ));
+            }
+            let d = dense_of(&entries, m, n);
+            let x: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+            let y: Vec<f64> = (0..m).map(|_| g.normal()).collect();
+            let want_mv = d.matvec(&crate::linalg::vector::Vector(x.clone())).unwrap();
+            let want_rv = d.tmatvec(&crate::linalg::vector::Vector(y.clone())).unwrap();
+            let met = metrics();
+            for dual in [false, true] {
+                let ps = PartitionedSparse::compile(&entries, m as u64, n as u64, dual);
+                let mut acc = vec![0.0; m];
+                ps.spmv_into(&x, &mut acc, &met);
+                assert_allclose(&acc, &want_mv.0, 1e-12, "compiled spmv");
+                let mut racc = vec![0.0; n];
+                ps.rspmv_into(&y, &mut racc, &met);
+                assert_allclose(&racc, &want_rv.0, 1e-12, "compiled rspmv");
+            }
+        });
+    }
+
+    #[test]
+    fn duplicates_summed_and_frob_exact() {
+        let entries = vec![entry(3, 4, 1.5), entry(3, 4, 2.5), entry(0, 0, -1.0)];
+        for dual in [false, true] {
+            let ps = PartitionedSparse::compile(&entries, 10, 10, dual);
+            assert_eq!(ps.nnz(), 2, "duplicates summed at compile");
+            assert!((ps.frob_sq() - (16.0 + 1.0)).abs() < 1e-12, "frob over summed values");
+        }
+        // forced CSR path (enough distinct entries to leave COO; the
+        // moduli are coprime so all 40 pairs are distinct)
+        let many: Vec<MatrixEntry> = (0..40).map(|k| entry(k % 8, k % 5, 1.0)).collect();
+        let tall = PartitionedSparse::compile(&many, 1000, 5, false);
+        assert_eq!(tall.format(), SparseFormat::Csr);
+        let d = dense_of(&many, 8, 5);
+        let met = metrics();
+        let mut acc = vec![0.0; 1000];
+        tall.spmv_into(&[1.0; 5], &mut acc, &met);
+        for i in 0..8 {
+            assert!((acc[i] - d.row(i).iter().sum::<f64>()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn multiply_rows_matches_dense() {
+        check("multiply_rows == dense A·B rows", 12, |g| {
+            let m = 1 + g.int(0, 25);
+            let n = 1 + g.int(0, 12);
+            let k = 1 + g.int(0, 6);
+            let nnz = g.int(0, 60);
+            let mut entries = vec![];
+            for _ in 0..nnz {
+                entries.push(entry(
+                    g.int(0, m - 1) as u64,
+                    g.int(0, n - 1) as u64,
+                    g.normal(),
+                ));
+            }
+            let b = DenseMatrix::randn(n, k, g.rng());
+            let want = dense_of(&entries, m, n).matmul(&b).unwrap();
+            let met = metrics();
+            for dual in [false, true] {
+                let ps = PartitionedSparse::compile(&entries, m as u64, n as u64, dual);
+                let mut got = DenseMatrix::zeros(m, k);
+                for (gi, row) in ps.multiply_rows(&b, &met) {
+                    for (c, v) in row.iter().enumerate() {
+                        let cur = got.get(gi as usize, c);
+                        got.set(gi as usize, c, cur + v);
+                    }
+                }
+                assert!(got.max_abs_diff(&want) < 1e-12, "multiply_rows");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_single_entry_partitions() {
+        let met = metrics();
+        let empty = PartitionedSparse::compile(&[], 10, 10, true);
+        assert_eq!(empty.format(), SparseFormat::Coo);
+        assert_eq!(empty.nnz(), 0);
+        let mut acc = vec![0.0; 10];
+        empty.spmv_into(&[1.0; 10], &mut acc, &met);
+        assert_eq!(acc, vec![0.0; 10]);
+        let single = PartitionedSparse::compile(&[entry(7, 2, 3.0)], 10, 10, false);
+        assert_eq!(single.format(), SparseFormat::Coo);
+        single.spmv_into(&[1.0; 10], &mut acc, &met);
+        assert_eq!(acc[7], 3.0);
+        let mut racc = vec![0.0; 10];
+        single.rspmv_into(&[1.0; 10], &mut racc, &met);
+        assert_eq!(racc[2], 3.0);
+    }
+
+    #[test]
+    fn kernel_dispatch_counters_fire() {
+        let met = metrics();
+        let many: Vec<MatrixEntry> = (0..64).map(|k| entry(k, k % 8, 1.0)).collect();
+        let csr = PartitionedSparse::compile(&many, 64, 8, false);
+        assert_eq!(csr.format(), SparseFormat::Csr);
+        let mut acc = vec![0.0; 64];
+        csr.spmv_into(&[1.0; 8], &mut acc, &met);
+        assert_eq!(met.kernels_csr.load(Ordering::Relaxed), 1);
+        let wide: Vec<MatrixEntry> = (0..64).map(|k| entry(k % 8, k, 1.0)).collect();
+        let csc = PartitionedSparse::compile(&wide, 8, 64, false);
+        assert_eq!(csc.format(), SparseFormat::Csc);
+        let mut racc = vec![0.0; 64];
+        csc.rspmv_into(&[1.0; 8], &mut racc, &met);
+        assert_eq!(met.kernels_csc.load(Ordering::Relaxed), 1);
+        let coo = PartitionedSparse::compile(&many[..4], 64, 8, false);
+        let mut cacc = vec![0.0; 64];
+        coo.spmv_into(&[1.0; 8], &mut cacc, &met);
+        assert_eq!(met.kernels_coo.load(Ordering::Relaxed), 1);
+    }
+}

@@ -62,10 +62,19 @@
 //!
 //! let ctx = Context::local("sparse-svd", 4);
 //! // 1M x 100k, ~10M nonzeros, never converted to rows
-//! let a = CoordinateMatrix::sprand(&ctx, 1_000_000, 100_000, 10_000_000, 64, 7);
+//! let a = CoordinateMatrix::sprand(&ctx, 1_000_000, 100_000, 10_000_000, 64, 7).cache();
 //! let svd = compute_svd(&a, 10, false).unwrap();
 //! println!("{} via {}", svd.s.len(), svd.algorithm); // "arpack-gramvec"
 //! ```
+//!
+//! Behind that, the **sparse engine**: each entries partition is
+//! compiled ONCE into a [`distributed::PartitionedSparse`] store that
+//! auto-selects COO/CSR/CSC (both, for cached operators like the one
+//! above) and every solver iteration gathers through allocation-free
+//! compressed kernels instead of re-streaming triplets; `BlockMatrix`
+//! keeps sufficiently sparse blocks in CSR and routes its
+//! simulate-multiply through format-specific SpMM kernels (DESIGN.md
+//! §"Sparse engine").
 
 pub mod error;
 pub mod util;

@@ -2,6 +2,14 @@
 //! paper's §2.4 format) and `SparseMatrix` in CCS (Compressed Column
 //! Storage, §4.2), with the specialized kernels the paper benchmarks:
 //! Sparse×DenseVector and Sparse×DenseMatrix, optionally transposed.
+//!
+//! The distributed sparse engine builds on the [`CsrMatrix`] /
+//! [`CscMatrix`] pair added here: allocation-free `spmv_into` /
+//! `rspmv_into` accumulator kernels (callers lease the accumulator from
+//! the cluster `VecPool`) plus the `spmm_acc` family (`C += A·B` for
+//! sparse×dense, dense×sparse, and sparse×sparse with a dense
+//! accumulator) that `BlockMatrix`'s simulate-multiply dispatches per
+//! block pair.
 
 use crate::error::{Error, Result};
 use crate::linalg::matrix::DenseMatrix;
@@ -246,6 +254,365 @@ impl SparseMatrix {
     }
 }
 
+/// CSR (Compressed Sparse Row) matrix: `row_ptrs` of length `rows + 1`;
+/// `col_indices[row_ptrs[i]..row_ptrs[i+1]]` are the sorted column
+/// indices of row i. The matvec direction: `y += A·x` walks each row
+/// once as a gather — sequential reads, one sequential write per row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Rows.
+    pub rows: usize,
+    /// Cols.
+    pub cols: usize,
+    /// Row pointers, len rows+1.
+    pub row_ptrs: Vec<usize>,
+    /// Column index per stored value.
+    pub col_indices: Vec<u32>,
+    /// Stored values.
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// From COO triplets (unsorted ok; duplicates summed).
+    pub fn from_coo(rows: usize, cols: usize, mut entries: Vec<(usize, usize, f64)>) -> Result<CsrMatrix> {
+        for &(i, j, _) in &entries {
+            if i >= rows || j >= cols {
+                return Err(Error::InvalidArgument(format!(
+                    "entry ({i},{j}) out of bounds {rows}x{cols}"
+                )));
+            }
+        }
+        entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut row_ptrs = vec![0usize; rows + 1];
+        let mut col_indices: Vec<u32> = vec![];
+        let mut values: Vec<f64> = vec![];
+        let mut prev: Option<(usize, usize)> = None;
+        for (i, j, v) in entries {
+            if prev == Some((i, j)) {
+                *values.last_mut().expect("dup follows a stored entry") += v;
+                continue;
+            }
+            col_indices.push(j as u32);
+            values.push(v);
+            row_ptrs[i + 1] = col_indices.len();
+            prev = Some((i, j));
+        }
+        for i in 1..=rows {
+            if row_ptrs[i] < row_ptrs[i - 1] {
+                row_ptrs[i] = row_ptrs[i - 1];
+            }
+        }
+        Ok(CsrMatrix { rows, cols, row_ptrs, col_indices, values })
+    }
+
+    /// From a dense matrix, dropping zeros.
+    pub fn from_dense(a: &DenseMatrix) -> CsrMatrix {
+        let mut entries = vec![];
+        for i in 0..a.rows {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    entries.push((i, j, v));
+                }
+            }
+        }
+        CsrMatrix::from_coo(a.rows, a.cols, entries).expect("in-bounds by construction")
+    }
+
+    /// Stored nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of cells stored (`nnz / (rows·cols)`).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// `acc += A·x` — allocation-free accumulate kernel; `acc` is the
+    /// caller's (typically pool-leased) buffer of length `rows`.
+    pub fn spmv_into(&self, x: &[f64], acc: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(acc.len(), self.rows);
+        for i in 0..self.rows {
+            let mut s = 0.0;
+            for p in self.row_ptrs[i]..self.row_ptrs[i + 1] {
+                s += self.values[p] * x[self.col_indices[p] as usize];
+            }
+            acc[i] += s;
+        }
+    }
+
+    /// `acc += Aᵀ·y` — the adjoint from CSR is a per-row scatter into
+    /// the n-length accumulator (CSC is the gather-friendly layout for
+    /// this direction; this kernel exists for the Dual/CSR-only stores).
+    pub fn rspmv_into(&self, y: &[f64], acc: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.rows);
+        debug_assert_eq!(acc.len(), self.cols);
+        for i in 0..self.rows {
+            let alpha = y[i];
+            if alpha == 0.0 {
+                continue;
+            }
+            for p in self.row_ptrs[i]..self.row_ptrs[i + 1] {
+                acc[self.col_indices[p] as usize] += alpha * self.values[p];
+            }
+        }
+    }
+
+    /// `C += A·B` for dense `B` (sparse×dense): each stored `a[i,k]`
+    /// axpys B's row k into C's row i — row-major streaming on both
+    /// dense operands.
+    pub fn spmm_acc(&self, b: &DenseMatrix, c: &mut DenseMatrix) {
+        debug_assert_eq!(self.cols, b.rows);
+        debug_assert_eq!((c.rows, c.cols), (self.rows, b.cols));
+        for i in 0..self.rows {
+            let crow = c.row_mut(i);
+            for p in self.row_ptrs[i]..self.row_ptrs[i + 1] {
+                let k = self.col_indices[p] as usize;
+                let v = self.values[p];
+                for (cv, &bv) in crow.iter_mut().zip(b.row(k)) {
+                    *cv += v * bv;
+                }
+            }
+        }
+    }
+
+    /// Convert to CSC (counting transpose — O(nnz + rows + cols)).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut col_ptrs = vec![0usize; self.cols + 1];
+        for &j in &self.col_indices {
+            col_ptrs[j as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            col_ptrs[j + 1] += col_ptrs[j];
+        }
+        let mut row_indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = col_ptrs.clone();
+        for i in 0..self.rows {
+            for p in self.row_ptrs[i]..self.row_ptrs[i + 1] {
+                let j = self.col_indices[p] as usize;
+                let q = next[j];
+                next[j] += 1;
+                row_indices[q] = i as u32;
+                values[q] = self.values[p];
+            }
+        }
+        CscMatrix { rows: self.rows, cols: self.cols, col_ptrs, row_indices, values }
+    }
+
+    /// Transpose (swaps the roles of rows and columns; O(nnz)).
+    pub fn transpose(&self) -> CsrMatrix {
+        let t = self.to_csc();
+        CsrMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            row_ptrs: t.col_ptrs,
+            col_indices: t.row_indices,
+            values: t.values,
+        }
+    }
+
+    /// Scale every stored value.
+    pub fn scale(&self, alpha: f64) -> CsrMatrix {
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptrs: self.row_ptrs.clone(),
+            col_indices: self.col_indices.clone(),
+            values: self.values.iter().map(|v| v * alpha).collect(),
+        }
+    }
+
+    /// Sum of squared stored values.
+    pub fn frob_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Densify (O(rows·cols)).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for p in self.row_ptrs[i]..self.row_ptrs[i + 1] {
+                m.set(i, self.col_indices[p] as usize, self.values[p]);
+            }
+        }
+        m
+    }
+
+    /// Iterate stored entries as (row, col, value), row-major.
+    pub fn iter_entries(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            (self.row_ptrs[i]..self.row_ptrs[i + 1])
+                .map(move |p| (i, self.col_indices[p] as usize, self.values[p]))
+        })
+    }
+}
+
+/// CSC (Compressed Sparse Column) matrix — same layout as the CCS
+/// [`SparseMatrix`] but paired with [`CsrMatrix`] for the distributed
+/// engine's accumulate kernels. The rmatvec direction: `acc += Aᵀ·y`
+/// walks each column once as a gather.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    /// Rows.
+    pub rows: usize,
+    /// Cols.
+    pub cols: usize,
+    /// Column pointers, len cols+1.
+    pub col_ptrs: Vec<usize>,
+    /// Row index per stored value.
+    pub row_indices: Vec<u32>,
+    /// Stored values.
+    pub values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// From COO triplets (unsorted ok; duplicates summed).
+    pub fn from_coo(rows: usize, cols: usize, entries: Vec<(usize, usize, f64)>) -> Result<CscMatrix> {
+        let ccs = SparseMatrix::from_coo(rows, cols, entries)?;
+        Ok(CscMatrix {
+            rows: ccs.rows,
+            cols: ccs.cols,
+            col_ptrs: ccs.col_ptrs,
+            row_indices: ccs.row_indices,
+            values: ccs.values,
+        })
+    }
+
+    /// Stored nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `acc += A·x` — per-column scatter (CSR is the gather-friendly
+    /// layout for this direction).
+    pub fn spmv_into(&self, x: &[f64], acc: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(acc.len(), self.rows);
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                acc[self.row_indices[p] as usize] += self.values[p] * xj;
+            }
+        }
+    }
+
+    /// `acc += Aᵀ·y` — per-column gather, the layout's fast direction.
+    pub fn rspmv_into(&self, y: &[f64], acc: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.rows);
+        debug_assert_eq!(acc.len(), self.cols);
+        for j in 0..self.cols {
+            let mut s = 0.0;
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                s += self.values[p] * y[self.row_indices[p] as usize];
+            }
+            acc[j] += s;
+        }
+    }
+
+    /// `C += A·B` for dense `B` (sparse×dense from CSC): column k of A
+    /// axpys B's row k into the C rows its entries touch.
+    pub fn spmm_acc(&self, b: &DenseMatrix, c: &mut DenseMatrix) {
+        debug_assert_eq!(self.cols, b.rows);
+        debug_assert_eq!((c.rows, c.cols), (self.rows, b.cols));
+        for k in 0..self.cols {
+            let brow = b.row(k);
+            for p in self.col_ptrs[k]..self.col_ptrs[k + 1] {
+                let i = self.row_indices[p] as usize;
+                let v = self.values[p];
+                for (cv, &bv) in c.row_mut(i).iter_mut().zip(brow) {
+                    *cv += v * bv;
+                }
+            }
+        }
+    }
+
+    /// Convert to CSR (counting transpose — O(nnz + rows + cols)).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut row_ptrs = vec![0usize; self.rows + 1];
+        for &i in &self.row_indices {
+            row_ptrs[i as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptrs[i + 1] += row_ptrs[i];
+        }
+        let mut col_indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = row_ptrs.clone();
+        for j in 0..self.cols {
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                let i = self.row_indices[p] as usize;
+                let q = next[i];
+                next[i] += 1;
+                col_indices[q] = j as u32;
+                values[q] = self.values[p];
+            }
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, row_ptrs, col_indices, values }
+    }
+
+    /// Sum of squared stored values.
+    pub fn frob_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Densify (O(rows·cols)).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            for p in self.col_ptrs[j]..self.col_ptrs[j + 1] {
+                m.set(self.row_indices[p] as usize, j, self.values[p]);
+            }
+        }
+        m
+    }
+}
+
+/// `C += A·B` with dense `A`, CSR `B` (dense×sparse): for each C row i,
+/// every `a[i,k]` axpys B's sparse row k into C's row i — no column
+/// scatter, C rows written sequentially.
+pub fn spmm_acc_ds(a: &DenseMatrix, b: &CsrMatrix, c: &mut DenseMatrix) {
+    debug_assert_eq!(a.cols, b.rows);
+    debug_assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            for p in b.row_ptrs[k]..b.row_ptrs[k + 1] {
+                crow[b.col_indices[p] as usize] += aik * b.values[p];
+            }
+        }
+    }
+}
+
+/// `C += A·B` with CSR `A` and CSR `B` (sparse×sparse, dense
+/// accumulator) — Gustavson's algorithm with C's dense row as the
+/// scatter workspace.
+pub fn spmm_acc_ss(a: &CsrMatrix, b: &CsrMatrix, c: &mut DenseMatrix) {
+    debug_assert_eq!(a.cols, b.rows);
+    debug_assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    for i in 0..a.rows {
+        let crow = c.row_mut(i);
+        for p in a.row_ptrs[i]..a.row_ptrs[i + 1] {
+            let k = a.col_indices[p] as usize;
+            let va = a.values[p];
+            for q in b.row_ptrs[k]..b.row_ptrs[k + 1] {
+                crow[b.col_indices[q] as usize] += va * b.values[q];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -367,5 +734,120 @@ mod tests {
         assert!(m.spmv(&Vector::zeros(4)).is_err());
         assert!(m.spmv_t(&Vector::zeros(3)).is_err());
         assert!(m.spmm(&DenseMatrix::zeros(4, 2)).is_err());
+    }
+
+    // ------------------------------------------------- CSR/CSC kernels
+
+    fn random_csr(g: &mut crate::util::prop::Gen, r: usize, c: usize, density: f64) -> CsrMatrix {
+        let ccs = SparseMatrix::rand(r, c, density, g.rng());
+        let entries: Vec<_> = ccs.iter_entries().collect();
+        CsrMatrix::from_coo(r, c, entries).unwrap()
+    }
+
+    #[test]
+    fn csr_csc_roundtrip_and_dense_agree() {
+        check("csr <-> csc <-> dense roundtrip", 20, |g| {
+            let r = 1 + g.int(0, 20);
+            let c = 1 + g.int(0, 15);
+            let a = random_csr(g, r, c, 0.3);
+            let d = a.to_dense();
+            assert_eq!(a.to_csc().to_dense().data, d.data, "csc densify");
+            assert_eq!(a.to_csc().to_csr(), a, "csc->csr roundtrip");
+            assert_eq!(CsrMatrix::from_dense(&d).to_dense().data, d.data, "from_dense");
+            assert_eq!(a.transpose().to_dense().data, d.transpose().data, "transpose");
+        });
+    }
+
+    #[test]
+    fn csr_csc_spmv_kernels_match_dense_property() {
+        check("csr/csc spmv_into + rspmv_into == dense", 25, |g| {
+            let r = 1 + g.int(0, 20);
+            let c = 1 + g.int(0, 15);
+            let a = random_csr(g, r, c, 0.3);
+            let csc = a.to_csc();
+            let d = a.to_dense();
+            let x = Vector((0..c).map(|_| g.normal()).collect());
+            let y = Vector((0..r).map(|_| g.normal()).collect());
+            let want_mv = d.matvec(&x).unwrap();
+            let want_rv = d.tmatvec(&y).unwrap();
+            let mut acc = vec![0.0; r];
+            a.spmv_into(&x.0, &mut acc);
+            assert_allclose(&acc, &want_mv.0, 1e-12, "csr spmv_into");
+            let mut acc2 = vec![0.0; r];
+            csc.spmv_into(&x.0, &mut acc2);
+            assert_allclose(&acc2, &want_mv.0, 1e-12, "csc spmv_into");
+            let mut acc3 = vec![0.0; c];
+            a.rspmv_into(&y.0, &mut acc3);
+            assert_allclose(&acc3, &want_rv.0, 1e-12, "csr rspmv_into");
+            let mut acc4 = vec![0.0; c];
+            csc.rspmv_into(&y.0, &mut acc4);
+            assert_allclose(&acc4, &want_rv.0, 1e-12, "csc rspmv_into");
+            // kernels accumulate: a second application doubles the result
+            a.spmv_into(&x.0, &mut acc);
+            let doubled: Vec<f64> = want_mv.0.iter().map(|v| 2.0 * v).collect();
+            assert_allclose(&acc, &doubled, 1e-12, "csr spmv accumulates");
+        });
+    }
+
+    #[test]
+    fn spmm_acc_family_matches_dense_property() {
+        check("spmm_acc sd/ds/ss == dense matmul", 20, |g| {
+            let m = 1 + g.int(0, 12);
+            let k = 1 + g.int(0, 10);
+            let n = 1 + g.int(0, 8);
+            let a = random_csr(g, m, k, 0.4);
+            let b = random_csr(g, k, n, 0.4);
+            let ad = a.to_dense();
+            let bd = b.to_dense();
+            let want = ad.matmul(&bd).unwrap();
+            let mut c1 = DenseMatrix::zeros(m, n);
+            a.spmm_acc(&bd, &mut c1);
+            assert_allclose(&c1.data, &want.data, 1e-12, "csr spmm_acc (sparse×dense)");
+            let mut c2 = DenseMatrix::zeros(m, n);
+            a.to_csc().spmm_acc(&bd, &mut c2);
+            assert_allclose(&c2.data, &want.data, 1e-12, "csc spmm_acc (sparse×dense)");
+            let mut c3 = DenseMatrix::zeros(m, n);
+            spmm_acc_ds(&ad, &b, &mut c3);
+            assert_allclose(&c3.data, &want.data, 1e-12, "spmm_acc_ds (dense×sparse)");
+            let mut c4 = DenseMatrix::zeros(m, n);
+            spmm_acc_ss(&a, &b, &mut c4);
+            assert_allclose(&c4.data, &want.data, 1e-12, "spmm_acc_ss (sparse×sparse)");
+            // accumulation on a nonzero C
+            let mut c5 = want.clone();
+            spmm_acc_ss(&a, &b, &mut c5);
+            let doubled: Vec<f64> = want.data.iter().map(|v| 2.0 * v).collect();
+            assert_allclose(&c5.data, &doubled, 1e-12, "spmm_acc accumulates");
+        });
+    }
+
+    #[test]
+    fn csr_handles_empty_rows_and_columns() {
+        // rows 1 and 3 empty, column 0 and 3 empty
+        let a = CsrMatrix::from_coo(4, 4, vec![(0, 1, 2.0), (2, 2, -3.0)]).unwrap();
+        assert_eq!(a.row_ptrs, vec![0, 1, 1, 2, 2]);
+        let x = [1.0, 1.0, 1.0, 1.0];
+        let mut acc = vec![0.0; 4];
+        a.spmv_into(&x, &mut acc);
+        assert_eq!(acc, vec![2.0, 0.0, -3.0, 0.0]);
+        let csc = a.to_csc();
+        assert_eq!(csc.col_ptrs, vec![0, 0, 1, 2, 2]);
+        let mut racc = vec![0.0; 4];
+        csc.rspmv_into(&x, &mut racc);
+        assert_eq!(racc, vec![0.0, 2.0, -3.0, 0.0]);
+        // fully empty matrix is fine
+        let e = CsrMatrix::from_coo(3, 2, vec![]).unwrap();
+        assert_eq!(e.nnz(), 0);
+        let mut acc = vec![0.0; 3];
+        e.spmv_into(&[0.0, 0.0], &mut acc);
+        assert_eq!(acc, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn csr_duplicates_summed_and_bounds_checked() {
+        let a = CsrMatrix::from_coo(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5), (1, 1, -1.0)]).unwrap();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.to_dense().get(0, 0), 3.5);
+        assert!(CsrMatrix::from_coo(2, 2, vec![(2, 0, 1.0)]).is_err());
+        assert!(CscMatrix::from_coo(2, 2, vec![(0, 2, 1.0)]).is_err());
     }
 }

@@ -149,6 +149,13 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         self
     }
 
+    /// True when this RDD is currently marked for caching — consumers
+    /// like `CoordinateMatrix::compiled` use it to decide how much to
+    /// precompute (a cached operator signals iterative reuse).
+    pub fn is_cached(&self) -> bool {
+        self.inner.cache_flag.load(Ordering::SeqCst)
+    }
+
     /// Drop cached blocks.
     pub fn unpersist(&self) {
         self.inner.cache_flag.store(false, Ordering::SeqCst);

@@ -62,13 +62,30 @@ pub struct Metrics {
     pub shuffle_bytes_estimate: AtomicU64,
     /// XLA executions dispatched by the runtime.
     pub xla_calls: AtomicU64,
+    /// CSR kernel dispatches (compiled-partition SpMV/rSpMV/SpMM and
+    /// sparse block kernels).
+    pub kernels_csr: AtomicU64,
+    /// CSC kernel dispatches.
+    pub kernels_csc: AtomicU64,
+    /// COO fallback kernel dispatches (tiny or index-overflowing
+    /// partitions that stay in entry form).
+    pub kernels_coo: AtomicU64,
+    /// Simulate-multiply block contractions by operand format:
+    /// dense×dense (the classic `gemm_acc` path).
+    pub spmm_dense_dense: AtomicU64,
+    /// Simulate-multiply sparse×dense contractions.
+    pub spmm_sparse_dense: AtomicU64,
+    /// Simulate-multiply dense×sparse contractions.
+    pub spmm_dense_sparse: AtomicU64,
+    /// Simulate-multiply sparse×sparse contractions (dense accumulator).
+    pub spmm_sparse_sparse: AtomicU64,
 }
 
 impl Metrics {
     /// Pretty one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffles={} skipped={} shuffled_recs={} xla={}",
+            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffles={} skipped={} shuffled_recs={} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
             self.jobs.load(Ordering::Relaxed),
             self.tasks_started.load(Ordering::Relaxed),
             self.tasks_failed.load(Ordering::Relaxed),
@@ -83,6 +100,13 @@ impl Metrics {
             self.shuffle_records_written.load(Ordering::Relaxed),
             self.xla_calls.load(Ordering::Relaxed)
                 + crate::runtime::client::XLA_CALLS.load(Ordering::Relaxed),
+            self.kernels_csr.load(Ordering::Relaxed),
+            self.kernels_csc.load(Ordering::Relaxed),
+            self.kernels_coo.load(Ordering::Relaxed),
+            self.spmm_dense_dense.load(Ordering::Relaxed),
+            self.spmm_sparse_dense.load(Ordering::Relaxed),
+            self.spmm_dense_sparse.load(Ordering::Relaxed),
+            self.spmm_sparse_sparse.load(Ordering::Relaxed),
         )
     }
 }

@@ -5,7 +5,7 @@
 
 use std::sync::atomic::Ordering;
 
-use sparkla::distributed::{BlockMatrix, CoordinateMatrix};
+use sparkla::distributed::{Block, BlockMatrix, CoordinateMatrix};
 use sparkla::linalg::matrix::DenseMatrix;
 use sparkla::rdd::Partitioner;
 use sparkla::util::prop::check;
@@ -59,7 +59,8 @@ fn multiply_runs_exactly_one_shuffle_with_pruned_destinations() {
     // each stored block contracts with exactly one opposite block, so
     // destination pruning ships exactly one copy of each
     let mut rng = SplitMix64::new(7);
-    let d: Vec<DenseMatrix> = (0..4).map(|_| DenseMatrix::randn(2, 2, &mut rng)).collect();
+    let d: Vec<Block> =
+        (0..4).map(|_| Block::Dense(DenseMatrix::randn(2, 2, &mut rng))).collect();
     let a_blocks = c.parallelize(vec![((0, 0), d[0].clone()), ((1, 1), d[1].clone())], 2);
     let b_blocks = c.parallelize(vec![((0, 0), d[2].clone()), ((1, 1), d[3].clone())], 2);
     let a = BlockMatrix::new(&c, a_blocks, 2, 2, 4, 4);
