@@ -1,0 +1,134 @@
+//! Memory-governance benchmarks (the memory subsystem PR, measured):
+//!
+//! 1. `reduce_by_key` at several memory budgets — unlimited (all buckets
+//!    resident) down to budgets far below the shuffle footprint (most
+//!    buckets spill to disk) — with the spill volume each budget causes
+//!    and the overhead the spill codec + disk round-trip adds;
+//! 2. grid simulate-multiply under an unlimited vs a spill-forcing
+//!    budget (the routed `Arc<Block>` buckets hit the same governor).
+//!
+//! Every run is checked bit-identical to the unlimited result before it
+//! is timed. Writes `target/experiments/BENCH_memory.json`.
+
+use std::sync::atomic::Ordering;
+
+use sparkla::bench::{bench, BenchConfig, Table};
+use sparkla::config::ClusterConfig;
+use sparkla::distributed::BlockMatrix;
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn budgeted_ctx(budget: Option<u64>) -> Context {
+    let mut cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    cfg.memory_budget_bytes = budget;
+    Context::with_config(cfg)
+}
+
+fn budget_label(budget: Option<u64>) -> String {
+    match budget {
+        None => "unlimited".into(),
+        Some(b) if b >= 1 << 20 => format!("{}M", b >> 20),
+        Some(b) if b >= 1 << 10 => format!("{}k", b >> 10),
+        Some(b) => format!("{b}"),
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let mut table = Table::new(&["benchmark", "time", "detail"]);
+    let mut rbk_json = vec![];
+
+    // ---- reduce_by_key across a budget sweep
+    let n_rec: usize = if fast { 40_000 } else { 400_000 };
+    let data: Vec<(u32, u64)> = (0..n_rec).map(|i| ((i % 256) as u32, i as u64)).collect();
+    let budgets: Vec<Option<u64>> =
+        vec![None, Some(1 << 20), Some(64 << 10), Some(4 << 10)];
+
+    let unlimited = budgeted_ctx(None);
+    let mut want = unlimited
+        .parallelize(data.clone(), 16)
+        .map(|p| *p)
+        .reduce_by_key(8, |a, b| a + b)
+        .collect()
+        .unwrap();
+    want.sort();
+
+    let mut base_median = 0.0f64;
+    for &budget in &budgets {
+        let ctx = budgeted_ctx(budget);
+        let rdd = ctx.parallelize(data.clone(), 16).map(|p| *p);
+        let mut got = rdd.reduce_by_key(8, |a, b| a + b).collect().unwrap();
+        got.sort();
+        assert_eq!(got, want, "budget {budget:?} changed the result");
+        let spilled_once = ctx.metrics().bytes_spilled.load(Ordering::Relaxed);
+        let files_once = ctx.metrics().spill_files.load(Ordering::Relaxed);
+        let label = budget_label(budget);
+        let m = bench(&format!("rbk_{label}"), &cfg, || {
+            std::hint::black_box(rdd.reduce_by_key(8, |a, b| a + b).count().unwrap());
+        });
+        if budget.is_none() {
+            base_median = m.median();
+        }
+        let overhead = m.median() / base_median.max(1e-12);
+        table.row(&[
+            format!("reduce_by_key budget={label}"),
+            format!("{:.1} ms", m.median() * 1e3),
+            format!("{spilled_once} B spilled / {files_once} files ({overhead:.2}x)"),
+        ]);
+        rbk_json.push(format!(
+            "    {{\"budget\": \"{label}\", \"median_sec\": {:.6e}, \"bytes_spilled\": {spilled_once}, \"spill_files\": {files_once}, \"overhead_vs_unlimited\": {overhead:.3}}}",
+            m.median()
+        ));
+    }
+
+    // ---- simulate-multiply, unlimited vs spill-forcing budget
+    let (mm, kk, nn, block) = if fast { (64, 48, 48, 16) } else { (192, 128, 128, 32) };
+    let mut rng = SplitMix64::new(7);
+    let a = DenseMatrix::randn(mm, kk, &mut rng);
+    let b = DenseMatrix::randn(kk, nn, &mut rng);
+
+    let free = budgeted_ctx(None);
+    let fa = BlockMatrix::from_local(&free, &a, block, block, 4);
+    let fb = BlockMatrix::from_local(&free, &b, block, block, 4);
+    let want_mul = fa.multiply(&fb).unwrap().to_local().unwrap();
+    let m_free = bench("mul_unlimited", &cfg, || {
+        std::hint::black_box(fa.multiply(&fb).unwrap().blocks.count().unwrap());
+    });
+
+    let tight = budgeted_ctx(Some(8 << 10));
+    let ta = BlockMatrix::from_local(&tight, &a, block, block, 4);
+    let tb = BlockMatrix::from_local(&tight, &b, block, block, 4);
+    let got_mul = ta.multiply(&tb).unwrap().to_local().unwrap();
+    assert_eq!(got_mul.data, want_mul.data, "spilled multiply changed the result");
+    let mul_spilled = tight.metrics().bytes_spilled.load(Ordering::Relaxed);
+    let m_tight = bench("mul_8k_budget", &cfg, || {
+        std::hint::black_box(ta.multiply(&tb).unwrap().blocks.count().unwrap());
+    });
+    let mul_overhead = m_tight.median() / m_free.median().max(1e-12);
+    table.row(&[
+        format!("multiply {mm}x{kk}x{nn} unlimited"),
+        format!("{:.1} ms", m_free.median() * 1e3),
+        "all buckets resident".into(),
+    ]);
+    table.row(&[
+        format!("multiply {mm}x{kk}x{nn} budget=8k"),
+        format!("{:.1} ms", m_tight.median() * 1e3),
+        format!("{mul_spilled} B spilled ({mul_overhead:.2}x)"),
+    ]);
+
+    let json = format!(
+        "{{\n  \"bench\": \"memory\",\n  \"records\": {n_rec},\n  \"reduce_by_key\": [\n{}\n  ],\n  \"multiply_unlimited_median_sec\": {:.6e},\n  \"multiply_8k_budget_median_sec\": {:.6e},\n  \"multiply_spill_overhead\": {:.3},\n  \"multiply_bytes_spilled\": {mul_spilled}\n}}\n",
+        rbk_json.join(",\n"),
+        m_free.median(),
+        m_tight.median(),
+        mul_overhead
+    );
+    let json_path = std::path::Path::new("target/experiments/BENCH_memory.json");
+    std::fs::create_dir_all(json_path.parent().unwrap()).unwrap();
+    std::fs::write(json_path, json).unwrap();
+
+    println!("{}", table.render());
+    println!("results -> {json_path:?}");
+}

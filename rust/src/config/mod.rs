@@ -47,10 +47,47 @@ pub struct ClusterConfig {
     /// Use the XLA/PJRT runtime for per-partition kernels when artifacts
     /// are available (falls back to native automatically when not).
     pub use_xla: bool,
+    /// Executor memory budget in bytes that shuffle buckets and cached
+    /// partitions reserve against (`None` = unlimited, the default: no
+    /// spill, no pressure eviction, zero behavior change). Under
+    /// pressure the shuffle spills runs to disk and the block cache
+    /// evicts LRU entries — see DESIGN.md §"Memory governance".
+    /// Accepts `k`/`m`/`g` suffixes in config files and
+    /// `SPARKLA_MEMORY_BUDGET_BYTES`.
+    pub memory_budget_bytes: Option<u64>,
+}
+
+/// Parse a byte count: a plain integer, or one with a `k`/`m`/`g`
+/// (KiB/MiB/GiB) suffix; `unlimited`/`none` mean no budget.
+fn parse_budget(v: &str) -> Option<Option<u64>> {
+    let t = v.trim().to_lowercase();
+    if t == "unlimited" || t == "none" {
+        return Some(None);
+    }
+    let (digits, mult) = match t.strip_suffix(['k', 'm', 'g']) {
+        Some(num) => {
+            let mult = match t.as_bytes()[t.len() - 1] {
+                b'k' => 1u64 << 10,
+                b'm' => 1u64 << 20,
+                _ => 1u64 << 30,
+            };
+            (num, mult)
+        }
+        None => (t.as_str(), 1),
+    };
+    digits.trim().parse::<u64>().ok().map(|n| Some(n.saturating_mul(mult)))
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
+        // `Context::local` and most tests build straight from this
+        // Default without `apply_env`, so the budget env var — the knob
+        // CI uses to run the whole suite under pressure — is honored
+        // here directly.
+        let memory_budget_bytes = std::env::var("SPARKLA_MEMORY_BUDGET_BYTES")
+            .ok()
+            .and_then(|v| parse_budget(&v))
+            .unwrap_or(None);
         ClusterConfig {
             app_name: "sparkla".into(),
             num_executors: 4,
@@ -60,6 +97,7 @@ impl Default for ClusterConfig {
             fault: FaultConfig::default(),
             artifacts_dir: "artifacts".into(),
             use_xla: false,
+            memory_budget_bytes,
         }
     }
 }
@@ -100,6 +138,10 @@ impl ClusterConfig {
                 "fault.seed" => self.fault.seed = v.parse().map_err(|_| bad("u64"))?,
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "use_xla" => self.use_xla = v.parse().map_err(|_| bad("bool"))?,
+                "memory_budget_bytes" => {
+                    self.memory_budget_bytes = parse_budget(v)
+                        .ok_or_else(|| bad("bytes (k/m/g suffix ok) or \"unlimited\""))?
+                }
                 other => {
                     return Err(Error::InvalidArgument(format!("unknown config key {other:?}")))
                 }
@@ -187,5 +229,21 @@ mod tests {
         assert!(c.apply_kv(&[("fault.task_fail_prob".into(), "1.5".into())]).is_err());
         assert!(c.apply_kv(&[("no_such_key".into(), "1".into())]).is_err());
         assert!(c.apply_kv(&[("num_executors".into(), "0".into())]).is_err());
+        assert!(c.apply_kv(&[("memory_budget_bytes".into(), "lots".into())]).is_err());
+    }
+
+    #[test]
+    fn memory_budget_parses_suffixes_and_unlimited() {
+        let mut c = ClusterConfig::default();
+        c.apply_kv(&[("memory_budget_bytes".into(), "65536".into())]).unwrap();
+        assert_eq!(c.memory_budget_bytes, Some(65536));
+        c.apply_kv(&[("memory_budget_bytes".into(), "4k".into())]).unwrap();
+        assert_eq!(c.memory_budget_bytes, Some(4096));
+        c.apply_kv(&[("memory_budget_bytes".into(), "2M".into())]).unwrap();
+        assert_eq!(c.memory_budget_bytes, Some(2 << 20));
+        c.apply_kv(&[("memory_budget_bytes".into(), "1g".into())]).unwrap();
+        assert_eq!(c.memory_budget_bytes, Some(1 << 30));
+        c.apply_kv(&[("memory_budget_bytes".into(), "unlimited".into())]).unwrap();
+        assert_eq!(c.memory_budget_bytes, None);
     }
 }

@@ -959,6 +959,41 @@ fn gather_mul_side(
     }
 }
 
+impl crate::rdd::memory::SizeOf for Block {
+    fn heap_bytes(&self) -> usize {
+        use crate::rdd::memory::SizeOf;
+        match self {
+            Block::Dense(m) => m.heap_bytes(),
+            Block::Sparse(s) => s.heap_bytes(),
+        }
+    }
+}
+
+impl crate::rdd::memory::Spill for Block {
+    fn encode(&self, out: &mut Vec<u8>) {
+        use crate::rdd::memory::Spill;
+        match self {
+            Block::Dense(m) => {
+                out.push(0);
+                m.encode(out);
+            }
+            Block::Sparse(s) => {
+                out.push(1);
+                s.encode(out);
+            }
+        }
+    }
+
+    fn decode(src: &mut &[u8]) -> crate::error::Result<Self> {
+        use crate::rdd::memory::Spill;
+        match u8::decode(src)? {
+            0 => DenseMatrix::decode(src).map(Block::Dense),
+            1 => CsrMatrix::decode(src).map(Block::Sparse),
+            _ => Err(Error::msg("spill decode: invalid Block tag")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -341,6 +341,26 @@ impl CoordinateMatrix {
     }
 }
 
+impl crate::rdd::memory::SizeOf for MatrixEntry {
+    fn heap_bytes(&self) -> usize {
+        0
+    }
+}
+
+impl crate::rdd::memory::Spill for MatrixEntry {
+    fn encode(&self, out: &mut Vec<u8>) {
+        use crate::rdd::memory::Spill;
+        self.i.encode(out);
+        self.j.encode(out);
+        self.value.encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> crate::error::Result<Self> {
+        use crate::rdd::memory::Spill;
+        Ok(MatrixEntry { i: u64::decode(src)?, j: u64::decode(src)?, value: f64::decode(src)? })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -117,6 +117,41 @@ pub fn rows_to_block(rows: &[Row], n_cols: usize) -> DenseMatrix {
     m
 }
 
+impl crate::rdd::memory::SizeOf for Row {
+    fn heap_bytes(&self) -> usize {
+        use crate::rdd::memory::SizeOf;
+        match self {
+            Row::Dense(v) => v.heap_bytes(),
+            Row::Sparse(s) => s.heap_bytes(),
+        }
+    }
+}
+
+impl crate::rdd::memory::Spill for Row {
+    fn encode(&self, out: &mut Vec<u8>) {
+        use crate::rdd::memory::Spill;
+        match self {
+            Row::Dense(v) => {
+                out.push(0);
+                v.encode(out);
+            }
+            Row::Sparse(s) => {
+                out.push(1);
+                s.encode(out);
+            }
+        }
+    }
+
+    fn decode(src: &mut &[u8]) -> crate::error::Result<Self> {
+        use crate::rdd::memory::Spill;
+        match u8::decode(src)? {
+            0 => Vec::<f64>::decode(src).map(Row::Dense),
+            1 => SparseVector::decode(src).map(Row::Sparse),
+            _ => Err(crate::error::Error::msg("spill decode: invalid Row tag")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -335,6 +335,20 @@ impl PartitionedSparse {
     }
 }
 
+impl crate::rdd::memory::SizeOf for PartitionedSparse {
+    fn heap_bytes(&self) -> usize {
+        use crate::rdd::memory::SizeOf;
+        match &self.store {
+            Store::Coo(entries) => entries.heap_bytes(),
+            Store::Csr { row_ids, csr } => row_ids.heap_bytes() + csr.heap_bytes(),
+            Store::Csc { col_ids, csc } => col_ids.heap_bytes() + csc.heap_bytes(),
+            Store::Dual { row_ids, csr, col_ids, csc } => {
+                row_ids.heap_bytes() + csr.heap_bytes() + col_ids.heap_bytes() + csc.heap_bytes()
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

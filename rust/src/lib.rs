@@ -75,6 +75,19 @@
 //! keeps sufficiently sparse blocks in CSR and routes its
 //! simulate-multiply through format-specific SpMM kernels (DESIGN.md
 //! §"Sparse engine").
+//!
+//! Executor memory is **governed**: set
+//! `ClusterConfig::memory_budget_bytes` (or
+//! `SPARKLA_MEMORY_BUDGET_BYTES`, with `k`/`m`/`g` suffixes) and shuffle
+//! buckets + cached partitions reserve their deep
+//! [`rdd::SizeOf`] byte counts against one per-cluster
+//! [`rdd::MemoryManager`]. Over budget, shuffle buckets spill to disk as
+//! encoded runs (merged back bit-identically on the reduce side) and the
+//! block cache evicts LRU unpinned partitions (lineage recomputes the
+//! miss); `Metrics` counts `bytes_reserved` / `bytes_spilled` /
+//! `spill_files` / `blocks_evicted_pressure`. The default is unlimited:
+//! nothing spills and behavior is byte-for-byte unchanged (DESIGN.md
+//! §"Memory governance").
 
 pub mod error;
 pub mod util;

@@ -287,6 +287,32 @@ impl std::fmt::Display for DenseMatrix {
     }
 }
 
+impl crate::rdd::memory::SizeOf for DenseMatrix {
+    fn heap_bytes(&self) -> usize {
+        crate::rdd::memory::SizeOf::heap_bytes(&self.data)
+    }
+}
+
+impl crate::rdd::memory::Spill for DenseMatrix {
+    fn encode(&self, out: &mut Vec<u8>) {
+        use crate::rdd::memory::Spill;
+        self.rows.encode(out);
+        self.cols.encode(out);
+        self.data.encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> crate::error::Result<Self> {
+        use crate::rdd::memory::Spill;
+        let rows = usize::decode(src)?;
+        let cols = usize::decode(src)?;
+        let data = Vec::<f64>::decode(src)?;
+        if data.len() != rows * cols {
+            return Err(crate::error::Error::msg("spill decode: DenseMatrix shape mismatch"));
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

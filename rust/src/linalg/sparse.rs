@@ -613,6 +613,92 @@ pub fn spmm_acc_ss(a: &CsrMatrix, b: &CsrMatrix, c: &mut DenseMatrix) {
     }
 }
 
+mod memory_impls {
+    use super::{CscMatrix, CsrMatrix, SparseVector};
+    use crate::error::{Error, Result};
+    use crate::rdd::memory::{SizeOf, Spill};
+
+    impl SizeOf for SparseVector {
+        fn heap_bytes(&self) -> usize {
+            self.indices.heap_bytes() + self.values.heap_bytes()
+        }
+    }
+
+    impl Spill for SparseVector {
+        fn encode(&self, out: &mut Vec<u8>) {
+            self.size.encode(out);
+            self.indices.encode(out);
+            self.values.encode(out);
+        }
+
+        fn decode(src: &mut &[u8]) -> Result<Self> {
+            let size = usize::decode(src)?;
+            let indices = Vec::<u32>::decode(src)?;
+            let values = Vec::<f64>::decode(src)?;
+            if indices.len() != values.len() {
+                return Err(Error::msg("spill decode: SparseVector arity mismatch"));
+            }
+            Ok(SparseVector { size, indices, values })
+        }
+    }
+
+    impl SizeOf for CsrMatrix {
+        fn heap_bytes(&self) -> usize {
+            self.row_ptrs.heap_bytes() + self.col_indices.heap_bytes() + self.values.heap_bytes()
+        }
+    }
+
+    impl Spill for CsrMatrix {
+        fn encode(&self, out: &mut Vec<u8>) {
+            self.rows.encode(out);
+            self.cols.encode(out);
+            self.row_ptrs.encode(out);
+            self.col_indices.encode(out);
+            self.values.encode(out);
+        }
+
+        fn decode(src: &mut &[u8]) -> Result<Self> {
+            let rows = usize::decode(src)?;
+            let cols = usize::decode(src)?;
+            let row_ptrs = Vec::<usize>::decode(src)?;
+            let col_indices = Vec::<u32>::decode(src)?;
+            let values = Vec::<f64>::decode(src)?;
+            if row_ptrs.len() != rows + 1 || col_indices.len() != values.len() {
+                return Err(Error::msg("spill decode: CsrMatrix shape mismatch"));
+            }
+            Ok(CsrMatrix { rows, cols, row_ptrs, col_indices, values })
+        }
+    }
+
+    impl SizeOf for CscMatrix {
+        fn heap_bytes(&self) -> usize {
+            self.col_ptrs.heap_bytes() + self.row_indices.heap_bytes() + self.values.heap_bytes()
+        }
+    }
+
+    impl Spill for CscMatrix {
+        fn encode(&self, out: &mut Vec<u8>) {
+            self.rows.encode(out);
+            self.cols.encode(out);
+            self.col_ptrs.encode(out);
+            self.row_indices.encode(out);
+            self.values.encode(out);
+        }
+
+        fn decode(src: &mut &[u8]) -> Result<Self> {
+            let rows = usize::decode(src)?;
+            let cols = usize::decode(src)?;
+            let col_ptrs = Vec::<usize>::decode(src)?;
+            let row_indices = Vec::<u32>::decode(src)?;
+            let values = Vec::<f64>::decode(src)?;
+            if col_ptrs.len() != cols + 1 || row_indices.len() != values.len() {
+                return Err(Error::msg("spill decode: CscMatrix shape mismatch"));
+            }
+            Ok(CscMatrix { rows, cols, col_ptrs, row_indices, values })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -165,6 +165,12 @@ pub fn blas_dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+impl crate::rdd::memory::SizeOf for Vector {
+    fn heap_bytes(&self) -> usize {
+        crate::rdd::memory::SizeOf::heap_bytes(&self.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,10 +1,25 @@
 //! Block manager: in-memory cache of computed partitions, tagged with the
 //! executor that produced them so a simulated executor crash can evict
 //! exactly that executor's blocks — making lineage recompute observable.
+//!
+//! **Memory governance** (DESIGN.md §"Memory governance"): every insert
+//! reserves the partition's deep [`SizeOf`](crate::rdd::memory::SizeOf)
+//! bytes against the cluster [`MemoryManager`]. Under pressure the
+//! manager evicts **least-recently-used, unpinned** entries (unpinned =
+//! nothing outside the cache holds the `Arc`, so a task mid-read is
+//! never yanked) until the new block fits, counting each one in
+//! `Metrics::blocks_evicted_pressure`. A miss on an evicted block flows
+//! through exactly the same lineage-recompute path as a crash eviction.
+//! If the block still cannot fit, `put` declines (returns `false`) and
+//! the partition simply stays uncached — correctness is unaffected.
 
 use std::any::Any;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::rdd::exec::Metrics;
+use crate::rdd::memory::MemoryManager;
 
 /// A cached partition: type-erased `Arc<Vec<T>>`.
 type Block = Arc<dyn Any + Send + Sync>;
@@ -12,34 +27,105 @@ type Block = Arc<dyn Any + Send + Sync>;
 /// Key: (rdd id, partition index).
 pub type BlockId = (usize, usize);
 
-/// Thread-safe block store.
+struct Entry {
+    executor: usize,
+    bytes: u64,
+    /// Logical-clock stamp of the last `get`/`put` (LRU order).
+    stamp: u64,
+    data: Block,
+}
+
+/// Thread-safe block store with budget-governed LRU eviction.
 pub struct BlockManager {
-    blocks: Mutex<HashMap<BlockId, (usize, Block)>>,
+    blocks: Mutex<HashMap<BlockId, Entry>>,
+    clock: AtomicU64,
+    memory: Arc<MemoryManager>,
+    metrics: Arc<Metrics>,
 }
 
 impl BlockManager {
-    /// Empty store.
-    pub fn new() -> BlockManager {
-        BlockManager { blocks: Mutex::new(HashMap::new()) }
+    /// Empty store governed by `memory`.
+    pub fn new(memory: Arc<MemoryManager>, metrics: Arc<Metrics>) -> BlockManager {
+        BlockManager {
+            blocks: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            memory,
+            metrics,
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Fetch a block if present, downcasting to the expected type.
+    /// Bumps the entry's recency stamp.
     pub fn get<T: Send + Sync + 'static>(&self, id: BlockId) -> Option<Arc<Vec<T>>> {
-        let guard = self.blocks.lock().expect("block map");
-        guard.get(&id).and_then(|(_exec, b)| Arc::clone(b).downcast::<Vec<T>>().ok())
+        let stamp = self.tick();
+        let mut guard = self.blocks.lock().expect("block map");
+        let entry = guard.get_mut(&id)?;
+        entry.stamp = stamp;
+        Arc::clone(&entry.data).downcast::<Vec<T>>().ok()
     }
 
-    /// Store a block computed by `executor`.
-    pub fn put<T: Send + Sync + 'static>(&self, id: BlockId, executor: usize, data: Arc<Vec<T>>) {
+    /// Store a block computed by `executor`, reserving its deep `bytes`.
+    /// Returns whether the block was actually cached: under pressure,
+    /// LRU unpinned entries are evicted first
+    /// (`Metrics::blocks_evicted_pressure`); if the reservation still
+    /// cannot be met the store is declined and the caller's partition
+    /// stays uncached (recompute on next access, same as any miss).
+    pub fn put<T: Send + Sync + 'static>(
+        &self,
+        id: BlockId,
+        executor: usize,
+        data: Arc<Vec<T>>,
+        bytes: u64,
+    ) -> bool {
+        let stamp = self.tick();
         let mut guard = self.blocks.lock().expect("block map");
-        guard.insert(id, (executor, data));
+        if !self.memory.try_reserve(bytes) {
+            self.evict_lru(&mut guard, bytes);
+            if !self.memory.try_reserve(bytes) {
+                return false;
+            }
+        }
+        if let Some(old) = guard.insert(id, Entry { executor, bytes, stamp, data }) {
+            self.memory.release(old.bytes);
+        }
+        true
+    }
+
+    /// Evict least-recently-used unpinned entries until `need` bytes
+    /// were released or no evictable entry remains. Pinned = some task
+    /// still holds the payload `Arc` (strong count > 1).
+    fn evict_lru(&self, guard: &mut HashMap<BlockId, Entry>, need: u64) {
+        let mut freed = 0u64;
+        while freed < need {
+            let victim = guard
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.data) == 1)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(id, _)| *id);
+            let Some(id) = victim else { break };
+            let entry = guard.remove(&id).expect("victim just found");
+            self.memory.release(entry.bytes);
+            self.metrics.blocks_evicted_pressure.fetch_add(1, Ordering::Relaxed);
+            freed += entry.bytes;
+        }
     }
 
     /// Evict everything `executor` held; returns the count (metric).
     pub fn evict_executor(&self, executor: usize) -> usize {
         let mut guard = self.blocks.lock().expect("block map");
         let before = guard.len();
-        guard.retain(|_, (e, _)| *e != executor);
+        guard.retain(|_, e| {
+            if e.executor == executor {
+                self.memory.release(e.bytes);
+                false
+            } else {
+                true
+            }
+        });
         before - guard.len()
     }
 
@@ -47,7 +133,14 @@ impl BlockManager {
     pub fn evict_rdd(&self, rdd_id: usize) -> usize {
         let mut guard = self.blocks.lock().expect("block map");
         let before = guard.len();
-        guard.retain(|(r, _), _| *r != rdd_id);
+        guard.retain(|(r, _), e| {
+            if *r == rdd_id {
+                self.memory.release(e.bytes);
+                false
+            } else {
+                true
+            }
+        });
         before - guard.len()
     }
 
@@ -64,7 +157,9 @@ impl BlockManager {
 
 impl Default for BlockManager {
     fn default() -> Self {
-        Self::new()
+        let metrics = Arc::new(Metrics::default());
+        let memory = Arc::new(MemoryManager::new(None, Arc::clone(&metrics)));
+        Self::new(memory, metrics)
     }
 }
 
@@ -72,10 +167,16 @@ impl Default for BlockManager {
 mod tests {
     use super::*;
 
+    fn governed(budget: u64) -> (BlockManager, Arc<Metrics>, Arc<MemoryManager>) {
+        let metrics = Arc::new(Metrics::default());
+        let memory = Arc::new(MemoryManager::new(Some(budget), Arc::clone(&metrics)));
+        (BlockManager::new(Arc::clone(&memory), Arc::clone(&metrics)), metrics, memory)
+    }
+
     #[test]
     fn put_get_roundtrip() {
-        let bm = BlockManager::new();
-        bm.put((1, 0), 2, Arc::new(vec![1.0f64, 2.0]));
+        let bm = BlockManager::default();
+        assert!(bm.put((1, 0), 2, Arc::new(vec![1.0f64, 2.0]), 16));
         let got: Arc<Vec<f64>> = bm.get((1, 0)).unwrap();
         assert_eq!(*got, vec![1.0, 2.0]);
         assert!(bm.get::<f64>((1, 1)).is_none());
@@ -83,17 +184,17 @@ mod tests {
 
     #[test]
     fn wrong_type_is_none() {
-        let bm = BlockManager::new();
-        bm.put((1, 0), 0, Arc::new(vec![1u32]));
+        let bm = BlockManager::default();
+        bm.put((1, 0), 0, Arc::new(vec![1u32]), 4);
         assert!(bm.get::<f64>((1, 0)).is_none());
     }
 
     #[test]
     fn evict_by_executor() {
-        let bm = BlockManager::new();
-        bm.put((1, 0), 0, Arc::new(vec![1]));
-        bm.put((1, 1), 1, Arc::new(vec![2]));
-        bm.put((2, 0), 0, Arc::new(vec![3]));
+        let bm = BlockManager::default();
+        bm.put((1, 0), 0, Arc::new(vec![1]), 4);
+        bm.put((1, 1), 1, Arc::new(vec![2]), 4);
+        bm.put((2, 0), 0, Arc::new(vec![3]), 4);
         assert_eq!(bm.evict_executor(0), 2);
         assert_eq!(bm.len(), 1);
         assert!(bm.get::<i32>((1, 1)).is_some());
@@ -101,11 +202,39 @@ mod tests {
 
     #[test]
     fn evict_by_rdd() {
-        let bm = BlockManager::new();
-        bm.put((1, 0), 0, Arc::new(vec![1]));
-        bm.put((1, 1), 1, Arc::new(vec![2]));
-        bm.put((2, 0), 2, Arc::new(vec![3]));
+        let (bm, _, mem) = governed(100);
+        bm.put((1, 0), 0, Arc::new(vec![1]), 10);
+        bm.put((1, 1), 1, Arc::new(vec![2]), 10);
+        bm.put((2, 0), 2, Arc::new(vec![3]), 10);
+        assert_eq!(mem.used(), 30);
         assert_eq!(bm.evict_rdd(1), 2);
         assert_eq!(bm.len(), 1);
+        assert_eq!(mem.used(), 10, "eviction must return reservations");
+    }
+
+    #[test]
+    fn pressure_evicts_lru_unpinned_first() {
+        let (bm, metrics, mem) = governed(100);
+        assert!(bm.put((1, 0), 0, Arc::new(vec![1u64]), 40));
+        assert!(bm.put((2, 0), 0, Arc::new(vec![2u64]), 40));
+        bm.get::<u64>((1, 0)).unwrap(); // (1,0) is now the most recent
+        assert!(bm.put((3, 0), 0, Arc::new(vec![3u64]), 40), "LRU victim frees room");
+        assert_eq!(metrics.blocks_evicted_pressure.load(Ordering::Relaxed), 1);
+        assert!(bm.get::<u64>((2, 0)).is_none(), "the stale block was the victim");
+        assert!(bm.get::<u64>((1, 0)).is_some(), "the touched block survives");
+        assert!(mem.used() <= 100);
+    }
+
+    #[test]
+    fn pinned_blocks_are_never_evicted_and_put_declines() {
+        let (bm, metrics, _) = governed(50);
+        let payload = Arc::new(vec![7u64]);
+        assert!(bm.put((1, 0), 0, Arc::clone(&payload), 40)); // pinned by `payload`
+        assert!(!bm.put((2, 0), 0, Arc::new(vec![8u64]), 40), "no unpinned victim: decline");
+        assert_eq!(metrics.blocks_evicted_pressure.load(Ordering::Relaxed), 0);
+        assert!(bm.get::<u64>((1, 0)).is_some(), "pinned block survives");
+        drop(payload);
+        assert!(bm.put((2, 0), 0, Arc::new(vec![8u64]), 40), "unpinned now: evictable");
+        assert_eq!(metrics.blocks_evicted_pressure.load(Ordering::Relaxed), 1);
     }
 }

@@ -54,6 +54,11 @@ pub(crate) struct RddInner<T> {
     pub partitioner: OnceLock<crate::rdd::pair::Partitioner>,
     pub cache_flag: AtomicBool,
     pub was_cached: AtomicBool,
+    /// Deep-size closure installed by `cache()` — the only place a
+    /// [`SizeOf`](crate::rdd::memory::SizeOf) bound exists, so plain
+    /// transformations stay bound-free. `materialize` calls it to
+    /// reserve a partition's bytes before storing the block.
+    pub sizer: OnceLock<Box<dyn Fn(&[T]) -> u64 + Send + Sync>>,
 }
 
 /// A distributed collection of `T` records.
@@ -102,6 +107,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
                 partitioner: OnceLock::new(),
                 cache_flag: AtomicBool::new(false),
                 was_cached: AtomicBool::new(false),
+                sizer: OnceLock::new(),
             }),
         }
     }
@@ -144,7 +150,20 @@ impl<T: Send + Sync + 'static> Rdd<T> {
     /// in the block manager keyed by the computing executor. Caching is a
     /// fusion barrier — downstream narrow stages stream from the cached
     /// block instead of recomputing the upstream pipeline.
-    pub fn cache(self) -> Rdd<T> {
+    ///
+    /// Each stored partition reserves its deep
+    /// [`SizeOf`](crate::rdd::memory::SizeOf) bytes against the cluster
+    /// memory budget; under pressure the block manager LRU-evicts (or
+    /// declines the store) and the partition recomputes from lineage on
+    /// its next access.
+    pub fn cache(self) -> Rdd<T>
+    where
+        T: crate::rdd::memory::SizeOf,
+    {
+        let _ = self
+            .inner
+            .sizer
+            .set(Box::new(crate::rdd::memory::vec_deep_bytes::<T>));
         self.inner.cache_flag.store(true, Ordering::SeqCst);
         self
     }
@@ -193,8 +212,13 @@ impl<T: Send + Sync + 'static> Rdd<T> {
         }
         let data = Arc::new((inner.compute)(p, executor)?);
         if cached {
-            inner.cluster.cache.put((inner.id, p), executor, Arc::clone(&data));
-            inner.was_cached.store(true, Ordering::SeqCst);
+            let bytes = inner.sizer.get().map_or(0, |sizer| sizer(data.as_slice()));
+            // a declined store (budget pressure, nothing evictable) is
+            // NOT a cached block: later misses are plain recomputes,
+            // not lineage recoveries
+            if inner.cluster.cache.put((inner.id, p), executor, Arc::clone(&data), bytes) {
+                inner.was_cached.store(true, Ordering::SeqCst);
+            }
         }
         Ok(data)
     }

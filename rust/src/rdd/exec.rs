@@ -57,9 +57,22 @@ pub struct Metrics {
     pub shuffles_skipped: AtomicU64,
     /// Records written to the shuffle store (`ShuffleStore::put`).
     pub shuffle_records_written: AtomicU64,
-    /// Shallow byte estimate of shuffle records written
-    /// (`size_of::<record>() × count`; heap payloads not chased).
+    /// Deep byte estimate of shuffle records written (the
+    /// [`SizeOf`](crate::rdd::memory::SizeOf) bytes of every bucket —
+    /// heap payloads behind `Vec`/`Arc` indirection included).
     pub shuffle_bytes_estimate: AtomicU64,
+    /// Bytes reserved against the cluster memory budget (shuffle buckets
+    /// + cached partitions; includes forced reservations).
+    pub bytes_reserved: AtomicU64,
+    /// Encoded bytes written to shuffle spill files under pressure.
+    pub bytes_spilled: AtomicU64,
+    /// Spill run files written.
+    pub spill_files: AtomicU64,
+    /// Encoded bytes read back from spill files on the reduce side.
+    pub bytes_spill_read: AtomicU64,
+    /// Cached blocks evicted by the LRU under memory pressure (crash
+    /// evictions are counted separately in `blocks_evicted`).
+    pub blocks_evicted_pressure: AtomicU64,
     /// XLA executions dispatched by the runtime.
     pub xla_calls: AtomicU64,
     /// CSR kernel dispatches (compiled-partition SpMV/rSpMV/SpMM and
@@ -81,32 +94,106 @@ pub struct Metrics {
     pub spmm_sparse_sparse: AtomicU64,
 }
 
+/// A point-in-time copy of every counter — plain `u64`s, so tests and
+/// benches compare and subtract values instead of string-parsing the
+/// one-line [`Metrics::summary`] (which is itself derived from this).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub jobs: u64,
+    pub tasks_started: u64,
+    pub tasks_failed: u64,
+    pub tasks_retried: u64,
+    pub tasks_stolen: u64,
+    pub stages_fused: u64,
+    pub executor_crashes: u64,
+    pub blocks_evicted: u64,
+    pub lineage_recomputes: u64,
+    pub shuffles_executed: u64,
+    pub shuffles_skipped: u64,
+    pub shuffle_records_written: u64,
+    pub shuffle_bytes_estimate: u64,
+    pub bytes_reserved: u64,
+    pub bytes_spilled: u64,
+    pub spill_files: u64,
+    pub bytes_spill_read: u64,
+    pub blocks_evicted_pressure: u64,
+    /// Cluster-dispatched + runtime-global XLA executions (the same sum
+    /// `summary()` has always reported).
+    pub xla_calls: u64,
+    pub kernels_csr: u64,
+    pub kernels_csc: u64,
+    pub kernels_coo: u64,
+    pub spmm_dense_dense: u64,
+    pub spmm_sparse_dense: u64,
+    pub spmm_dense_sparse: u64,
+    pub spmm_sparse_sparse: u64,
+}
+
 impl Metrics {
-    /// Pretty one-line summary.
-    pub fn summary(&self) -> String {
-        format!(
-            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffles={} skipped={} shuffled_recs={} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
-            self.jobs.load(Ordering::Relaxed),
-            self.tasks_started.load(Ordering::Relaxed),
-            self.tasks_failed.load(Ordering::Relaxed),
-            self.tasks_retried.load(Ordering::Relaxed),
-            self.tasks_stolen.load(Ordering::Relaxed),
-            self.stages_fused.load(Ordering::Relaxed),
-            self.executor_crashes.load(Ordering::Relaxed),
-            self.blocks_evicted.load(Ordering::Relaxed),
-            self.lineage_recomputes.load(Ordering::Relaxed),
-            self.shuffles_executed.load(Ordering::Relaxed),
-            self.shuffles_skipped.load(Ordering::Relaxed),
-            self.shuffle_records_written.load(Ordering::Relaxed),
-            self.xla_calls.load(Ordering::Relaxed)
+    /// Read every counter at once (relaxed loads — exact between jobs,
+    /// a consistent-enough view during them).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            tasks_started: self.tasks_started.load(Ordering::Relaxed),
+            tasks_failed: self.tasks_failed.load(Ordering::Relaxed),
+            tasks_retried: self.tasks_retried.load(Ordering::Relaxed),
+            tasks_stolen: self.tasks_stolen.load(Ordering::Relaxed),
+            stages_fused: self.stages_fused.load(Ordering::Relaxed),
+            executor_crashes: self.executor_crashes.load(Ordering::Relaxed),
+            blocks_evicted: self.blocks_evicted.load(Ordering::Relaxed),
+            lineage_recomputes: self.lineage_recomputes.load(Ordering::Relaxed),
+            shuffles_executed: self.shuffles_executed.load(Ordering::Relaxed),
+            shuffles_skipped: self.shuffles_skipped.load(Ordering::Relaxed),
+            shuffle_records_written: self.shuffle_records_written.load(Ordering::Relaxed),
+            shuffle_bytes_estimate: self.shuffle_bytes_estimate.load(Ordering::Relaxed),
+            bytes_reserved: self.bytes_reserved.load(Ordering::Relaxed),
+            bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
+            spill_files: self.spill_files.load(Ordering::Relaxed),
+            bytes_spill_read: self.bytes_spill_read.load(Ordering::Relaxed),
+            blocks_evicted_pressure: self.blocks_evicted_pressure.load(Ordering::Relaxed),
+            xla_calls: self.xla_calls.load(Ordering::Relaxed)
                 + crate::runtime::client::XLA_CALLS.load(Ordering::Relaxed),
-            self.kernels_csr.load(Ordering::Relaxed),
-            self.kernels_csc.load(Ordering::Relaxed),
-            self.kernels_coo.load(Ordering::Relaxed),
-            self.spmm_dense_dense.load(Ordering::Relaxed),
-            self.spmm_sparse_dense.load(Ordering::Relaxed),
-            self.spmm_dense_sparse.load(Ordering::Relaxed),
-            self.spmm_sparse_sparse.load(Ordering::Relaxed),
+            kernels_csr: self.kernels_csr.load(Ordering::Relaxed),
+            kernels_csc: self.kernels_csc.load(Ordering::Relaxed),
+            kernels_coo: self.kernels_coo.load(Ordering::Relaxed),
+            spmm_dense_dense: self.spmm_dense_dense.load(Ordering::Relaxed),
+            spmm_sparse_dense: self.spmm_sparse_dense.load(Ordering::Relaxed),
+            spmm_dense_sparse: self.spmm_dense_sparse.load(Ordering::Relaxed),
+            spmm_sparse_sparse: self.spmm_sparse_sparse.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pretty one-line summary (derived from [`Metrics::snapshot`]).
+    pub fn summary(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffles={} skipped={} shuffled_recs={} mem=reserved:{}/spilled:{}/spill_files:{}/spill_read:{}/evicted_lru:{} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
+            s.jobs,
+            s.tasks_started,
+            s.tasks_failed,
+            s.tasks_retried,
+            s.tasks_stolen,
+            s.stages_fused,
+            s.executor_crashes,
+            s.blocks_evicted,
+            s.lineage_recomputes,
+            s.shuffles_executed,
+            s.shuffles_skipped,
+            s.shuffle_records_written,
+            s.bytes_reserved,
+            s.bytes_spilled,
+            s.spill_files,
+            s.bytes_spill_read,
+            s.blocks_evicted_pressure,
+            s.xla_calls,
+            s.kernels_csr,
+            s.kernels_csc,
+            s.kernels_coo,
+            s.spmm_dense_dense,
+            s.spmm_sparse_dense,
+            s.spmm_dense_sparse,
+            s.spmm_sparse_sparse,
         )
     }
 }
@@ -354,6 +441,9 @@ pub struct Cluster {
     pub cache: BlockManager,
     /// Shuffle map-output store.
     pub shuffle: ShuffleStore,
+    /// The executor memory budget (`ClusterConfig::memory_budget_bytes`)
+    /// that `cache` and `shuffle` reserve against.
+    pub memory: Arc<crate::rdd::memory::MemoryManager>,
     /// Scheduler / recovery counters.
     pub metrics: Arc<Metrics>,
     /// Recycled mat-vec work buffers (the zero-alloc iterative hot path).
@@ -371,10 +461,15 @@ impl Cluster {
         let metrics = Arc::new(Metrics::default());
         let n_workers = config.total_cores();
         let scheduler = Arc::new(Scheduler::new(n_workers, Arc::clone(&metrics)));
+        let memory = Arc::new(crate::rdd::memory::MemoryManager::new(
+            config.memory_budget_bytes,
+            Arc::clone(&metrics),
+        ));
         let cluster = Arc::new(Cluster {
             injector: FaultInjector::new(&config),
-            cache: BlockManager::new(),
-            shuffle: ShuffleStore::new(Arc::clone(&metrics)),
+            cache: BlockManager::new(Arc::clone(&memory), Arc::clone(&metrics)),
+            shuffle: ShuffleStore::new(Arc::clone(&metrics), Arc::clone(&memory)),
+            memory,
             metrics,
             workspace: Arc::new(VecPool::new()),
             scheduler: Arc::clone(&scheduler),

@@ -1,0 +1,633 @@
+//! Memory governance: deep size accounting, the per-cluster budget, and
+//! the spill codec.
+//!
+//! Three pieces (DESIGN.md §"Memory governance"):
+//!
+//! * [`SizeOf`] — deep, heap-aware byte counts for every record type the
+//!   engine shuffles or caches. `Metrics::shuffle_bytes_estimate` and
+//!   the cache/shuffle reservations are all denominated in these bytes,
+//!   so "`Vec`-carrying record = 24 bytes" undercounting is gone.
+//! * [`MemoryManager`] — the per-cluster budget
+//!   (`ClusterConfig::memory_budget_bytes`, `u64::MAX` = unlimited).
+//!   Shuffle writes and block-cache inserts `try_reserve` against it;
+//!   on refusal the caller spills (shuffle) or evicts LRU entries
+//!   (cache). With the default unlimited budget every reservation
+//!   succeeds and nothing changes behavior.
+//! * [`Spill`] — a hand-rolled little-endian codec (the crate has zero
+//!   dependencies) that round-trips records bit-identically: `f64`
+//!   travels as `to_bits`, so a spilled-and-reread shuffle bucket merges
+//!   to exactly the same floats as the resident path. [`SpillFile`]
+//!   owns one on-disk run and deletes it on drop.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::rdd::exec::Metrics;
+
+// ---------------------------------------------------------------------------
+// SizeOf: deep byte accounting
+// ---------------------------------------------------------------------------
+
+/// Deep, heap-aware size accounting for records the engine holds.
+///
+/// Rules (the invariants every impl keeps):
+/// * `heap_bytes` counts only bytes **owned on the heap** behind the
+///   value — a `Vec` counts `capacity * size_of::<T>()` (capacity, not
+///   len: that is what the allocator actually holds) plus its elements'
+///   own heap.
+/// * `deep_size` = the value's inline footprint + `heap_bytes`; a
+///   container of records charges `size_of::<T>()` per slot once, so
+///   element impls never re-count their inline bytes.
+/// * `Arc<T>` charges the full payload to every holder — a deliberate
+///   over-count (shared blocks are billed per destination partition),
+///   chosen because under-counting is what OOMs.
+/// * Borrowed data (`&'static str`) owns nothing: heap 0.
+pub trait SizeOf {
+    /// Bytes owned on the heap behind this value (excluding the value's
+    /// own inline footprint).
+    fn heap_bytes(&self) -> usize;
+
+    /// Total footprint: inline bytes plus owned heap.
+    fn deep_size(&self) -> usize {
+        std::mem::size_of_val(self) + self.heap_bytes()
+    }
+}
+
+/// Deep bytes of a record batch: one `Vec` allocation plus per-element
+/// heap. This is the unit shuffle buckets and cached partitions reserve.
+pub fn vec_deep_bytes<T: SizeOf>(data: &[T]) -> u64 {
+    let inline = std::mem::size_of::<T>() as u64 * data.len() as u64;
+    let heap: u64 = data.iter().map(|x| x.heap_bytes() as u64).sum();
+    inline + heap
+}
+
+macro_rules! pod_size_of {
+    ($($t:ty),* $(,)?) => {$(
+        impl SizeOf for $t {
+            #[inline]
+            fn heap_bytes(&self) -> usize { 0 }
+        }
+    )*};
+}
+
+pod_size_of!(
+    u8, u16, u32, u64, u128, usize, i8, i16, i32, i64, i128, isize, f32, f64, bool, char, ()
+);
+
+impl SizeOf for String {
+    fn heap_bytes(&self) -> usize {
+        self.capacity()
+    }
+}
+
+impl SizeOf for &'static str {
+    // borrowed: the bytes live in the binary, not our budget
+    fn heap_bytes(&self) -> usize {
+        0
+    }
+}
+
+impl<T: SizeOf> SizeOf for Vec<T> {
+    fn heap_bytes(&self) -> usize {
+        self.capacity() * std::mem::size_of::<T>()
+            + self.iter().map(SizeOf::heap_bytes).sum::<usize>()
+    }
+}
+
+impl<T: SizeOf> SizeOf for Arc<T> {
+    // full payload per holder (see trait docs: over-count, never under)
+    fn heap_bytes(&self) -> usize {
+        std::mem::size_of::<T>() + self.as_ref().heap_bytes()
+    }
+}
+
+impl<T: SizeOf> SizeOf for Option<T> {
+    fn heap_bytes(&self) -> usize {
+        self.as_ref().map_or(0, SizeOf::heap_bytes)
+    }
+}
+
+impl<K: SizeOf, V: SizeOf> SizeOf for std::collections::BTreeMap<K, V> {
+    fn heap_bytes(&self) -> usize {
+        // B-tree nodes are opaque; charge each entry its inline bytes
+        // plus two words of node overhead — close enough for budgeting.
+        let per = std::mem::size_of::<K>() + std::mem::size_of::<V>() + 16;
+        self.len() * per
+            + self.iter().map(|(k, v)| k.heap_bytes() + v.heap_bytes()).sum::<usize>()
+    }
+}
+
+macro_rules! tuple_size_of {
+    ($(($($n:tt $t:ident),+))+) => {$(
+        impl<$($t: SizeOf),+> SizeOf for ($($t,)+) {
+            fn heap_bytes(&self) -> usize {
+                0 $(+ self.$n.heap_bytes())+
+            }
+        }
+
+        impl<$($t: Spill),+> Spill for ($($t,)+) {
+            const SPILLABLE: bool = true $(&& $t::SPILLABLE)+;
+
+            fn encode(&self, out: &mut Vec<u8>) {
+                $(self.$n.encode(out);)+
+            }
+
+            fn decode(src: &mut &[u8]) -> Result<Self> {
+                Ok(($($t::decode(src)?,)+))
+            }
+        }
+    )+};
+}
+
+tuple_size_of! {
+    (0 A, 1 B)
+    (0 A, 1 B, 2 C)
+    (0 A, 1 B, 2 C, 3 D)
+}
+
+// ---------------------------------------------------------------------------
+// Spill: the on-disk run codec
+// ---------------------------------------------------------------------------
+
+/// Bit-exact serialization for shuffle records, so spilled runs re-read
+/// to the same values (and the same merge results) as resident buckets.
+///
+/// Little-endian throughout; `f32`/`f64` travel as raw IEEE bits;
+/// `usize` widens to `u64`. Types that cannot round-trip (borrowed
+/// `&'static str`) set `SPILLABLE = false` and their buckets stay
+/// resident under pressure (`MemoryManager::force_reserve`).
+pub trait Spill: Sized {
+    /// Whether the type round-trips through the codec. Composites AND
+    /// their fields' flags; an unspillable bucket is never encoded.
+    const SPILLABLE: bool = true;
+
+    /// Append this record's encoding to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Decode one record from the front of `src`, advancing it.
+    fn decode(src: &mut &[u8]) -> Result<Self>;
+}
+
+fn truncated(what: &str) -> Error {
+    Error::msg(format!("spill decode: truncated {what}"))
+}
+
+/// Append a `u64` length/count prefix.
+pub fn put_len(out: &mut Vec<u8>, len: usize) {
+    out.extend_from_slice(&(len as u64).to_le_bytes());
+}
+
+/// Read back a `put_len` prefix.
+pub fn take_len(src: &mut &[u8]) -> Result<usize> {
+    u64::decode(src).map(|n| n as usize)
+}
+
+macro_rules! pod_spill {
+    ($($t:ty),* $(,)?) => {$(
+        impl Spill for $t {
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+
+            fn decode(src: &mut &[u8]) -> Result<Self> {
+                const N: usize = std::mem::size_of::<$t>();
+                if src.len() < N {
+                    return Err(truncated(stringify!($t)));
+                }
+                let (head, rest) = src.split_at(N);
+                *src = rest;
+                Ok(<$t>::from_le_bytes(head.try_into().expect("split_at(N) yields N bytes")))
+            }
+        }
+    )*};
+}
+
+pod_spill!(u8, u16, u32, u64, u128, i8, i16, i32, i64, i128);
+
+impl Spill for usize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u64).encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        u64::decode(src).map(|v| v as usize)
+    }
+}
+
+impl Spill for isize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as i64).encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        i64::decode(src).map(|v| v as isize)
+    }
+}
+
+impl Spill for f64 {
+    // raw IEEE bits: NaN payloads and signed zeros survive the disk trip
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.to_bits().encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        u64::decode(src).map(f64::from_bits)
+    }
+}
+
+impl Spill for f32 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.to_bits().encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        u32::decode(src).map(f32::from_bits)
+    }
+}
+
+impl Spill for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(u8::from(*self));
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        u8::decode(src).map(|b| b != 0)
+    }
+}
+
+impl Spill for char {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u32).encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        let raw = u32::decode(src)?;
+        char::from_u32(raw).ok_or_else(|| Error::msg("spill decode: invalid char"))
+    }
+}
+
+impl Spill for () {
+    fn encode(&self, _out: &mut Vec<u8>) {}
+
+    fn decode(_src: &mut &[u8]) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl Spill for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_len(out, self.len());
+        out.extend_from_slice(self.as_bytes());
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        let n = take_len(src)?;
+        if src.len() < n {
+            return Err(truncated("str bytes"));
+        }
+        let (head, rest) = src.split_at(n);
+        *src = rest;
+        String::from_utf8(head.to_vec()).map_err(|_| Error::msg("spill decode: invalid utf-8"))
+    }
+}
+
+impl Spill for &'static str {
+    // a borrowed str cannot be reconstituted from disk: never spilled
+    const SPILLABLE: bool = false;
+
+    fn encode(&self, _out: &mut Vec<u8>) {
+        unreachable!("unspillable type encoded (SPILLABLE gate bypassed)")
+    }
+
+    fn decode(_src: &mut &[u8]) -> Result<Self> {
+        Err(Error::msg("spill decode: &'static str is unspillable"))
+    }
+}
+
+impl<T: Spill> Spill for Vec<T> {
+    const SPILLABLE: bool = T::SPILLABLE;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_len(out, self.len());
+        for x in self {
+            x.encode(out);
+        }
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        let n = take_len(src)?;
+        let mut out = Vec::with_capacity(n.min(src.len())); // bound by input size
+        for _ in 0..n {
+            out.push(T::decode(src)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Spill> Spill for Arc<T> {
+    // value round-trip: a spilled-and-reread Arc is a fresh allocation
+    // (pointer sharing is a memory optimization, not part of the value)
+    const SPILLABLE: bool = T::SPILLABLE;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.as_ref().encode(out);
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        T::decode(src).map(Arc::new)
+    }
+}
+
+impl<T: Spill> Spill for Option<T> {
+    const SPILLABLE: bool = T::SPILLABLE;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(x) => {
+                out.push(1);
+                x.encode(out);
+            }
+        }
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        match u8::decode(src)? {
+            0 => Ok(None),
+            1 => T::decode(src).map(Some),
+            _ => Err(Error::msg("spill decode: invalid Option tag")),
+        }
+    }
+}
+
+impl<K: Spill + Ord, V: Spill> Spill for std::collections::BTreeMap<K, V> {
+    const SPILLABLE: bool = K::SPILLABLE && V::SPILLABLE;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_len(out, self.len());
+        for (k, v) in self {
+            k.encode(out);
+            v.encode(out);
+        }
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        let n = take_len(src)?;
+        let mut out = std::collections::BTreeMap::new();
+        for _ in 0..n {
+            let k = K::decode(src)?;
+            let v = V::decode(src)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+}
+
+/// Encode a whole run (one shuffle bucket) with a count header.
+pub fn encode_run<T: Spill>(data: &[T]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_len(&mut out, data.len());
+    for x in data {
+        x.encode(&mut out);
+    }
+    out
+}
+
+/// Decode an `encode_run` payload back to records, in order.
+pub fn decode_run<T: Spill>(mut src: &[u8]) -> Result<Vec<T>> {
+    let n = take_len(&mut src)?;
+    let mut out = Vec::with_capacity(n.min(src.len()));
+    for _ in 0..n {
+        out.push(T::decode(&mut src)?);
+    }
+    if !src.is_empty() {
+        return Err(Error::msg("spill decode: trailing bytes after run"));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// SpillFile: one on-disk run
+// ---------------------------------------------------------------------------
+
+/// Monotonic file-name counter (process id disambiguates across test
+/// binaries sharing the temp dir).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One spilled run on disk. Owns the file: dropping the handle (bucket
+/// consumed, shuffle removed, or cluster shutdown) deletes it.
+#[derive(Debug)]
+pub struct SpillFile {
+    path: PathBuf,
+    /// Encoded length on disk.
+    pub bytes: u64,
+    /// Records in the run.
+    pub records: u64,
+}
+
+impl SpillFile {
+    /// Write `payload` (an [`encode_run`] buffer) to a fresh temp file.
+    pub fn write(payload: &[u8], records: u64) -> Result<SpillFile> {
+        let dir = std::env::temp_dir().join("sparkla-spill");
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| Error::msg(format!("spill: create dir {dir:?}: {e}")))?;
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("run-{}-{seq}.spill", std::process::id()));
+        std::fs::write(&path, payload)
+            .map_err(|e| Error::msg(format!("spill: write {path:?}: {e}")))?;
+        Ok(SpillFile { path, bytes: payload.len() as u64, records })
+    }
+
+    /// Read the whole run back.
+    pub fn read(&self) -> Result<Vec<u8>> {
+        std::fs::read(&self.path)
+            .map_err(|e| Error::msg(format!("spill: read {:?}: {e}", self.path)))
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemoryManager: the budget
+// ---------------------------------------------------------------------------
+
+/// Per-cluster memory budget. All shuffle buckets and cached partitions
+/// reserve their deep bytes here before storing; `u64::MAX` (the
+/// default) means unlimited — every reservation succeeds and the
+/// pressure paths never fire.
+#[derive(Debug)]
+pub struct MemoryManager {
+    budget: u64,
+    used: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl MemoryManager {
+    /// `None` = unlimited.
+    pub fn new(budget: Option<u64>, metrics: Arc<Metrics>) -> MemoryManager {
+        MemoryManager {
+            budget: budget.unwrap_or(u64::MAX),
+            used: AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// The configured ceiling (`u64::MAX` = unlimited).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// True when no budget was configured.
+    pub fn unlimited(&self) -> bool {
+        self.budget == u64::MAX
+    }
+
+    /// Bytes currently reserved.
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    /// Reserve `bytes` if they fit under the budget. On success the
+    /// caller owns the reservation and must `release` it when the
+    /// payload is dropped, spilled, or evicted.
+    pub fn try_reserve(&self, bytes: u64) -> bool {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(bytes);
+            if next > self.budget {
+                return false;
+            }
+            match self.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.metrics.bytes_reserved.fetch_add(bytes, Ordering::Relaxed);
+                    return true;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Reserve unconditionally — for payloads that cannot be spilled or
+    /// evicted (unspillable record types). The budget becomes a soft
+    /// ceiling for these bytes, but accounting stays exact.
+    pub fn force_reserve(&self, bytes: u64) {
+        self.used.fetch_add(bytes, Ordering::Relaxed);
+        self.metrics.bytes_reserved.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Return a reservation. Saturating: a stray double-release clamps
+    /// at zero instead of wrapping the gauge to 2^64.
+    pub fn release(&self, bytes: u64) {
+        let _ = self
+            .used
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(bytes))
+            });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip<T: Spill + PartialEq + std::fmt::Debug>(vals: Vec<T>) {
+        let buf = encode_run(&vals);
+        let back: Vec<T> = decode_run(&buf).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn codec_round_trips_bit_identically() {
+        round_trip(vec![0u64, 1, u64::MAX, 42]);
+        round_trip(vec![-1i32, i32::MIN, i32::MAX]);
+        round_trip(vec![0.0f64, -0.0, 1.5e-300, f64::INFINITY, f64::MIN_POSITIVE]);
+        round_trip(vec![(3u32, "abc".to_string()), (7, String::new())]);
+        round_trip(vec![(1usize, vec![1.0f64, -2.5]), (2, vec![])]);
+        round_trip(vec![Some(5u8), None, Some(0)]);
+        round_trip(vec![Arc::new(9u64)]);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(3u32, 1.25f64);
+        m.insert(1, -0.5);
+        round_trip(vec![m]);
+        // NaN payload survives (PartialEq fails on NaN, compare bits)
+        let nan = f64::from_bits(0x7ff8_dead_beef_0001);
+        let back: Vec<f64> = decode_run(&encode_run(&[nan])).unwrap();
+        assert_eq!(back[0].to_bits(), nan.to_bits());
+    }
+
+    #[test]
+    fn codec_rejects_truncation_and_trailing_garbage() {
+        let buf = encode_run(&[1u64, 2, 3]);
+        assert!(decode_run::<u64>(&buf[..buf.len() - 1]).is_err());
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(decode_run::<u64>(&long).is_err());
+    }
+
+    #[test]
+    fn spillable_flag_composes() {
+        assert!(<(u32, Vec<f64>)>::SPILLABLE);
+        assert!(!<(&'static str, u64)>::SPILLABLE);
+        assert!(!<Vec<(u32, &'static str)>>::SPILLABLE);
+        assert!(<Arc<Vec<(usize, f64)>>>::SPILLABLE);
+    }
+
+    #[test]
+    fn deep_size_counts_capacity_and_nested_heap() {
+        let v: Vec<u64> = Vec::with_capacity(10);
+        assert_eq!(v.heap_bytes(), 80);
+        let nested = vec![vec![1.0f64; 4]; 3];
+        // outer: 3 slots of Vec<f64> (24 bytes each) + 3 inner buffers
+        assert_eq!(nested.heap_bytes(), 3 * 24 + 3 * 32);
+        let s = String::from("hello");
+        assert!(s.deep_size() >= 24 + 5);
+        assert_eq!("static".heap_bytes(), 0);
+        assert_eq!(vec_deep_bytes(&[1u64, 2, 3]), 24);
+    }
+
+    #[test]
+    fn spill_file_round_trips_and_cleans_up() {
+        let data = vec![(1u64, 2.5f64), (3, -0.0)];
+        let payload = encode_run(&data);
+        let f = SpillFile::write(&payload, data.len() as u64).unwrap();
+        assert_eq!(f.bytes, payload.len() as u64);
+        let path = f.path.clone();
+        assert!(path.exists());
+        let back: Vec<(u64, f64)> = decode_run(&f.read().unwrap()).unwrap();
+        assert_eq!(back, data);
+        drop(f);
+        assert!(!path.exists(), "drop must delete the run file");
+    }
+
+    #[test]
+    fn manager_reserves_releases_and_refuses() {
+        let metrics = Arc::new(Metrics::default());
+        let mm = MemoryManager::new(Some(100), Arc::clone(&metrics));
+        assert!(!mm.unlimited());
+        assert!(mm.try_reserve(60));
+        assert!(mm.try_reserve(40));
+        assert!(!mm.try_reserve(1), "over budget must refuse");
+        mm.release(50);
+        assert!(mm.try_reserve(10));
+        assert_eq!(mm.used(), 60);
+        mm.force_reserve(1000); // soft overrun
+        assert_eq!(mm.used(), 1060);
+        mm.release(2000); // saturates at zero
+        assert_eq!(mm.used(), 0);
+        assert_eq!(metrics.bytes_reserved.load(Ordering::Relaxed), 60 + 40 + 10 + 1000);
+        let unlimited = MemoryManager::new(None, metrics);
+        assert!(unlimited.unlimited());
+        assert!(unlimited.try_reserve(u64::MAX - 1));
+    }
+}

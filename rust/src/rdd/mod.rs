@@ -29,15 +29,25 @@
 //! (`Metrics::shuffles_skipped`). `join` is a single co-partitioned
 //! cogroup, and the `combine_by_key_with` / `reduce_by_key_merge` family
 //! merges values in place — see DESIGN.md §"Shuffle & partitioning".
+//!
+//! Memory is *governed*: `ClusterConfig::memory_budget_bytes` sets a
+//! per-cluster budget that shuffle buckets and cached partitions reserve
+//! against with deep [`SizeOf`](memory::SizeOf) byte counts. Under
+//! pressure the shuffle spills encoded runs to disk (read back
+//! bit-identically) and the block cache evicts LRU unpinned entries
+//! (lineage recomputes the miss). Unlimited by default: nothing spills,
+//! zero behavior change — see DESIGN.md §"Memory governance".
 
 pub mod exec;
 pub mod cache;
 pub mod shuffle;
 pub mod broadcast;
 pub mod core;
+pub mod memory;
 pub mod pair;
 
 pub use broadcast::Broadcast;
 pub use core::Rdd;
-pub use exec::{Cluster, Metrics, VecPool};
+pub use exec::{Cluster, Metrics, MetricsSnapshot, VecPool};
+pub use memory::{MemoryManager, SizeOf, Spill};
 pub use pair::{PartitionableKey, Partitioner};

@@ -33,6 +33,7 @@ use std::sync::Arc;
 
 use crate::error::Result;
 use crate::rdd::core::{Prep, Rdd};
+use crate::rdd::memory::{SizeOf, Spill};
 use crate::rdd::shuffle::ShuffleDep;
 
 /// Deterministic hash partitioner (FxHash-style; `DefaultHasher` would
@@ -196,8 +197,8 @@ enum SideSource<K: Send + Sync + 'static, V: Send + Sync + 'static> {
 
 impl<K, V> SideSource<K, V>
 where
-    K: Clone + Eq + Hash + PartitionableKey + Send + Sync + 'static,
-    V: Clone + Send + Sync + 'static,
+    K: Clone + Eq + Hash + PartitionableKey + SizeOf + Spill + Send + Sync + 'static,
+    V: Clone + SizeOf + Spill + Send + Sync + 'static,
 {
     /// Plan how this side reaches `part`'s partitions, appending the
     /// stage preps the consuming RDD must run.
@@ -276,8 +277,8 @@ where
 
 impl<K, V> Rdd<(K, V)>
 where
-    K: Clone + Eq + Hash + PartitionableKey + Send + Sync + 'static,
-    V: Clone + Send + Sync + 'static,
+    K: Clone + Eq + Hash + PartitionableKey + SizeOf + Spill + Send + Sync + 'static,
+    V: Clone + SizeOf + Spill + Send + Sync + 'static,
 {
     /// True when this RDD is already partitioned exactly as `part` would
     /// partition it — the shuffle-skip precondition.
@@ -305,7 +306,7 @@ where
         merge_combiners: impl Fn(&mut C, C) + Send + Sync + 'static,
     ) -> Rdd<(K, C)>
     where
-        C: Clone + Send + Sync + 'static,
+        C: Clone + SizeOf + Spill + Send + Sync + 'static,
     {
         if self.is_partitioned_by(&part) {
             self.cluster().metrics.shuffles_skipped.fetch_add(1, Ordering::Relaxed);
@@ -521,7 +522,7 @@ where
         part: Partitioner,
     ) -> Rdd<(K, (Vec<V>, Vec<W>))>
     where
-        W: Clone + Send + Sync + 'static,
+        W: Clone + SizeOf + Spill + Send + Sync + 'static,
     {
         let mut preps: Vec<Arc<Prep>> = Vec::new();
         let left = SideSource::plan(self, &part, &mut preps);
@@ -550,7 +551,7 @@ where
     /// not the old two-shuffle `group_by_key` pair.
     pub fn join_with<W>(&self, other: &Rdd<(K, W)>, part: Partitioner) -> Rdd<(K, (V, W))>
     where
-        W: Clone + Send + Sync + 'static,
+        W: Clone + SizeOf + Spill + Send + Sync + 'static,
     {
         let out = self.cogroup_with(other, part.clone()).flat_map(|(k, (vs, ws))| {
             let mut out = Vec::with_capacity(vs.len() * ws.len());
@@ -567,7 +568,7 @@ where
     /// Join two pair RDDs on key (hash join via co-partitioned cogroup).
     pub fn join<W>(&self, other: &Rdd<(K, W)>, num_out: usize) -> Rdd<(K, (V, W))>
     where
-        W: Clone + Send + Sync + 'static,
+        W: Clone + SizeOf + Spill + Send + Sync + 'static,
     {
         self.join_with(other, Partitioner::hash(num_out))
     }

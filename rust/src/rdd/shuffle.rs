@@ -10,11 +10,26 @@
 //! alive — so reduce partitions can be recomputed after a cache
 //! eviction, exactly like Spark's map-output tracker — and are dropped
 //! eagerly the moment the last RDD referencing the shuffle is dropped
-//! (no manual `remove_shuffle` calls in op code). `ShuffleStore::put`
-//! feeds `Metrics::shuffle_records_written` / `shuffle_bytes_estimate`
-//! so benches and tests can assert shuffle-volume reductions.
+//! (no manual `remove_shuffle` calls in op code).
+//!
+//! **Memory governance** (DESIGN.md §"Memory governance"): every bucket
+//! reserves its deep [`SizeOf`] bytes against the cluster
+//! [`MemoryManager`] before going resident. Under pressure the store
+//! spills — resident buckets in the same lock shard first (largest
+//! run released first), then the incoming bucket itself — one encoded
+//! run per bucket via the [`Spill`] codec, so record order inside a
+//! bucket is preserved exactly and reduce-side merges (which walk map
+//! partitions in index order) stay bit-identical to the all-resident
+//! path. Unspillable record types (`&'static str` keys) stay resident
+//! via `force_reserve`. The bucket map is sharded 16 ways so map-side
+//! writers from the work-stealing pool stop serializing on one mutex.
+//!
+//! `ShuffleStore::put` feeds `Metrics::shuffle_records_written` and a
+//! now-*deep* `Metrics::shuffle_bytes_estimate` (a `Vec`-carrying record
+//! counts its payload, not 24 bytes), plus `bytes_spilled` /
+//! `spill_files` / `bytes_spill_read` for the pressure paths.
 
-use std::any::Any;
+use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
@@ -22,64 +37,223 @@ use std::sync::{Arc, Mutex};
 use crate::error::Result;
 use crate::rdd::core::Prep;
 use crate::rdd::exec::{Cluster, Metrics};
+use crate::rdd::memory::{
+    decode_run, encode_run, MemoryManager, SizeOf, Spill, SpillFile, vec_deep_bytes,
+};
+
+/// Lock shards: map-side writers hash their bucket key to one of these.
+const SHARDS: usize = 16;
 
 type Bucket = Arc<dyn Any + Send + Sync>;
 
-/// Thread-safe shuffle map-output tracker.
+/// Spills one resident bucket to disk (monomorphized at `put`, stored so
+/// type-erased victims can be spilled later under pressure).
+type SpillFn = Box<dyn Fn() -> Result<SpillFile> + Send + Sync>;
+
+enum Slot {
+    /// In memory, its `bytes` reserved with the [`MemoryManager`]
+    /// (`spill` is `None` for unspillable types, which force-reserved).
+    Resident { data: Bucket, bytes: u64, spill: Option<SpillFn> },
+    /// On disk as one encoded run; holds no reservation. `ty` guards
+    /// `get` the way `downcast` guards resident buckets.
+    Spilled { file: SpillFile, ty: TypeId },
+}
+
+/// Thread-safe, budget-governed shuffle map-output tracker.
 pub struct ShuffleStore {
-    buckets: Mutex<HashMap<(usize, usize, usize), Bucket>>,
+    shards: Vec<Mutex<HashMap<(usize, usize, usize), Slot>>>,
     metrics: Arc<Metrics>,
+    memory: Arc<MemoryManager>,
 }
 
 impl ShuffleStore {
-    /// Empty store feeding the given metrics.
-    pub fn new(metrics: Arc<Metrics>) -> ShuffleStore {
-        ShuffleStore { buckets: Mutex::new(HashMap::new()), metrics }
+    /// Empty store feeding the given metrics, governed by `memory`.
+    pub fn new(metrics: Arc<Metrics>, memory: Arc<MemoryManager>) -> ShuffleStore {
+        ShuffleStore {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            metrics,
+            memory,
+        }
+    }
+
+    /// Shard by (shuffle, map partition) only: concurrent map tasks land
+    /// on different locks (that is where the write contention was), while
+    /// one task's `num_out` bucket writes — and the victim-spill scan —
+    /// stay within a single shard.
+    fn shard(&self, key: &(usize, usize, usize)) -> &Mutex<HashMap<(usize, usize, usize), Slot>> {
+        let mut h = (key.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= (key.1 as u64).wrapping_mul(0x85EB_CA6B);
+        &self.shards[((h >> 7) % SHARDS as u64) as usize]
+    }
+
+    /// Encode + write one bucket, counting the spill.
+    fn spill_bucket<T: Spill>(&self, data: &[T]) -> Result<SpillFile> {
+        let payload = encode_run(data);
+        let file = SpillFile::write(&payload, data.len() as u64)?;
+        self.metrics.bytes_spilled.fetch_add(file.bytes, Ordering::Relaxed);
+        self.metrics.spill_files.fetch_add(1, Ordering::Relaxed);
+        Ok(file)
     }
 
     /// Store map output for (shuffle, map partition, reduce partition).
-    /// Counts records written and a shallow (`size_of::<T>()`-based)
-    /// byte estimate — heap payloads behind `Arc`/`Vec` indirection are
-    /// deliberately not chased, so the estimate tracks *record traffic*,
-    /// not deep size.
-    pub fn put<T: Send + Sync + 'static>(
+    /// Counts records written and the **deep** byte estimate
+    /// ([`SizeOf`]), reserves those bytes, and spills under pressure —
+    /// this shard's largest resident runs first, then the incoming
+    /// bucket. Spill I/O failure falls back to a resident force-reserve,
+    /// so `put` never loses data.
+    pub fn put<T: Send + Sync + SizeOf + Spill + 'static>(
         &self,
         shuffle: usize,
         map_p: usize,
         reduce_p: usize,
         data: Vec<T>,
     ) {
+        let bytes = vec_deep_bytes(&data);
         self.metrics.shuffle_records_written.fetch_add(data.len() as u64, Ordering::Relaxed);
-        self.metrics
-            .shuffle_bytes_estimate
-            .fetch_add((data.len() * std::mem::size_of::<T>()) as u64, Ordering::Relaxed);
-        let mut g = self.buckets.lock().expect("shuffle map");
-        g.insert((shuffle, map_p, reduce_p), Arc::new(data));
+        self.metrics.shuffle_bytes_estimate.fetch_add(bytes, Ordering::Relaxed);
+        let key = (shuffle, map_p, reduce_p);
+        let mut g = self.shard(&key).lock().expect("shuffle shard");
+        let slot = if self.memory.try_reserve(bytes) {
+            self.resident_slot(data, bytes)
+        } else if !T::SPILLABLE {
+            self.memory.force_reserve(bytes);
+            Slot::Resident { data: Arc::new(data), bytes, spill: None }
+        } else {
+            // pressure: free this shard's largest resident runs until the
+            // reservation fits, then spill the incoming bucket itself
+            self.spill_shard_victims(&mut g, bytes);
+            if self.memory.try_reserve(bytes) {
+                self.resident_slot(data, bytes)
+            } else {
+                match self.spill_bucket(&data) {
+                    Ok(file) => Slot::Spilled { file, ty: TypeId::of::<Vec<T>>() },
+                    Err(_) => {
+                        // disk refused: stay resident, overrun the budget
+                        self.memory.force_reserve(bytes);
+                        self.resident_slot(data, bytes)
+                    }
+                }
+            }
+        };
+        // a crash-retried map task may overwrite its own bucket: return
+        // the stale reservation before dropping it
+        if let Some(Slot::Resident { bytes: old, .. }) = g.insert(key, slot) {
+            self.memory.release(old);
+        }
     }
 
-    /// Fetch one bucket (None if the map task produced nothing for it).
-    pub fn get<T: Send + Sync + 'static>(
+    fn resident_slot<T: Send + Sync + SizeOf + Spill + 'static>(
+        &self,
+        data: Vec<T>,
+        bytes: u64,
+    ) -> Slot {
+        let data = Arc::new(data);
+        let spill = if T::SPILLABLE {
+            let payload = Arc::clone(&data);
+            let metrics = Arc::clone(&self.metrics);
+            Some(Box::new(move || {
+                let buf = encode_run(payload.as_slice());
+                let file = SpillFile::write(&buf, payload.len() as u64)?;
+                metrics.bytes_spilled.fetch_add(file.bytes, Ordering::Relaxed);
+                metrics.spill_files.fetch_add(1, Ordering::Relaxed);
+                Ok(file)
+            }) as SpillFn)
+        } else {
+            None
+        };
+        let ty_data: Bucket = data;
+        Slot::Resident { data: ty_data, bytes, spill }
+    }
+
+    /// Spill this shard's resident spillable buckets, largest first,
+    /// until at least `need` bytes were released (or victims run out).
+    fn spill_shard_victims(
+        &self,
+        shard: &mut HashMap<(usize, usize, usize), Slot>,
+        need: u64,
+    ) {
+        let mut victims: Vec<((usize, usize, usize), u64)> = shard
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Resident { bytes, spill: Some(_), .. } => Some((*k, *bytes)),
+                _ => None,
+            })
+            .collect();
+        victims.sort_by_key(|&(_, b)| std::cmp::Reverse(b));
+        let mut freed = 0u64;
+        for (k, bytes) in victims {
+            if freed >= need {
+                break;
+            }
+            let spilled = match shard.get(&k) {
+                Some(Slot::Resident { data, spill: Some(spill), .. }) => {
+                    let ty = data.as_ref().type_id();
+                    spill().ok().map(|file| (file, ty))
+                }
+                _ => None,
+            };
+            if let Some((file, ty)) = spilled {
+                shard.insert(k, Slot::Spilled { file, ty });
+                self.memory.release(bytes);
+                freed += bytes;
+            }
+        }
+    }
+
+    /// Fetch one bucket (None if the map task produced nothing for it,
+    /// or the stored type does not match). A spilled bucket is decoded
+    /// from its run file — records come back in exactly the order they
+    /// were written, so reduce-side merges are bit-identical.
+    ///
+    /// Panics if a spill file cannot be read back: the data exists but
+    /// is unreachable, and returning `None` would silently drop it.
+    pub fn get<T: Send + Sync + Spill + 'static>(
         &self,
         shuffle: usize,
         map_p: usize,
         reduce_p: usize,
     ) -> Option<Arc<Vec<T>>> {
-        let g = self.buckets.lock().expect("shuffle map");
-        g.get(&(shuffle, map_p, reduce_p))
-            .and_then(|b| Arc::clone(b).downcast::<Vec<T>>().ok())
+        let key = (shuffle, map_p, reduce_p);
+        let g = self.shard(&key).lock().expect("shuffle shard");
+        match g.get(&key)? {
+            Slot::Resident { data, .. } => Arc::clone(data).downcast::<Vec<T>>().ok(),
+            Slot::Spilled { file, ty } => {
+                if *ty != TypeId::of::<Vec<T>>() {
+                    return None;
+                }
+                let payload = file.read().expect("spilled shuffle run unreadable");
+                self.metrics.bytes_spill_read.fetch_add(file.bytes, Ordering::Relaxed);
+                let data: Vec<T> =
+                    decode_run(&payload).expect("spilled shuffle run corrupt");
+                Some(Arc::new(data))
+            }
+        }
     }
 
-    /// Drop all buckets of a shuffle (normally via `ShuffleDep::drop`).
+    /// Drop all buckets of a shuffle (normally via `ShuffleDep::drop`),
+    /// returning reservations and deleting spill files.
     pub fn remove_shuffle(&self, shuffle: usize) -> usize {
-        let mut g = self.buckets.lock().expect("shuffle map");
-        let before = g.len();
-        g.retain(|(s, _, _), _| *s != shuffle);
-        before - g.len()
+        let mut removed = 0;
+        for shard in &self.shards {
+            let mut g = shard.lock().expect("shuffle shard");
+            g.retain(|(s, _, _), slot| {
+                if *s != shuffle {
+                    return true;
+                }
+                if let Slot::Resident { bytes, .. } = slot {
+                    self.memory.release(*bytes);
+                }
+                removed += 1;
+                false // Spilled slots delete their file on drop
+            });
+        }
+        removed
     }
 
-    /// Bucket count (tests/metrics).
+    /// Bucket count across all shards (tests/metrics) — resident and
+    /// spilled both count.
     pub fn len(&self) -> usize {
-        self.buckets.lock().expect("shuffle map").len()
+        self.shards.iter().map(|s| s.lock().expect("shuffle shard").len()).sum()
     }
 
     /// True when empty.
@@ -90,7 +264,9 @@ impl ShuffleStore {
 
 impl Default for ShuffleStore {
     fn default() -> Self {
-        Self::new(Arc::new(Metrics::default()))
+        let metrics = Arc::new(Metrics::default());
+        let memory = Arc::new(MemoryManager::new(None, Arc::clone(&metrics)));
+        Self::new(metrics, memory)
     }
 }
 
@@ -164,6 +340,12 @@ impl Drop for ShuffleDep {
 mod tests {
     use super::*;
 
+    fn budgeted(budget: u64) -> (ShuffleStore, Arc<Metrics>, Arc<MemoryManager>) {
+        let metrics = Arc::new(Metrics::default());
+        let memory = Arc::new(MemoryManager::new(Some(budget), Arc::clone(&metrics)));
+        (ShuffleStore::new(Arc::clone(&metrics), Arc::clone(&memory)), metrics, memory)
+    }
+
     #[test]
     fn put_get_remove() {
         let s = ShuffleStore::default();
@@ -180,9 +362,57 @@ mod tests {
     #[test]
     fn put_counts_records_and_bytes() {
         let m = Arc::new(Metrics::default());
-        let s = ShuffleStore::new(Arc::clone(&m));
+        let mem = Arc::new(MemoryManager::new(None, Arc::clone(&m)));
+        let s = ShuffleStore::new(Arc::clone(&m), mem);
         s.put(1, 0, 0, vec![1u64, 2, 3]);
         assert_eq!(m.shuffle_records_written.load(Ordering::Relaxed), 3);
         assert_eq!(m.shuffle_bytes_estimate.load(Ordering::Relaxed), 24);
+    }
+
+    #[test]
+    fn deep_bytes_count_vec_payloads() {
+        let (s, m, _) = budgeted(u64::MAX - 1);
+        // 2 records, each 24 inline + 32 heap (4 f64s)
+        s.put(1, 0, 0, vec![vec![1.0f64; 4], vec![2.0; 4]]);
+        assert_eq!(m.shuffle_bytes_estimate.load(Ordering::Relaxed), 2 * 24 + 2 * 32);
+    }
+
+    #[test]
+    fn over_budget_put_spills_and_reads_back_identically() {
+        let (s, m, mem) = budgeted(64);
+        let data: Vec<(u32, f64)> = (0..100).map(|i| (i % 7, i as f64 * 0.1 - 3.0)).collect();
+        s.put(5, 0, 0, data.clone()); // 1600 deep bytes > 64
+        assert!(m.bytes_spilled.load(Ordering::Relaxed) > 0, "must spill");
+        assert_eq!(m.spill_files.load(Ordering::Relaxed), 1);
+        assert_eq!(mem.used(), 0, "spilled bucket holds no reservation");
+        let back = s.get::<(u32, f64)>(5, 0, 0).unwrap();
+        assert_eq!(*back, data, "spilled run must read back in order, bit-identical");
+        assert!(m.bytes_spill_read.load(Ordering::Relaxed) > 0);
+        assert_eq!(s.remove_shuffle(5), 1);
+    }
+
+    #[test]
+    fn pressure_spills_resident_victims_largest_first() {
+        let (s, m, mem) = budgeted(1000);
+        // same (shuffle, map) pair so both buckets land in one shard
+        s.put(2, 0, 0, vec![0u64; 100]); // 800 bytes resident
+        assert_eq!(mem.used(), 800);
+        s.put(2, 0, 1, vec![0u64; 90]); // 720 bytes: victimize the 800-run
+        assert!(m.spill_files.load(Ordering::Relaxed) >= 1, "victim spilled");
+        assert_eq!(mem.used(), 720, "incoming fits after the victim frees its bytes");
+        // both buckets still readable
+        assert_eq!(s.get::<u64>(2, 0, 0).unwrap().len(), 100);
+        assert_eq!(s.get::<u64>(2, 0, 1).unwrap().len(), 90);
+    }
+
+    #[test]
+    fn unspillable_records_force_reserve_and_stay_resident() {
+        let (s, m, mem) = budgeted(8);
+        s.put(3, 0, 0, vec![("k", 1u64); 4]);
+        assert_eq!(m.bytes_spilled.load(Ordering::Relaxed), 0);
+        assert!(mem.used() > 8, "unspillable bucket overruns the soft budget");
+        assert_eq!(s.get::<(&str, u64)>(3, 0, 0).unwrap().len(), 4);
+        s.remove_shuffle(3);
+        assert_eq!(mem.used(), 0, "removal returns the forced reservation");
     }
 }

@@ -1,0 +1,163 @@
+//! Memory governance integration: under a budget below the job's shuffle
+//! footprint the shuffle spills runs to disk and the block cache evicts
+//! LRU entries — and results stay BIT-IDENTICAL to the unlimited
+//! in-memory run, with the pressure machinery observable in `Metrics`.
+//!
+//! Every test pins `memory_budget_bytes` explicitly (overriding the
+//! `SPARKLA_MEMORY_BUDGET_BYTES` default read by `ClusterConfig`) so the
+//! suite is deterministic under CI's tiny-budget job too.
+
+use std::sync::atomic::Ordering;
+
+use sparkla::config::ClusterConfig;
+use sparkla::distributed::BlockMatrix;
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+fn budgeted_ctx(budget: Option<u64>, num_executors: usize) -> Context {
+    let mut cfg = ClusterConfig { num_executors, ..Default::default() };
+    cfg.memory_budget_bytes = budget;
+    Context::with_config(cfg)
+}
+
+#[test]
+fn reduce_by_key_spills_and_matches_unlimited_bit_for_bit() {
+    let data: Vec<(u32, u64)> = (0..4000).map(|i| ((i % 97) as u32, i as u64)).collect();
+    let unlimited = budgeted_ctx(None, 4);
+    let mut want = unlimited
+        .parallelize(data.clone(), 16)
+        .map(|p| *p)
+        .reduce_by_key(8, |a, b| a + b)
+        .collect()
+        .unwrap();
+    want.sort();
+    assert_eq!(
+        unlimited.metrics().bytes_spilled.load(Ordering::Relaxed),
+        0,
+        "unlimited budget must never spill"
+    );
+
+    // 16 map tasks x ~250 pairs x 16 deep bytes ≈ 64 KiB of buckets
+    // against a 2 KiB budget: most buckets must spill.
+    let tight = budgeted_ctx(Some(2048), 4);
+    let mut got =
+        tight.parallelize(data, 16).map(|p| *p).reduce_by_key(8, |a, b| a + b).collect().unwrap();
+    got.sort();
+    assert_eq!(got, want, "spilled shuffle must be bit-identical");
+
+    let m = tight.metrics();
+    assert!(m.bytes_spilled.load(Ordering::Relaxed) > 0, "budget below footprint must spill");
+    assert!(m.spill_files.load(Ordering::Relaxed) > 0);
+    assert!(m.bytes_spill_read.load(Ordering::Relaxed) > 0, "reduce side must read spills back");
+}
+
+#[test]
+fn grid_block_multiply_spills_and_matches_unlimited_bit_for_bit() {
+    let mut rng = SplitMix64::new(41);
+    let a = DenseMatrix::randn(48, 36, &mut rng);
+    let b = DenseMatrix::randn(36, 40, &mut rng);
+
+    let unlimited = budgeted_ctx(None, 4);
+    let ba = BlockMatrix::from_local(&unlimited, &a, 7, 5, 3);
+    let bb = BlockMatrix::from_local(&unlimited, &b, 5, 6, 3);
+    let want = ba.multiply(&bb).unwrap().to_local().unwrap();
+    assert_eq!(unlimited.metrics().bytes_spilled.load(Ordering::Relaxed), 0);
+
+    // every shipped block is ~2-3 KiB deep; a 1 KiB budget forces the
+    // simulate-multiply's single shuffle to spill its routed buckets.
+    let tight = budgeted_ctx(Some(1024), 4);
+    let ta = BlockMatrix::from_local(&tight, &a, 7, 5, 3);
+    let tb = BlockMatrix::from_local(&tight, &b, 5, 6, 3);
+    let got = ta.multiply(&tb).unwrap().to_local().unwrap();
+
+    assert_eq!(got.rows, want.rows);
+    assert_eq!(got.cols, want.cols);
+    // bit-identical, not approximately equal: the spill codec encodes
+    // f64 via to_bits and the merge order is unchanged.
+    assert_eq!(got.data, want.data, "spilled multiply must be bit-identical");
+    assert!(tight.metrics().bytes_spilled.load(Ordering::Relaxed) > 0, "multiply must spill");
+}
+
+#[test]
+fn spilled_shuffle_recovers_from_executor_crashes() {
+    let data: Vec<(u32, u64)> = (0..3000).map(|i| ((i % 64) as u32, i as u64)).collect();
+    let clean = budgeted_ctx(None, 4);
+    let mut want = clean
+        .parallelize(data.clone(), 12)
+        .map(|p| *p)
+        .reduce_by_key(6, |a, b| a + b)
+        .collect()
+        .unwrap();
+    want.sort();
+
+    let mut cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    cfg.memory_budget_bytes = Some(2048);
+    cfg.fault.task_fail_prob = 0.05;
+    cfg.fault.executor_kill_prob = 0.03;
+    cfg.fault.seed = 9;
+    cfg.max_task_retries = 12;
+    let faulty = Context::with_config(cfg);
+    let mut got =
+        faulty.parallelize(data, 12).map(|p| *p).reduce_by_key(6, |a, b| a + b).collect().unwrap();
+    got.sort();
+    assert_eq!(got, want, "spill + crash recovery must still be exact");
+
+    let m = faulty.metrics();
+    assert!(m.bytes_spilled.load(Ordering::Relaxed) > 0, "the tight budget must spill");
+    assert!(
+        m.tasks_failed.load(Ordering::Relaxed) > 0
+            || m.executor_crashes.load(Ordering::Relaxed) > 0,
+        "faults should have fired"
+    );
+}
+
+#[test]
+fn lru_eviction_forces_lineage_recompute() {
+    // 8 partitions x 500 u64 = 4000 deep bytes each; a 10 KB budget
+    // holds only 2 of them, so a full pass must pressure-evict and a
+    // second pass must recompute evicted blocks from lineage.
+    let ctx = budgeted_ctx(Some(10_000), 1);
+    let data: Vec<u64> = (0..4000).collect();
+    let rdd = ctx.parallelize(data.clone(), 8).map(|x| x * 2).cache();
+
+    let want: Vec<u64> = data.iter().map(|x| x * 2).collect();
+    assert_eq!(rdd.collect().unwrap(), want);
+    let m = ctx.metrics();
+    assert!(
+        m.blocks_evicted_pressure.load(Ordering::Relaxed) > 0,
+        "8 x 4000B partitions against a 10KB budget must evict"
+    );
+
+    let evicted_after_pass1 = m.blocks_evicted_pressure.load(Ordering::Relaxed);
+    assert_eq!(rdd.collect().unwrap(), want, "recompute after eviction must be exact");
+    assert!(
+        m.lineage_recomputes.load(Ordering::Relaxed) > 0,
+        "a miss on a pressure-evicted block is lineage recovery"
+    );
+    assert!(
+        m.blocks_evicted_pressure.load(Ordering::Relaxed) >= evicted_after_pass1,
+        "eviction counter is monotone"
+    );
+}
+
+#[test]
+fn snapshot_mirrors_counters_and_summary_reports_governance() {
+    let ctx = budgeted_ctx(Some(2048), 2);
+    let data: Vec<(u32, u64)> = (0..2000).map(|i| ((i % 32) as u32, i as u64)).collect();
+    ctx.parallelize(data, 8).map(|p| *p).reduce_by_key(4, |a, b| a + b).collect().unwrap();
+
+    let m = ctx.metrics();
+    let snap = m.snapshot();
+    assert_eq!(snap.bytes_reserved, m.bytes_reserved.load(Ordering::Relaxed));
+    assert_eq!(snap.bytes_spilled, m.bytes_spilled.load(Ordering::Relaxed));
+    assert_eq!(snap.spill_files, m.spill_files.load(Ordering::Relaxed));
+    assert_eq!(snap.bytes_spill_read, m.bytes_spill_read.load(Ordering::Relaxed));
+    assert_eq!(snap.blocks_evicted_pressure, m.blocks_evicted_pressure.load(Ordering::Relaxed));
+    assert_eq!(snap.tasks_started, m.tasks_started.load(Ordering::Relaxed));
+    assert!(snap.bytes_spilled > 0, "tight budget must spill in this job");
+
+    let s = m.summary();
+    assert!(s.contains("mem="), "summary must report memory governance: {s}");
+    assert!(s.contains(&format!("spilled:{}", snap.bytes_spilled)));
+}
