@@ -1,0 +1,210 @@
+//! SL001 — alloc-in-hot-kernel.
+//!
+//! Functions on the zero-alloc contract (PR 3 / PR 6) must not
+//! allocate: compute kernels named `spmv*` / `rspmv*` / `gemm*` /
+//! `spmm*`, and driver-side `*_into` gather fns. A fn is only targeted
+//! when it takes a `&mut` parameter — the out-buffer signature is the
+//! contract; same-named wrappers that *return* fresh storage
+//! (`gemm(a, b) -> DenseMatrix`) are the documented allocation sites.
+//!
+//! Two tiers: kernels ban every allocation/copy construct; `*_into`
+//! drivers additionally may `collect`/`clone` partials shipped across
+//! task boundaries but still must not build per-call scratch
+//! (`with_capacity`, `vec![elem; n]`, `.to_vec()`, `format!`).
+//! `VecPool` acquisition (`take_*`) is the sanctioned scratch path.
+
+use super::model::{FnItem, SourceFile};
+use super::{Corpus, Finding};
+use crate::analysis::lexer::Tok;
+
+const KERNEL_PREFIXES: [&str; 4] = ["spmv", "rspmv", "gemm", "spmm"];
+
+#[derive(Clone, Copy, PartialEq)]
+enum Tier {
+    Kernel,
+    Driver,
+}
+
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &corpus.files {
+        for f in file.fns() {
+            let Some(tier) = tier_of(&f.name) else { continue };
+            if !has_mut_ref_param(file, f) {
+                continue;
+            }
+            scan_body(file, f, tier, &mut findings);
+        }
+    }
+    findings
+}
+
+fn tier_of(name: &str) -> Option<Tier> {
+    if KERNEL_PREFIXES.iter().any(|p| name.starts_with(p)) {
+        return Some(Tier::Kernel);
+    }
+    if name.ends_with("_into") {
+        return Some(Tier::Driver);
+    }
+    None
+}
+
+/// `&mut` (with optional lifetime) anywhere in the parameter list.
+fn has_mut_ref_param(file: &SourceFile, f: &FnItem) -> bool {
+    let toks = &file.tokens;
+    let (open, close) = f.params;
+    let mut i = open + 1;
+    while i < close {
+        if toks[i].is_punct('&') {
+            let mut j = i + 1;
+            if j < close && matches!(toks[j].tok, Tok::Lifetime) {
+                j += 1;
+            }
+            if j < close && toks[j].is_ident("mut") {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+fn scan_body(file: &SourceFile, f: &FnItem, tier: Tier, findings: &mut Vec<Finding>) {
+    let toks = &file.tokens;
+    let (open, close) = f.body;
+    let mut i = open + 1;
+    while i < close {
+        let hit: Option<&'static str> = if is_path_call(file, i, "Vec", "new")
+            || is_path_call(file, i, "String", "new")
+            || is_path_call(file, i, "Box", "new")
+        {
+            if tier == Tier::Kernel {
+                Some("constructor allocation")
+            } else {
+                None
+            }
+        } else if is_macro(file, i, "format") {
+            Some("format! allocates")
+        } else if toks[i].is_ident("with_capacity") {
+            Some("with_capacity scratch allocation")
+        } else if is_method(file, i, "to_vec") {
+            Some(".to_vec() copy")
+        } else if is_macro(file, i, "vec") {
+            match tier {
+                Tier::Kernel => Some("vec! allocation"),
+                Tier::Driver => {
+                    if vec_is_repeat_form(file, i) {
+                        Some("vec![elem; n] scratch allocation")
+                    } else {
+                        None
+                    }
+                }
+            }
+        } else if tier == Tier::Kernel
+            && (is_method(file, i, "collect")
+                || is_method(file, i, "clone")
+                || is_method(file, i, "to_string"))
+        {
+            Some("copying method in kernel")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            findings.push(Finding {
+                rule: "SL001",
+                file: file.path.clone(),
+                line: toks[i].line,
+                message: format!(
+                    "allocation in hot path `{}`: {} (use caller buffers / VecPool)",
+                    f.name, what
+                ),
+            });
+        }
+        i += 1;
+    }
+}
+
+/// `Base :: name` at index `i` pointing at `Base`.
+fn is_path_call(file: &SourceFile, i: usize, base: &str, name: &str) -> bool {
+    let t = &file.tokens;
+    i + 3 < t.len()
+        && t[i].is_ident(base)
+        && t[i + 1].is_punct(':')
+        && t[i + 2].is_punct(':')
+        && t[i + 3].is_ident(name)
+}
+
+/// `. name (` at index `i` pointing at `name`.
+fn is_method(file: &SourceFile, i: usize, name: &str) -> bool {
+    let t = &file.tokens;
+    i >= 1
+        && i + 1 < t.len()
+        && t[i].is_ident(name)
+        && t[i - 1].is_punct('.')
+        && t[i + 1].is_punct('(')
+}
+
+/// `name !` at index `i` pointing at `name`.
+fn is_macro(file: &SourceFile, i: usize, name: &str) -> bool {
+    let t = &file.tokens;
+    i + 1 < t.len() && t[i].is_ident(name) && t[i + 1].is_punct('!')
+}
+
+/// For `vec!` at ident index `i`: true when the delimited args contain
+/// a `;` at top nesting depth — the `vec![elem; n]` repeat form.
+fn vec_is_repeat_form(file: &SourceFile, i: usize) -> bool {
+    let t = &file.tokens;
+    let open = i + 2;
+    let Some(close) = file.match_of(open) else { return false };
+    let mut depth = 0i32;
+    for k in open + 1..close {
+        match &t[k].tok {
+            Tok::Punct('(' | '[' | '{') => depth += 1,
+            Tok::Punct(')' | ']' | '}') => depth -= 1,
+            Tok::Punct(';') if depth == 0 => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::SourceFile;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        let corpus = Corpus { files: vec![SourceFile::parse("t.rs", src)] };
+        run(&corpus)
+    }
+
+    #[test]
+    fn kernel_with_out_param_is_alloc_free() {
+        let f = lint("fn spmv_into(x: &[f64], acc: &mut [f64]) { let t = x.to_vec(); }");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("to_vec"));
+    }
+
+    #[test]
+    fn no_mut_param_exempts() {
+        assert!(lint("fn gemm(a: &[f64]) -> Vec<f64> { a.to_vec() }").is_empty());
+    }
+
+    #[test]
+    fn driver_tier_allows_collect_but_not_repeat_vec() {
+        let ok = lint("fn sum_into(out: &mut [f64]) { let p: Vec<f64> = it().collect(); }");
+        assert!(ok.is_empty());
+        let bad = lint("fn sum_into(out: &mut [f64]) { let p = vec![0.0; out.len()]; }");
+        assert_eq!(bad.len(), 1);
+        let list = lint("fn sum_into(out: &mut [f64]) { let p = vec![out[0]]; }");
+        assert!(list.is_empty());
+    }
+
+    #[test]
+    fn kernel_bans_vec_new_and_format() {
+        let f = lint(
+            "fn gemm_acc(c: &mut [f64]) { let v = Vec::new(); let s = format!(\"x\"); }",
+        );
+        assert_eq!(f.len(), 2);
+    }
+}

@@ -1,0 +1,336 @@
+//! Minimal Rust lexer for the invariant linter.
+//!
+//! Produces a flat token stream with line numbers — enough fidelity to
+//! walk item structure and match token patterns, not a full grammar.
+//! Comments are dropped (except `lint:allow` annotations, which are
+//! collected separately), string/char literal *contents* are discarded
+//! so banned identifiers inside messages never false-positive, and
+//! lifetimes are disambiguated from char literals.
+
+/// One lexed token. Literal payloads are kept only where a pass needs
+/// them (identifiers for pattern matching, numbers for spill tags).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Lifetime,
+    Num(String),
+    Str,
+    Char,
+    Punct(char),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.tok, Tok::Ident(i) if i == s)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(i) => Some(i.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self.tok, Tok::Punct(p) if p == c)
+    }
+}
+
+/// A `// lint:allow(SLxxx) reason` suppression comment. Findings for
+/// `rule` on the same or the next source line are dropped; if a `fn`
+/// signature starts within the next three lines, the suppression covers
+/// that function's whole body (see `analysis::apply_allows`).
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub line: u32,
+}
+
+/// Lexer output: the token stream plus any suppression annotations.
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut tokens = Vec::new();
+    let mut allows = Vec::new();
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments): dropped, but scanned for
+        // lint:allow annotations.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            if let Some(rule) = parse_allow(&text) {
+                allows.push(Allow { rule, line });
+            }
+            continue;
+        }
+        // Block comment, with nesting.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte strings: r"..", r#".."#, b"..", br"..".
+        if c == 'r' || c == 'b' {
+            let tok_line = line;
+            if let Some(next) = try_string_prefix(&chars, i, &mut line) {
+                tokens.push(Token { tok: Tok::Str, line: tok_line });
+                i = next;
+                continue;
+            }
+        }
+        // Plain string literal.
+        if c == '"' {
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            tokens.push(Token { tok: Tok::Str, line: tok_line });
+            continue;
+        }
+        // Lifetime vs char literal.
+        if c == '\'' {
+            let is_lifetime = i + 1 < n
+                && (chars[i + 1].is_alphabetic() || chars[i + 1] == '_')
+                && (i + 2 >= n || chars[i + 2] != '\'');
+            if is_lifetime {
+                i += 1;
+                while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                tokens.push(Token { tok: Tok::Lifetime, line });
+                continue;
+            }
+            i += 1;
+            if i < n && chars[i] == '\\' {
+                i += 2;
+            } else {
+                i += 1;
+            }
+            while i < n && chars[i] != '\'' {
+                i += 1;
+            }
+            i += 1;
+            tokens.push(Token { tok: Tok::Char, line });
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            tokens.push(Token { tok: Tok::Ident(text), line });
+            continue;
+        }
+        // Number (integer, float, hex, suffixed; one fractional part
+        // and one signed exponent).
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            if i + 1 < n && chars[i] == '.' && chars[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            }
+            if i < n
+                && (chars[i] == '+' || chars[i] == '-')
+                && (chars[i - 1] == 'e' || chars[i - 1] == 'E')
+            {
+                i += 1;
+                while i < n && chars[i].is_ascii_digit() {
+                    i += 1;
+                }
+            }
+            let text: String = chars[start..i].iter().collect();
+            tokens.push(Token { tok: Tok::Num(text), line });
+            continue;
+        }
+        tokens.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+
+    Lexed { tokens, allows }
+}
+
+/// Recognize `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#` starting at
+/// `i` (which points at the `r` or `b`). Returns the index just past
+/// the literal, or None if this is an ordinary identifier.
+fn try_string_prefix(chars: &[char], i: usize, line: &mut u32) -> Option<usize> {
+    let n = chars.len();
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    let raw = j < n && chars[j] == 'r';
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        return None;
+    }
+    if !raw && hashes > 0 {
+        return None;
+    }
+    if !raw && j == i {
+        // Just a quote: not our job (caller handles plain strings).
+        return None;
+    }
+    j += 1;
+    if raw {
+        loop {
+            if j >= n {
+                return Some(j);
+            }
+            if chars[j] == '\n' {
+                *line += 1;
+                j += 1;
+                continue;
+            }
+            if chars[j] == '"' {
+                let mut k = 0usize;
+                while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    return Some(j + 1 + hashes);
+                }
+            }
+            j += 1;
+        }
+    } else {
+        // b"..." with escapes.
+        while j < n {
+            match chars[j] {
+                '\\' => j += 2,
+                '"' => return Some(j + 1),
+                '\n' => {
+                    *line += 1;
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+        Some(j)
+    }
+}
+
+fn parse_allow(comment: &str) -> Option<String> {
+    let idx = comment.find("lint:allow(")?;
+    let rest = &comment[idx + "lint:allow(".len()..];
+    let end = rest.find(')')?;
+    let rule = rest[..end].trim();
+    if rule.is_empty() {
+        return None;
+    }
+    Some(rule.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_idents_strings_and_lifetimes() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'q' } // lint:allow(SL001) why");
+        assert!(l.tokens.iter().any(|t| t.is_ident("fn")));
+        assert_eq!(
+            l.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count(),
+            2
+        );
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Char).count(), 1);
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].rule, "SL001");
+    }
+
+    #[test]
+    fn string_contents_are_opaque() {
+        let l = lex("let s = \"unwrap() vec![]\"; let r = r#\"panic!\"#;");
+        assert!(!l.tokens.iter().any(|t| t.is_ident("unwrap")));
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 2);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let l = lex("/* a /* b */ c */ x\ny");
+        let xs: Vec<u32> = l.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(xs, vec![1, 2]);
+    }
+
+    #[test]
+    fn numbers_and_tuple_fields() {
+        let l = lex("t.0 + 1.5e-3 + 0x1f");
+        let nums: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "1.5e-3", "0x1f"]);
+    }
+}

@@ -1,0 +1,402 @@
+//! SL004 — lock-order.
+//!
+//! The PR 7 sharded engine state (scheduler gate + task shards, shuffle
+//! shards, block cache, shared `VecPool`, fault-injector rng/down sets)
+//! is guarded by many small mutexes. Two invariants keep that
+//! deadlock-free:
+//!
+//! 1. Nested acquisitions follow the declared partial order
+//!    ([`ALLOWED_EDGES`], keyed by the receiver field of the
+//!    acquisition) — any other overlap, including re-acquiring the
+//!    same lock, is flagged.
+//! 2. No guard is live across a channel `send` or thread `spawn`: a
+//!    blocked receiver (or a worker waiting to start) must never be
+//!    able to park a lock holder.
+//!
+//! Guard lifetimes are modeled syntactically: a `let`-bound guard lives
+//! to the end of its enclosing block or an explicit `drop(name)`; an
+//! `if let`/`while let`/`match` scrutinee lives through the construct's
+//! first block; any other acquisition is a statement temporary dying at
+//! the next `;`. `.read()`/`.write()` count as acquisitions only when
+//! the receiver is declared `RwLock` in the same file (so `File::read`
+//! stays invisible). Calls into other functions are not traced — the
+//! pass is per-body, by design.
+//!
+//! Scope: `rdd/{exec,shuffle,cache}.rs`, `util/pool.rs`, and the lint
+//! fixtures.
+
+use std::collections::BTreeSet;
+
+use super::model::SourceFile;
+use super::{is_fixture, Corpus, Finding};
+use crate::analysis::lexer::Tok;
+
+/// The declared lock partial order: (outer, inner) receiver fields
+/// that may legitimately nest. `gate -> shards`: the scheduler pushes
+/// a task shard entry under the gate so the condvar wakeup can't race
+/// the enqueue. `rng -> down`: the fault injector marks an executor
+/// down while holding its rng.
+pub const ALLOWED_EDGES: [(&str, &str); 2] = [("gate", "shards"), ("rng", "down")];
+
+const SCOPED_FILES: [&str; 4] = [
+    "rdd/exec.rs",
+    "rdd/shuffle.rs",
+    "rdd/cache.rs",
+    "util/pool.rs",
+];
+
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &corpus.files {
+        let scoped = SCOPED_FILES.iter().any(|s| file.path.ends_with(s))
+            || is_fixture(&file.path);
+        if !scoped {
+            continue;
+        }
+        let rwlocks = rwlock_names(file);
+        for f in file.fns() {
+            scan_fn(file, f.body, &rwlocks, &mut findings);
+        }
+    }
+    findings
+}
+
+/// Names bound to `RwLock` values in this file: struct fields
+/// (`name: RwLock<..>` / `name: std::sync::RwLock<..>`) and direct
+/// bindings (`let name = RwLock::new(..)`, `static NAME: RwLock<..>`).
+fn rwlock_names(file: &SourceFile) -> BTreeSet<String> {
+    let toks = &file.tokens;
+    let mut names = BTreeSet::new();
+    for r in 0..toks.len() {
+        if !toks[r].is_ident("RwLock") {
+            continue;
+        }
+        // `= RwLock::new(..)` — binding is just before the `=`.
+        if r >= 2 && toks[r - 1].is_punct('=') {
+            if let Some(id) = toks[r - 2].ident() {
+                names.insert(id.to_string());
+            }
+            continue;
+        }
+        // `name : [path ::]* RwLock` — walk back over the path.
+        let mut j = r;
+        while j >= 1 && (toks[j - 1].is_punct(':') || toks[j - 1].ident().is_some()) {
+            j -= 1;
+        }
+        if j + 1 < toks.len() && toks[j].ident().is_some() && toks[j + 1].is_punct(':') {
+            if let Some(id) = toks[j].ident() {
+                names.insert(id.to_string());
+            }
+        }
+    }
+    names
+}
+
+struct Guard {
+    /// Receiver field the lock was acquired through (ordering key).
+    lock_name: String,
+    /// Let-binding name, when the guard can be `drop(name)`ed.
+    bind_name: Option<String>,
+    /// Last token index at which the guard is considered live.
+    end: usize,
+    line: u32,
+}
+
+fn scan_fn(
+    file: &SourceFile,
+    body: (usize, usize),
+    rwlocks: &BTreeSet<String>,
+    findings: &mut Vec<Finding>,
+) {
+    let toks = &file.tokens;
+    let mut active: Vec<Guard> = Vec::new();
+    let mut brace_stack: Vec<usize> = vec![body.0];
+    let mut i = body.0 + 1;
+    while i < body.1 {
+        active.retain(|g| g.end >= i);
+        match &toks[i].tok {
+            Tok::Punct('{') => brace_stack.push(i),
+            Tok::Punct('}') => {
+                brace_stack.pop();
+            }
+            Tok::Ident(id) if id == "drop" => {
+                if i + 3 < body.1
+                    && toks[i + 1].is_punct('(')
+                    && toks[i + 3].is_punct(')')
+                {
+                    if let Some(name) = toks[i + 2].ident() {
+                        active.retain(|g| g.bind_name.as_deref() != Some(name));
+                    }
+                }
+            }
+            Tok::Ident(id)
+                if (id == "send" || id == "spawn")
+                    && i + 1 < body.1
+                    && toks[i + 1].is_punct('(')
+                    && !active.is_empty() =>
+            {
+                let held: Vec<&str> =
+                    active.iter().map(|g| g.lock_name.as_str()).collect();
+                findings.push(Finding {
+                    rule: "SL004",
+                    file: file.path.clone(),
+                    line: toks[i].line,
+                    message: format!(
+                        "`{id}` while holding lock(s) [{}] — release before crossing a channel/thread boundary",
+                        held.join(", ")
+                    ),
+                });
+            }
+            _ => {}
+        }
+        if let Some(lock_name) = acquisition_at(file, i, rwlocks) {
+            let rs = receiver_start(file, i);
+            for g in &active {
+                let allowed = ALLOWED_EDGES
+                    .iter()
+                    .any(|(o, n)| *o == g.lock_name && *n == lock_name);
+                if !allowed {
+                    findings.push(Finding {
+                        rule: "SL004",
+                        file: file.path.clone(),
+                        line: toks[i].line,
+                        message: format!(
+                            "nested acquisition `{}` (held since line {}) -> `{}` outside the declared lock order",
+                            g.lock_name, g.line, lock_name
+                        ),
+                    });
+                }
+            }
+            let (bind_name, end) = guard_scope(file, body, i, rs, &brace_stack);
+            active.push(Guard {
+                lock_name,
+                bind_name,
+                end,
+                line: toks[i].line,
+            });
+        }
+        i += 1;
+    }
+}
+
+/// If token `i` is a `.lock()` / `.read()` / `.write()` acquisition,
+/// return the receiver field name. `read`/`write` only count on
+/// `RwLock`-declared receivers.
+fn acquisition_at(file: &SourceFile, i: usize, rwlocks: &BTreeSet<String>) -> Option<String> {
+    let toks = &file.tokens;
+    let method = toks[i].ident()?;
+    if !matches!(method, "lock" | "read" | "write") {
+        return None;
+    }
+    if i == 0
+        || !toks[i - 1].is_punct('.')
+        || i + 2 >= toks.len()
+        || !toks[i + 1].is_punct('(')
+        || !toks[i + 2].is_punct(')')
+    {
+        return None;
+    }
+    let name = receiver_name(file, i)?;
+    if method != "lock" && !rwlocks.contains(&name) {
+        return None;
+    }
+    Some(name)
+}
+
+/// Immediate receiver field of a method call at `i`: walk back over
+/// balanced index/call groups to the nearest identifier.
+fn receiver_name(file: &SourceFile, i: usize) -> Option<String> {
+    let toks = &file.tokens;
+    let mut j = i.checked_sub(2)?;
+    loop {
+        match &toks[j].tok {
+            Tok::Punct(')') | Tok::Punct(']') => {
+                let open = file.match_of(j)?;
+                j = open.checked_sub(1)?;
+            }
+            Tok::Ident(id) => return Some(id.clone()),
+            Tok::Num(_) | Tok::Punct('.') => j = j.checked_sub(1)?,
+            _ => return None,
+        }
+    }
+}
+
+/// First token of the receiver chain for the call at `i` (used to find
+/// the statement head).
+fn receiver_start(file: &SourceFile, i: usize) -> usize {
+    let toks = &file.tokens;
+    let mut j = match i.checked_sub(2) {
+        Some(j) => j,
+        None => return i,
+    };
+    let mut start = i;
+    loop {
+        match &toks[j].tok {
+            Tok::Punct(')') | Tok::Punct(']') => match file.match_of(j) {
+                Some(open) if open >= 1 => {
+                    start = open;
+                    j = open - 1;
+                }
+                _ => return start,
+            },
+            Tok::Ident(_) | Tok::Num(_) => {
+                start = j;
+                if j >= 2 && toks[j - 1].is_punct('.') {
+                    j -= 2;
+                } else if j >= 3 && toks[j - 1].is_punct(':') && toks[j - 2].is_punct(':') {
+                    j -= 3;
+                } else {
+                    return start;
+                }
+            }
+            _ => return start,
+        }
+    }
+}
+
+/// Model the guard's lifetime from its statement head.
+fn guard_scope(
+    file: &SourceFile,
+    body: (usize, usize),
+    i: usize,
+    receiver_start: usize,
+    brace_stack: &[usize],
+) -> (Option<String>, usize) {
+    let toks = &file.tokens;
+    // Statement head: nearest `;`, `{`, or `}` before the receiver.
+    let mut b = receiver_start;
+    while b > body.0 {
+        b -= 1;
+        if matches!(toks[b].tok, Tok::Punct(';' | '{' | '}')) {
+            break;
+        }
+    }
+    let head = b + 1;
+    let block_end = brace_stack
+        .last()
+        .and_then(|&open| file.match_of(open))
+        .unwrap_or(body.1);
+    if toks[head].is_ident("let") {
+        // `let g = ...` / `let mut g = ...` bind; pattern lets (e.g.
+        // `let Some(g) = ...`) get block scope without a drop name.
+        let bind = if head + 2 < body.1
+            && toks[head + 1].ident().is_some()
+            && !toks[head + 1].is_ident("mut")
+            && toks[head + 2].is_punct('=')
+        {
+            toks[head + 1].ident().map(|s| s.to_string())
+        } else if head + 3 < body.1
+            && toks[head + 1].is_ident("mut")
+            && toks[head + 2].ident().is_some()
+            && toks[head + 3].is_punct('=')
+        {
+            toks[head + 2].ident().map(|s| s.to_string())
+        } else {
+            None
+        };
+        return (bind, block_end);
+    }
+    if (toks[head].is_ident("if") || toks[head].is_ident("while") || toks[head].is_ident("match"))
+        && (toks[head].is_ident("match") || toks.get(head + 1).map(|t| t.is_ident("let")).unwrap_or(false))
+    {
+        // Scrutinee temporary: lives through the construct's block.
+        let mut depth = 0i32;
+        let mut k = i + 1;
+        while k < body.1 {
+            match &toks[k].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => {
+                    return (None, file.match_of(k).unwrap_or(body.1));
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        return (None, body.1);
+    }
+    // Statement temporary: dies at the next `;` at this nesting level,
+    // or when the enclosing group/block closes.
+    let mut depth = 0i32;
+    let mut k = i + 1;
+    while k < body.1 {
+        match &toks[k].tok {
+            Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') => {
+                depth -= 1;
+                if depth < 0 {
+                    return (None, k);
+                }
+            }
+            Tok::Punct(';') if depth == 0 => return (None, k),
+            Tok::Punct('{') if depth == 0 => return (None, k),
+            Tok::Punct('}') => return (None, k),
+            _ => {}
+        }
+        k += 1;
+    }
+    (None, body.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::SourceFile;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        let corpus = Corpus {
+            files: vec![SourceFile::parse("tests/lint_fixtures/x.rs", src)],
+        };
+        run(&corpus)
+    }
+
+    #[test]
+    fn undeclared_nesting_is_flagged() {
+        let f = lint(
+            "fn f(s: &S) { let g = s.a.lock().unwrap(); let h = s.b.lock().unwrap(); }",
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("`a`"));
+        assert!(f[0].message.contains("`b`"));
+    }
+
+    #[test]
+    fn declared_edge_and_drop_are_respected() {
+        let ok = lint(
+            "fn f(s: &S) { let gate = s.gate.lock().unwrap(); s.shards[0].lock().unwrap().push(1); drop(gate); s.other.lock().unwrap().touch(); }",
+        );
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn statement_temp_does_not_nest() {
+        let ok = lint(
+            "fn f(s: &S) { s.a.lock().unwrap().push(1); s.b.lock().unwrap().push(2); }",
+        );
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn send_under_guard_is_flagged() {
+        let f = lint("fn f(s: &S, tx: &Tx) { let g = s.a.lock().unwrap(); tx.send(*g); }");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("send"));
+    }
+
+    #[test]
+    fn file_read_is_not_an_acquisition() {
+        let ok = lint("fn f(file: &mut File, s: &S) { let g = s.a.lock().unwrap(); file.read().ok(); }");
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn rwlock_write_counts_when_declared() {
+        let src = "\
+struct S { state: RwLock<u32>, a: Mutex<u32> }
+fn f(s: &S) { let g = s.state.write().unwrap(); let h = s.a.lock().unwrap(); }
+";
+        let f = lint(src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("state"));
+    }
+}

@@ -1,0 +1,227 @@
+//! SL002 — metrics-discipline.
+//!
+//! Every `AtomicU64` field of `Metrics` (PR 6 kernel counters, PR 7
+//! memory gauges) must be (a) incremented somewhere in the crate, (b)
+//! mirrored as a `u64` field of `MetricsSnapshot`, (c) populated in
+//! `Metrics::snapshot()`, and (d) rendered in `Metrics::summary()`.
+//! A counter failing (a) is dead weight; one failing (b)–(d) silently
+//! vanishes from operator-facing output. Snapshot-only fields sourced
+//! elsewhere (e.g. `xla_calls` from the process-global runtime counter)
+//! are deliberately not checked in the reverse direction.
+
+use super::model::SourceFile;
+use super::{Corpus, Finding};
+use crate::analysis::lexer::Tok;
+
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    let Some((file_idx, fields)) = find_struct(corpus, "Metrics", "AtomicU64") else {
+        return Vec::new();
+    };
+    let file = &corpus.files[file_idx];
+    let snap_fields = find_struct(corpus, "MetricsSnapshot", "u64")
+        .map(|(_, f)| f)
+        .unwrap_or_default();
+
+    let snapshot_fn = fn_in_inherent_impl(file, "Metrics", "snapshot");
+    let summary_fn = fn_in_inherent_impl(file, "Metrics", "summary");
+
+    let mut findings = Vec::new();
+    for (field, line) in &fields {
+        if !is_incremented(corpus, field) {
+            findings.push(Finding {
+                rule: "SL002",
+                file: file.path.clone(),
+                line: *line,
+                message: format!("Metrics::{field} is never incremented"),
+            });
+        }
+        if !snap_fields.iter().any(|(f, _)| f == field) {
+            findings.push(Finding {
+                rule: "SL002",
+                file: file.path.clone(),
+                line: *line,
+                message: format!("Metrics::{field} is not mirrored in MetricsSnapshot"),
+            });
+            // Population/rendering are implied-missing; one finding.
+            continue;
+        }
+        match snapshot_fn {
+            Some(body) => {
+                if !struct_literal_sets(file, body, field) {
+                    findings.push(Finding {
+                        rule: "SL002",
+                        file: file.path.clone(),
+                        line: file.line(body.0),
+                        message: format!("snapshot() does not populate `{field}`"),
+                    });
+                }
+            }
+            None => {}
+        }
+        match summary_fn {
+            Some(body) => {
+                if !file.span_has_ident(body, field) {
+                    findings.push(Finding {
+                        rule: "SL002",
+                        file: file.path.clone(),
+                        line: file.line(body.0),
+                        message: format!("summary() does not render `{field}`"),
+                    });
+                }
+            }
+            None => {}
+        }
+    }
+    findings
+}
+
+/// Locate `struct <name>` and collect its fields whose type mentions
+/// `type_filter`. Returns (corpus file index, [(field, line)]).
+fn find_struct(corpus: &Corpus, name: &str, type_filter: &str) -> Option<(usize, Vec<(String, u32)>)> {
+    for (fi, file) in corpus.files.iter().enumerate() {
+        let toks = &file.tokens;
+        for i in 0..toks.len().saturating_sub(2) {
+            if file.is_masked(i)
+                || !toks[i].is_ident("struct")
+                || !toks[i + 1].is_ident(name)
+                || !toks[i + 2].is_punct('{')
+            {
+                continue;
+            }
+            let open = i + 2;
+            let close = file.match_of(open)?;
+            let mut fields = Vec::new();
+            let mut depth = 0i32;
+            let mut k = open + 1;
+            while k < close {
+                match &toks[k].tok {
+                    Tok::Punct('(' | '[' | '{') => depth += 1,
+                    Tok::Punct(')' | ']' | '}') => depth -= 1,
+                    Tok::Ident(id)
+                        if depth == 0
+                            && k + 1 < close
+                            && toks[k + 1].is_punct(':')
+                            && !toks[k + 2].is_punct(':') =>
+                    {
+                        // Field: type runs to the next `,` at depth 0.
+                        let mut t = k + 2;
+                        let mut tdepth = 0i32;
+                        let mut has_type = false;
+                        while t < close {
+                            match &toks[t].tok {
+                                Tok::Punct('(' | '[' | '{') => tdepth += 1,
+                                Tok::Punct(')' | ']' | '}') => tdepth -= 1,
+                                Tok::Punct(',') if tdepth == 0 => break,
+                                Tok::Ident(ty) if ty == type_filter => has_type = true,
+                                _ => {}
+                            }
+                            t += 1;
+                        }
+                        if has_type {
+                            fields.push((id.clone(), toks[k].line));
+                        }
+                        k = t;
+                        continue;
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            return Some((fi, fields));
+        }
+    }
+    None
+}
+
+/// Body span of `fn <fn_name>` inside the inherent `impl <type_name>`
+/// block in `file`.
+fn fn_in_inherent_impl(
+    file: &SourceFile,
+    type_name: &str,
+    fn_name: &str,
+) -> Option<(usize, usize)> {
+    for imp in file.impls() {
+        if imp.trait_name.is_some() || imp.type_name != type_name {
+            continue;
+        }
+        for f in file.fns() {
+            if f.name == fn_name && f.body.0 > imp.body.0 && f.body.1 < imp.body.1 {
+                return Some(f.body);
+            }
+        }
+    }
+    None
+}
+
+/// `<field> . fetch_add` (or `fetch_max`) anywhere unmasked in the
+/// corpus.
+fn is_incremented(corpus: &Corpus, field: &str) -> bool {
+    for file in &corpus.files {
+        let toks = &file.tokens;
+        for i in 0..toks.len().saturating_sub(3) {
+            if file.is_masked(i) {
+                continue;
+            }
+            if toks[i].is_ident(field)
+                && toks[i + 1].is_punct('.')
+                && (toks[i + 2].is_ident("fetch_add") || toks[i + 2].is_ident("fetch_max"))
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// `<field> :` inside the span — a struct-literal assignment (or
+/// shorthand init, which lexes as `field ,` and is caught by the
+/// plain-ident fallback).
+fn struct_literal_sets(file: &SourceFile, body: (usize, usize), field: &str) -> bool {
+    let toks = &file.tokens;
+    for i in body.0..body.1 {
+        if toks[i].is_ident(field)
+            && i + 1 <= body.1
+            && (toks[i + 1].is_punct(':') || toks[i + 1].is_punct(','))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::SourceFile;
+
+    const GOOD: &str = "\
+pub struct Metrics { pub jobs: AtomicU64 }
+pub struct MetricsSnapshot { pub jobs: u64 }
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot { jobs: self.jobs.load(Ordering::Relaxed) }
+    }
+    pub fn summary(&self) -> String { format!(\"jobs={}\", self.snapshot().jobs) }
+    pub fn bump(&self) { self.jobs.fetch_add(1, Ordering::Relaxed); }
+}
+";
+
+    #[test]
+    fn disciplined_metrics_are_clean() {
+        let c = Corpus { files: vec![SourceFile::parse("m.rs", GOOD)] };
+        assert!(run(&c).is_empty());
+    }
+
+    #[test]
+    fn unmirrored_field_is_one_finding() {
+        let src = GOOD.replace(
+            "pub struct Metrics { pub jobs: AtomicU64 }",
+            "pub struct Metrics { pub jobs: AtomicU64, pub tasks: AtomicU64 }",
+        );
+        let c = Corpus { files: vec![SourceFile::parse("m.rs", &src)] };
+        let f = run(&c);
+        // `tasks`: never incremented + not mirrored.
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|x| x.message.contains("tasks")));
+    }
+}

@@ -1,0 +1,475 @@
+//! Item-level view over a token stream: functions with body spans,
+//! trait impls, and macro invocations — plus the span utilities the
+//! passes share.
+//!
+//! Known, deliberate limitations (documented in DESIGN.md §"Static
+//! analysis & invariants"): `#[cfg(test)] mod` bodies and
+//! `macro_rules!` definitions are masked out entirely; closures are not
+//! modeled as items (passes scan call-argument spans instead); type
+//! resolution is by final path segment only.
+
+use super::lexer::{self, Allow, Tok, Token};
+
+/// A `fn` item: name, signature location, parameter-list span, and the
+/// body brace span. Bodiless trait-method declarations are not
+/// recorded.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token indices of the parameter list's `(` and `)`.
+    pub params: (usize, usize),
+    /// Token indices of the body's `{` and `}`.
+    pub body: (usize, usize),
+}
+
+/// An `impl` block. `trait_name` is the final path segment of the
+/// implemented trait (None for inherent impls), `type_name` the final
+/// path segment of the self type (`"(tuple)"` for tuples and unit).
+#[derive(Debug, Clone)]
+pub struct ImplItem {
+    pub trait_name: Option<String>,
+    pub type_name: String,
+    pub line: u32,
+    /// Token indices of the impl body's `{` and `}`.
+    pub body: (usize, usize),
+}
+
+/// A macro invocation `name!(...)` / `name![...]` / `name!{...}`.
+#[derive(Debug, Clone)]
+pub struct MacroCall {
+    pub name: String,
+    pub line: u32,
+    /// Token indices of the opening and closing delimiter.
+    pub args: (usize, usize),
+}
+
+/// A lexed + structurally indexed source file.
+pub struct SourceFile {
+    /// Display path, as given to the loader.
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+    /// For each delimiter token, the index of its partner.
+    matching: Vec<Option<usize>>,
+    /// True for tokens inside `#[cfg(test)] mod` or `macro_rules!`
+    /// bodies — items there are not extracted and passes skip them.
+    masked: Vec<bool>,
+    fns: Vec<FnItem>,
+    impls: Vec<ImplItem>,
+    macros: Vec<MacroCall>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let lexer::Lexed { tokens, allows } = lexer::lex(src);
+        let matching = compute_matching(&tokens);
+        let masked = compute_mask(&tokens, &matching);
+        let mut file = SourceFile {
+            path: path.to_string(),
+            tokens,
+            allows,
+            matching,
+            masked,
+            fns: Vec::new(),
+            impls: Vec::new(),
+            macros: Vec::new(),
+        };
+        file.fns = extract_fns(&file);
+        file.impls = extract_impls(&file);
+        file.macros = extract_macros(&file);
+        file
+    }
+
+    pub fn fns(&self) -> &[FnItem] {
+        &self.fns
+    }
+
+    pub fn impls(&self) -> &[ImplItem] {
+        &self.impls
+    }
+
+    pub fn macros(&self) -> &[MacroCall] {
+        &self.macros
+    }
+
+    /// Partner index of a delimiter token, if balanced.
+    pub fn match_of(&self, i: usize) -> Option<usize> {
+        self.matching.get(i).copied().flatten()
+    }
+
+    pub fn is_masked(&self, i: usize) -> bool {
+        self.masked.get(i).copied().unwrap_or(false)
+    }
+
+    pub fn line(&self, i: usize) -> u32 {
+        self.tokens.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    /// True if any token in `[start, end]` is the given identifier.
+    pub fn span_has_ident(&self, span: (usize, usize), name: &str) -> bool {
+        self.tokens[span.0..=span.1.min(self.tokens.len() - 1)]
+            .iter()
+            .any(|t| t.is_ident(name))
+    }
+}
+
+fn compute_matching(tokens: &[Token]) -> Vec<Option<usize>> {
+    let mut matching = vec![None; tokens.len()];
+    let mut stack: Vec<(char, usize)> = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        match t.tok {
+            Tok::Punct(c @ ('(' | '[' | '{')) => stack.push((c, i)),
+            Tok::Punct(c @ (')' | ']' | '}')) => {
+                let open = match c {
+                    ')' => '(',
+                    ']' => '[',
+                    _ => '{',
+                };
+                if let Some(&(top, j)) = stack.last() {
+                    if top == open {
+                        stack.pop();
+                        matching[j] = Some(i);
+                        matching[i] = Some(j);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    matching
+}
+
+/// Mask `#[cfg(test)] mod` bodies and `macro_rules!` definitions.
+fn compute_mask(tokens: &[Token], matching: &[Option<usize>]) -> Vec<bool> {
+    let mut masked = vec![false; tokens.len()];
+    let n = tokens.len();
+    let mut i = 0usize;
+    while i < n {
+        // macro_rules! name { ... }
+        if tokens[i].is_ident("macro_rules")
+            && i + 2 < n
+            && tokens[i + 1].is_punct('!')
+        {
+            let mut j = i + 2;
+            if tokens[j].ident().is_some() {
+                j += 1;
+            }
+            if j < n && tokens[j].is_punct('{') {
+                if let Some(close) = matching[j] {
+                    for m in masked.iter_mut().take(close + 1).skip(i) {
+                        *m = true;
+                    }
+                    i = close + 1;
+                    continue;
+                }
+            }
+        }
+        // #[cfg(test)] (more attrs)* (pub)? mod name { ... }
+        if tokens[i].is_punct('#')
+            && i + 6 < n
+            && tokens[i + 1].is_punct('[')
+            && tokens[i + 2].is_ident("cfg")
+            && tokens[i + 3].is_punct('(')
+            && tokens[i + 4].is_ident("test")
+            && tokens[i + 5].is_punct(')')
+            && tokens[i + 6].is_punct(']')
+        {
+            let mut j = i + 7;
+            // Skip any further attributes.
+            while j + 1 < n && tokens[j].is_punct('#') && tokens[j + 1].is_punct('[') {
+                match matching[j + 1] {
+                    Some(close) => j = close + 1,
+                    None => break,
+                }
+            }
+            if j < n && tokens[j].is_ident("pub") {
+                j += 1;
+            }
+            if j + 1 < n && tokens[j].is_ident("mod") && tokens[j + 1].ident().is_some() {
+                let mut k = j + 2;
+                // mod body opens at the next `{`.
+                if k < n && tokens[k].is_punct('{') {
+                    if let Some(close) = matching[k] {
+                        k = close;
+                        for m in masked.iter_mut().take(k + 1).skip(i) {
+                            *m = true;
+                        }
+                        i = k + 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    masked
+}
+
+/// Skip a generic parameter list: `idx` points at `<`; returns the
+/// index just past the matching `>`. A `>` directly preceded by `-`
+/// (i.e. `->` in an `Fn() -> T` bound) does not close the list.
+fn skip_generics(tokens: &[Token], idx: usize) -> usize {
+    let n = tokens.len();
+    let mut depth = 1usize;
+    let mut j = idx + 1;
+    while j < n && depth > 0 {
+        if tokens[j].is_punct('<') {
+            depth += 1;
+        } else if tokens[j].is_punct('>') && !tokens[j - 1].is_punct('-') {
+            depth -= 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+fn extract_fns(file: &SourceFile) -> Vec<FnItem> {
+    let tokens = &file.tokens;
+    let n = tokens.len();
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < n {
+        if file.is_masked(i) || !tokens[i].is_ident("fn") {
+            i += 1;
+            continue;
+        }
+        // Require an identifier right after `fn`: this skips
+        // fn-pointer types (`fn(`) and `Fn` trait sugar.
+        let name = match tokens[i + 1].ident() {
+            Some(name) => name.to_string(),
+            None => {
+                i += 1;
+                continue;
+            }
+        };
+        let line = tokens[i].line;
+        let mut j = i + 2;
+        if j < n && tokens[j].is_punct('<') {
+            j = skip_generics(tokens, j);
+        }
+        if j >= n || !tokens[j].is_punct('(') {
+            i += 1;
+            continue;
+        }
+        let params_open = j;
+        let params_close = match file.match_of(j) {
+            Some(c) => c,
+            None => {
+                i += 1;
+                continue;
+            }
+        };
+        // Find the body `{` at paren/bracket depth 0, or a `;`
+        // (bodiless declaration), whichever comes first.
+        let mut k = params_close + 1;
+        let mut depth = 0i32;
+        let mut body = None;
+        while k < n {
+            match &tokens[k].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => {
+                    if let Some(close) = file.match_of(k) {
+                        body = Some((k, close));
+                    }
+                    break;
+                }
+                Tok::Punct(';') if depth == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        if let Some(body) = body {
+            fns.push(FnItem {
+                name,
+                line,
+                params: (params_open, params_close),
+                body,
+            });
+        }
+        i += 2;
+    }
+    fns
+}
+
+fn extract_impls(file: &SourceFile) -> Vec<ImplItem> {
+    let tokens = &file.tokens;
+    let n = tokens.len();
+    let mut impls = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if file.is_masked(i) || !tokens[i].is_ident("impl") {
+            i += 1;
+            continue;
+        }
+        let line = tokens[i].line;
+        // Header runs to the first `{` at paren/bracket depth 0.
+        let mut j = i + 1;
+        if j < n && tokens[j].is_punct('<') {
+            j = skip_generics(tokens, j);
+        }
+        let header_start = j;
+        let mut depth = 0i32;
+        let mut brace = None;
+        while j < n {
+            match &tokens[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => {
+                    brace = Some(j);
+                    break;
+                }
+                Tok::Punct(';') if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(brace) = brace else {
+            i += 1;
+            continue;
+        };
+        let Some(close) = file.match_of(brace) else {
+            i += 1;
+            continue;
+        };
+        // `impl Trait for Type` vs inherent `impl Type`.
+        let mut for_idx = None;
+        for k in header_start..brace {
+            if tokens[k].is_ident("for") {
+                for_idx = Some(k);
+                break;
+            }
+        }
+        let (trait_name, type_start) = match for_idx {
+            Some(f) => {
+                let mut t = None;
+                for k in header_start..f {
+                    if let Some(id) = tokens[k].ident() {
+                        if id != "where" {
+                            t = Some(id.to_string());
+                        }
+                    }
+                }
+                (t, f + 1)
+            }
+            None => (None, header_start),
+        };
+        let type_name = type_name_of(tokens, type_start, brace);
+        impls.push(ImplItem {
+            trait_name,
+            type_name,
+            line,
+            body: (brace, close),
+        });
+        i = brace + 1;
+    }
+    impls
+}
+
+/// Final path segment of the self type in `[start, end)`: skips `&`,
+/// `mut`, and lifetimes; tuples and unit collapse to `"(tuple)"`.
+fn type_name_of(tokens: &[Token], start: usize, end: usize) -> String {
+    let mut k = start;
+    while k < end {
+        match &tokens[k].tok {
+            Tok::Punct('&') | Tok::Lifetime => k += 1,
+            Tok::Ident(id) if id == "mut" => k += 1,
+            _ => break,
+        }
+    }
+    if k < end && tokens[k].is_punct('(') {
+        return "(tuple)".to_string();
+    }
+    let mut last = String::new();
+    while k < end {
+        match &tokens[k].tok {
+            Tok::Ident(id) if id != "where" => last = id.clone(),
+            Tok::Punct(':') => {}
+            Tok::Punct('<') => break,
+            _ => break,
+        }
+        k += 1;
+    }
+    last
+}
+
+fn extract_macros(file: &SourceFile) -> Vec<MacroCall> {
+    let tokens = &file.tokens;
+    let n = tokens.len();
+    let mut macros = Vec::new();
+    for i in 0..n {
+        if file.is_masked(i) {
+            continue;
+        }
+        let Some(name) = tokens[i].ident() else { continue };
+        if name == "macro_rules" {
+            continue;
+        }
+        if i + 2 < n
+            && tokens[i + 1].is_punct('!')
+            && matches!(tokens[i + 2].tok, Tok::Punct('(' | '[' | '{'))
+        {
+            if let Some(close) = file.match_of(i + 2) {
+                macros.push(MacroCall {
+                    name: name.to_string(),
+                    line: tokens[i].line,
+                    args: (i + 2, close),
+                });
+            }
+        }
+    }
+    macros
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_fns_impls_and_macros() {
+        let src = "\
+impl Spill for Row {
+    fn encode(&self, out: &mut Vec<u8>) { out.push(0); }
+}
+pub fn spmv_into<T: Clone>(x: &[T], acc: &mut [f64]) -> usize {
+    vec![0.0; 3].len()
+}
+";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.impls().len(), 1);
+        assert_eq!(f.impls()[0].trait_name.as_deref(), Some("Spill"));
+        assert_eq!(f.impls()[0].type_name, "Row");
+        let names: Vec<&str> = f.fns().iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["encode", "spmv_into"]);
+        assert_eq!(f.fns()[1].line, 4);
+        assert!(f.macros().iter().any(|m| m.name == "vec"));
+    }
+
+    #[test]
+    fn masks_test_mods_and_macro_rules() {
+        let src = "\
+macro_rules! gen { ($t:ty) => { fn hidden() {} }; }
+fn visible() {}
+#[cfg(test)]
+mod tests {
+    fn test_only() {}
+}
+";
+        let f = SourceFile::parse("t.rs", src);
+        let names: Vec<&str> = f.fns().iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["visible"]);
+    }
+
+    #[test]
+    fn tuple_and_reference_self_types() {
+        let src = "\
+impl SizeOf for (usize, usize) { fn deep_size(&self) -> usize { 16 } }
+impl Spill for &'static str { fn encode(&self, o: &mut Vec<u8>) {} }
+";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.impls()[0].type_name, "(tuple)");
+        assert_eq!(f.impls()[1].type_name, "str");
+    }
+}

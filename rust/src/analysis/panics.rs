@@ -1,0 +1,158 @@
+//! SL006 — panic-in-task-path.
+//!
+//! The scheduler has no `catch_unwind`: a panic inside an executor
+//! task closure kills the worker thread outright, bypassing the fault
+//! injection / lineage-retry machinery that `Err` returns flow
+//! through. Task code must therefore route failures as `Err`, never
+//! `unwrap`/`expect`/`panic!`.
+//!
+//! Scope is the *argument spans of the task-constructor calls*
+//! ([`TASK_CONSTRUCTORS`]): the closures handed to `run_job`,
+//! `from_parts`, `fold_partitions`, `map_partitions_with_index`,
+//! `zip_partitions`, and `stream_records` run on executor threads.
+//! Record-level closures (`map`, `aggregate` seq/comb, …) execute
+//! *inside* these partition-level closures at run time and are wrapped
+//! by the same contract, but are not scanned — their shape-invariant
+//! `expect`s (validated at construction) would drown the signal; the
+//! partition boundary is where a panic escapes to the scheduler.
+//! Closures bound to a variable and passed by name are likewise not
+//! traced (documented limitation — verified by review where used).
+//!
+//! Exemption: `.lock().expect(..)` / `.read().expect(..)` /
+//! `.write().expect(..)` directly on a guard acquisition is the
+//! standard lock-poison idiom — a poisoned lock means a sibling worker
+//! already panicked, and aborting is the correct response.
+
+use super::model::SourceFile;
+use super::{Corpus, Finding};
+use crate::analysis::lexer::Tok;
+
+/// Calls whose argument closures execute on executor threads.
+pub const TASK_CONSTRUCTORS: [&str; 6] = [
+    "run_job",
+    "from_parts",
+    "fold_partitions",
+    "map_partitions_with_index",
+    "zip_partitions",
+    "stream_records",
+];
+
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &corpus.files {
+        let toks = &file.tokens;
+        for i in 0..toks.len() {
+            if file.is_masked(i) {
+                continue;
+            }
+            let Some(name) = toks[i].ident() else { continue };
+            if !TASK_CONSTRUCTORS.contains(&name) {
+                continue;
+            }
+            // Skip the constructor's own definition (`fn run_job(`).
+            if i >= 1 && toks[i - 1].is_ident("fn") {
+                continue;
+            }
+            if i + 1 >= toks.len() || !toks[i + 1].is_punct('(') {
+                continue;
+            }
+            let Some(close) = file.match_of(i + 1) else { continue };
+            scan_args(file, name, (i + 1, close), &mut findings);
+        }
+    }
+    findings
+}
+
+fn scan_args(file: &SourceFile, ctor: &str, span: (usize, usize), findings: &mut Vec<Finding>) {
+    let toks = &file.tokens;
+    let mut k = span.0 + 1;
+    while k < span.1 {
+        let hit: Option<&str> = match &toks[k].tok {
+            Tok::Ident(id) if id == "unwrap" && is_method_call(toks, k) => Some("unwrap"),
+            Tok::Ident(id) if id == "expect" && is_method_call(toks, k) => {
+                if lock_poison_exempt(toks, k) {
+                    None
+                } else {
+                    Some("expect")
+                }
+            }
+            Tok::Ident(id)
+                if matches!(id.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+                    && k + 1 < span.1
+                    && toks[k + 1].is_punct('!') =>
+            {
+                Some("panic-family macro")
+            }
+            _ => None,
+        };
+        if let Some(what) = hit {
+            findings.push(Finding {
+                rule: "SL006",
+                file: file.path.clone(),
+                line: toks[k].line,
+                message: format!(
+                    "{what} inside `{ctor}` task closure — return Err so the scheduler can retry"
+                ),
+            });
+        }
+        k += 1;
+    }
+}
+
+fn is_method_call(toks: &[crate::analysis::lexer::Token], k: usize) -> bool {
+    k >= 1 && toks[k - 1].is_punct('.') && k + 1 < toks.len() && toks[k + 1].is_punct('(')
+}
+
+/// `.lock().expect(..)` (resp. read/write): tokens before the `.` are
+/// `lock ( )`.
+fn lock_poison_exempt(toks: &[crate::analysis::lexer::Token], k: usize) -> bool {
+    if k < 4 {
+        return false;
+    }
+    toks[k - 2].is_punct(')')
+        && toks[k - 3].is_punct('(')
+        && toks[k - 4]
+            .ident()
+            .map(|id| matches!(id, "lock" | "read" | "write"))
+            .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::SourceFile;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        let corpus = Corpus { files: vec![SourceFile::parse("t.rs", src)] };
+        run(&corpus)
+    }
+
+    #[test]
+    fn unwrap_in_task_closure_is_flagged() {
+        let f = lint(
+            "fn f(c: &Cluster) { c.run_job(4, Arc::new(move |p, _e| { let v = data.get(p).unwrap(); Ok(v) })); }",
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("unwrap"));
+    }
+
+    #[test]
+    fn lock_poison_expect_is_exempt() {
+        let ok = lint(
+            "fn f(c: &Cluster) { c.run_job(1, Arc::new(move |_p, _e| Ok(*state.lock().expect(\"poisoned\")))); }",
+        );
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn panics_outside_task_constructors_are_not_scanned() {
+        let ok = lint("fn f(x: Option<u32>) -> u32 { x.unwrap() }");
+        assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn definition_site_is_skipped() {
+        let ok = lint("fn run_job(n: usize, t: Task) { t.unwrap_all(); }");
+        assert!(ok.is_empty());
+    }
+}

@@ -1,0 +1,146 @@
+//! SL005 — partitioner-propagation.
+//!
+//! PR 5's shuffle-skipping contract: every keyed-RDD combinator that
+//! produces a hash-partitioned result must record that fact, or
+//! downstream keyed ops re-shuffle data that is already in place
+//! (`Metrics::shuffles_skipped` silently stops firing). A combinator
+//! is *targeted* when its return type is a pair RDD (`Rdd<(..)>`), and
+//! *compliant* when its body either touches the partitioner directly
+//! (`with_partitioner` / `partitioner`) or delegates to another
+//! compliant targeted combinator — computed to a fixed point, so
+//! `reduce_by_key -> reduce_by_key_with -> combine_by_key_with` chains
+//! inherit compliance from the one place that sets it.
+//!
+//! Scope: `rdd/core.rs`, `rdd/pair.rs`, and the lint fixtures.
+
+use super::model::SourceFile;
+use super::{is_fixture, Corpus, Finding};
+
+const SCOPED_FILES: [&str; 2] = ["rdd/core.rs", "rdd/pair.rs"];
+
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    // (file index, fn index, compliant)
+    let mut targets: Vec<(usize, usize, bool)> = Vec::new();
+    for (fi, file) in corpus.files.iter().enumerate() {
+        let scoped = SCOPED_FILES.iter().any(|s| file.path.ends_with(s))
+            || is_fixture(&file.path);
+        if !scoped {
+            continue;
+        }
+        for (xi, f) in file.fns().iter().enumerate() {
+            if !returns_pair_rdd(file, f.params.1, f.body.0) {
+                continue;
+            }
+            let direct = file.span_has_ident(f.body, "with_partitioner")
+                || file.span_has_ident(f.body, "partitioner");
+            targets.push((fi, xi, direct));
+        }
+    }
+    // Fixed point: delegating to a compliant target is compliant.
+    loop {
+        let mut changed = false;
+        for i in 0..targets.len() {
+            if targets[i].2 {
+                continue;
+            }
+            let (fi, xi, _) = targets[i];
+            let body = corpus.files[fi].fns()[xi].body;
+            let delegates = targets.iter().any(|&(cfi, cxi, ok)| {
+                ok && calls(&corpus.files[fi], body, &corpus.files[cfi].fns()[cxi].name)
+            });
+            if delegates {
+                targets[i].2 = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    targets
+        .iter()
+        .filter(|(_, _, ok)| !ok)
+        .map(|&(fi, xi, _)| {
+            let file = &corpus.files[fi];
+            let f = &file.fns()[xi];
+            Finding {
+                rule: "SL005",
+                file: file.path.clone(),
+                line: f.line,
+                message: format!(
+                    "`{}` returns a keyed RDD without setting or propagating a partitioner",
+                    f.name
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Return type between the params' `)` and the body's `{` matches
+/// `Rdd < (` — a pair RDD.
+fn returns_pair_rdd(file: &SourceFile, params_close: usize, body_open: usize) -> bool {
+    let toks = &file.tokens;
+    let mut i = params_close + 1;
+    while i + 2 < body_open {
+        if toks[i].is_ident("Rdd") && toks[i + 1].is_punct('<') && toks[i + 2].is_punct('(') {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// `name (` or `name ::` call anywhere in the span.
+fn calls(file: &SourceFile, body: (usize, usize), name: &str) -> bool {
+    let toks = &file.tokens;
+    for i in body.0..body.1 {
+        if toks[i].is_ident(name) && i + 1 <= body.1 && toks[i + 1].is_punct('(') {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::SourceFile;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        let corpus = Corpus {
+            files: vec![SourceFile::parse("tests/lint_fixtures/x.rs", src)],
+        };
+        run(&corpus)
+    }
+
+    #[test]
+    fn direct_and_delegating_combinators_are_compliant() {
+        let src = "\
+fn by_key(r: &Rdd<(u64, f64)>, part: Partitioner) -> Rdd<(u64, f64)> {
+    r.shuffle(&part).with_partitioner(part)
+}
+fn outer(r: &Rdd<(u64, f64)>, part: Partitioner) -> Rdd<(u64, f64)> {
+    by_key(r, part)
+}
+";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn dropping_the_partitioner_is_flagged() {
+        let src = "\
+fn by_key(r: &Rdd<(u64, f64)>, parts: usize) -> Rdd<(u64, f64)> {
+    r.reshuffle(parts)
+}
+";
+        let f = lint(src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("by_key"));
+    }
+
+    #[test]
+    fn non_pair_rdds_are_not_targeted() {
+        let src = "fn map_all(r: &Rdd<u64>) -> Rdd<u64> { r.map(|x| x + 1) }";
+        assert!(lint(src).is_empty());
+    }
+}

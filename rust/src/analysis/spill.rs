@@ -1,0 +1,250 @@
+//! SL003 — spill-codec safety.
+//!
+//! The PR 7 spill path round-trips shuffle buckets and cached blocks
+//! through `Spill::encode`/`decode`. Three invariants:
+//!
+//! 1. Enum-style codecs (an `encode` that writes literal
+//!    `out.push(<int>)` discriminant tags) use collision-free tags —
+//!    a duplicated tag silently mis-decodes one variant as another.
+//! 2. Any such tagged `decode` keeps a wildcard `_ =>` arm, so a
+//!    corrupted run surfaces as `Err`, not an abort.
+//! 3. Every type that implements `Spill` also implements `SizeOf` —
+//!    spilled data must be accountable against the memory budget.
+//!    (`SizeOf`-only types, e.g. `Vector`, are fine: sized for cache
+//!    accounting but never shipped through the spill codec.)
+//!
+//! Impls arrive either as literal `impl` blocks or through the
+//! `pod_spill!` / `pod_size_of!` / `tuple_size_of!` /
+//! `plain_partition_key!` macros in `rdd/memory.rs` and `rdd/pair.rs`;
+//! both sources are read. Tuples are covered by `tuple_size_of!`
+//! generating both traits at once and are skipped in the pairing
+//! check.
+
+use std::collections::BTreeSet;
+
+use super::model::SourceFile;
+use super::{Corpus, Finding};
+use crate::analysis::lexer::Tok;
+
+pub fn run(corpus: &Corpus) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut spill_types: Vec<(String, String, u32)> = Vec::new(); // (type, file, line)
+    let mut sizeof_types: BTreeSet<String> = BTreeSet::new();
+    let mut key_types: Vec<(String, String, u32)> = Vec::new();
+
+    for file in &corpus.files {
+        for imp in file.impls() {
+            match imp.trait_name.as_deref() {
+                Some("Spill") => {
+                    spill_types.push((imp.type_name.clone(), file.path.clone(), imp.line));
+                    check_tags(file, imp.body, &imp.type_name, &mut findings);
+                }
+                Some("SizeOf") => {
+                    sizeof_types.insert(imp.type_name.clone());
+                }
+                Some("PartitionableKey") => {
+                    key_types.push((imp.type_name.clone(), file.path.clone(), imp.line));
+                }
+                _ => {}
+            }
+        }
+        for mc in file.macros() {
+            match mc.name.as_str() {
+                "pod_spill" => {
+                    for (ty, line) in macro_type_args(file, mc.args) {
+                        spill_types.push((ty, file.path.clone(), line));
+                    }
+                }
+                "pod_size_of" => {
+                    for (ty, _) in macro_type_args(file, mc.args) {
+                        sizeof_types.insert(ty);
+                    }
+                }
+                "tuple_size_of" => {
+                    sizeof_types.insert("(tuple)".to_string());
+                    spill_types.push(("(tuple)".to_string(), file.path.clone(), mc.line));
+                }
+                "plain_partition_key" => {
+                    for (ty, line) in macro_type_args(file, mc.args) {
+                        key_types.push((ty, file.path.clone(), line));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let spill_names: BTreeSet<&str> =
+        spill_types.iter().map(|(t, _, _)| t.as_str()).collect();
+    for (ty, file, line) in &spill_types {
+        if ty == "(tuple)" {
+            continue;
+        }
+        if !sizeof_types.contains(ty) {
+            findings.push(Finding {
+                rule: "SL003",
+                file: file.clone(),
+                line: *line,
+                message: format!(
+                    "`{ty}` implements Spill without SizeOf — spilled bytes would be unaccountable"
+                ),
+            });
+        }
+    }
+    // Keyed-op bound: shuffle keys are both sized (budget accounting)
+    // and spillable (bucket spill path).
+    for (ty, file, line) in &key_types {
+        if ty == "(tuple)" {
+            continue;
+        }
+        if !spill_names.contains(ty.as_str()) || !sizeof_types.contains(ty) {
+            findings.push(Finding {
+                rule: "SL003",
+                file: file.clone(),
+                line: *line,
+                message: format!(
+                    "partitionable key `{ty}` lacks a Spill or SizeOf impl"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+/// Type-name arguments of a pod-impl macro invocation: plain idents,
+/// plus `()` spelled as adjacent parens.
+fn macro_type_args(file: &SourceFile, args: (usize, usize)) -> Vec<(String, u32)> {
+    let toks = &file.tokens;
+    let mut out = Vec::new();
+    let mut k = args.0 + 1;
+    while k < args.1 {
+        match &toks[k].tok {
+            Tok::Ident(id) => out.push((id.clone(), toks[k].line)),
+            Tok::Punct('(') if k + 1 < args.1 && toks[k + 1].is_punct(')') => {
+                out.push(("(tuple)".to_string(), toks[k].line));
+                k += 1;
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    out
+}
+
+/// Inside one `impl Spill for T` body: collect `push(<int>)` tags in
+/// `encode`, flag duplicates, and require a `_ =>` arm in `decode`
+/// whenever tags exist.
+fn check_tags(file: &SourceFile, body: (usize, usize), ty: &str, findings: &mut Vec<Finding>) {
+    let mut encode = None;
+    let mut decode = None;
+    for f in file.fns() {
+        if f.body.0 > body.0 && f.body.1 < body.1 {
+            if f.name == "encode" {
+                encode = Some(f);
+            } else if f.name == "decode" {
+                decode = Some(f);
+            }
+        }
+    }
+    let Some(encode) = encode else { return };
+    let toks = &file.tokens;
+    let mut tags: Vec<(String, u32)> = Vec::new();
+    for i in encode.body.0..encode.body.1 {
+        if toks[i].is_ident("push") && i + 2 < encode.body.1 && toks[i + 1].is_punct('(') {
+            if let Tok::Num(n) = &toks[i + 2].tok {
+                tags.push((n.clone(), toks[i].line));
+            }
+        }
+    }
+    if tags.is_empty() {
+        return;
+    }
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for (tag, line) in &tags {
+        if !seen.insert(tag.as_str()) {
+            findings.push(Finding {
+                rule: "SL003",
+                file: file.path.clone(),
+                line: *line,
+                message: format!("`impl Spill for {ty}`: duplicate encode tag {tag}"),
+            });
+        }
+    }
+    match decode {
+        Some(d) => {
+            let mut has_wildcard = false;
+            for i in d.body.0..d.body.1.saturating_sub(2) {
+                if toks[i].is_punct('_')
+                    && toks[i + 1].is_punct('=')
+                    && toks[i + 2].is_punct('>')
+                {
+                    has_wildcard = true;
+                    break;
+                }
+            }
+            if !has_wildcard {
+                findings.push(Finding {
+                    rule: "SL003",
+                    file: file.path.clone(),
+                    line: d.line,
+                    message: format!(
+                        "`impl Spill for {ty}`: tagged decode lacks a `_ =>` corruption arm"
+                    ),
+                });
+            }
+        }
+        None => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::SourceFile;
+
+    fn lint(src: &str) -> Vec<Finding> {
+        let corpus = Corpus { files: vec![SourceFile::parse("t.rs", src)] };
+        run(&corpus)
+    }
+
+    #[test]
+    fn duplicate_tags_and_missing_wildcard_flagged() {
+        let src = "\
+impl SizeOf for Shape { fn deep_size(&self) -> usize { 4 } }
+impl Spill for Shape {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self { A => out.push(0), B => out.push(1), C => out.push(1) }
+    }
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        match u8::decode(src)? { 0 => a(src), 1 => b(src) }
+    }
+}
+";
+        let f = lint(src);
+        assert_eq!(f.len(), 2);
+        assert!(f[0].message.contains("duplicate encode tag 1"));
+        assert!(f[1].message.contains("corruption arm"));
+    }
+
+    #[test]
+    fn pairing_via_macros_is_recognized() {
+        let src = "pod_size_of!(u8, u16);\npod_spill!(u8, u16);\n";
+        assert!(lint(src).is_empty());
+        let bad = "pod_spill!(u8);\n";
+        let f = lint(bad);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("without SizeOf"));
+    }
+
+    #[test]
+    fn untagged_codec_needs_no_wildcard() {
+        let src = "\
+impl SizeOf for Row { fn deep_size(&self) -> usize { 8 } }
+impl Spill for Row {
+    fn encode(&self, out: &mut Vec<u8>) { self.values.encode(out); }
+    fn decode(src: &mut &[u8]) -> Result<Self> { Ok(Row { values: Vec::decode(src)? }) }
+}
+";
+        assert!(lint(src).is_empty());
+    }
+}

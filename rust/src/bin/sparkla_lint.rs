@@ -1,0 +1,71 @@
+//! `sparkla-lint` — run the engine invariant passes (SL001–SL006) over
+//! one or more source trees.
+//!
+//! Usage: `sparkla-lint [PATH ...]` (default: `src`). Each PATH may be
+//! a `.rs` file or a directory walked recursively. Findings print as
+//! `file:line RULE message`, one per line.
+//!
+//! Exit codes: 0 = clean, 1 = findings, 2 = usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sparkla::analysis::{run_all, Corpus};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "-h" || a == "--help") {
+        print_help();
+        return ExitCode::SUCCESS;
+    }
+    if let Some(bad) = args.iter().find(|a| a.starts_with('-')) {
+        eprintln!("sparkla-lint: unknown option `{bad}`");
+        print_help();
+        return ExitCode::from(2);
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from("src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    for r in &roots {
+        if !r.exists() {
+            eprintln!("sparkla-lint: no such path: {}", r.display());
+            return ExitCode::from(2);
+        }
+    }
+    let corpus = match Corpus::load_paths(&roots) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("sparkla-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = run_all(&corpus);
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("sparkla-lint: clean ({} files)", corpus.files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("sparkla-lint: {} finding(s)", findings.len());
+        ExitCode::from(1)
+    }
+}
+
+fn print_help() {
+    println!(
+        "sparkla-lint — engine invariant linter (SL001..SL006)
+
+USAGE:
+    sparkla-lint [PATH ...]      lint .rs files/trees (default: src)
+
+Findings print as `file:line RULE message`; suppress a finding with
+`// lint:allow(RULE) reason` on the preceding line. Rules are
+catalogued in DESIGN.md under \"Static analysis & invariants\".
+
+EXIT CODES:
+    0  clean    1  findings    2  usage or I/O error"
+    );
+}

@@ -491,6 +491,7 @@ impl BlockMatrix {
                             ls.iter().map(|(k, m)| (*k, m.clone())).collect();
                         for (k, m) in rs {
                             match acc.get_mut(k) {
+                                // lint:allow(SL006) shapes validated at construction
                                 Some(a) => a.add_assign(m).expect("validated block shapes"),
                                 None => {
                                     acc.insert(*k, m.clone());

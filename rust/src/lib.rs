@@ -88,7 +88,16 @@
 //! `spill_files` / `blocks_evicted_pressure`. The default is unlimited:
 //! nothing spills and behavior is byte-for-byte unchanged (DESIGN.md
 //! §"Memory governance").
+//!
+//! The engine's hand-maintained invariants (zero-alloc kernels,
+//! metrics discipline, spill-codec safety, lock order, partitioner
+//! propagation, panic-free task paths) are enforced mechanically by
+//! the in-crate [`analysis`] linter: `cargo run --bin sparkla-lint`
+//! reports violations as `file:line SL00N message`, and the tier-1
+//! `cargo test --test engine_lint` gate keeps the crate clean
+//! (DESIGN.md §"Static analysis & invariants").
 
+pub mod analysis;
 pub mod error;
 pub mod util;
 pub mod config;

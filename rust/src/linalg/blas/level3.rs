@@ -140,6 +140,8 @@ pub fn gemm_parallel(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
 
 /// Row-band GEMM on the shared worker pool. Returns false (after all
 /// submitted tasks quiesced) if the pool could not run the whole batch.
+// lint:allow(SL001) deliberate per-band local accumulators + boxed task
+// submission; the zero-alloc hot paths are gemm_acc / gemm_blocked_into
 fn gemm_parallel_pooled(
     p: &dyn pool::TaskPool,
     a: &DenseMatrix,
@@ -192,6 +194,7 @@ fn gemm_parallel_pooled(
 }
 
 /// Scoped-thread fallback (no shared pool registered).
+// lint:allow(SL001) per-band local accumulators, folded into `c` once per band
 fn gemm_parallel_scoped(a: &DenseMatrix, b: &DenseMatrix, c: &mut DenseMatrix, threads: usize) {
     let (m, n) = (a.rows, b.cols);
     // split C's rows into `threads` contiguous bands

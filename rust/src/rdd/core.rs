@@ -571,10 +571,14 @@ impl<T: Send + Sync + 'static> Rdd<T> {
             Arc::new(move |p, exec| {
                 let mut acc = Some(z.clone());
                 me.stream_records(p, exec, &mut |t| {
-                    let a = acc.take().expect("aggregate accumulator");
-                    acc = Some(seq(a, t));
+                    // take/put round-trips within one sink call, so the
+                    // slot is always occupied on entry (SL006: no panics
+                    // in the task path — a lost slot becomes a task Err)
+                    if let Some(a) = acc.take() {
+                        acc = Some(seq(a, t));
+                    }
                 })?;
-                Ok(acc.expect("aggregate accumulator"))
+                acc.ok_or_else(|| Error::msg("aggregate: accumulator lost"))
             }),
         )?;
         Ok(partials.into_iter().fold(zero, comb))
@@ -603,10 +607,14 @@ impl<T: Send + Sync + 'static> Rdd<T> {
             Arc::new(move |p, exec| {
                 let mut acc = Some(z.clone());
                 me.stream_records(p, exec, &mut |t| {
-                    let a = acc.take().expect("tree_aggregate accumulator");
-                    acc = Some(seq(a, t));
+                    // take/put round-trips within one sink call, so the
+                    // slot is always occupied on entry (SL006: no panics
+                    // in the task path — a lost slot becomes a task Err)
+                    if let Some(a) = acc.take() {
+                        acc = Some(seq(a, t));
+                    }
                 })?;
-                Ok(acc.expect("tree_aggregate accumulator"))
+                acc.ok_or_else(|| Error::msg("tree_aggregate: accumulator lost"))
             }),
         )?;
         let partials = tree_combine(self.cluster(), partials, comb.clone(), fanin)?;
@@ -707,7 +715,9 @@ where
                     .take()
                     .ok_or_else(|| Error::msg("tree_aggregate: combine group consumed twice"))?;
                 let mut it = group.into_iter();
-                let first = it.next().expect("non-empty group");
+                let first = it
+                    .next()
+                    .ok_or_else(|| Error::msg("tree_aggregate: empty combine group"))?;
                 Ok(it.fold(first, |a, b| combf(a, b)))
             }),
         )?;

@@ -73,8 +73,6 @@ pub struct Metrics {
     /// Cached blocks evicted by the LRU under memory pressure (crash
     /// evictions are counted separately in `blocks_evicted`).
     pub blocks_evicted_pressure: AtomicU64,
-    /// XLA executions dispatched by the runtime.
-    pub xla_calls: AtomicU64,
     /// CSR kernel dispatches (compiled-partition SpMV/rSpMV/SpMM and
     /// sparse block kernels).
     pub kernels_csr: AtomicU64,
@@ -117,8 +115,9 @@ pub struct MetricsSnapshot {
     pub spill_files: u64,
     pub bytes_spill_read: u64,
     pub blocks_evicted_pressure: u64,
-    /// Cluster-dispatched + runtime-global XLA executions (the same sum
-    /// `summary()` has always reported).
+    /// XLA executions dispatched by the runtime (sourced from the
+    /// process-global `runtime::client::XLA_CALLS`; SL002 retired the
+    /// never-incremented per-cluster counter).
     pub xla_calls: u64,
     pub kernels_csr: u64,
     pub kernels_csc: u64,
@@ -152,8 +151,7 @@ impl Metrics {
             spill_files: self.spill_files.load(Ordering::Relaxed),
             bytes_spill_read: self.bytes_spill_read.load(Ordering::Relaxed),
             blocks_evicted_pressure: self.blocks_evicted_pressure.load(Ordering::Relaxed),
-            xla_calls: self.xla_calls.load(Ordering::Relaxed)
-                + crate::runtime::client::XLA_CALLS.load(Ordering::Relaxed),
+            xla_calls: crate::runtime::client::XLA_CALLS.load(Ordering::Relaxed),
             kernels_csr: self.kernels_csr.load(Ordering::Relaxed),
             kernels_csc: self.kernels_csc.load(Ordering::Relaxed),
             kernels_coo: self.kernels_coo.load(Ordering::Relaxed),
@@ -375,7 +373,13 @@ impl VecPool {
     }
 
     fn take_raw(&self) -> Option<Vec<f64>> {
-        self.bufs.lock().expect("vec pool").pop()
+        let v = self.bufs.lock().expect("vec pool").pop();
+        if let Some(b) = &v {
+            // put() refuses zero-capacity buffers, so a degenerate pooled
+            // buffer means the recycling contract broke upstream
+            debug_assert!(b.capacity() > 0, "VecPool: pooled buffer with zero capacity");
+        }
+        v
     }
 
     /// A zeroed buffer of exactly `len` (pooled capacity when available).
@@ -415,6 +419,7 @@ impl VecPool {
             return;
         }
         let mut g = self.bufs.lock().expect("vec pool");
+        debug_assert!(g.len() <= Self::MAX_POOLED, "VecPool: pool grew past MAX_POOLED");
         if g.len() < Self::MAX_POOLED {
             g.push(v);
         }

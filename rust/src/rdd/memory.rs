@@ -532,6 +532,13 @@ impl MemoryManager {
         let _ = self
             .used
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                // a release larger than the gauge is a double-release or a
+                // mis-accounted reservation; release() stays saturating in
+                // release builds so the gauge clamps instead of wrapping
+                debug_assert!(
+                    cur >= bytes,
+                    "MemoryManager::release: returning {bytes} bytes with only {cur} reserved"
+                );
                 Some(cur.saturating_sub(bytes))
             });
     }

@@ -140,6 +140,24 @@ impl ShuffleStore {
         if let Some(Slot::Resident { bytes: old, .. }) = g.insert(key, slot) {
             self.memory.release(old);
         }
+        // every resident slot in this (locked) shard holds a live
+        // reservation, so the shard's resident bytes can never exceed the
+        // manager's gauge — other shards only add to the right-hand side
+        #[cfg(debug_assertions)]
+        {
+            let shard_resident: u64 = g
+                .values()
+                .map(|s| match s {
+                    Slot::Resident { bytes, .. } => *bytes,
+                    Slot::Spilled { .. } => 0,
+                })
+                .sum();
+            debug_assert!(
+                shard_resident <= self.memory.used(),
+                "shuffle shard accounts {shard_resident} resident bytes > gauge {}",
+                self.memory.used()
+            );
+        }
     }
 
     fn resident_slot<T: Send + Sync + SizeOf + Spill + 'static>(

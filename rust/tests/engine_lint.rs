@@ -1,0 +1,96 @@
+//! Tier-1 gate for the engine invariant linter (DESIGN.md §"Static
+//! analysis & invariants"): the crate's own sources must be clean
+//! under all six passes, and every fixture under
+//! `tests/lint_fixtures/` must trip its pass exactly as golden-recorded
+//! in the sibling `.expected` file (`RULE:line` per line).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sparkla::analysis::{run_all, Corpus};
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures")
+}
+
+#[test]
+fn crate_sources_are_lint_clean() {
+    let corpus = Corpus::load_dir(&src_root()).expect("read rust/src");
+    assert!(corpus.files.len() > 40, "corpus unexpectedly small");
+    let findings = run_all(&corpus);
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        findings.is_empty(),
+        "engine invariant violations:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn fixtures_trip_their_passes() {
+    let mut fixtures: Vec<PathBuf> = fs::read_dir(fixture_dir())
+        .expect("read lint_fixtures")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "rs").unwrap_or(false))
+        .collect();
+    fixtures.sort();
+    assert_eq!(fixtures.len(), 6, "one fixture per pass");
+    for fixture in fixtures {
+        let corpus = Corpus::load_paths(&[fixture.clone()]).expect("load fixture");
+        let mut got: Vec<String> = run_all(&corpus)
+            .iter()
+            .map(|f| format!("{}:{}", f.rule, f.line))
+            .collect();
+        got.sort();
+        let expected_path = fixture.with_extension("expected");
+        let mut want: Vec<String> = fs::read_to_string(&expected_path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", expected_path.display()))
+            .lines()
+            .map(|l| l.trim().to_string())
+            .filter(|l| !l.is_empty())
+            .collect();
+        want.sort();
+        assert_eq!(
+            got,
+            want,
+            "fixture {} findings diverge from golden file",
+            fixture.display()
+        );
+    }
+}
+
+#[test]
+fn fixture_corpus_is_nonzero() {
+    // The binary's exit-code contract: non-zero on the fixture tree.
+    let corpus = Corpus::load_dir(&fixture_dir()).expect("load fixture dir");
+    assert!(
+        !run_all(&corpus).is_empty(),
+        "fixture corpus must produce findings"
+    );
+}
+
+#[test]
+fn every_pass_is_represented_in_goldens() {
+    let mut rules: Vec<String> = Vec::new();
+    for entry in fs::read_dir(fixture_dir()).expect("read lint_fixtures") {
+        let p = entry.expect("dir entry").path();
+        if p.extension().map(|x| x == "expected").unwrap_or(false) {
+            for line in fs::read_to_string(&p).expect("read golden").lines() {
+                if let Some((rule, _)) = line.trim().split_once(':') {
+                    rules.push(rule.to_string());
+                }
+            }
+        }
+    }
+    rules.sort();
+    rules.dedup();
+    assert_eq!(
+        rules,
+        vec!["SL001", "SL002", "SL003", "SL004", "SL005", "SL006"],
+        "each of the six rules needs at least one golden finding"
+    );
+}

@@ -1,0 +1,16 @@
+// SL001 fixture: kernel-named fns with `&mut` out-params that allocate.
+
+pub fn spmv_into(x: &[f64], acc: &mut [f64]) {
+    let tmp = vec![0.0; acc.len()];
+    let copy = x.to_vec();
+    acc[0] = tmp[0] + copy[0];
+}
+
+pub fn scale_into(alpha: f64, out: &mut Vec<f64>) {
+    *out = Vec::with_capacity(4);
+    out.push(alpha);
+}
+
+pub fn gemm(a: &[f64]) -> Vec<f64> {
+    a.to_vec()
+}

@@ -1,0 +1,26 @@
+// SL002 fixture: a counter that is neither incremented nor surfaced.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Metrics {
+    pub jobs: AtomicU64,
+    pub tasks_lost: AtomicU64,
+}
+
+pub struct MetricsSnapshot {
+    pub jobs: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot { jobs: self.jobs.load(Ordering::Relaxed) }
+    }
+
+    pub fn summary(&self) -> String {
+        format!("jobs={}", self.snapshot().jobs)
+    }
+
+    pub fn bump_job(&self) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,25 @@
+// SL003 fixture: colliding enum tags, no corruption arm, and a
+// Spill impl with no SizeOf pairing.
+
+pub enum Shape {
+    Flat(u32),
+    Tall(u32),
+    Wide(u32),
+}
+
+impl Spill for Shape {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Shape::Flat(x) => { out.push(0); x.encode(out); }
+            Shape::Tall(x) => { out.push(1); x.encode(out); }
+            Shape::Wide(x) => { out.push(1); x.encode(out); }
+        }
+    }
+
+    fn decode(src: &mut &[u8]) -> Result<Self> {
+        match u8::decode(src)? {
+            0 => Ok(Shape::Flat(u32::decode(src)?)),
+            1 => Ok(Shape::Tall(u32::decode(src)?)),
+        }
+    }
+}

@@ -1,0 +1,28 @@
+// SL004 fixture: an undeclared nested acquisition and a guard held
+// across a channel send.
+
+use std::sync::{mpsc, Mutex, RwLock};
+
+pub struct Shards {
+    pub left: Mutex<Vec<u64>>,
+    pub right: Mutex<Vec<u64>>,
+    pub state: RwLock<u64>,
+}
+
+impl Shards {
+    pub fn bad_nest(&self) -> u64 {
+        let l = self.left.lock().unwrap();
+        let r = self.right.lock().unwrap();
+        l[0] + r[0]
+    }
+
+    pub fn bad_send(&self, tx: &mpsc::Sender<u64>) {
+        let s = self.state.write().unwrap();
+        tx.send(*s).unwrap();
+    }
+
+    pub fn fine(&self) -> u64 {
+        let l = { *self.left.lock().unwrap().first().unwrap_or(&0) };
+        l + *self.state.read().unwrap()
+    }
+}

@@ -1,0 +1,10 @@
+// SL005 fixture: a keyed combinator that drops the partitioner on
+// the shuffle floor, next to a compliant one.
+
+pub fn group_pairs(input: &Rdd<(u64, f64)>, parts: usize) -> Rdd<(u64, f64)> {
+    input.reshuffle(parts)
+}
+
+pub fn group_pairs_with(input: &Rdd<(u64, f64)>, part: Partitioner) -> Rdd<(u64, f64)> {
+    input.reshuffle(part.num_partitions()).with_partitioner(part)
+}

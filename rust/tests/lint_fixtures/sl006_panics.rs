@@ -1,0 +1,15 @@
+// SL006 fixture: panics inside a task-constructor closure, next to
+// the sanctioned lock-poison idiom.
+
+pub fn launch(cluster: &Cluster, data: &Store, state: &Lock) {
+    cluster.run_job(4, move |p, _exec| {
+        let v = data.get(p).unwrap();
+        if v == 0 {
+            panic!("empty partition");
+        }
+        Ok(v)
+    });
+    cluster.run_job(1, move |_p, _exec| {
+        Ok(*state.lock().expect("sibling worker panicked"))
+    });
+}

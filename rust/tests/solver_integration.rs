@@ -152,8 +152,7 @@ fn xla_and_native_gradients_agree_when_artifacts_present() {
         assert!((gx[j] - gn[j]).abs() < 5e-3 * scale, "grad[{j}]: {} vs {}", gx[j], gn[j]);
     }
     assert!(
-        cx.metrics().xla_calls.load(std::sync::atomic::Ordering::Relaxed) == 0
-            || cx.runtime().is_some(),
+        cx.metrics().snapshot().xla_calls == 0 || cx.runtime().is_some(),
         "xla path must actually engage"
     );
 }
