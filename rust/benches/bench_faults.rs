@@ -1,0 +1,136 @@
+//! Fault-tolerance benchmarks (the fault-lifecycle PR, measured):
+//!
+//! 1. `reduce_by_key` under a sweep of injected fault rates — fault-free
+//!    vs task failures + executor crashes at 2%, 5%, and 10% per attempt
+//!    — reporting the recovery overhead each rate costs relative to the
+//!    clean run (the paper's lineage-recovery cost, quantified);
+//! 2. an injected-straggler workload with speculative execution off vs
+//!    on, reporting the tail-latency win speculation buys.
+//!
+//! Every faulty run is checked bit-identical to the fault-free result
+//! before it is timed. Writes `target/experiments/BENCH_faults.json`.
+
+use std::sync::atomic::Ordering;
+
+use sparkla::bench::{bench, BenchConfig, Table};
+use sparkla::config::ClusterConfig;
+use sparkla::Context;
+
+/// Budget pinned to `None` so the sweep measures recovery cost, not
+/// spill traffic, regardless of the `SPARKLA_MEMORY_BUDGET_BYTES` env.
+fn faulty_ctx(task_fail: f64, exec_kill: f64, delay: f64, seed: u64) -> Context {
+    let mut cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    cfg.memory_budget_bytes = None;
+    cfg.fault.task_fail_prob = task_fail;
+    cfg.fault.executor_kill_prob = exec_kill;
+    cfg.fault.delay_prob = delay;
+    cfg.fault.delay_ms = 5;
+    cfg.fault.seed = seed;
+    cfg.max_task_retries = 12;
+    Context::with_config(cfg)
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let mut table = Table::new(&["benchmark", "time", "detail"]);
+
+    // ---- reduce_by_key across a fault-rate sweep
+    let n_rec: usize = if fast { 40_000 } else { 200_000 };
+    let data: Vec<(u32, u64)> = (0..n_rec).map(|i| ((i % 256) as u32, i as u64)).collect();
+    let rates: [f64; 4] = [0.0, 0.02, 0.05, 0.10];
+
+    let clean = faulty_ctx(0.0, 0.0, 0.0, 0);
+    let mut want = clean
+        .parallelize(data.clone(), 16)
+        .map(|p| *p)
+        .reduce_by_key(8, |a, b| a + b)
+        .collect()
+        .unwrap();
+    want.sort();
+
+    let mut base_median = 0.0f64;
+    let mut rate_json = vec![];
+    for &rate in &rates {
+        // crashes at half the task-fault rate: they are the costlier
+        // fault (cache + map-output eviction -> stage-level recovery)
+        let ctx = faulty_ctx(rate, rate / 2.0, 0.0, 0xFA17);
+        let rdd = ctx.parallelize(data.clone(), 16).map(|p| *p);
+        let mut got = rdd.reduce_by_key(8, |a, b| a + b).collect().unwrap();
+        got.sort();
+        assert_eq!(got, want, "fault rate {rate} changed the result");
+        let m = bench(&format!("rbk_fault_{rate}"), &cfg, || {
+            std::hint::black_box(rdd.reduce_by_key(8, |a, b| a + b).count().unwrap());
+        });
+        if rate == 0.0 {
+            base_median = m.median();
+        }
+        let overhead = m.median() / base_median.max(1e-12);
+        let s = ctx.metrics().snapshot();
+        table.row(&[
+            format!("reduce_by_key fault_rate={rate}"),
+            format!("{:.1} ms", m.median() * 1e3),
+            format!(
+                "failed={} retried={} crashes={} reruns={} ({overhead:.2}x)",
+                s.tasks_failed, s.tasks_retried, s.executor_crashes, s.map_stages_rerun
+            ),
+        ]);
+        rate_json.push(format!(
+            "    {{\"rate\": {rate}, \"median_sec\": {:.6e}, \"tasks_failed\": {}, \"tasks_retried\": {}, \"executor_crashes\": {}, \"map_stages_rerun\": {}, \"overhead_vs_clean\": {overhead:.3}}}",
+            m.median(),
+            s.tasks_failed,
+            s.tasks_retried,
+            s.executor_crashes,
+            s.map_stages_rerun
+        ));
+    }
+
+    // ---- injected stragglers: speculation off vs on
+    let n_straggle: usize = if fast { 20_000 } else { 100_000 };
+    let sdata: Vec<i64> = (0..n_straggle as i64).collect();
+    let mut spec_medians = [0.0f64; 2];
+    let mut spec_counts = [0u64; 2];
+    for (i, speculate) in [false, true].into_iter().enumerate() {
+        let mut cc = ClusterConfig { num_executors: 4, ..Default::default() };
+        cc.memory_budget_bytes = None;
+        cc.fault.delay_prob = 0.15;
+        cc.fault.delay_ms = 5;
+        cc.fault.seed = 0x57A7;
+        cc.max_task_retries = 12;
+        cc.speculation.enabled = speculate;
+        cc.speculation.min_stall_ms = 2;
+        cc.speculation.tick_ms = 1;
+        let ctx = Context::with_config(cc);
+        let rdd = ctx.parallelize(sdata.clone(), 32).map(|x| x * 3);
+        let m = bench(if speculate { "straggle_spec_on" } else { "straggle_spec_off" }, &cfg, || {
+            std::hint::black_box(rdd.count().unwrap());
+        });
+        spec_medians[i] = m.median();
+        spec_counts[i] = ctx.metrics().tasks_speculated.load(Ordering::Relaxed);
+        table.row(&[
+            format!("stragglers speculation={}", if speculate { "on" } else { "off" }),
+            format!("{:.1} ms", m.median() * 1e3),
+            format!(
+                "delayed={} speculated={} wins={}",
+                ctx.metrics().tasks_delayed.load(Ordering::Relaxed),
+                spec_counts[i],
+                ctx.metrics().speculation_wins.load(Ordering::Relaxed)
+            ),
+        ]);
+    }
+    let spec_speedup = spec_medians[0] / spec_medians[1].max(1e-12);
+
+    let json = format!(
+        "{{\n  \"bench\": \"faults\",\n  \"records\": {n_rec},\n  \"fault_rates\": [\n{}\n  ],\n  \"straggler_spec_off_median_sec\": {:.6e},\n  \"straggler_spec_on_median_sec\": {:.6e},\n  \"straggler_speculation_speedup\": {spec_speedup:.3},\n  \"tasks_speculated\": {}\n}}\n",
+        rate_json.join(",\n"),
+        spec_medians[0],
+        spec_medians[1],
+        spec_counts[1]
+    );
+    let json_path = std::path::Path::new("target/experiments/BENCH_faults.json");
+    std::fs::create_dir_all(json_path.parent().unwrap()).unwrap();
+    std::fs::write(json_path, json).unwrap();
+
+    println!("{}", table.render());
+    println!("results -> {json_path:?}");
+}

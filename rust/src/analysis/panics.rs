@@ -8,8 +8,9 @@
 //!
 //! Scope is the *argument spans of the task-constructor calls*
 //! ([`TASK_CONSTRUCTORS`]): the closures handed to `run_job`,
-//! `from_parts`, `fold_partitions`, `map_partitions_with_index`,
-//! `zip_partitions`, and `stream_records` run on executor threads.
+//! `run_job_opts`, `from_parts`, `fold_partitions`,
+//! `map_partitions_with_index`, `zip_partitions`, and `stream_records`
+//! run on executor threads.
 //! Record-level closures (`map`, `aggregate` seq/comb, …) execute
 //! *inside* these partition-level closures at run time and are wrapped
 //! by the same contract, but are not scanned — their shape-invariant
@@ -28,8 +29,9 @@ use super::{Corpus, Finding};
 use crate::analysis::lexer::Tok;
 
 /// Calls whose argument closures execute on executor threads.
-pub const TASK_CONSTRUCTORS: [&str; 6] = [
+pub const TASK_CONSTRUCTORS: [&str; 7] = [
     "run_job",
+    "run_job_opts",
     "from_parts",
     "fold_partitions",
     "map_partitions_with_index",
@@ -142,6 +144,15 @@ mod tests {
             "fn f(c: &Cluster) { c.run_job(1, Arc::new(move |_p, _e| Ok(*state.lock().expect(\"poisoned\")))); }",
         );
         assert!(ok.is_empty());
+    }
+
+    #[test]
+    fn run_job_opts_closures_are_scanned() {
+        let f = lint(
+            "fn f(c: &Cluster) { c.run_job_opts(4, Arc::new(move |p, _e| { let v = data.get(p).expect(\"missing\"); Ok(v) }), opts); }",
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("run_job_opts"));
     }
 
     #[test]

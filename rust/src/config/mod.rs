@@ -8,22 +8,87 @@ pub mod parse;
 use crate::error::{Error, Result};
 
 /// Fault-injection settings for the simulated cluster (all probabilities
-/// per *task attempt*; deterministic under `seed`).
+/// per *task attempt*; deterministic under `seed` — decisions are keyed
+/// by `(job, partition, attempt)`, so outcomes do not depend on thread
+/// scheduling).
 #[derive(Debug, Clone)]
 pub struct FaultConfig {
     /// Probability a task attempt fails with a (retryable) injected fault.
     pub task_fail_prob: f64,
     /// Probability a task attempt takes down its whole executor —
-    /// evicting every cached block that executor held (forces lineage
-    /// recompute, the paper's §1.1(3) claim).
+    /// evicting every cached block *and every shuffle map output* that
+    /// executor held (forces block-level lineage recompute and
+    /// stage-level `FetchFailed` recovery, the paper's §1.1(3) claim).
     pub executor_kill_prob: f64,
+    /// Probability a task attempt fails *after* its work — and any
+    /// shuffle writes it performed — have landed (a mid-task fault). The
+    /// retried attempt overwrites the partial state. Skipped for
+    /// non-replayable jobs (`tree_aggregate` combine rounds).
+    pub mid_task_fail_prob: f64,
+    /// Probability a task attempt silently drops its executor's shuffle
+    /// map outputs without failing the task (models lost shuffle files
+    /// on a live executor — disk failure, external shuffle loss).
+    pub shuffle_loss_prob: f64,
+    /// Probability a spill-to-disk write fails with an injected I/O
+    /// error (exercises the `ShuffleStore` resident-fallback path,
+    /// counted in `Metrics::spill_failures`).
+    pub spill_fail_prob: f64,
+    /// Probability a task attempt is delayed by `delay_ms` before its
+    /// work starts (an injected straggler — the speculation trigger).
+    pub delay_prob: f64,
+    /// Straggler delay in milliseconds (applied when `delay_prob` fires).
+    pub delay_ms: u64,
     /// RNG seed for the injector.
     pub seed: u64,
 }
 
 impl Default for FaultConfig {
     fn default() -> Self {
-        FaultConfig { task_fail_prob: 0.0, executor_kill_prob: 0.0, seed: 0xFA17 }
+        FaultConfig {
+            task_fail_prob: 0.0,
+            executor_kill_prob: 0.0,
+            mid_task_fail_prob: 0.0,
+            shuffle_loss_prob: 0.0,
+            spill_fail_prob: 0.0,
+            delay_prob: 0.0,
+            delay_ms: 15,
+            seed: 0xFA17,
+        }
+    }
+}
+
+/// Speculative-execution policy (Spark's `spark.speculation.*`): when a
+/// job's live tasks stall past `multiplier ×` the `quantile`-th
+/// completed-task duration (floored at `min_stall_ms`), a clone is
+/// launched on another worker; the first result wins and the loser is
+/// cancelled cooperatively at its next cancellation point.
+#[derive(Debug, Clone)]
+pub struct SpeculationConfig {
+    /// Master switch (off by default — zero behavior change).
+    pub enabled: bool,
+    /// Quantile of completed-task durations the stall threshold is
+    /// measured against (Spark's `speculation.quantile`, default 0.75).
+    pub quantile: f64,
+    /// Stall threshold multiplier over the quantile duration (Spark's
+    /// `speculation.multiplier`).
+    pub multiplier: f64,
+    /// Floor for the stall threshold in milliseconds, so sub-millisecond
+    /// task jitter never triggers clones.
+    pub min_stall_ms: u64,
+    /// Driver poll interval while waiting on task completions with
+    /// speculation (or a deadline) armed.
+    pub tick_ms: u64,
+}
+
+impl Default for SpeculationConfig {
+    fn default() -> Self {
+        SpeculationConfig {
+            enabled: false,
+            quantile: 0.75,
+            multiplier: 1.5,
+            min_stall_ms: 20,
+            tick_ms: 5,
+        }
     }
 }
 
@@ -42,6 +107,19 @@ pub struct ClusterConfig {
     pub default_parallelism: usize,
     /// Fault injection.
     pub fault: FaultConfig,
+    /// Speculative execution of stalled tasks.
+    pub speculation: SpeculationConfig,
+    /// Base delay for the seeded exponential backoff between task
+    /// retries, in ms (0 — the default — disables backoff entirely:
+    /// retries re-enqueue immediately, the pre-PR-9 behavior). Attempt
+    /// `k` waits ~`base × 2^(k-1)` ms, jittered deterministically.
+    pub retry_backoff_base_ms: u64,
+    /// Cap on a single backoff sleep, in ms.
+    pub retry_backoff_max_ms: u64,
+    /// Per-job wall-clock deadline in ms (`None` = unlimited). A job
+    /// still waiting on partitions past this surfaces
+    /// `Error::DeadlineExceeded` with partition/attempt/fault context.
+    pub job_deadline_ms: Option<u64>,
     /// Directory holding AOT artifacts (`manifest.txt` + `*.hlo.txt`).
     pub artifacts_dir: String,
     /// Use the XLA/PJRT runtime for per-partition kernels when artifacts
@@ -95,6 +173,10 @@ impl Default for ClusterConfig {
             max_task_retries: 4,
             default_parallelism: 8,
             fault: FaultConfig::default(),
+            speculation: SpeculationConfig::default(),
+            retry_backoff_base_ms: 0,
+            retry_backoff_max_ms: 100,
+            job_deadline_ms: None,
             artifacts_dir: "artifacts".into(),
             use_xla: false,
             memory_budget_bytes,
@@ -135,7 +217,49 @@ impl ClusterConfig {
                 "fault.executor_kill_prob" => {
                     self.fault.executor_kill_prob = v.parse().map_err(|_| bad("f64"))?
                 }
+                "fault.mid_task_fail_prob" => {
+                    self.fault.mid_task_fail_prob = v.parse().map_err(|_| bad("f64"))?
+                }
+                "fault.shuffle_loss_prob" => {
+                    self.fault.shuffle_loss_prob = v.parse().map_err(|_| bad("f64"))?
+                }
+                "fault.spill_fail_prob" => {
+                    self.fault.spill_fail_prob = v.parse().map_err(|_| bad("f64"))?
+                }
+                "fault.delay_prob" => {
+                    self.fault.delay_prob = v.parse().map_err(|_| bad("f64"))?
+                }
+                "fault.delay_ms" => self.fault.delay_ms = v.parse().map_err(|_| bad("u64"))?,
                 "fault.seed" => self.fault.seed = v.parse().map_err(|_| bad("u64"))?,
+                "speculation.enabled" => {
+                    self.speculation.enabled = v.parse().map_err(|_| bad("bool"))?
+                }
+                "speculation.quantile" => {
+                    self.speculation.quantile = v.parse().map_err(|_| bad("f64"))?
+                }
+                "speculation.multiplier" => {
+                    self.speculation.multiplier = v.parse().map_err(|_| bad("f64"))?
+                }
+                "speculation.min_stall_ms" => {
+                    self.speculation.min_stall_ms = v.parse().map_err(|_| bad("u64"))?
+                }
+                "speculation.tick_ms" => {
+                    self.speculation.tick_ms = v.parse().map_err(|_| bad("u64"))?
+                }
+                "retry_backoff_base_ms" => {
+                    self.retry_backoff_base_ms = v.parse().map_err(|_| bad("u64"))?
+                }
+                "retry_backoff_max_ms" => {
+                    self.retry_backoff_max_ms = v.parse().map_err(|_| bad("u64"))?
+                }
+                "job_deadline_ms" => {
+                    let t = v.trim().to_lowercase();
+                    self.job_deadline_ms = if t == "none" || t == "unlimited" {
+                        None
+                    } else {
+                        Some(t.parse().map_err(|_| bad("ms (u64) or \"none\""))?)
+                    }
+                }
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
                 "use_xla" => self.use_xla = v.parse().map_err(|_| bad("bool"))?,
                 "memory_budget_bytes" => {
@@ -165,7 +289,10 @@ impl ClusterConfig {
     pub fn apply_env(&mut self) -> Result<()> {
         for (k, v) in std::env::vars() {
             if let Some(rest) = k.strip_prefix("SPARKLA_") {
-                let key = rest.to_lowercase().replacen("fault_", "fault.", 1);
+                let key = rest
+                    .to_lowercase()
+                    .replacen("fault_", "fault.", 1)
+                    .replacen("speculation_", "speculation.", 1);
                 if key == "local_threads" {
                     continue; // consumed by util::pool
                 }
@@ -186,10 +313,21 @@ impl ClusterConfig {
         for (name, p) in [
             ("task_fail_prob", self.fault.task_fail_prob),
             ("executor_kill_prob", self.fault.executor_kill_prob),
+            ("mid_task_fail_prob", self.fault.mid_task_fail_prob),
+            ("shuffle_loss_prob", self.fault.shuffle_loss_prob),
+            ("spill_fail_prob", self.fault.spill_fail_prob),
+            ("delay_prob", self.fault.delay_prob),
+            ("speculation.quantile", self.speculation.quantile),
         ] {
             if !(0.0..=1.0).contains(&p) {
                 return Err(Error::InvalidArgument(format!("{name} must be in [0,1], got {p}")));
             }
+        }
+        if self.speculation.multiplier < 1.0 {
+            return Err(Error::InvalidArgument(format!(
+                "speculation.multiplier must be >= 1.0, got {}",
+                self.speculation.multiplier
+            )));
         }
         if self.max_task_retries == 0 {
             return Err(Error::InvalidArgument("max_task_retries must be >= 1".into()));
@@ -230,6 +368,46 @@ mod tests {
         assert!(c.apply_kv(&[("no_such_key".into(), "1".into())]).is_err());
         assert!(c.apply_kv(&[("num_executors".into(), "0".into())]).is_err());
         assert!(c.apply_kv(&[("memory_budget_bytes".into(), "lots".into())]).is_err());
+    }
+
+    #[test]
+    fn fault_lifecycle_and_speculation_knobs() {
+        let mut c = ClusterConfig::default();
+        c.apply_kv(&[
+            ("fault.mid_task_fail_prob".into(), "0.1".into()),
+            ("fault.shuffle_loss_prob".into(), "0.2".into()),
+            ("fault.spill_fail_prob".into(), "0.3".into()),
+            ("fault.delay_prob".into(), "0.4".into()),
+            ("fault.delay_ms".into(), "25".into()),
+            ("speculation.enabled".into(), "true".into()),
+            ("speculation.quantile".into(), "0.9".into()),
+            ("speculation.multiplier".into(), "2.0".into()),
+            ("speculation.min_stall_ms".into(), "10".into()),
+            ("speculation.tick_ms".into(), "2".into()),
+            ("retry_backoff_base_ms".into(), "4".into()),
+            ("retry_backoff_max_ms".into(), "64".into()),
+            ("job_deadline_ms".into(), "5000".into()),
+        ])
+        .unwrap();
+        assert_eq!(c.fault.mid_task_fail_prob, 0.1);
+        assert_eq!(c.fault.shuffle_loss_prob, 0.2);
+        assert_eq!(c.fault.spill_fail_prob, 0.3);
+        assert_eq!(c.fault.delay_prob, 0.4);
+        assert_eq!(c.fault.delay_ms, 25);
+        assert!(c.speculation.enabled);
+        assert_eq!(c.speculation.quantile, 0.9);
+        assert_eq!(c.speculation.multiplier, 2.0);
+        assert_eq!(c.speculation.min_stall_ms, 10);
+        assert_eq!(c.speculation.tick_ms, 2);
+        assert_eq!(c.retry_backoff_base_ms, 4);
+        assert_eq!(c.retry_backoff_max_ms, 64);
+        assert_eq!(c.job_deadline_ms, Some(5000));
+        c.apply_kv(&[("job_deadline_ms".into(), "none".into())]).unwrap();
+        assert_eq!(c.job_deadline_ms, None);
+        // out-of-range values rejected like the legacy probs
+        assert!(c.apply_kv(&[("fault.shuffle_loss_prob".into(), "1.5".into())]).is_err());
+        assert!(c.apply_kv(&[("speculation.quantile".into(), "-0.1".into())]).is_err());
+        assert!(c.apply_kv(&[("speculation.multiplier".into(), "0.5".into())]).is_err());
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::linalg::sparse::{spmm_acc_ds, spmm_acc_ss, CsrMatrix};
 use crate::rdd::core::Prep;
 use crate::rdd::pair::Partitioner;
 use crate::rdd::shuffle::ShuffleDep;
-use crate::rdd::{Metrics, Rdd};
+use crate::rdd::{Metrics, Rdd, ShuffleRerun};
 
 /// `from_coordinate` keeps a block sparse when its fill fraction
 /// (entries / rows·cols) is at or below this threshold; denser blocks
@@ -901,8 +901,9 @@ fn route_mul_side(
     let dests = Arc::new(dests.clone());
     let num_out = part.num_partitions();
     let n_map = blocks.num_partitions();
-    cluster.run_job(
-        n_map,
+    // shared routing task: the full stage now, and exactly the lost map
+    // partitions again if a reduce-side fetch misses (stage-level lineage)
+    let route_task: Arc<dyn Fn(usize, usize) -> Result<()> + Send + Sync> =
         Arc::new(move |p, exec| {
             let mut buckets: Vec<Vec<((usize, usize), Arc<Block>)>> =
                 (0..num_out).map(|_| Vec::new()).collect();
@@ -923,9 +924,26 @@ fn route_mul_side(
                     cl.shuffle.put(shuffle_id, base + p, b, bucket);
                 }
             }
+            // register under the side's base offset, even for all-empty
+            // maps: a reduce-side miss then means "lost", not "empty"
+            cl.shuffle.register_map_output(shuffle_id, base + p, exec);
             Ok(())
-        }),
-    )?;
+        });
+    cluster.run_job(n_map, Arc::clone(&route_task))?;
+    let cl_rerun = Arc::clone(cluster);
+    cluster.register_map_rerun(
+        shuffle_id,
+        ShuffleRerun {
+            base,
+            n_map,
+            handler: Arc::new(move |lost| {
+                let lost = lost.to_vec();
+                let task = Arc::clone(&route_task);
+                cl_rerun.run_job(lost.len(), Arc::new(move |i, exec| task(lost[i], exec)))?;
+                Ok(())
+            }),
+        },
+    );
     Ok((MulSide::Shuffled { base, n_map }, true))
 }
 
@@ -948,9 +966,11 @@ fn gather_mul_side(
         MulSide::Shuffled { base, n_map } => {
             let mut buckets = Vec::new();
             for m in 0..*n_map {
+                // loss-detecting read: a missing map output raises
+                // FetchFailed and the scheduler re-routes that partition
                 if let Some(b) = cluster
                     .shuffle
-                    .get::<((usize, usize), Arc<Block>)>(shuffle_id, base + m, q)
+                    .fetch::<((usize, usize), Arc<Block>)>(shuffle_id, base + m, q)?
                 {
                     buckets.push(b);
                 }

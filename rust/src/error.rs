@@ -29,14 +29,41 @@ pub enum Error {
     #[error("validation failed: {0}")]
     Validation(String),
 
-    /// A scheduler task exhausted its retry budget.
-    #[error("task failed after {attempts} attempts: {cause}")]
-    TaskFailed { attempts: usize, cause: String },
+    /// A scheduler task exhausted its retry budget. Carries the full
+    /// retry context so the driver-facing message pins *which* partition
+    /// died, where its last attempt ran, and what killed it.
+    #[error("task for partition {partition} failed after {attempts} attempts (last executor {executor}, last fault: {last_fault}): {cause}")]
+    TaskFailed {
+        partition: usize,
+        executor: usize,
+        attempts: usize,
+        last_fault: String,
+        cause: String,
+    },
 
     /// A simulated executor fault (consumed internally by the scheduler's
     /// retry machinery; only escapes when retries are exhausted).
     #[error("injected fault on executor {executor}: {kind}")]
     InjectedFault { executor: usize, kind: String },
+
+    /// A reduce-side read found a map output missing from the shuffle
+    /// store (the producing executor crashed or its outputs were lost).
+    /// The scheduler recovers by re-running exactly the lost map
+    /// partitions (stage-level lineage) before retrying the reduce task.
+    #[error("fetch failed: shuffle {shuffle} map partition {map_partition} output lost")]
+    FetchFailed { shuffle: usize, map_partition: usize },
+
+    /// A job blew through its wall-clock deadline
+    /// (`ClusterConfig::job_deadline_ms`) while partitions were still
+    /// outstanding. Carries the first incomplete partition, how many
+    /// attempts it has consumed, and the last injected fault the job saw.
+    #[error("job deadline of {deadline_ms} ms exceeded waiting on partition {partition} (attempt {attempt}, last fault: {last_fault})")]
+    DeadlineExceeded {
+        deadline_ms: u64,
+        partition: usize,
+        attempt: usize,
+        last_fault: String,
+    },
 
     /// PJRT / XLA runtime errors (wrapped; xla::Error is not Clone).
     #[error("xla runtime: {0}")]
@@ -80,6 +107,13 @@ impl Error {
     pub fn is_injected(&self) -> bool {
         matches!(self, Error::InjectedFault { .. })
     }
+
+    /// True when this error is a lost-map-output fetch failure — the
+    /// scheduler recovers these by re-running the lost map partitions
+    /// (stage-level lineage) and retrying the reduce task.
+    pub fn is_fetch_failed(&self) -> bool {
+        matches!(self, Error::FetchFailed { .. })
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -109,14 +143,53 @@ mod tests {
     fn display_formats() {
         let e = Error::dim("gemm: 3 vs 4");
         assert!(e.to_string().contains("gemm"));
-        let e = Error::TaskFailed { attempts: 4, cause: "boom".into() };
+        let e = Error::TaskFailed {
+            partition: 9,
+            executor: 2,
+            attempts: 4,
+            last_fault: "executor-crash".into(),
+            cause: "boom".into(),
+        };
         assert!(e.to_string().contains("4 attempts"));
+    }
+
+    #[test]
+    fn task_failed_message_carries_full_retry_context() {
+        // the retry-exhaustion bugfix: the driver-facing message must
+        // name the partition, the last executor, the attempt count, and
+        // the last fault kind — not just the attempt count
+        let e = Error::TaskFailed {
+            partition: 9,
+            executor: 2,
+            attempts: 4,
+            last_fault: "executor-crash".into(),
+            cause: "injected fault on executor 2: executor-crash".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("partition 9"), "missing partition: {s}");
+        assert!(s.contains("executor 2"), "missing executor: {s}");
+        assert!(s.contains("4 attempts"), "missing attempts: {s}");
+        assert!(s.contains("executor-crash"), "missing fault kind: {s}");
+    }
+
+    #[test]
+    fn deadline_message_carries_context() {
+        let e = Error::DeadlineExceeded {
+            deadline_ms: 250,
+            partition: 3,
+            attempt: 2,
+            last_fault: "delay".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("250 ms") && s.contains("partition 3") && s.contains("delay"));
     }
 
     #[test]
     fn injected_faults_are_classified() {
         assert!(Error::InjectedFault { executor: 1, kind: "crash".into() }.is_injected());
         assert!(!Error::msg("x").is_injected());
+        assert!(Error::FetchFailed { shuffle: 5, map_partition: 1 }.is_fetch_failed());
+        assert!(!Error::msg("x").is_fetch_failed());
     }
 
     #[test]

@@ -12,6 +12,16 @@
 //! through exactly the same lineage-recompute path as a crash eviction.
 //! If the block still cannot fit, `put` declines (returns `false`) and
 //! the partition simply stays uncached — correctness is unaffected.
+//!
+//! **Fault interaction** (DESIGN.md §"Fault tolerance & chaos"): crash
+//! eviction here is *block-level* recovery — the consumer recomputes
+//! the lost partition inline through lineage. Lost shuffle *map
+//! outputs* are the stage-level case and live in
+//! `ShuffleStore::evict_executor_outputs` + `Cluster::recover_shuffle`
+//! (the reduce side cannot recompute map-side buckets). Retried and
+//! speculative attempts may `put` the same block id concurrently; the
+//! insert is last-writer-wins over identical recomputed data, so the
+//! race is benign by the engine's determinism contract.
 
 use std::any::Any;
 use std::collections::HashMap;

@@ -706,7 +706,10 @@ where
         let groups = Arc::new(groups);
         let combf = comb.clone();
         let n = groups.len();
-        partials = cluster.run_job(
+        // combine tasks consume their group, so a completed task must
+        // never run again: opt out of mid-task faults and speculative
+        // clones (start-of-task faults still fire — the group is intact)
+        partials = cluster.run_job_opts(
             n,
             Arc::new(move |g, _exec| {
                 let group = groups[g]
@@ -720,6 +723,7 @@ where
                     .ok_or_else(|| Error::msg("tree_aggregate: empty combine group"))?;
                 Ok(it.fold(first, |a, b| combf(a, b)))
             }),
+            crate::rdd::exec::JobOptions { replayable: false },
         )?;
     }
     Ok(partials)

@@ -12,14 +12,21 @@
 //! the global queue the way the old single `Mutex<mpsc::Receiver>` did.
 //! A job allocates ONE completion channel and ONE type-erased runner;
 //! every attempt enqueues a three-word [`TaskUnit`] instead of a fresh
-//! boxed closure. Injected faults are retried up to `max_task_retries`;
-//! real errors propagate immediately.
+//! boxed closure. Injected faults are retried up to `max_task_retries`
+//! — with seeded exponential backoff when configured — while
+//! `FetchFailed` triggers stage-level lineage recovery
+//! ([`Cluster::register_map_rerun`]) and real errors propagate
+//! immediately. A per-job wall-clock deadline and a speculative-execution
+//! layer (clone stalled tasks, first result wins, loser cancelled
+//! cooperatively) ride on the same completion channel; see DESIGN.md
+//! §"Fault tolerance & chaos".
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, SpeculationConfig};
 use crate::error::{Error, Result};
 use crate::rdd::cache::BlockManager;
 use crate::rdd::shuffle::ShuffleStore;
@@ -48,6 +55,30 @@ pub struct Metrics {
     pub blocks_evicted: AtomicU64,
     /// Partitions recomputed after eviction (lineage recoveries).
     pub lineage_recomputes: AtomicU64,
+    /// Task attempts delayed by an injected straggler fault.
+    pub tasks_delayed: AtomicU64,
+    /// Task attempts dropped cooperatively because their partition had
+    /// already finished (speculation losers and late duplicates).
+    pub tasks_cancelled: AtomicU64,
+    /// Speculative clone attempts launched for stalled tasks.
+    pub tasks_speculated: AtomicU64,
+    /// Partitions whose winning result came from a speculative clone.
+    pub speculation_wins: AtomicU64,
+    /// Reduce-side reads that found a map output missing (`FetchFailed`).
+    pub fetch_failures: AtomicU64,
+    /// Injected silent shuffle-loss events (a live executor dropping its
+    /// map outputs; crash-driven losses count in `executor_crashes`).
+    pub shuffle_loss_events: AtomicU64,
+    /// Map outputs dropped by executor crashes and shuffle-loss events.
+    pub shuffle_outputs_lost: AtomicU64,
+    /// Map stages partially re-executed to regenerate lost outputs
+    /// (stage-level lineage recoveries).
+    pub map_stages_rerun: AtomicU64,
+    /// Spill-to-disk writes that failed (injected or real I/O error) and
+    /// fell back to a resident force-reserve.
+    pub spill_failures: AtomicU64,
+    /// Total milliseconds slept in seeded retry backoff.
+    pub retry_backoff_ms_total: AtomicU64,
     /// Shuffle map stages executed (one per `ShuffleDep`; BlockMatrix's
     /// simulate-multiply routes both operands under a single dep).
     pub shuffles_executed: AtomicU64,
@@ -106,6 +137,16 @@ pub struct MetricsSnapshot {
     pub executor_crashes: u64,
     pub blocks_evicted: u64,
     pub lineage_recomputes: u64,
+    pub tasks_delayed: u64,
+    pub tasks_cancelled: u64,
+    pub tasks_speculated: u64,
+    pub speculation_wins: u64,
+    pub fetch_failures: u64,
+    pub shuffle_loss_events: u64,
+    pub shuffle_outputs_lost: u64,
+    pub map_stages_rerun: u64,
+    pub spill_failures: u64,
+    pub retry_backoff_ms_total: u64,
     pub shuffles_executed: u64,
     pub shuffles_skipped: u64,
     pub shuffle_records_written: u64,
@@ -142,6 +183,16 @@ impl Metrics {
             executor_crashes: self.executor_crashes.load(Ordering::Relaxed),
             blocks_evicted: self.blocks_evicted.load(Ordering::Relaxed),
             lineage_recomputes: self.lineage_recomputes.load(Ordering::Relaxed),
+            tasks_delayed: self.tasks_delayed.load(Ordering::Relaxed),
+            tasks_cancelled: self.tasks_cancelled.load(Ordering::Relaxed),
+            tasks_speculated: self.tasks_speculated.load(Ordering::Relaxed),
+            speculation_wins: self.speculation_wins.load(Ordering::Relaxed),
+            fetch_failures: self.fetch_failures.load(Ordering::Relaxed),
+            shuffle_loss_events: self.shuffle_loss_events.load(Ordering::Relaxed),
+            shuffle_outputs_lost: self.shuffle_outputs_lost.load(Ordering::Relaxed),
+            map_stages_rerun: self.map_stages_rerun.load(Ordering::Relaxed),
+            spill_failures: self.spill_failures.load(Ordering::Relaxed),
+            retry_backoff_ms_total: self.retry_backoff_ms_total.load(Ordering::Relaxed),
             shuffles_executed: self.shuffles_executed.load(Ordering::Relaxed),
             shuffles_skipped: self.shuffles_skipped.load(Ordering::Relaxed),
             shuffle_records_written: self.shuffle_records_written.load(Ordering::Relaxed),
@@ -166,7 +217,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let s = self.snapshot();
         format!(
-            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} shuffles={} skipped={} shuffled_recs={} mem=reserved:{}/spilled:{}/spill_files:{}/spill_read:{}/evicted_lru:{} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
+            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} faults=delayed:{}/cancelled:{}/spec:{}/spec_wins:{}/fetch_failed:{}/loss_events:{}/outputs_lost:{}/stages_rerun:{}/spill_fail:{}/backoff_ms:{} shuffles={} skipped={} shuffled_recs={} mem=reserved:{}/spilled:{}/spill_files:{}/spill_read:{}/evicted_lru:{} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
             s.jobs,
             s.tasks_started,
             s.tasks_failed,
@@ -176,6 +227,16 @@ impl Metrics {
             s.executor_crashes,
             s.blocks_evicted,
             s.lineage_recomputes,
+            s.tasks_delayed,
+            s.tasks_cancelled,
+            s.tasks_speculated,
+            s.speculation_wins,
+            s.fetch_failures,
+            s.shuffle_loss_events,
+            s.shuffle_outputs_lost,
+            s.map_stages_rerun,
+            s.spill_failures,
+            s.retry_backoff_ms_total,
             s.shuffles_executed,
             s.shuffles_skipped,
             s.shuffle_records_written,
@@ -196,27 +257,69 @@ impl Metrics {
     }
 }
 
+/// One task attempt's injected-fault decision, covering every lifecycle
+/// point. The whole plan is drawn up front, keyed by `(job, partition,
+/// attempt)`, so the decision is identical no matter which worker claims
+/// the attempt or when — fault schedules are a pure function of the seed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Crash the executor at task start: evict its cached blocks *and*
+    /// its shuffle map outputs, then fail the attempt.
+    pub kill: bool,
+    /// Fail the attempt at task start (plain retryable fault).
+    pub fail: bool,
+    /// Sleep this long before the work starts (injected straggler — the
+    /// speculation trigger). Zero means no delay.
+    pub delay_ms: u64,
+    /// Silently drop this executor's shuffle map outputs while the task
+    /// itself proceeds; the gap surfaces later as a reduce-side
+    /// `FetchFailed`.
+    pub lose_shuffle: bool,
+    /// Fail the attempt *after* its work — and any shuffle writes it
+    /// performed — landed. The retry overwrites the partial state.
+    /// Skipped for non-replayable jobs.
+    pub mid_task: bool,
+}
+
+impl FaultPlan {
+    fn fires(&self) -> bool {
+        self.kill || self.fail || self.delay_ms > 0 || self.lose_shuffle || self.mid_task
+    }
+}
+
 /// Deterministic fault injector (probabilities from `FaultConfig`).
+/// All decisions are keyed draws — no shared RNG stream — so two
+/// same-seed runs inject identical fault schedules regardless of thread
+/// scheduling.
 pub struct FaultInjector {
-    task_fail_prob: f64,
-    executor_kill_prob: f64,
-    rng: Mutex<SplitMix64>,
+    cfg: crate::config::FaultConfig,
+    /// Per-job key stream: each `run_job` call consumes one sequence
+    /// number, the first component of every draw key.
+    job_seq: AtomicU64,
+    /// Forced plans for targeted tests, keyed by `(partition, attempt)`
+    /// and consumed on first match; honored even when disarmed.
+    forced: Mutex<HashMap<(usize, usize), FaultPlan>>,
     /// Executors currently "down" (they heal on next task — models fast
-    /// replacement; what matters for lineage is the cache eviction).
+    /// replacement; what matters for lineage is the eviction).
     down: Mutex<HashSet<usize>>,
     armed: AtomicBool,
 }
 
 impl FaultInjector {
-    fn new(cfg: &ClusterConfig) -> Self {
+    pub(crate) fn new(cfg: &ClusterConfig) -> Self {
+        let f = &cfg.fault;
+        let any = f.task_fail_prob > 0.0
+            || f.executor_kill_prob > 0.0
+            || f.mid_task_fail_prob > 0.0
+            || f.shuffle_loss_prob > 0.0
+            || f.spill_fail_prob > 0.0
+            || f.delay_prob > 0.0;
         FaultInjector {
-            task_fail_prob: cfg.fault.task_fail_prob,
-            executor_kill_prob: cfg.fault.executor_kill_prob,
-            rng: Mutex::new(SplitMix64::new(cfg.fault.seed)),
+            cfg: f.clone(),
+            job_seq: AtomicU64::new(0),
+            forced: Mutex::new(HashMap::new()),
             down: Mutex::new(HashSet::new()),
-            armed: AtomicBool::new(
-                cfg.fault.task_fail_prob > 0.0 || cfg.fault.executor_kill_prob > 0.0,
-            ),
+            armed: AtomicBool::new(any),
         }
     }
 
@@ -231,21 +334,79 @@ impl FaultInjector {
         self.armed.store(true, Ordering::SeqCst);
     }
 
-    /// Sample a fault decision for a task attempt on `executor`.
-    /// Returns Some(kind) when the attempt should fail.
-    fn sample(&self, executor: usize) -> Option<&'static str> {
+    /// Allocate the next job's draw-key stream.
+    pub(crate) fn next_job(&self) -> u64 {
+        self.job_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Force `plan` onto the next task attempt matching `(partition,
+    /// attempt)` in any job — one-shot, honored even when disarmed.
+    /// Targeted tests use this to schedule exact fault sequences without
+    /// arming the probabilistic machinery.
+    pub fn force(&self, partition: usize, attempt: usize, plan: FaultPlan) {
+        self.forced.lock().expect("forced faults").insert((partition, attempt), plan);
+    }
+
+    /// Derive a generator from a 3-part key, chaining the full SplitMix64
+    /// avalanche per part: the linear `split()` construction alone would
+    /// let distinct `(job, partition, attempt)` keys collide (its state
+    /// is an additive function of the parts).
+    fn keyed(&self, salt: u64, a: u64, b: u64, c: u64) -> SplitMix64 {
+        let mut s = self.cfg.seed ^ salt;
+        for part in [a, b, c] {
+            let mut g = SplitMix64::new(s.wrapping_add(part));
+            s = g.next_u64();
+        }
+        SplitMix64::new(s)
+    }
+
+    /// Draw the fault plan for one task attempt. Draw order is fixed
+    /// (kill, fail, delay, shuffle-loss, mid-task) and every point is
+    /// drawn unconditionally, so the schedule for one fault kind does not
+    /// shift when another kind's probability changes under the same seed.
+    pub(crate) fn plan(&self, job: u64, partition: usize, attempt: usize) -> Option<FaultPlan> {
+        if let Some(p) = self.forced.lock().expect("forced faults").remove(&(partition, attempt)) {
+            return Some(p);
+        }
         if !self.armed.load(Ordering::Relaxed) {
             return None;
         }
-        let mut rng = self.rng.lock().expect("injector rng");
-        if self.executor_kill_prob > 0.0 && rng.bernoulli(self.executor_kill_prob) {
-            self.down.lock().expect("down set").insert(executor);
-            return Some("executor-crash");
+        let mut rng = self.keyed(0, job, partition as u64, attempt as u64);
+        let plan = FaultPlan {
+            kill: rng.bernoulli(self.cfg.executor_kill_prob),
+            fail: rng.bernoulli(self.cfg.task_fail_prob),
+            delay_ms: if rng.bernoulli(self.cfg.delay_prob) { self.cfg.delay_ms } else { 0 },
+            lose_shuffle: rng.bernoulli(self.cfg.shuffle_loss_prob),
+            mid_task: rng.bernoulli(self.cfg.mid_task_fail_prob),
+        };
+        if plan.fires() {
+            Some(plan)
+        } else {
+            None
         }
-        if self.task_fail_prob > 0.0 && rng.bernoulli(self.task_fail_prob) {
-            return Some("task-fault");
+    }
+
+    /// Should this spill write fail? Keyed by bucket coordinates, so the
+    /// decision is stable no matter which worker performs the write or
+    /// how often a retried map task repeats it.
+    pub(crate) fn spill_fault(&self, shuffle: usize, map_p: usize, reduce_p: usize) -> bool {
+        if self.cfg.spill_fail_prob <= 0.0 || !self.armed.load(Ordering::Relaxed) {
+            return false;
         }
-        None
+        let mut rng = self.keyed(0x5B11, shuffle as u64, map_p as u64, reduce_p as u64);
+        rng.bernoulli(self.cfg.spill_fail_prob)
+    }
+
+    /// Deterministic jitter in [0, 1) for the retry backoff of `(job,
+    /// partition, attempt)`.
+    pub(crate) fn jitter(&self, job: u64, partition: usize, attempt: usize) -> f64 {
+        let mut rng = self.keyed(0xBACC0FF, job, partition as u64, attempt as u64);
+        rng.next_f64()
+    }
+
+    /// Mark an executor down after a simulated crash.
+    fn mark_down(&self, executor: usize) {
+        self.down.lock().expect("down set").insert(executor);
     }
 
     /// Heal an executor (called when it picks up its next task).
@@ -437,6 +598,41 @@ impl Default for VecPool {
     }
 }
 
+/// How to regenerate one map side's lost outputs for a shuffle: which
+/// global map indices the side owns and a handler that re-runs the map
+/// task for a given set of *local* partition indices. Registered by
+/// shuffle producers ([`Cluster::register_map_rerun`]). Handlers close
+/// over the producing RDD — which holds the cluster — so the registry
+/// entry is a reference cycle; `ShuffleDep::drop` unregisters it when
+/// the last consumer goes away, and [`Cluster::shutdown`] clears the
+/// registry wholesale as a backstop.
+pub struct ShuffleRerun {
+    /// First global map index this side writes under (`ShuffleStore`
+    /// registration keys are `base + local`).
+    pub base: usize,
+    /// Number of map partitions on this side.
+    pub n_map: usize,
+    /// Re-run the map task for these local partition indices.
+    pub handler: Arc<dyn Fn(&[usize]) -> Result<()> + Send + Sync>,
+}
+
+/// Per-job scheduling options.
+#[derive(Debug, Clone, Copy)]
+pub struct JobOptions {
+    /// Whether a partition's task may safely run more than once
+    /// (idempotent or overwriting). Non-replayable jobs — e.g.
+    /// `tree_aggregate` combine rounds, which consume their input groups
+    /// — skip mid-task fault injection and speculative clones; start-of-
+    /// task faults are still injected (the work has not run yet).
+    pub replayable: bool,
+}
+
+impl Default for JobOptions {
+    fn default() -> Self {
+        JobOptions { replayable: true }
+    }
+}
+
 /// The simulated cluster: worker pool + block manager + shuffle store +
 /// metrics + fault injector. One per [`crate::Context`].
 pub struct Cluster {
@@ -453,8 +649,12 @@ pub struct Cluster {
     pub metrics: Arc<Metrics>,
     /// Recycled mat-vec work buffers (the zero-alloc iterative hot path).
     pub workspace: Arc<VecPool>,
-    /// Fault injection.
-    pub injector: FaultInjector,
+    /// Fault injection (shared with the shuffle store for spill faults).
+    pub injector: Arc<FaultInjector>,
+    /// Stage-level lineage registry: shuffle id -> rerun handlers (one
+    /// per producing side). Cleared per-shuffle by `ShuffleDep::drop`
+    /// and wholesale on shutdown.
+    reruns: Mutex<HashMap<usize, Vec<ShuffleRerun>>>,
     scheduler: Arc<Scheduler>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_id: AtomicUsize,
@@ -470,13 +670,15 @@ impl Cluster {
             config.memory_budget_bytes,
             Arc::clone(&metrics),
         ));
+        let injector = Arc::new(FaultInjector::new(&config));
         let cluster = Arc::new(Cluster {
-            injector: FaultInjector::new(&config),
+            injector: Arc::clone(&injector),
             cache: BlockManager::new(Arc::clone(&memory), Arc::clone(&metrics)),
-            shuffle: ShuffleStore::new(Arc::clone(&metrics), Arc::clone(&memory)),
+            shuffle: ShuffleStore::new(Arc::clone(&metrics), Arc::clone(&memory), injector),
             memory,
             metrics,
             workspace: Arc::new(VecPool::new()),
+            reruns: Mutex::new(HashMap::new()),
             scheduler: Arc::clone(&scheduler),
             workers: Mutex::new(vec![]),
             next_id: AtomicUsize::new(1),
@@ -516,6 +718,69 @@ impl Cluster {
         self.next_id.fetch_add(1, Ordering::SeqCst)
     }
 
+    /// Register a map-stage rerun handler for `shuffle` (one per
+    /// producing side — BlockMatrix multiply registers two). Unregistered
+    /// by `ShuffleDep::drop` when the last consumer RDD goes away.
+    pub fn register_map_rerun(&self, shuffle: usize, rerun: ShuffleRerun) {
+        self.reruns.lock().expect("rerun registry").entry(shuffle).or_default().push(rerun);
+    }
+
+    /// Drop every rerun handler for `shuffle` (its buckets are gone).
+    pub fn unregister_reruns(&self, shuffle: usize) {
+        self.reruns.lock().expect("rerun registry").remove(&shuffle);
+    }
+
+    /// Stage-level lineage: after a reduce-side `FetchFailed`, find
+    /// which of `shuffle`'s registered map partitions lost their outputs
+    /// and re-run exactly those — not the whole map stage — before the
+    /// reduce task is retried.
+    fn recover_shuffle(self: &Arc<Self>, shuffle: usize) -> Result<()> {
+        let handlers: Vec<(usize, usize, Arc<dyn Fn(&[usize]) -> Result<()> + Send + Sync>)> = {
+            let g = self.reruns.lock().expect("rerun registry");
+            match g.get(&shuffle) {
+                Some(rs) => {
+                    rs.iter().map(|r| (r.base, r.n_map, Arc::clone(&r.handler))).collect()
+                }
+                None => Vec::new(),
+            }
+        };
+        if handlers.is_empty() {
+            return Err(Error::msg(format!(
+                "fetch failed on shuffle {shuffle} but no map rerun is registered"
+            )));
+        }
+        let mut reran = false;
+        for (base, n_map, handler) in handlers {
+            let lost: Vec<usize> =
+                (0..n_map).filter(|p| !self.shuffle.has_output(shuffle, base + p)).collect();
+            if lost.is_empty() {
+                continue;
+            }
+            handler(&lost)?;
+            reran = true;
+        }
+        if reran {
+            self.metrics.map_stages_rerun.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Sleep the seeded exponential backoff before retrying `(job,
+    /// partition, attempt)`; no-op when `retry_backoff_base_ms` is 0
+    /// (the default — retries re-enqueue immediately).
+    fn backoff(&self, job: u64, partition: usize, attempt: usize) {
+        let base = self.config.retry_backoff_base_ms;
+        if base == 0 {
+            return;
+        }
+        let jitter = self.injector.jitter(job, partition, attempt);
+        let ms = backoff_ms(base, self.config.retry_backoff_max_ms, attempt, jitter);
+        if ms > 0 {
+            self.metrics.retry_backoff_ms_total.fetch_add(ms, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
     /// Run a job: `task_fn(partition, executor_id)` for each partition,
     /// returning results in partition order. Injected faults are retried
     /// (on whatever worker is free — models rescheduling); real errors
@@ -525,69 +790,261 @@ impl Cluster {
         num_partitions: usize,
         task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
     ) -> Result<Vec<R>> {
+        self.run_job_opts(num_partitions, task_fn, JobOptions::default())
+    }
+
+    /// [`Cluster::run_job`] with explicit [`JobOptions`]. The full task
+    /// lifecycle lives here: keyed fault injection at task start,
+    /// injected stragglers with cooperative cancellation, mid-task
+    /// faults after the work lands, `FetchFailed`-driven stage-level
+    /// lineage recovery, seeded retry backoff, speculative clones for
+    /// stalled tasks, and the per-job wall-clock deadline.
+    pub fn run_job_opts<R: Send + 'static>(
+        self: &Arc<Self>,
+        num_partitions: usize,
+        task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
+        opts: JobOptions,
+    ) -> Result<Vec<R>> {
         if num_partitions == 0 {
             return Ok(vec![]);
         }
         self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+        let job = self.injector.next_job();
+        // per-partition completion flags double as the cooperative
+        // cancellation signal: an attempt that finds its flag set (a
+        // speculation race was lost, or a late retry) drops itself
+        let done: Arc<Vec<AtomicBool>> =
+            Arc::new((0..num_partitions).map(|_| AtomicBool::new(false)).collect());
         // one channel and one type-erased runner for the whole job; the
         // runner keeps a sender alive so retries reuse the same receiver
-        let (done_tx, done_rx) = mpsc::channel::<(usize, usize, Result<R>)>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, usize, usize, Result<R>)>();
         let runner: Arc<dyn Fn(usize, usize, usize) + Send + Sync> = {
             let cluster = Arc::clone(self);
             let task_fn = Arc::clone(&task_fn);
+            let done = Arc::clone(&done);
             Arc::new(move |executor_id, partition, attempt| {
                 cluster.metrics.tasks_started.fetch_add(1, Ordering::Relaxed);
                 cluster.injector.heal(executor_id);
-                // fault decision happens before the work, like a crash at
-                // task start; executor crash also evicts its cached blocks
-                if let Some(kind) = cluster.injector.sample(executor_id) {
-                    if kind == "executor-crash" {
+                // cancellation point 1: the partition already finished
+                if done[partition].load(Ordering::Acquire) {
+                    cluster.metrics.tasks_cancelled.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                let plan = cluster.injector.plan(job, partition, attempt);
+                if let Some(plan) = &plan {
+                    if plan.delay_ms > 0 {
+                        // injected straggler: the work is still ahead
+                        cluster.metrics.tasks_delayed.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(plan.delay_ms));
+                        // cancellation point 2: a speculative clone may
+                        // have won the partition while we slept
+                        if done[partition].load(Ordering::Acquire) {
+                            cluster.metrics.tasks_cancelled.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                    if plan.lose_shuffle {
+                        // silent loss on a live executor: drop its map
+                        // outputs without failing the task; the gap
+                        // surfaces later as a reduce-side FetchFailed
+                        cluster.metrics.shuffle_loss_events.fetch_add(1, Ordering::Relaxed);
+                        cluster.shuffle.evict_executor_outputs(executor_id);
+                    }
+                    if plan.kill {
                         cluster.metrics.executor_crashes.fetch_add(1, Ordering::Relaxed);
+                        cluster.injector.mark_down(executor_id);
                         let evicted = cluster.cache.evict_executor(executor_id);
                         cluster
                             .metrics
                             .blocks_evicted
                             .fetch_add(evicted as u64, Ordering::Relaxed);
+                        // a crash takes the executor's shuffle map
+                        // outputs with it (the paper's hardest recovery
+                        // path: FetchFailed -> re-run the map stage)
+                        cluster.shuffle.evict_executor_outputs(executor_id);
+                        let _ = done_tx.send((
+                            partition,
+                            attempt,
+                            executor_id,
+                            Err(Error::InjectedFault {
+                                executor: executor_id,
+                                kind: "executor-crash".into(),
+                            }),
+                        ));
+                        return;
                     }
-                    let _ = done_tx.send((
-                        partition,
-                        attempt,
-                        Err(Error::InjectedFault { executor: executor_id, kind: kind.into() }),
-                    ));
-                    return;
+                    if plan.fail {
+                        let _ = done_tx.send((
+                            partition,
+                            attempt,
+                            executor_id,
+                            Err(Error::InjectedFault {
+                                executor: executor_id,
+                                kind: "task-fault".into(),
+                            }),
+                        ));
+                        return;
+                    }
                 }
                 let res = task_fn(partition, executor_id);
-                let _ = done_tx.send((partition, attempt, res));
+                if res.is_ok() && opts.replayable {
+                    if let Some(plan) = &plan {
+                        if plan.mid_task {
+                            // the work (and its shuffle writes) landed;
+                            // the attempt dies before reporting, and the
+                            // retry overwrites the partial state
+                            let _ = done_tx.send((
+                                partition,
+                                attempt,
+                                executor_id,
+                                Err(Error::InjectedFault {
+                                    executor: executor_id,
+                                    kind: "mid-task-fault".into(),
+                                }),
+                            ));
+                            return;
+                        }
+                    }
+                }
+                let _ = done_tx.send((partition, attempt, executor_id, res));
             })
         };
         for p in 0..num_partitions {
             self.scheduler.push(TaskUnit { partition: p, attempt: 1, run: Arc::clone(&runner) })?;
         }
+        let spec = self.config.speculation.clone();
+        let speculate = spec.enabled && opts.replayable;
+        let deadline = self.config.job_deadline_ms;
+        let tick = Duration::from_millis(spec.tick_ms.max(1));
         let mut results: Vec<Option<R>> = (0..num_partitions).map(|_| None).collect();
         let mut remaining = num_partitions;
+        // attempt bookkeeping: the highest attempt number pushed per
+        // partition (retries and clones both advance it), which attempt
+        // is the speculative clone (0 = none), and when the newest
+        // attempt was launched (the stall clock)
+        let mut next_attempt = vec![1usize; num_partitions];
+        let mut spec_attempt = vec![0usize; num_partitions];
+        let mut launched = vec![Instant::now(); num_partitions];
+        let mut durations_ms: Vec<u64> = Vec::new();
+        let mut last_fault = String::from("none");
+        let started = Instant::now();
         while remaining > 0 {
-            let (p, attempt, res) = done_rx
-                .recv()
-                .map_err(|_| Error::msg("scheduler: all workers gone"))?;
+            let msg = if speculate || deadline.is_some() {
+                // tick so stalls and the deadline are noticed even while
+                // no completions arrive
+                match done_rx.recv_timeout(tick) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(Error::msg("scheduler: all workers gone"))
+                    }
+                }
+            } else {
+                Some(done_rx.recv().map_err(|_| Error::msg("scheduler: all workers gone"))?)
+            };
+            if let Some(limit) = deadline {
+                if started.elapsed() >= Duration::from_millis(limit) {
+                    let p = results.iter().position(|r| r.is_none()).unwrap_or(0);
+                    return Err(Error::DeadlineExceeded {
+                        deadline_ms: limit,
+                        partition: p,
+                        attempt: next_attempt[p],
+                        last_fault: last_fault.clone(),
+                    });
+                }
+            }
+            let Some((p, attempt, executor, res)) = msg else {
+                if !speculate || durations_ms.is_empty() {
+                    continue;
+                }
+                let threshold = stall_threshold(&durations_ms, &spec);
+                for q in 0..num_partitions {
+                    if results[q].is_some() || spec_attempt[q] != 0 {
+                        continue;
+                    }
+                    if (launched[q].elapsed().as_millis() as u64) < threshold {
+                        continue;
+                    }
+                    // clone the stalled task on whichever worker is
+                    // free; first result wins
+                    next_attempt[q] += 1;
+                    spec_attempt[q] = next_attempt[q];
+                    self.metrics.tasks_speculated.fetch_add(1, Ordering::Relaxed);
+                    self.scheduler.push(TaskUnit {
+                        partition: q,
+                        attempt: next_attempt[q],
+                        run: Arc::clone(&runner),
+                    })?;
+                }
+                continue;
+            };
             match res {
                 Ok(r) => {
                     if results[p].is_none() {
+                        if spec_attempt[p] != 0 && attempt == spec_attempt[p] {
+                            self.metrics.speculation_wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                        durations_ms.push(launched[p].elapsed().as_millis() as u64);
                         results[p] = Some(r);
+                        done[p].store(true, Ordering::Release);
                         remaining -= 1;
+                    } else {
+                        // the speculation loser finished anyway
+                        self.metrics.tasks_cancelled.fetch_add(1, Ordering::Relaxed);
                     }
                 }
-                Err(e) if e.is_injected() => {
+                Err(Error::InjectedFault { kind, .. }) => {
                     self.metrics.tasks_failed.fetch_add(1, Ordering::Relaxed);
+                    last_fault = kind.clone();
+                    if results[p].is_some() {
+                        continue; // the other attempt already won
+                    }
                     if attempt >= self.config.max_task_retries {
                         return Err(Error::TaskFailed {
+                            partition: p,
+                            executor,
                             attempts: attempt,
-                            cause: e.to_string(),
+                            last_fault: kind.clone(),
+                            cause: format!("injected fault on executor {executor}: {kind}"),
                         });
                     }
                     self.metrics.tasks_retried.fetch_add(1, Ordering::Relaxed);
+                    self.backoff(job, p, attempt);
+                    next_attempt[p] += 1;
+                    launched[p] = Instant::now();
                     self.scheduler.push(TaskUnit {
                         partition: p,
-                        attempt: attempt + 1,
+                        attempt: next_attempt[p],
+                        run: Arc::clone(&runner),
+                    })?;
+                }
+                Err(Error::FetchFailed { shuffle, map_partition }) => {
+                    self.metrics.fetch_failures.fetch_add(1, Ordering::Relaxed);
+                    last_fault = String::from("fetch-failed");
+                    if results[p].is_some() {
+                        continue;
+                    }
+                    if attempt >= self.config.max_task_retries {
+                        return Err(Error::TaskFailed {
+                            partition: p,
+                            executor,
+                            attempts: attempt,
+                            last_fault: String::from("fetch-failed"),
+                            cause: format!(
+                                "fetch failed: shuffle {shuffle} map partition {map_partition} output lost"
+                            ),
+                        });
+                    }
+                    // stage-level lineage: regenerate exactly the lost
+                    // map outputs, then retry the reduce task
+                    self.recover_shuffle(shuffle)?;
+                    self.metrics.tasks_retried.fetch_add(1, Ordering::Relaxed);
+                    self.backoff(job, p, attempt);
+                    next_attempt[p] += 1;
+                    launched[p] = Instant::now();
+                    self.scheduler.push(TaskUnit {
+                        partition: p,
+                        attempt: next_attempt[p],
                         run: Arc::clone(&runner),
                     })?;
                 }
@@ -599,13 +1056,38 @@ impl Cluster {
 
     /// Graceful shutdown: flag the scheduler and join workers (queued
     /// tasks drain first). Called by `Context::drop`; safe to call twice.
+    /// Also clears the rerun registry — handlers close over producer
+    /// RDD state, and a leaked RDD must not keep the registry cycle
+    /// alive past the context.
     pub fn shutdown(&self) {
+        self.reruns.lock().expect("rerun registry").clear();
         self.scheduler.shutdown();
         let mut ws = self.workers.lock().expect("workers");
         for w in ws.drain(..) {
             let _ = w.join();
         }
     }
+}
+
+/// Backoff for retry `attempt` (1-based): the base doubles per attempt,
+/// capped at `max`, then jittered to 50–100% of the capped value.
+fn backoff_ms(base: u64, max: u64, attempt: usize, jitter: f64) -> u64 {
+    if base == 0 {
+        return 0;
+    }
+    let exp = base.saturating_mul(1u64 << attempt.saturating_sub(1).min(16));
+    let capped = exp.min(max);
+    ((capped as f64) * (0.5 + 0.5 * jitter)).round() as u64
+}
+
+/// Speculation stall threshold: `multiplier ×` the `quantile`-th
+/// completed-task duration, floored at `min_stall_ms`.
+fn stall_threshold(durations_ms: &[u64], cfg: &SpeculationConfig) -> u64 {
+    let mut d = durations_ms.to_vec();
+    d.sort_unstable();
+    let idx = (((d.len() - 1) as f64) * cfg.quantile).round() as usize;
+    let q = d[idx.min(d.len() - 1)];
+    (((q as f64) * cfg.multiplier).round() as u64).max(cfg.min_stall_ms)
 }
 
 impl Drop for Cluster {
@@ -705,6 +1187,100 @@ mod tests {
         let cluster = Cluster::start(ClusterConfig::default());
         cluster.shutdown();
         assert!(cluster.run_job(1, Arc::new(|_p, _e| Ok(0u8))).is_err());
+    }
+
+    #[test]
+    fn keyed_fault_plans_are_deterministic_and_independent() {
+        let cfg = ClusterConfig {
+            fault: crate::config::FaultConfig {
+                task_fail_prob: 0.3,
+                executor_kill_prob: 0.1,
+                delay_prob: 0.2,
+                shuffle_loss_prob: 0.1,
+                mid_task_fail_prob: 0.1,
+                seed: 99,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let a = FaultInjector::new(&cfg);
+        let b = FaultInjector::new(&cfg);
+        // same key -> same plan, on independent injectors and regardless
+        // of the order keys are queried in
+        let keys = [(0u64, 3usize, 1usize), (1, 0, 1), (0, 0, 2), (5, 7, 3)];
+        let from_a: Vec<Option<bool>> =
+            keys.iter().map(|&(j, p, t)| a.plan(j, p, t).map(|pl| pl.fires())).collect();
+        let from_b: Vec<Option<bool>> = keys
+            .iter()
+            .rev()
+            .map(|&(j, p, t)| b.plan(j, p, t).map(|pl| pl.fires()))
+            .collect();
+        let mut from_b = from_b;
+        from_b.reverse();
+        for (x, y) in from_a.iter().zip(&from_b) {
+            assert_eq!(x.is_some(), y.is_some(), "keyed draws must not depend on query order");
+        }
+        // fires across a sweep of keys (p=0.3 over 64 keys)
+        let fired = (0..64).filter(|&p| a.plan(0, p, 1).is_some()).count();
+        assert!(fired > 0, "some faults must fire at these probabilities");
+    }
+
+    #[test]
+    fn forced_plans_are_one_shot_and_override_disarm() {
+        let inj = FaultInjector::new(&ClusterConfig::default());
+        assert!(inj.plan(0, 0, 1).is_none(), "no probabilities armed");
+        inj.force(4, 1, FaultPlan { fail: true, ..Default::default() });
+        let p = inj.plan(9, 4, 1).expect("forced plan fires");
+        assert!(p.fail && !p.kill);
+        assert!(inj.plan(9, 4, 1).is_none(), "forced plan is consumed");
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters() {
+        assert_eq!(backoff_ms(0, 100, 3, 0.5), 0, "base 0 disables backoff");
+        let b1 = backoff_ms(4, 1000, 1, 1.0);
+        let b3 = backoff_ms(4, 1000, 3, 1.0);
+        assert!(b3 > b1, "backoff grows with attempts");
+        assert_eq!(backoff_ms(4, 10, 8, 1.0), 10, "capped at max");
+        let lo = backoff_ms(8, 1000, 2, 0.0);
+        let hi = backoff_ms(8, 1000, 2, 0.999);
+        assert!(lo >= 8 && hi <= 16 && lo < hi, "jitter spans 50-100%: {lo}..{hi}");
+    }
+
+    #[test]
+    fn stall_threshold_tracks_quantile_with_floor() {
+        let cfg = crate::config::SpeculationConfig {
+            quantile: 0.75,
+            multiplier: 2.0,
+            min_stall_ms: 20,
+            ..Default::default()
+        };
+        assert_eq!(stall_threshold(&[1, 1, 1, 1], &cfg), 20, "floored at min_stall_ms");
+        assert_eq!(stall_threshold(&[10, 20, 30, 40], &cfg), 60, "2x the 0.75-quantile");
+    }
+
+    #[test]
+    fn deadline_exceeded_carries_job_context() {
+        let cfg = ClusterConfig {
+            num_executors: 1,
+            cores_per_executor: 1,
+            job_deadline_ms: Some(30),
+            ..Default::default()
+        };
+        let cluster = Cluster::start(cfg);
+        let err = cluster
+            .run_job(
+                2,
+                Arc::new(|_p, _e| {
+                    std::thread::sleep(std::time::Duration::from_millis(40));
+                    Ok(0u8)
+                }),
+            )
+            .unwrap_err();
+        match err {
+            Error::DeadlineExceeded { deadline_ms, .. } => assert_eq!(deadline_ms, 30),
+            other => panic!("expected DeadlineExceeded, got {other}"),
+        }
     }
 
     #[test]

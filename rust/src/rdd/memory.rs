@@ -18,6 +18,18 @@
 //!   travels as `to_bits`, so a spilled-and-reread shuffle bucket merges
 //!   to exactly the same floats as the resident path. [`SpillFile`]
 //!   owns one on-disk run and deletes it on drop.
+//!
+//! **Fault interaction** (DESIGN.md §"Fault tolerance & chaos"): spill
+//! writes are a fault point. A spill that fails — injected via
+//! `FaultInjector::spill_fault` (keyed by bucket coordinates, so the
+//! verdict is stable across retried map tasks) or a real IO error —
+//! falls back to a resident force-reserve: the budget is exceeded
+//! rather than data lost, and the event counts in
+//! `Metrics::spill_failures`. Reservations released by crash-driven
+//! evictions (`ShuffleStore::evict_executor_outputs`,
+//! `BlockManager::evict_executor`) return budget before the lost work
+//! is re-run, so recovery never deadlocks against the budget it is
+//! recovering into.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};

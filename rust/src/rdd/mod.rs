@@ -6,8 +6,13 @@
 //! 2. user-controllable partitioning + shuffle ([`pair`]),
 //! 3. lineage-based recovery: a lost cached partition is recomputed from
 //!    its parents' compute closures ([`exec::FaultInjector`] simulates
-//!    task and executor failures; the scheduler retries and the cache
-//!    evicts, so recovery flows through the same code path Spark uses),
+//!    the full task lifecycle — start/mid-task failures, executor
+//!    crashes that take shuffle map outputs with them, silent
+//!    shuffle-output loss, spill-IO faults, and injected stragglers; the
+//!    scheduler retries with seeded backoff, re-runs lost map partitions
+//!    on `FetchFailed` (stage-level lineage), speculatively clones
+//!    stalled tasks, and the cache evicts, so recovery flows through the
+//!    same code paths Spark uses),
 //! 4. a high-level, composable API (`map`, `filter`, `aggregate`,
 //!    `tree_aggregate`, `zip_partitions`, `reduce_by_key`, ...).
 //!
@@ -48,6 +53,9 @@ pub mod pair;
 
 pub use broadcast::Broadcast;
 pub use core::Rdd;
-pub use exec::{Cluster, Metrics, MetricsSnapshot, VecPool};
+pub use exec::{
+    Cluster, FaultInjector, FaultPlan, JobOptions, Metrics, MetricsSnapshot, ShuffleRerun,
+    VecPool,
+};
 pub use memory::{MemoryManager, SizeOf, Spill};
 pub use pair::{PartitionableKey, Partitioner};

@@ -25,6 +25,16 @@
 //! once per record go through `BlockMatrix::multiply`'s `Arc`-shared
 //! routing instead. `reduce_by_key_merge` and `group_by_key` are thin
 //! wrappers over it.
+//!
+//! # Fault tolerance
+//!
+//! Map tasks register their completed outputs with the shuffle store and
+//! every map stage registers a rerun handler
+//! ([`crate::rdd::Cluster::register_map_rerun`]); reduce-side reads use
+//! the loss-detecting `ShuffleStore::fetch`, so an executor crash that
+//! takes map outputs with it surfaces as `FetchFailed` and the scheduler
+//! re-runs exactly the lost map partitions before retrying the reduce —
+//! stage-level lineage, per DESIGN.md §"Fault tolerance & chaos".
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -33,6 +43,7 @@ use std::sync::Arc;
 
 use crate::error::Result;
 use crate::rdd::core::{Prep, Rdd};
+use crate::rdd::exec::ShuffleRerun;
 use crate::rdd::memory::{SizeOf, Spill};
 use crate::rdd::shuffle::ShuffleDep;
 
@@ -221,8 +232,11 @@ where
                 let cl = Arc::clone(&cluster);
                 let part = part2.clone();
                 let num_out = part.num_partitions();
-                cluster.run_job(
-                    parent.num_partitions(),
+                let n_map = parent.num_partitions();
+                // one shared map task: run below for the full stage, and
+                // re-run for exactly the lost partitions when a reduce-
+                // side fetch misses (stage-level lineage)
+                let map_task: Arc<dyn Fn(usize, usize) -> Result<()> + Send + Sync> =
                     Arc::new(move |p, exec| {
                         // verbatim routing off the fused stream — the
                         // pre-shuffle partition is never materialized
@@ -237,9 +251,29 @@ where
                                 cl.shuffle.put(shuffle_id, p, b, bucket);
                             }
                         }
+                        // register even all-empty maps, so a reduce-side
+                        // miss means "lost", not "produced nothing"
+                        cl.shuffle.register_map_output(shuffle_id, p, exec);
                         Ok(())
-                    }),
-                )?;
+                    });
+                cluster.run_job(n_map, Arc::clone(&map_task))?;
+                let cl_rerun = Arc::clone(&cluster);
+                cluster.register_map_rerun(
+                    shuffle_id,
+                    ShuffleRerun {
+                        base: 0,
+                        n_map,
+                        handler: Arc::new(move |lost| {
+                            let lost = lost.to_vec();
+                            let task = Arc::clone(&map_task);
+                            cl_rerun.run_job(
+                                lost.len(),
+                                Arc::new(move |i, exec| task(lost[i], exec)),
+                            )?;
+                            Ok(())
+                        }),
+                    },
+                );
                 Ok(true)
             }),
         );
@@ -263,7 +297,9 @@ where
             SideSource::Shuffled { _dep, shuffle_id, n_map } => {
                 let store = _dep.store();
                 for m in 0..*n_map {
-                    if let Some(bucket) = store.get::<(K, V)>(*shuffle_id, m, q) {
+                    // loss-detecting read: a missing map output raises
+                    // FetchFailed and the scheduler re-runs that map task
+                    if let Some(bucket) = store.fetch::<(K, V)>(*shuffle_id, m, q)? {
                         for (k, v) in bucket.iter() {
                             f((k.clone(), v.clone()));
                         }
@@ -348,8 +384,10 @@ where
                 let create = Arc::clone(&create_m);
                 let merge_value = Arc::clone(&merge_v);
                 let part = part_m.clone();
-                cluster.run_job(
-                    parent.num_partitions(),
+                let n_map = parent.num_partitions();
+                // shared map task: the full stage now, lost partitions
+                // again later if a reduce-side fetch misses
+                let map_task: Arc<dyn Fn(usize, usize) -> Result<()> + Send + Sync> =
                     Arc::new(move |p, exec| {
                         // map-side combine into per-reduce-partition
                         // maps, streaming off the fused pipeline —
@@ -371,9 +409,29 @@ where
                                 cl.shuffle.put(shuffle_id, p, b, vec);
                             }
                         }
+                        // register even all-empty maps, so a reduce-side
+                        // miss means "lost", not "produced nothing"
+                        cl.shuffle.register_map_output(shuffle_id, p, exec);
                         Ok(())
-                    }),
-                )?;
+                    });
+                cluster.run_job(n_map, Arc::clone(&map_task))?;
+                let cl_rerun = Arc::clone(&cluster);
+                cluster.register_map_rerun(
+                    shuffle_id,
+                    ShuffleRerun {
+                        base: 0,
+                        n_map,
+                        handler: Arc::new(move |lost| {
+                            let lost = lost.to_vec();
+                            let task = Arc::clone(&map_task);
+                            cl_rerun.run_job(
+                                lost.len(),
+                                Arc::new(move |i, exec| task(lost[i], exec)),
+                            )?;
+                            Ok(())
+                        }),
+                    },
+                );
                 Ok(true)
             }),
         );
@@ -391,7 +449,9 @@ where
                 let _ = dep_keep.shuffle_id();
                 let mut acc: HashMap<K, C> = HashMap::new();
                 for m in 0..n_map {
-                    if let Some(bucket) = cluster2.shuffle.get::<(K, C)>(shuffle_id, m, q) {
+                    // loss-detecting read: FetchFailed on a lost map
+                    // output triggers stage-level lineage recovery
+                    if let Some(bucket) = cluster2.shuffle.fetch::<(K, C)>(shuffle_id, m, q)? {
                         for (k, c) in bucket.iter() {
                             match acc.get_mut(k) {
                                 Some(a) => merge_combiners(a, c.clone()),

@@ -12,6 +12,17 @@
 //! eagerly the moment the last RDD referencing the shuffle is dropped
 //! (no manual `remove_shuffle` calls in op code).
 //!
+//! **Fault tolerance** (DESIGN.md §"Fault tolerance & chaos"): map
+//! tasks register their completion (`register_map_output`); an executor
+//! crash or injected shuffle-loss event drops that executor's
+//! registrations *and* buckets (`evict_executor_outputs`), and a
+//! reduce-side `fetch` of an unregistered map partition raises
+//! [`Error::FetchFailed`] — the scheduler then re-runs exactly the lost
+//! map partitions (stage-level lineage) before retrying the reduce.
+//! Spill writes may be vetoed by a keyed injector fault
+//! (`FaultConfig::spill_fail_prob`); the bucket then stays resident via
+//! force-reserve, counted in `Metrics::spill_failures`.
+//!
 //! **Memory governance** (DESIGN.md §"Memory governance"): every bucket
 //! reserves its deep [`SizeOf`] bytes against the cluster
 //! [`MemoryManager`] before going resident. Under pressure the store
@@ -34,9 +45,9 @@ use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::rdd::core::Prep;
-use crate::rdd::exec::{Cluster, Metrics};
+use crate::rdd::exec::{Cluster, FaultInjector, Metrics};
 use crate::rdd::memory::{
     decode_run, encode_run, MemoryManager, SizeOf, Spill, SpillFile, vec_deep_bytes,
 };
@@ -62,17 +73,32 @@ enum Slot {
 /// Thread-safe, budget-governed shuffle map-output tracker.
 pub struct ShuffleStore {
     shards: Vec<Mutex<HashMap<(usize, usize, usize), Slot>>>,
+    /// Map-output registrations: `(shuffle, map partition) -> executor`
+    /// that produced it. Registration is what distinguishes "the map
+    /// task ran and produced (possibly zero) buckets" from "its outputs
+    /// were lost": [`ShuffleStore::fetch`] on an unregistered map
+    /// partition raises [`Error::FetchFailed`].
+    outputs: Mutex<HashMap<(usize, usize), usize>>,
     metrics: Arc<Metrics>,
     memory: Arc<MemoryManager>,
+    /// Spill-IO fault decisions (`FaultConfig::spill_fail_prob`).
+    injector: Arc<FaultInjector>,
 }
 
 impl ShuffleStore {
-    /// Empty store feeding the given metrics, governed by `memory`.
-    pub fn new(metrics: Arc<Metrics>, memory: Arc<MemoryManager>) -> ShuffleStore {
+    /// Empty store feeding the given metrics, governed by `memory`, with
+    /// spill-IO faults drawn from `injector`.
+    pub fn new(
+        metrics: Arc<Metrics>,
+        memory: Arc<MemoryManager>,
+        injector: Arc<FaultInjector>,
+    ) -> ShuffleStore {
         ShuffleStore {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            outputs: Mutex::new(HashMap::new()),
             metrics,
             memory,
+            injector,
         }
     }
 
@@ -86,8 +112,17 @@ impl ShuffleStore {
         &self.shards[((h >> 7) % SHARDS as u64) as usize]
     }
 
-    /// Encode + write one bucket, counting the spill.
-    fn spill_bucket<T: Spill>(&self, data: &[T]) -> Result<SpillFile> {
+    /// Encode + write one bucket, counting the spill. The injector may
+    /// veto the write with a (deterministic, bucket-keyed) I/O fault —
+    /// callers fall back to a resident force-reserve and count it in
+    /// `Metrics::spill_failures`.
+    fn spill_bucket<T: Spill>(&self, key: (usize, usize, usize), data: &[T]) -> Result<SpillFile> {
+        if self.injector.spill_fault(key.0, key.1, key.2) {
+            return Err(Error::io(
+                format!("spilling shuffle bucket {key:?}"),
+                std::io::Error::other("injected spill I/O fault"),
+            ));
+        }
         let payload = encode_run(data);
         let file = SpillFile::write(&payload, data.len() as u64)?;
         self.metrics.bytes_spilled.fetch_add(file.bytes, Ordering::Relaxed);
@@ -114,7 +149,7 @@ impl ShuffleStore {
         let key = (shuffle, map_p, reduce_p);
         let mut g = self.shard(&key).lock().expect("shuffle shard");
         let slot = if self.memory.try_reserve(bytes) {
-            self.resident_slot(data, bytes)
+            self.resident_slot(key, data, bytes)
         } else if !T::SPILLABLE {
             self.memory.force_reserve(bytes);
             Slot::Resident { data: Arc::new(data), bytes, spill: None }
@@ -123,14 +158,15 @@ impl ShuffleStore {
             // reservation fits, then spill the incoming bucket itself
             self.spill_shard_victims(&mut g, bytes);
             if self.memory.try_reserve(bytes) {
-                self.resident_slot(data, bytes)
+                self.resident_slot(key, data, bytes)
             } else {
-                match self.spill_bucket(&data) {
+                match self.spill_bucket(key, &data) {
                     Ok(file) => Slot::Spilled { file, ty: TypeId::of::<Vec<T>>() },
                     Err(_) => {
                         // disk refused: stay resident, overrun the budget
+                        self.metrics.spill_failures.fetch_add(1, Ordering::Relaxed);
                         self.memory.force_reserve(bytes);
-                        self.resident_slot(data, bytes)
+                        self.resident_slot(key, data, bytes)
                     }
                 }
             }
@@ -162,6 +198,7 @@ impl ShuffleStore {
 
     fn resident_slot<T: Send + Sync + SizeOf + Spill + 'static>(
         &self,
+        key: (usize, usize, usize),
         data: Vec<T>,
         bytes: u64,
     ) -> Slot {
@@ -169,7 +206,16 @@ impl ShuffleStore {
         let spill = if T::SPILLABLE {
             let payload = Arc::clone(&data);
             let metrics = Arc::clone(&self.metrics);
+            let injector = Arc::clone(&self.injector);
             Some(Box::new(move || {
+                // same keyed fault decision as the direct-spill path, so
+                // a bucket fated to fail fails here too
+                if injector.spill_fault(key.0, key.1, key.2) {
+                    return Err(Error::io(
+                        format!("spilling shuffle bucket {key:?}"),
+                        std::io::Error::other("injected spill I/O fault"),
+                    ));
+                }
                 let buf = encode_run(payload.as_slice());
                 let file = SpillFile::write(&buf, payload.len() as u64)?;
                 metrics.bytes_spilled.fetch_add(file.bytes, Ordering::Relaxed);
@@ -206,7 +252,15 @@ impl ShuffleStore {
             let spilled = match shard.get(&k) {
                 Some(Slot::Resident { data, spill: Some(spill), .. }) => {
                     let ty = data.as_ref().type_id();
-                    spill().ok().map(|file| (file, ty))
+                    match spill() {
+                        Ok(file) => Some((file, ty)),
+                        Err(_) => {
+                            // disk refused this victim: count it, leave
+                            // it resident, try the next one
+                            self.metrics.spill_failures.fetch_add(1, Ordering::Relaxed);
+                            None
+                        }
+                    }
                 }
                 _ => None,
             };
@@ -248,8 +302,74 @@ impl ShuffleStore {
         }
     }
 
+    /// Record that map partition `map_p` of `shuffle` ran to completion
+    /// on `executor` — call *after* its buckets are stored, the way
+    /// Spark's map-output tracker learns locations only on task success.
+    /// Idempotent; a retried or speculated map task re-registers under
+    /// its latest executor.
+    pub fn register_map_output(&self, shuffle: usize, map_p: usize, executor: usize) {
+        self.outputs.lock().expect("map output registry").insert((shuffle, map_p), executor);
+    }
+
+    /// True when `map_p`'s outputs for `shuffle` are registered (present
+    /// and not lost).
+    pub fn has_output(&self, shuffle: usize, map_p: usize) -> bool {
+        self.outputs.lock().expect("map output registry").contains_key(&(shuffle, map_p))
+    }
+
+    /// Simulated loss of every map output `executor` produced: drop the
+    /// registrations and the underlying buckets (resident reservations
+    /// returned, spill files deleted). Reduce tasks that later miss one
+    /// of these raise [`Error::FetchFailed`] and the scheduler re-runs
+    /// exactly the lost map partitions. Returns how many map outputs
+    /// were lost (also counted in `Metrics::shuffle_outputs_lost`).
+    pub fn evict_executor_outputs(&self, executor: usize) -> usize {
+        let lost: Vec<(usize, usize)> = {
+            let mut reg = self.outputs.lock().expect("map output registry");
+            let keys: Vec<(usize, usize)> =
+                reg.iter().filter(|(_, e)| **e == executor).map(|(k, _)| *k).collect();
+            for k in &keys {
+                reg.remove(k);
+            }
+            keys
+        };
+        for &(shuffle, map_p) in &lost {
+            // every (shuffle, map_p, *) bucket lives in one shard
+            let mut g = self.shard(&(shuffle, map_p, 0)).lock().expect("shuffle shard");
+            g.retain(|&(s, m, _), slot| {
+                if s != shuffle || m != map_p {
+                    return true;
+                }
+                if let Slot::Resident { bytes, .. } = slot {
+                    self.memory.release(*bytes);
+                }
+                false // Spilled slots delete their file on drop
+            });
+        }
+        self.metrics.shuffle_outputs_lost.fetch_add(lost.len() as u64, Ordering::Relaxed);
+        lost.len()
+    }
+
+    /// Reduce-side read with loss detection: `Ok(None)` when map
+    /// partition `map_p` ran but produced nothing for `reduce_p`;
+    /// `Err(FetchFailed)` when its outputs were never registered or have
+    /// been lost — the scheduler's cue for stage-level lineage recovery.
+    pub fn fetch<T: Send + Sync + Spill + 'static>(
+        &self,
+        shuffle: usize,
+        map_p: usize,
+        reduce_p: usize,
+    ) -> Result<Option<Arc<Vec<T>>>> {
+        if !self.has_output(shuffle, map_p) {
+            return Err(Error::FetchFailed { shuffle, map_partition: map_p });
+        }
+        Ok(self.get(shuffle, map_p, reduce_p))
+    }
+
     /// Drop all buckets of a shuffle (normally via `ShuffleDep::drop`),
-    /// returning reservations and deleting spill files.
+    /// returning reservations and deleting spill files. Map-output
+    /// registrations go with them (ids are never reused, but a stale
+    /// registration must not outlive its data).
     pub fn remove_shuffle(&self, shuffle: usize) -> usize {
         let mut removed = 0;
         for shard in &self.shards {
@@ -265,6 +385,7 @@ impl ShuffleStore {
                 false // Spilled slots delete their file on drop
             });
         }
+        self.outputs.lock().expect("map output registry").retain(|&(s, _), _| s != shuffle);
         removed
     }
 
@@ -284,7 +405,8 @@ impl Default for ShuffleStore {
     fn default() -> Self {
         let metrics = Arc::new(Metrics::default());
         let memory = Arc::new(MemoryManager::new(None, Arc::clone(&metrics)));
-        Self::new(metrics, memory)
+        let injector = Arc::new(FaultInjector::new(&crate::config::ClusterConfig::default()));
+        Self::new(metrics, memory, injector)
     }
 }
 
@@ -350,6 +472,9 @@ impl ShuffleDep {
 
 impl Drop for ShuffleDep {
     fn drop(&mut self) {
+        // break the lineage cycle first: rerun handlers close over the
+        // producing RDD, which holds the cluster
+        self.cluster.unregister_reruns(self.shuffle_id);
         self.cluster.shuffle.remove_shuffle(self.shuffle_id);
     }
 }
@@ -358,10 +483,22 @@ impl Drop for ShuffleDep {
 mod tests {
     use super::*;
 
-    fn budgeted(budget: u64) -> (ShuffleStore, Arc<Metrics>, Arc<MemoryManager>) {
+    fn budgeted_faulty(
+        budget: u64,
+        spill_fail_prob: f64,
+    ) -> (ShuffleStore, Arc<Metrics>, Arc<MemoryManager>) {
         let metrics = Arc::new(Metrics::default());
         let memory = Arc::new(MemoryManager::new(Some(budget), Arc::clone(&metrics)));
-        (ShuffleStore::new(Arc::clone(&metrics), Arc::clone(&memory)), metrics, memory)
+        let cfg = crate::config::ClusterConfig {
+            fault: crate::config::FaultConfig { spill_fail_prob, ..Default::default() },
+            ..Default::default()
+        };
+        let injector = Arc::new(FaultInjector::new(&cfg));
+        (ShuffleStore::new(Arc::clone(&metrics), Arc::clone(&memory), injector), metrics, memory)
+    }
+
+    fn budgeted(budget: u64) -> (ShuffleStore, Arc<Metrics>, Arc<MemoryManager>) {
+        budgeted_faulty(budget, 0.0)
     }
 
     #[test]
@@ -381,7 +518,9 @@ mod tests {
     fn put_counts_records_and_bytes() {
         let m = Arc::new(Metrics::default());
         let mem = Arc::new(MemoryManager::new(None, Arc::clone(&m)));
-        let s = ShuffleStore::new(Arc::clone(&m), mem);
+        let injector =
+            Arc::new(FaultInjector::new(&crate::config::ClusterConfig::default()));
+        let s = ShuffleStore::new(Arc::clone(&m), mem, injector);
         s.put(1, 0, 0, vec![1u64, 2, 3]);
         assert_eq!(m.shuffle_records_written.load(Ordering::Relaxed), 3);
         assert_eq!(m.shuffle_bytes_estimate.load(Ordering::Relaxed), 24);
@@ -421,6 +560,60 @@ mod tests {
         // both buckets still readable
         assert_eq!(s.get::<u64>(2, 0, 0).unwrap().len(), 100);
         assert_eq!(s.get::<u64>(2, 0, 1).unwrap().len(), 90);
+    }
+
+    #[test]
+    fn injected_spill_fault_falls_back_resident_and_is_counted() {
+        // the spill-IO bugfix: a failed spill must be *visible*
+        // (Metrics::spill_failures), not a silent resident fallback
+        let (s, m, mem) = budgeted_faulty(64, 1.0);
+        let data: Vec<(u32, f64)> = (0..100).map(|i| (i, i as f64 * 0.5)).collect();
+        s.put(5, 0, 0, data.clone()); // 1600 deep bytes > 64: wants to spill
+        assert_eq!(m.spill_files.load(Ordering::Relaxed), 0, "no spill file lands");
+        assert!(m.spill_failures.load(Ordering::Relaxed) >= 1, "fallback is counted");
+        assert!(mem.used() > 64, "bucket force-reserved past the budget");
+        let back = s.get::<(u32, f64)>(5, 0, 0).unwrap();
+        assert_eq!(*back, data, "data survives the failed spill bit-identical");
+    }
+
+    #[test]
+    fn fetch_distinguishes_empty_from_lost() {
+        let s = ShuffleStore::default();
+        s.put(7, 0, 1, vec![("a", 1)]);
+        s.register_map_output(7, 0, 3);
+        // registered + no bucket => the map produced nothing: Ok(None)
+        assert!(s.fetch::<(&str, i32)>(7, 0, 0).unwrap().is_none());
+        assert_eq!(*s.fetch::<(&str, i32)>(7, 0, 1).unwrap().unwrap(), vec![("a", 1)]);
+        // unregistered map partition => its output is lost: FetchFailed
+        let err = s.fetch::<(&str, i32)>(7, 1, 0).unwrap_err();
+        assert!(err.is_fetch_failed(), "unregistered output must fetch-fail: {err}");
+    }
+
+    #[test]
+    fn evict_executor_outputs_drops_buckets_and_registrations() {
+        let (s, m, mem) = budgeted(1 << 20);
+        s.put(9, 0, 0, vec![1u64, 2]);
+        s.register_map_output(9, 0, 2);
+        s.put(9, 1, 0, vec![3u64]);
+        s.register_map_output(9, 1, 5);
+        assert_eq!(s.evict_executor_outputs(2), 1, "only executor 2's output is lost");
+        assert_eq!(m.shuffle_outputs_lost.load(Ordering::Relaxed), 1);
+        assert!(s.fetch::<u64>(9, 0, 0).is_err(), "lost output raises FetchFailed");
+        assert_eq!(s.fetch::<u64>(9, 1, 0).unwrap().unwrap().len(), 1, "other executor survives");
+        assert_eq!(mem.used(), 8, "lost bucket's reservation is returned");
+        // re-running the map partition heals the gap
+        s.put(9, 0, 0, vec![1u64, 2]);
+        s.register_map_output(9, 0, 0);
+        assert_eq!(s.fetch::<u64>(9, 0, 0).unwrap().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn remove_shuffle_clears_registrations() {
+        let s = ShuffleStore::default();
+        s.put(4, 0, 0, vec![1u8]);
+        s.register_map_output(4, 0, 1);
+        s.remove_shuffle(4);
+        assert!(!s.has_output(4, 0), "registration must not outlive its data");
     }
 
     #[test]

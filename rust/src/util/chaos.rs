@@ -1,0 +1,212 @@
+//! Chaos-schedule builder: deterministic fault-injection configs for the
+//! chaos test harness (`rust/tests/chaos.rs`) and the CI chaos matrix.
+//!
+//! A chaos schedule is just a [`ClusterConfig`] with one or more fault
+//! probabilities armed under a fixed seed — the injector's keyed draws
+//! (see `rdd::exec::FaultInjector`) make the schedule a pure function of
+//! `(seed, job, partition, attempt)`, so a sweep cell is reproducible
+//! bit-for-bit. The builder centralizes the knobs every chaos test needs
+//! (retry headroom, straggler delay, speculation, backoff, serial
+//! topology for snapshot-equality tests) and applies the CI-provided
+//! overrides:
+//!
+//! * `SPARKLA_CHAOS_SEED` — replaces the seed passed to [`Chaos::new`]
+//!   (the CI matrix runs the same suite at two seeds);
+//! * `SPARKLA_CHAOS_LEVEL` — multiplies every probability handed to
+//!   [`Chaos::with`] (elevated-probability CI runs), clamped so a cell
+//!   can never reach certain-failure.
+
+use crate::config::ClusterConfig;
+
+/// Probabilities scaled by `SPARKLA_CHAOS_LEVEL` are clamped here: a
+/// schedule where every attempt faults cannot recover within any retry
+/// budget, and the harness asserts recovery, not collapse.
+pub const MAX_PROB: f64 = 0.5;
+
+/// One injected-fault dimension the chaos suite sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Retryable failure at task start (`FaultConfig::task_fail_prob`).
+    TaskFail,
+    /// Executor crash: cached blocks and shuffle map outputs evicted
+    /// (`executor_kill_prob`).
+    ExecKill,
+    /// Silent shuffle-output loss on a live executor
+    /// (`shuffle_loss_prob`).
+    ShuffleLoss,
+    /// Injected straggler delay (`delay_prob`).
+    Delay,
+    /// Spill-to-disk I/O failure (`spill_fail_prob`).
+    SpillFail,
+    /// Failure after the task's work and shuffle writes landed
+    /// (`mid_task_fail_prob`).
+    MidTask,
+}
+
+impl FaultKind {
+    /// Every dimension, in sweep order.
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::TaskFail,
+        FaultKind::ExecKill,
+        FaultKind::ShuffleLoss,
+        FaultKind::Delay,
+        FaultKind::SpillFail,
+        FaultKind::MidTask,
+    ];
+
+    /// Stable name for test labels and failure messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::TaskFail => "task_fail",
+            FaultKind::ExecKill => "exec_kill",
+            FaultKind::ShuffleLoss => "shuffle_loss",
+            FaultKind::Delay => "delay",
+            FaultKind::SpillFail => "spill_fail",
+            FaultKind::MidTask => "mid_task",
+        }
+    }
+}
+
+/// Builder for a chaos [`ClusterConfig`]. Starts from the crate default
+/// with retry headroom raised (recovery needs attempts) and a short
+/// straggler delay, then layers fault dimensions on top.
+pub struct Chaos {
+    cfg: ClusterConfig,
+    level: f64,
+}
+
+impl Chaos {
+    /// A fault-free baseline schedule under `seed` (env override:
+    /// `SPARKLA_CHAOS_SEED`). Faults are armed by [`Chaos::with`].
+    pub fn new(seed: u64) -> Chaos {
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.seed = env_u64("SPARKLA_CHAOS_SEED").unwrap_or(seed);
+        cfg.fault.delay_ms = 5;
+        cfg.max_task_retries = 12;
+        Chaos { cfg, level: env_f64("SPARKLA_CHAOS_LEVEL").unwrap_or(1.0) }
+    }
+
+    /// Arm one fault dimension at `prob` (scaled by the chaos level,
+    /// clamped to [`MAX_PROB`]).
+    pub fn with(mut self, kind: FaultKind, prob: f64) -> Chaos {
+        let p = (prob * self.level).clamp(0.0, MAX_PROB);
+        let f = &mut self.cfg.fault;
+        match kind {
+            FaultKind::TaskFail => f.task_fail_prob = p,
+            FaultKind::ExecKill => f.executor_kill_prob = p,
+            FaultKind::ShuffleLoss => f.shuffle_loss_prob = p,
+            FaultKind::Delay => f.delay_prob = p,
+            FaultKind::SpillFail => f.spill_fail_prob = p,
+            FaultKind::MidTask => f.mid_task_fail_prob = p,
+        }
+        self
+    }
+
+    /// Straggler sleep applied when a delay fault fires.
+    pub fn delay_ms(mut self, ms: u64) -> Chaos {
+        self.cfg.fault.delay_ms = ms;
+        self
+    }
+
+    /// Enable speculative execution with a tight stall floor, so tests
+    /// trigger clones in milliseconds instead of Spark-scale seconds.
+    pub fn speculation(mut self, min_stall_ms: u64) -> Chaos {
+        self.cfg.speculation.enabled = true;
+        self.cfg.speculation.min_stall_ms = min_stall_ms;
+        self.cfg.speculation.tick_ms = 2;
+        self
+    }
+
+    /// Enable seeded exponential retry backoff.
+    pub fn backoff(mut self, base_ms: u64, max_ms: u64) -> Chaos {
+        self.cfg.retry_backoff_base_ms = base_ms;
+        self.cfg.retry_backoff_max_ms = max_ms;
+        self
+    }
+
+    /// Per-job wall-clock deadline.
+    pub fn deadline_ms(mut self, ms: u64) -> Chaos {
+        self.cfg.job_deadline_ms = Some(ms);
+        self
+    }
+
+    /// Retry budget override (the builder default is 12).
+    pub fn retries(mut self, n: usize) -> Chaos {
+        self.cfg.max_task_retries = n;
+        self
+    }
+
+    /// Executor memory budget, for combined-pressure schedules (spill +
+    /// LRU eviction + fault recovery in one job).
+    pub fn memory_budget(mut self, bytes: u64) -> Chaos {
+        self.cfg.memory_budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Collapse to one executor × one core. Fault *events* are keyed and
+    /// seed-deterministic on any topology; executor-dependent effects
+    /// (which outputs a crash takes) also become scheduling-independent
+    /// only when a single worker runs every task — snapshot-equality
+    /// tests use this.
+    pub fn serial(mut self) -> Chaos {
+        self.cfg.num_executors = 1;
+        self.cfg.cores_per_executor = 1;
+        self
+    }
+
+    /// The finished schedule.
+    pub fn build(self) -> ClusterConfig {
+        self.cfg
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+fn env_f64(key: &str) -> Option<f64> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_arms_exactly_the_requested_dimension() {
+        let cfg = Chaos::new(7).with(FaultKind::ShuffleLoss, 0.2).build();
+        assert_eq!(cfg.fault.shuffle_loss_prob, 0.2);
+        assert_eq!(cfg.fault.task_fail_prob, 0.0);
+        assert_eq!(cfg.fault.executor_kill_prob, 0.0);
+        assert_eq!(cfg.max_task_retries, 12, "chaos schedules get retry headroom");
+        cfg.validate().expect("chaos schedules must validate");
+    }
+
+    #[test]
+    fn level_scaling_is_clamped() {
+        let mut c = Chaos::new(1);
+        c.level = 10.0; // simulate SPARKLA_CHAOS_LEVEL=10
+        let cfg = c.with(FaultKind::TaskFail, 0.2).build();
+        assert_eq!(cfg.fault.task_fail_prob, MAX_PROB, "scaled prob clamps below certainty");
+    }
+
+    #[test]
+    fn serial_and_knob_helpers_compose() {
+        let cfg = Chaos::new(3)
+            .with(FaultKind::Delay, 0.3)
+            .delay_ms(9)
+            .speculation(4)
+            .backoff(2, 32)
+            .deadline_ms(60_000)
+            .memory_budget(4096)
+            .serial()
+            .build();
+        assert_eq!((cfg.num_executors, cfg.cores_per_executor), (1, 1));
+        assert_eq!(cfg.fault.delay_ms, 9);
+        assert!(cfg.speculation.enabled && cfg.speculation.min_stall_ms == 4);
+        assert_eq!((cfg.retry_backoff_base_ms, cfg.retry_backoff_max_ms), (2, 32));
+        assert_eq!(cfg.job_deadline_ms, Some(60_000));
+        assert_eq!(cfg.memory_budget_bytes, Some(4096));
+        assert!(FaultKind::ALL.iter().all(|k| !k.name().is_empty()));
+    }
+}

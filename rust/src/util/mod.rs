@@ -2,6 +2,7 @@
 //! proptest, clap, csv, ...) — hand-rolled because this build is fully
 //! offline. Everything here is deterministic under a seed.
 
+pub mod chaos;
 pub mod rng;
 pub mod timer;
 pub mod stats;

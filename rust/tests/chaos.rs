@@ -1,0 +1,368 @@
+//! Chaos harness: seeded fault schedules swept across every fault
+//! dimension × every representative workload, asserting results stay
+//! BIT-IDENTICAL to the fault-free run and the matching recovery
+//! counters fired.
+//!
+//! Schedules come from [`sparkla::util::chaos::Chaos`]; the injector's
+//! keyed draws make each cell a pure function of the seed, and the
+//! per-cell seeds were chosen (and verified against the simulated draw
+//! stream) so every armed dimension fires within the first job even
+//! under the CI matrix's `SPARKLA_CHAOS_SEED` overrides. The "fired"
+//! assertions stay seed-robust regardless: each cell draws hundreds of
+//! attempt plans across the five workloads.
+//!
+//! Float results are compared through `f64::to_bits` — tolerance-free,
+//! because the engine's accumulation orders are partition-indexed and
+//! scheduling-independent.
+
+use std::sync::atomic::Ordering;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use sparkla::config::ClusterConfig;
+use sparkla::distributed::svd::compute_svd;
+use sparkla::distributed::{BlockMatrix, CoordinateMatrix};
+use sparkla::linalg::matrix::DenseMatrix;
+use sparkla::linalg::vector::Vector;
+use sparkla::optim::lbfgs::{lbfgs, LbfgsConfig};
+use sparkla::optim::problem::synth;
+use sparkla::optim::Regularizer;
+use sparkla::rdd::{FaultPlan, MetricsSnapshot};
+use sparkla::util::chaos::{Chaos, FaultKind};
+use sparkla::util::rng::SplitMix64;
+use sparkla::Context;
+
+/// Exact-comparable digest of all five workloads (floats as raw bits).
+#[derive(Debug, PartialEq, Eq)]
+struct Fingerprint {
+    collected: Vec<i64>,
+    reduced: Vec<(u32, u64)>,
+    product: Vec<u64>,
+    singular: Vec<u64>,
+    weights: Vec<u64>,
+    objective: Vec<u64>,
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The five swept workloads, exercising every engine layer: narrow
+/// collect, one-shuffle aggregation, the block-routing simulate-multiply
+/// (two rerun sides under one `ShuffleDep`), iterative ARPACK SVD over a
+/// shuffled conversion, and a full L-BFGS training loop.
+fn run_workloads(ctx: &Context) -> Fingerprint {
+    // 32 narrow tasks — job 0, where every seed's armed dimension fires
+    let collected =
+        ctx.parallelize((0..4000).collect::<Vec<i64>>(), 32).map(|x| x * 7 - 3).collect().unwrap();
+
+    let pairs: Vec<(u32, u64)> = (0..3000).map(|i| ((i % 53) as u32, (i * i) as u64)).collect();
+    let mut reduced =
+        ctx.parallelize(pairs, 12).map(|p| *p).reduce_by_key(8, |a, b| a + b).collect().unwrap();
+    // per-key sums are order-independent; only the emission order is not
+    reduced.sort_unstable();
+
+    let mut rng = SplitMix64::new(17);
+    let a = DenseMatrix::randn(40, 32, &mut rng);
+    let b = DenseMatrix::randn(32, 36, &mut rng);
+    let ba = BlockMatrix::from_local(ctx, &a, 7, 5, 3);
+    let bb = BlockMatrix::from_local(ctx, &b, 5, 6, 3);
+    let product = ba.multiply(&bb).unwrap().to_local().unwrap();
+
+    let cm = CoordinateMatrix::sprand(ctx, 300, 24, 2000, 6, 5);
+    let rm = cm.to_row_matrix(6).unwrap();
+    let svd = compute_svd(&rm, 4, false).unwrap();
+
+    let (prob, _) = synth::logistic(ctx, 300, 8, Regularizer::L2(0.1), 6, 7).unwrap();
+    let fit = lbfgs(&prob, &Vector::zeros(8), &LbfgsConfig { max_iters: 10, ..Default::default() })
+        .unwrap();
+
+    Fingerprint {
+        collected,
+        reduced,
+        product: bits(&product.data),
+        singular: bits(&svd.s),
+        weights: bits(&fit.solution.0),
+        objective: bits(&fit.objective),
+    }
+}
+
+/// Fault-free baseline, computed once and shared across all sweep cells.
+fn baseline() -> &'static Fingerprint {
+    static BASE: OnceLock<Fingerprint> = OnceLock::new();
+    BASE.get_or_init(|| {
+        let mut cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+        cfg.memory_budget_bytes = None; // decouple from CI's env budget
+        run_workloads(&Context::with_config(cfg))
+    })
+}
+
+/// One sweep cell: arm a single fault dimension, run everything, demand
+/// bit-identity and proof the dimension actually engaged.
+fn sweep(kind: FaultKind, prob: f64, seed: u64) {
+    let mut chaos = Chaos::new(seed).with(kind, prob).delay_ms(3);
+    if kind == FaultKind::SpillFail {
+        // spill faults only fire on spill attempts: force them
+        chaos = chaos.memory_budget(2048);
+    }
+    let ctx = Context::with_config(chaos.build());
+    let got = run_workloads(&ctx);
+    assert_eq!(&got, baseline(), "chaos dimension `{}` corrupted a result", kind.name());
+    let s = ctx.metrics().snapshot();
+    let fired = match kind {
+        FaultKind::TaskFail | FaultKind::MidTask => s.tasks_failed,
+        FaultKind::ExecKill => s.executor_crashes,
+        FaultKind::ShuffleLoss => s.shuffle_loss_events,
+        FaultKind::Delay => s.tasks_delayed,
+        FaultKind::SpillFail => s.spill_failures,
+    };
+    assert!(fired > 0, "chaos dimension `{}` never fired under seed {seed}", kind.name());
+    match kind {
+        FaultKind::TaskFail | FaultKind::MidTask | FaultKind::ExecKill => {
+            assert!(s.tasks_retried > 0, "faults without retries cannot have recovered");
+        }
+        // silent losses may hit executors holding no registered outputs,
+        // and spill failures recover in-place (resident fallback) — no
+        // retry is implied for those dimensions
+        FaultKind::ShuffleLoss | FaultKind::Delay | FaultKind::SpillFail => {}
+    }
+}
+
+#[test]
+fn sweep_task_fail() {
+    sweep(FaultKind::TaskFail, 0.20, 101);
+}
+
+#[test]
+fn sweep_exec_kill() {
+    sweep(FaultKind::ExecKill, 0.10, 102);
+}
+
+#[test]
+fn sweep_shuffle_loss() {
+    sweep(FaultKind::ShuffleLoss, 0.12, 103);
+}
+
+#[test]
+fn sweep_delay() {
+    sweep(FaultKind::Delay, 0.25, 104);
+}
+
+#[test]
+fn sweep_spill_fail() {
+    sweep(FaultKind::SpillFail, 0.30, 105);
+}
+
+#[test]
+fn sweep_mid_task() {
+    sweep(FaultKind::MidTask, 0.15, 106);
+}
+
+/// Every dimension at once, plus speculation, backoff, and a tight
+/// budget — the full gauntlet must still be bit-identical.
+#[test]
+fn sweep_everything_at_once() {
+    let ctx = Context::with_config(
+        Chaos::new(99)
+            .with(FaultKind::TaskFail, 0.06)
+            .with(FaultKind::ExecKill, 0.04)
+            .with(FaultKind::ShuffleLoss, 0.05)
+            .with(FaultKind::Delay, 0.08)
+            .with(FaultKind::SpillFail, 0.15)
+            .with(FaultKind::MidTask, 0.05)
+            .delay_ms(3)
+            .speculation(25)
+            .backoff(1, 8)
+            .memory_budget(2048)
+            .build(),
+    );
+    let got = run_workloads(&ctx);
+    assert_eq!(&got, baseline(), "composite chaos schedule corrupted a result");
+    let s = ctx.metrics().snapshot();
+    let any = s.tasks_failed
+        + s.executor_crashes
+        + s.tasks_delayed
+        + s.shuffle_loss_events
+        + s.spill_failures;
+    assert!(any > 0, "composite schedule injected nothing");
+}
+
+/// Stage-level lineage, surgically: drop every executor's registered map
+/// outputs after the shuffle materialized, then re-read. The reduce side
+/// must observe `FetchFailed`, re-run only the lost map partitions, and
+/// produce the identical result.
+#[test]
+fn lost_map_outputs_trigger_partial_stage_rerun() {
+    let data: Vec<(u32, u64)> = (0..2500).map(|i| ((i % 41) as u32, i as u64)).collect();
+    let ctx = Context::local("rerun", 4);
+    let summed = ctx.parallelize(data, 8).map(|p| *p).reduce_by_key(4, |a, b| a + b);
+    let mut want = summed.collect().unwrap();
+    want.sort_unstable();
+
+    for exec in 0..4 {
+        ctx.cluster().shuffle.evict_executor_outputs(exec);
+    }
+    let mut got = summed.collect().unwrap();
+    got.sort_unstable();
+    assert_eq!(got, want);
+
+    let m = ctx.metrics();
+    assert!(m.fetch_failures.load(Ordering::Relaxed) >= 1, "eviction must surface FetchFailed");
+    assert!(m.map_stages_rerun.load(Ordering::Relaxed) >= 1, "lost maps must be re-executed");
+}
+
+/// Speculative execution: force one partition into a long injected
+/// stall; a clone must be launched, win the partition, and the stalled
+/// original must cancel itself cooperatively on wake-up.
+#[test]
+fn forced_straggler_loses_to_speculative_clone() {
+    let ctx = Context::with_config(Chaos::new(11).speculation(10).build());
+    ctx.cluster().injector.force(0, 1, FaultPlan { delay_ms: 400, ..FaultPlan::default() });
+    let got = ctx.parallelize((0..800).collect::<Vec<i64>>(), 8).map(|x| x + 1).collect().unwrap();
+    let want: Vec<i64> = (1..=800).collect();
+    assert_eq!(got, want);
+
+    let m = ctx.metrics();
+    assert!(m.tasks_speculated.load(Ordering::Relaxed) >= 1, "stall must trigger a clone");
+    assert!(m.speculation_wins.load(Ordering::Relaxed) >= 1, "clone must win the partition");
+    // the loser is still asleep when the job returns; cancellation is
+    // cooperative, so poll briefly for it
+    let t0 = Instant::now();
+    while m.tasks_cancelled.load(Ordering::Relaxed) == 0 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(m.tasks_cancelled.load(Ordering::Relaxed) >= 1, "stalled original must cancel");
+}
+
+/// Mid-task faults land *after* the map task's shuffle writes: the retry
+/// re-writes the same buckets, and per-key sums would double if the
+/// store appended instead of overwriting.
+#[test]
+fn mid_task_fault_retry_overwrites_partial_shuffle_writes() {
+    let data: Vec<(u32, u64)> = (0..2000).map(|i| ((i % 31) as u32, i as u64)).collect();
+    let clean = Context::local("mid_clean", 4);
+    let mut want =
+        clean.parallelize(data.clone(), 8).map(|p| *p).reduce_by_key(5, |a, b| a + b).collect().unwrap();
+    want.sort_unstable();
+
+    let ctx = Context::local("mid_chaos", 4);
+    // partition 2, attempt 1 of the map stage dies after its writes land
+    ctx.cluster().injector.force(2, 1, FaultPlan { mid_task: true, ..FaultPlan::default() });
+    let mut got =
+        ctx.parallelize(data, 8).map(|p| *p).reduce_by_key(5, |a, b| a + b).collect().unwrap();
+    got.sort_unstable();
+    assert_eq!(got, want, "doubled sums would betray append-instead-of-overwrite");
+
+    let m = ctx.metrics();
+    assert!(m.tasks_failed.load(Ordering::Relaxed) >= 1);
+    assert!(m.tasks_retried.load(Ordering::Relaxed) >= 1);
+}
+
+/// Seeded backoff: forced consecutive failures must accumulate sleep in
+/// the counter, and the total is a pure function of the seed.
+#[test]
+fn retry_backoff_is_counted_and_seeded() {
+    let run = || {
+        let ctx = Context::with_config(Chaos::new(13).backoff(4, 64).build());
+        ctx.cluster().injector.force(1, 1, FaultPlan { fail: true, ..FaultPlan::default() });
+        ctx.cluster().injector.force(1, 2, FaultPlan { fail: true, ..FaultPlan::default() });
+        let out = ctx.parallelize(vec![5u32, 6, 7, 8], 4).collect().unwrap();
+        assert_eq!(out, vec![5, 6, 7, 8]);
+        ctx.metrics().retry_backoff_ms_total.load(Ordering::Relaxed)
+    };
+    let slept = run();
+    assert!(slept >= 3, "two backoffs at base 4ms must sleep: got {slept}ms");
+    assert_eq!(slept, run(), "backoff jitter must be seed-deterministic");
+}
+
+/// The per-job deadline names the straggling partition when a forced
+/// stall pins the job past its wall-clock budget.
+#[test]
+fn deadline_exceeded_names_the_straggling_partition() {
+    let ctx = Context::with_config(Chaos::new(15).deadline_ms(60).build());
+    ctx.cluster().injector.force(0, 1, FaultPlan { delay_ms: 500, ..FaultPlan::default() });
+    let r = ctx.parallelize((0..64).collect::<Vec<i64>>(), 4).collect();
+    match r {
+        Err(sparkla::Error::DeadlineExceeded { deadline_ms, partition, .. }) => {
+            assert_eq!(deadline_ms, 60);
+            assert_eq!(partition, 0, "the stalled partition should be named");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(ctx.metrics().tasks_delayed.load(Ordering::Relaxed) >= 1);
+}
+
+/// Combined pressure (satellite): executor crashes while the job is over
+/// its memory budget — spilled shuffle runs, LRU cache eviction, and
+/// lost map outputs in the same job — and the result stays
+/// bit-identical across repeated passes over the crashed cache.
+#[test]
+fn combined_pressure_crash_over_budget_stays_bit_identical() {
+    let data: Vec<(u32, u64)> = (0..4000).map(|i| ((i % 97) as u32, (i * 31) as u64)).collect();
+    let mut clean_cfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    clean_cfg.memory_budget_bytes = None; // pin: decouple from env budget
+    let clean = Context::with_config(clean_cfg);
+    let mut want =
+        clean.parallelize(data.clone(), 12).map(|p| *p).reduce_by_key(6, |a, b| a + b).collect().unwrap();
+    want.sort_unstable();
+
+    let ctx = Context::with_config(
+        Chaos::new(31)
+            .with(FaultKind::ExecKill, 0.15)
+            .with(FaultKind::TaskFail, 0.05)
+            .memory_budget(2048)
+            .build(),
+    );
+    let pairs = ctx.parallelize(data, 12).map(|p| *p).cache();
+    for round in 0..2 {
+        let mut got = pairs.reduce_by_key(6, |a, b| a + b).collect().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, want, "round {round}: corrupted result under combined pressure");
+    }
+
+    let m = ctx.metrics();
+    assert!(m.executor_crashes.load(Ordering::Relaxed) >= 1, "crash must fire (seed-verified)");
+    assert!(m.bytes_spilled.load(Ordering::Relaxed) > 0, "a 2KiB budget must force spills");
+    let evicted = m.blocks_evicted.load(Ordering::Relaxed)
+        + m.blocks_evicted_pressure.load(Ordering::Relaxed);
+    assert!(evicted >= 1, "cached blocks must have been evicted (crash or LRU)");
+}
+
+/// Acceptance: two same-seed runs produce identical metric snapshots.
+/// Serial topology makes executor-dependent effects (which outputs a
+/// crash takes) scheduling-independent; `xla_calls` is normalized away
+/// because it reads a process-global counter.
+fn chaotic_snapshot() -> (Vec<(u32, u64)>, MetricsSnapshot) {
+    let ctx = Context::with_config(
+        Chaos::new(21)
+            .with(FaultKind::TaskFail, 0.15)
+            .with(FaultKind::ExecKill, 0.05)
+            .with(FaultKind::Delay, 0.20)
+            .delay_ms(2)
+            .backoff(1, 8)
+            .serial()
+            .build(),
+    );
+    let collected =
+        ctx.parallelize((0..600).collect::<Vec<i64>>(), 32).map(|x| x ^ 5).collect().unwrap();
+    assert_eq!(collected.len(), 600);
+    let pairs: Vec<(u32, u64)> = (0..900).map(|i| ((i % 23) as u32, i as u64)).collect();
+    let mut reduced =
+        ctx.parallelize(pairs, 12).map(|p| *p).reduce_by_key(8, |a, b| a + b).collect().unwrap();
+    reduced.sort_unstable();
+    let mut snap = ctx.metrics().snapshot();
+    snap.xla_calls = 0;
+    (reduced, snap)
+}
+
+#[test]
+fn same_seed_runs_yield_identical_metric_snapshots() {
+    let (r1, s1) = chaotic_snapshot();
+    let (r2, s2) = chaotic_snapshot();
+    assert_eq!(r1, r2);
+    assert_eq!(s1, s2, "same-seed serial runs must count identically");
+    assert!(
+        s1.tasks_failed + s1.tasks_delayed + s1.executor_crashes > 0,
+        "the schedule was not actually chaotic"
+    );
+}

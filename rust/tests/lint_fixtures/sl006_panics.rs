@@ -1,4 +1,4 @@
-// SL006 fixture: panics inside a task-constructor closure, next to
+// SL006 fixture: panics inside task-constructor closures, next to
 // the sanctioned lock-poison idiom.
 
 pub fn launch(cluster: &Cluster, data: &Store, state: &Lock) {
@@ -12,4 +12,14 @@ pub fn launch(cluster: &Cluster, data: &Store, state: &Lock) {
     cluster.run_job(1, move |_p, _exec| {
         Ok(*state.lock().expect("sibling worker panicked"))
     });
+    cluster.run_job_opts(
+        2,
+        move |p, _exec| {
+            if done[p].load(Ordering::Acquire) {
+                unreachable!("cancelled attempt rescheduled");
+            }
+            Ok(results.get(p).expect("speculative clone lost the race"))
+        },
+        opts,
+    );
 }
