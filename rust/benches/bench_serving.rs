@@ -1,0 +1,140 @@
+//! Serving-runtime benchmarks (the multi-job serving PR, measured):
+//!
+//! job throughput and per-job latency (p50/p99) when 1, 8, and 64
+//! concurrent clients submit async jobs over one shared cached
+//! operator, against a sequential baseline that runs the same total
+//! number of jobs one at a time through the blocking action path.
+//! Each client thread measures submit-to-join wall time for its own
+//! jobs, so queueing delay under the admission gate is part of the
+//! latency distribution — exactly what a caller of `submit_job` sees.
+//!
+//! The async result is checked bit-identical to the blocking result
+//! before anything is timed. Writes
+//! `target/experiments/BENCH_serving.json`.
+
+use std::time::Instant;
+
+use sparkla::bench::{BenchConfig, Table};
+use sparkla::config::ClusterConfig;
+use sparkla::Context;
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let fast = std::env::var("SPARKLA_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let mut table = Table::new(&["benchmark", "throughput", "p50 / p99 latency"]);
+    let mut rows_json = vec![];
+
+    let mut ccfg = ClusterConfig { num_executors: 4, ..Default::default() };
+    // Plenty of admission headroom: the bench measures scheduling, not
+    // rejection (rejection behavior is covered by tests/serving_runtime.rs).
+    ccfg.serving.admission_queue_limit = 256;
+    let ctx = Context::with_config(ccfg);
+
+    let n: i64 = if fast { 20_000 } else { 200_000 };
+    let shared = ctx.parallelize((0..n).collect(), 16).map(|x| x * 7 - 3).cache();
+    shared.count().unwrap(); // warm the cache once so every job sees hits
+
+    // Bit-identity gate: the async path must agree with the blocking
+    // path on the same lineage before any timing happens.
+    let want = shared.collect().unwrap();
+    let got = shared.collect_async().unwrap().join().unwrap();
+    assert_eq!(got, want, "async collect diverged from blocking collect");
+    let want_count = want.len();
+    drop(want);
+    drop(got);
+
+    // Per-round job count is fixed so every configuration does the same
+    // total work; only the concurrency level changes.
+    let jobs_per_round: usize = 64;
+    let rounds = cfg.samples.max(1);
+
+    // ---- sequential baseline: same jobs, one at a time, blocking path
+    let mut seq_lat: Vec<f64> = vec![];
+    let seq_wall = Instant::now();
+    for _ in 0..rounds {
+        for _ in 0..jobs_per_round {
+            let t = Instant::now();
+            assert_eq!(shared.count().unwrap(), want_count);
+            seq_lat.push(t.elapsed().as_secs_f64());
+        }
+    }
+    let seq_secs = seq_wall.elapsed().as_secs_f64();
+    seq_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let seq_thr = seq_lat.len() as f64 / seq_secs.max(1e-12);
+    let (seq_p50, seq_p99) = (percentile(&seq_lat, 0.50), percentile(&seq_lat, 0.99));
+    table.row(&[
+        "sequential (blocking)".into(),
+        format!("{seq_thr:.0} jobs/s"),
+        format!("{:.2} ms / {:.2} ms", seq_p50 * 1e3, seq_p99 * 1e3),
+    ]);
+    rows_json.push(format!(
+        "    {{\"clients\": 0, \"mode\": \"sequential\", \"jobs\": {}, \"throughput_jobs_per_sec\": {seq_thr:.3}, \"p50_sec\": {seq_p50:.6e}, \"p99_sec\": {seq_p99:.6e}}}",
+        seq_lat.len()
+    ));
+
+    // ---- concurrent clients over the serving runtime
+    for &clients in &[1usize, 8, 64] {
+        let per_client = jobs_per_round / clients;
+        let mut lat: Vec<f64> = vec![];
+        let wall = Instant::now();
+        for _ in 0..rounds {
+            let mut handles = vec![];
+            for _ in 0..clients {
+                let rdd = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut mine = vec![];
+                    for _ in 0..per_client {
+                        let t = Instant::now();
+                        let h = rdd.count_async().expect("submit");
+                        let n_got = h.join().expect("join");
+                        mine.push((t.elapsed().as_secs_f64(), n_got));
+                    }
+                    mine
+                }));
+            }
+            for h in handles {
+                for (secs, n_got) in h.join().expect("client thread") {
+                    assert_eq!(n_got, want_count, "concurrent count diverged");
+                    lat.push(secs);
+                }
+            }
+        }
+        let secs = wall.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr = lat.len() as f64 / secs.max(1e-12);
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+        let speedup = thr / seq_thr.max(1e-12);
+        table.row(&[
+            format!("serving {clients} client(s)"),
+            format!("{thr:.0} jobs/s ({speedup:.2}x)"),
+            format!("{:.2} ms / {:.2} ms", p50 * 1e3, p99 * 1e3),
+        ]);
+        rows_json.push(format!(
+            "    {{\"clients\": {clients}, \"mode\": \"serving\", \"jobs\": {}, \"throughput_jobs_per_sec\": {thr:.3}, \"p50_sec\": {p50:.6e}, \"p99_sec\": {p99:.6e}, \"throughput_vs_sequential\": {speedup:.3}}}",
+            lat.len()
+        ));
+    }
+
+    let snap = ctx.metrics().snapshot();
+    let json = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"records\": {n},\n  \"jobs_per_round\": {jobs_per_round},\n  \"rounds\": {rounds},\n  \"jobs_submitted\": {},\n  \"jobs_completed\": {},\n  \"jobs_rejected\": {},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        snap.jobs_submitted,
+        snap.jobs_completed,
+        snap.jobs_rejected,
+        rows_json.join(",\n")
+    );
+    let json_path = std::path::Path::new("target/experiments/BENCH_serving.json");
+    std::fs::create_dir_all(json_path.parent().unwrap()).unwrap();
+    std::fs::write(json_path, json).unwrap();
+
+    println!("{}", table.render());
+    println!("results -> {json_path:?}");
+}

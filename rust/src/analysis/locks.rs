@@ -22,8 +22,8 @@
 //! stays invisible). Calls into other functions are not traced — the
 //! pass is per-body, by design.
 //!
-//! Scope: `rdd/{exec,shuffle,cache}.rs`, `util/pool.rs`, and the lint
-//! fixtures.
+//! Scope: `rdd/{exec,shuffle,cache,jobs}.rs`, `util/pool.rs`, and the
+//! lint fixtures.
 
 use std::collections::BTreeSet;
 
@@ -35,13 +35,21 @@ use crate::analysis::lexer::Tok;
 /// that may legitimately nest. `gate -> shards`: the scheduler pushes
 /// a task shard entry under the gate so the condvar wakeup can't race
 /// the enqueue. `rng -> down`: the fault injector marks an executor
-/// down while holding its rng.
-pub const ALLOWED_EDGES: [(&str, &str); 2] = [("gate", "shards"), ("rng", "down")];
+/// down while holding its rng. `admission -> gate`: the serving
+/// runtime's admission queue is the outermost engine lock — admitting
+/// a job may push its first task wave, which takes the scheduler gate;
+/// the reverse order is forbidden (a worker must never wait on
+/// admission), and in practice `rdd/jobs.rs` avoids even the declared
+/// nesting by collecting launch/abort closures under `admission` and
+/// invoking them after the guard drops.
+pub const ALLOWED_EDGES: [(&str, &str); 3] =
+    [("gate", "shards"), ("rng", "down"), ("admission", "gate")];
 
-const SCOPED_FILES: [&str; 4] = [
+const SCOPED_FILES: [&str; 5] = [
     "rdd/exec.rs",
     "rdd/shuffle.rs",
     "rdd/cache.rs",
+    "rdd/jobs.rs",
     "util/pool.rs",
 ];
 

@@ -8,9 +8,12 @@
 //!
 //! Scope is the *argument spans of the task-constructor calls*
 //! ([`TASK_CONSTRUCTORS`]): the closures handed to `run_job`,
-//! `run_job_opts`, `from_parts`, `fold_partitions`,
+//! `run_job_opts`, `run_job_ctl`, `from_parts`, `fold_partitions`,
 //! `map_partitions_with_index`, `zip_partitions`, and `stream_records`
-//! run on executor threads.
+//! run on executor threads, and the job bodies handed to `submit_job`
+//! run on detached driver threads — a panic there kills the driver
+//! thread and the caller's `JobHandle` resolves to a channel error
+//! instead of the job's real failure.
 //! Record-level closures (`map`, `aggregate` seq/comb, …) execute
 //! *inside* these partition-level closures at run time and are wrapped
 //! by the same contract, but are not scanned — their shape-invariant
@@ -28,15 +31,19 @@ use super::model::SourceFile;
 use super::{Corpus, Finding};
 use crate::analysis::lexer::Tok;
 
-/// Calls whose argument closures execute on executor threads.
-pub const TASK_CONSTRUCTORS: [&str; 7] = [
+/// Calls whose argument closures execute on executor threads (or, for
+/// `submit_job`, on a detached job-driver thread with no unwind
+/// barrier).
+pub const TASK_CONSTRUCTORS: [&str; 9] = [
     "run_job",
     "run_job_opts",
+    "run_job_ctl",
     "from_parts",
     "fold_partitions",
     "map_partitions_with_index",
     "zip_partitions",
     "stream_records",
+    "submit_job",
 ];
 
 pub fn run(corpus: &Corpus) -> Vec<Finding> {

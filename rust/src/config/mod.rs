@@ -92,6 +92,52 @@ impl Default for SpeculationConfig {
     }
 }
 
+/// Serving-runtime admission policy (the multi-job front door,
+/// `Cluster::submit_job` / the `*_async` actions — see DESIGN.md
+/// §"Serving runtime"). Blocking actions bypass admission entirely, so
+/// the defaults change nothing for single-tenant embedding.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Max async jobs admitted (driver running) at once; excess
+    /// submissions queue. 0 = unlimited (the default: every submission
+    /// is admitted immediately and admission control is effectively off).
+    pub max_in_flight_jobs: usize,
+    /// Bound on the admission queue. A submission that can neither be
+    /// admitted nor queued under this bound is refused with
+    /// `Error::JobRejected` — the queue never grows without limit.
+    /// 0 = no queue: reject anything that cannot start immediately.
+    pub admission_queue_limit: usize,
+    /// Memory-pressure gate: new jobs are admitted only while
+    /// `MemoryManager::used() <= frac × budget`. Ignored when the
+    /// cluster has no budget. 1.0 (default) closes the gate exactly
+    /// when the budget is overrun (forced reservations can push past
+    /// it); lower values keep admission headroom below the budget.
+    pub admission_pressure_frac: f64,
+    /// Load-shedding policy under sustained pressure: while the gate is
+    /// closed, only the *oldest* `shed_queue_keep` queued jobs are kept
+    /// waiting — newer ones are shed with `Error::JobRejected { shed:
+    /// true }` (newest-first, so jobs that have waited longest retain
+    /// their place). Effectively capped at `admission_queue_limit`.
+    pub shed_queue_keep: usize,
+    /// Per-job cap on concurrently scheduled partitions for admitted
+    /// jobs, so one wide job cannot monopolize the worker deques.
+    /// 0 = auto: `total_cores ⁄ jobs-in-flight` (floored, min 1).
+    /// Blocking jobs are uncapped (the single-tenant fast path).
+    pub fair_share_tasks: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_in_flight_jobs: 0,
+            admission_queue_limit: 32,
+            admission_pressure_frac: 1.0,
+            shed_queue_keep: 8,
+            fair_share_tasks: 0,
+        }
+    }
+}
+
 /// Top-level cluster configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -109,6 +155,8 @@ pub struct ClusterConfig {
     pub fault: FaultConfig,
     /// Speculative execution of stalled tasks.
     pub speculation: SpeculationConfig,
+    /// Serving-runtime admission control (async multi-job submission).
+    pub serving: ServingConfig,
     /// Base delay for the seeded exponential backoff between task
     /// retries, in ms (0 — the default — disables backoff entirely:
     /// retries re-enqueue immediately, the pre-PR-9 behavior). Attempt
@@ -174,6 +222,7 @@ impl Default for ClusterConfig {
             default_parallelism: 8,
             fault: FaultConfig::default(),
             speculation: SpeculationConfig::default(),
+            serving: ServingConfig::default(),
             retry_backoff_base_ms: 0,
             retry_backoff_max_ms: 100,
             job_deadline_ms: None,
@@ -246,6 +295,21 @@ impl ClusterConfig {
                 "speculation.tick_ms" => {
                     self.speculation.tick_ms = v.parse().map_err(|_| bad("u64"))?
                 }
+                "serving.max_in_flight_jobs" => {
+                    self.serving.max_in_flight_jobs = v.parse().map_err(|_| bad("usize"))?
+                }
+                "serving.admission_queue_limit" => {
+                    self.serving.admission_queue_limit = v.parse().map_err(|_| bad("usize"))?
+                }
+                "serving.admission_pressure_frac" => {
+                    self.serving.admission_pressure_frac = v.parse().map_err(|_| bad("f64"))?
+                }
+                "serving.shed_queue_keep" => {
+                    self.serving.shed_queue_keep = v.parse().map_err(|_| bad("usize"))?
+                }
+                "serving.fair_share_tasks" => {
+                    self.serving.fair_share_tasks = v.parse().map_err(|_| bad("usize"))?
+                }
                 "retry_backoff_base_ms" => {
                     self.retry_backoff_base_ms = v.parse().map_err(|_| bad("u64"))?
                 }
@@ -292,7 +356,8 @@ impl ClusterConfig {
                 let key = rest
                     .to_lowercase()
                     .replacen("fault_", "fault.", 1)
-                    .replacen("speculation_", "speculation.", 1);
+                    .replacen("speculation_", "speculation.", 1)
+                    .replacen("serving_", "serving.", 1);
                 if key == "local_threads" {
                     continue; // consumed by util::pool
                 }
@@ -331,6 +396,12 @@ impl ClusterConfig {
         }
         if self.max_task_retries == 0 {
             return Err(Error::InvalidArgument("max_task_retries must be >= 1".into()));
+        }
+        let frac = self.serving.admission_pressure_frac;
+        if !(frac > 0.0 && frac.is_finite()) {
+            return Err(Error::InvalidArgument(format!(
+                "serving.admission_pressure_frac must be a positive finite number, got {frac}"
+            )));
         }
         Ok(())
     }
@@ -408,6 +479,28 @@ mod tests {
         assert!(c.apply_kv(&[("fault.shuffle_loss_prob".into(), "1.5".into())]).is_err());
         assert!(c.apply_kv(&[("speculation.quantile".into(), "-0.1".into())]).is_err());
         assert!(c.apply_kv(&[("speculation.multiplier".into(), "0.5".into())]).is_err());
+    }
+
+    #[test]
+    fn serving_knobs_parse_and_validate() {
+        let mut c = ClusterConfig::default();
+        assert_eq!(c.serving.max_in_flight_jobs, 0, "admission off by default");
+        assert_eq!(c.serving.admission_queue_limit, 32);
+        c.apply_kv(&[
+            ("serving.max_in_flight_jobs".into(), "4".into()),
+            ("serving.admission_queue_limit".into(), "16".into()),
+            ("serving.admission_pressure_frac".into(), "0.9".into()),
+            ("serving.shed_queue_keep".into(), "2".into()),
+            ("serving.fair_share_tasks".into(), "3".into()),
+        ])
+        .unwrap();
+        assert_eq!(c.serving.max_in_flight_jobs, 4);
+        assert_eq!(c.serving.admission_queue_limit, 16);
+        assert_eq!(c.serving.admission_pressure_frac, 0.9);
+        assert_eq!(c.serving.shed_queue_keep, 2);
+        assert_eq!(c.serving.fair_share_tasks, 3);
+        assert!(c.apply_kv(&[("serving.admission_pressure_frac".into(), "0".into())]).is_err());
+        assert!(c.apply_kv(&[("serving.max_in_flight_jobs".into(), "many".into())]).is_err());
     }
 
     #[test]

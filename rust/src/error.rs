@@ -55,15 +55,43 @@ pub enum Error {
 
     /// A job blew through its wall-clock deadline
     /// (`ClusterConfig::job_deadline_ms`) while partitions were still
-    /// outstanding. Carries the first incomplete partition, how many
-    /// attempts it has consumed, and the last injected fault the job saw.
-    #[error("job deadline of {deadline_ms} ms exceeded waiting on partition {partition} (attempt {attempt}, last fault: {last_fault})")]
+    /// outstanding. The clock starts at *submission*, so time spent in
+    /// the serving admission queue counts against the budget;
+    /// `queue_wait_ms` records that wait, distinguishing a
+    /// queued-then-expired job (large wait, zero attempts of progress)
+    /// from one that ran slow (near-zero wait). Also carries the first
+    /// incomplete partition, how many attempts it has consumed, and the
+    /// last injected fault the job saw.
+    #[error("job deadline of {deadline_ms} ms exceeded waiting on partition {partition} (attempt {attempt}, last fault: {last_fault}, queued {queue_wait_ms} ms)")]
     DeadlineExceeded {
         deadline_ms: u64,
         partition: usize,
         attempt: usize,
         last_fault: String,
+        queue_wait_ms: u64,
     },
+
+    /// The serving runtime refused a job at admission: the bounded
+    /// queue was full (`shed: false`) or the memory-pressure shed
+    /// policy dropped it from the queue (`shed: true`). Carries the
+    /// full admission context so callers can apply backpressure;
+    /// `budget_bytes` is 0 when the cluster runs without a budget.
+    #[error("job rejected (shed: {shed}): {queue_depth} queued of {queue_limit}, {in_flight} in flight (limit {in_flight_limit}), memory {bytes_used}/{budget_bytes} bytes")]
+    JobRejected {
+        queue_depth: usize,
+        queue_limit: usize,
+        in_flight: usize,
+        in_flight_limit: usize,
+        bytes_used: u64,
+        budget_bytes: u64,
+        shed: bool,
+    },
+
+    /// The job was cancelled via `JobHandle::cancel` — either while
+    /// queued (it never ran) or mid-flight (in-flight tasks stopped at
+    /// their next cooperative cancellation point).
+    #[error("job cancelled with {partitions_remaining} partitions outstanding")]
+    JobCancelled { partitions_remaining: usize },
 
     /// PJRT / XLA runtime errors (wrapped; xla::Error is not Clone).
     #[error("xla runtime: {0}")]
@@ -179,9 +207,44 @@ mod tests {
             partition: 3,
             attempt: 2,
             last_fault: "delay".into(),
+            queue_wait_ms: 120,
         };
         let s = e.to_string();
         assert!(s.contains("250 ms") && s.contains("partition 3") && s.contains("delay"));
+        assert!(s.contains("queued 120 ms"), "queue wait must be visible: {s}");
+    }
+
+    #[test]
+    fn job_rejected_message_carries_admission_context() {
+        let e = Error::JobRejected {
+            queue_depth: 4,
+            queue_limit: 4,
+            in_flight: 2,
+            in_flight_limit: 2,
+            bytes_used: 900,
+            budget_bytes: 1024,
+            shed: false,
+        };
+        let s = e.to_string();
+        assert!(s.contains("4 queued of 4"), "missing queue depth: {s}");
+        assert!(s.contains("limit 2"), "missing in-flight limit: {s}");
+        assert!(s.contains("900/1024"), "missing pressure context: {s}");
+        let shed = Error::JobRejected {
+            queue_depth: 1,
+            queue_limit: 8,
+            in_flight: 1,
+            in_flight_limit: 1,
+            bytes_used: 2048,
+            budget_bytes: 1024,
+            shed: true,
+        };
+        assert!(shed.to_string().contains("shed: true"));
+    }
+
+    #[test]
+    fn job_cancelled_message_carries_outstanding_count() {
+        let e = Error::JobCancelled { partitions_remaining: 5 };
+        assert!(e.to_string().contains("5 partitions"));
     }
 
     #[test]

@@ -89,6 +89,28 @@
 //! nothing spills and behavior is byte-for-byte unchanged (DESIGN.md
 //! §"Memory governance").
 //!
+//! The cluster is also a **multi-job serving runtime**: actions have
+//! async variants that return a [`rdd::JobHandle`] instead of
+//! blocking, concurrent jobs interleave task waves under a per-job
+//! fair-share cap, and overload degrades predictably — a bounded
+//! admission queue plus a memory-pressure gate refuse or shed excess
+//! jobs with [`Error::JobRejected`] (never a deadlock), handles
+//! support cooperative [`rdd::JobHandle::cancel`], and job deadlines
+//! start at *submission* so queue wait counts (DESIGN.md §"Serving
+//! runtime"):
+//!
+//! ```no_run
+//! use sparkla::Context;
+//!
+//! let ctx = Context::local("serving", 4);
+//! let shared = ctx.parallelize((0..10_000i64).collect(), 16).map(|x| x * 2).cache();
+//! // Submit two jobs over the same cached operator; neither blocks...
+//! let a = shared.count_async().unwrap();
+//! let b = shared.aggregate_async(0i64, |acc, x| acc + x, |l, r| l + r).unwrap();
+//! // ...then await both. Results are bit-identical to the blocking path.
+//! println!("count={} sum={}", a.join().unwrap(), b.join().unwrap());
+//! ```
+//!
 //! The engine's hand-maintained invariants (zero-alloc kernels,
 //! metrics discipline, spill-codec safety, lock order, partitioner
 //! propagation, panic-free task paths) are enforced mechanically by

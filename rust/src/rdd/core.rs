@@ -24,7 +24,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
-use crate::rdd::exec::Cluster;
+use crate::rdd::exec::{Cluster, JobOptions};
+use crate::rdd::jobs::JobHandle;
 
 /// Per-partition compute: (partition, executor_id) -> records.
 pub type Compute<T> = dyn Fn(usize, usize) -> Result<Vec<T>> + Send + Sync;
@@ -676,6 +677,92 @@ impl<T: Send + Sync + 'static> Rdd<T> {
             next = hi;
         }
         Ok(out)
+    }
+
+    // ------------------------------------------------------ async actions
+    //
+    // Serving-runtime variants: submission returns a JobHandle
+    // immediately, the job passes admission control, runs on its own
+    // driver thread with a fair-share cap so concurrent jobs interleave
+    // on the worker pool, and supports cooperative cancellation. Stage
+    // preparation (upstream shuffle map stages) runs inside the async
+    // job too — admission gates the whole action, and nested blocking
+    // stages deliberately bypass admission so they never deadlock
+    // against the in-flight limit.
+
+    /// [`collect`](Rdd::collect) via [`Cluster::submit_job`]: returns
+    /// immediately; `join` the handle for the records.
+    pub fn collect_async(&self) -> Result<JobHandle<Vec<T>>>
+    where
+        T: Clone,
+    {
+        let me = self.clone();
+        self.cluster().submit_job(Box::new(move |cl, ctl| {
+            me.prepare()?;
+            let tasks = me.clone();
+            let parts = cl.run_job_ctl(
+                me.num_partitions(),
+                Arc::new(move |p, exec| tasks.compute_owned(p, exec)),
+                JobOptions::default(),
+                ctl,
+            )?;
+            Ok(parts.into_iter().flatten().collect())
+        }))
+    }
+
+    /// [`count`](Rdd::count) via [`Cluster::submit_job`]: returns
+    /// immediately; `join` the handle for the count.
+    pub fn count_async(&self) -> Result<JobHandle<usize>> {
+        let me = self.clone();
+        self.cluster().submit_job(Box::new(move |cl, ctl| {
+            me.prepare()?;
+            let tasks = me.clone();
+            let parts = cl.run_job_ctl(
+                me.num_partitions(),
+                Arc::new(move |p, exec| {
+                    let mut n = 0usize;
+                    tasks.stream_records(p, exec, &mut |_| n += 1)?;
+                    Ok(n)
+                }),
+                JobOptions::default(),
+                ctl,
+            )?;
+            Ok(parts.into_iter().sum())
+        }))
+    }
+
+    /// [`aggregate`](Rdd::aggregate) via [`Cluster::submit_job`]:
+    /// returns immediately; `join` the handle for the aggregate.
+    pub fn aggregate_async<A, S, C>(&self, zero: A, seq: S, comb: C) -> Result<JobHandle<A>>
+    where
+        A: Clone + Send + Sync + 'static,
+        S: Fn(A, &T) -> A + Send + Sync + 'static,
+        C: Fn(A, A) -> A + Send + Sync + 'static,
+    {
+        let me = self.clone();
+        self.cluster().submit_job(Box::new(move |cl, ctl| {
+            me.prepare()?;
+            let tasks = me.clone();
+            let z = zero.clone();
+            let partials = cl.run_job_ctl(
+                me.num_partitions(),
+                Arc::new(move |p, exec| {
+                    let mut acc = Some(z.clone());
+                    tasks.stream_records(p, exec, &mut |t| {
+                        // take/put round-trips within one sink call, so the
+                        // slot is always occupied on entry (SL006: no panics
+                        // in the task path — a lost slot becomes a task Err)
+                        if let Some(a) = acc.take() {
+                            acc = Some(seq(a, t));
+                        }
+                    })?;
+                    acc.ok_or_else(|| Error::msg("aggregate: accumulator lost"))
+                }),
+                JobOptions::default(),
+                ctl,
+            )?;
+            Ok(partials.into_iter().fold(zero, comb))
+        }))
     }
 }
 

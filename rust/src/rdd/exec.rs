@@ -38,6 +38,19 @@ use crate::util::rng::SplitMix64;
 pub struct Metrics {
     /// Jobs run to completion.
     pub jobs: AtomicU64,
+    /// Jobs submitted to the serving runtime (every `submit_job` call,
+    /// whether admitted, queued, rejected, or shed).
+    pub jobs_submitted: AtomicU64,
+    /// Async jobs whose driver completed successfully.
+    pub jobs_completed: AtomicU64,
+    /// Submissions refused at admission (bounded queue full).
+    pub jobs_rejected: AtomicU64,
+    /// Jobs cancelled via `JobHandle::cancel`, queued or in-flight.
+    pub jobs_cancelled: AtomicU64,
+    /// Queued jobs shed by the memory-pressure policy (newest first).
+    pub jobs_shed: AtomicU64,
+    /// Total milliseconds admitted jobs spent in the admission queue.
+    pub job_queue_wait_ms_total: AtomicU64,
     /// Task attempts started.
     pub tasks_started: AtomicU64,
     /// Task attempts that failed with an injected fault.
@@ -129,6 +142,12 @@ pub struct Metrics {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     pub jobs: u64,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_rejected: u64,
+    pub jobs_cancelled: u64,
+    pub jobs_shed: u64,
+    pub job_queue_wait_ms_total: u64,
     pub tasks_started: u64,
     pub tasks_failed: u64,
     pub tasks_retried: u64,
@@ -175,6 +194,12 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
+            jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
+            jobs_shed: self.jobs_shed.load(Ordering::Relaxed),
+            job_queue_wait_ms_total: self.job_queue_wait_ms_total.load(Ordering::Relaxed),
             tasks_started: self.tasks_started.load(Ordering::Relaxed),
             tasks_failed: self.tasks_failed.load(Ordering::Relaxed),
             tasks_retried: self.tasks_retried.load(Ordering::Relaxed),
@@ -217,8 +242,14 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let s = self.snapshot();
         format!(
-            "jobs={} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} faults=delayed:{}/cancelled:{}/spec:{}/spec_wins:{}/fetch_failed:{}/loss_events:{}/outputs_lost:{}/stages_rerun:{}/spill_fail:{}/backoff_ms:{} shuffles={} skipped={} shuffled_recs={} mem=reserved:{}/spilled:{}/spill_files:{}/spill_read:{}/evicted_lru:{} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
+            "jobs={} serving=submitted:{}/completed:{}/rejected:{}/cancelled:{}/shed:{}/queue_wait_ms:{} tasks={} failed={} retried={} stolen={} fused={} crashes={} evicted={} recomputed={} faults=delayed:{}/cancelled:{}/spec:{}/spec_wins:{}/fetch_failed:{}/loss_events:{}/outputs_lost:{}/stages_rerun:{}/spill_fail:{}/backoff_ms:{} shuffles={} skipped={} shuffled_recs={} mem=reserved:{}/spilled:{}/spill_files:{}/spill_read:{}/evicted_lru:{} xla={} kernels=csr:{}/csc:{}/coo:{} spmm=dd:{}/sd:{}/ds:{}/ss:{}",
             s.jobs,
+            s.jobs_submitted,
+            s.jobs_completed,
+            s.jobs_rejected,
+            s.jobs_cancelled,
+            s.jobs_shed,
+            s.job_queue_wait_ms_total,
             s.tasks_started,
             s.tasks_failed,
             s.tasks_retried,
@@ -633,6 +664,44 @@ impl Default for JobOptions {
     }
 }
 
+/// Driver-side control block for one job, threaded from submission into
+/// the scheduling loop. Blocking actions use the default — the clock
+/// starts now, no cancel flag, partitions uncapped (the single-tenant
+/// fast path, byte-identical to the pre-serving scheduler). The serving
+/// runtime ([`crate::rdd::jobs`]) stamps the true submission time, the
+/// handle's cancel flag, and the fair-share cap at admission.
+#[derive(Debug, Clone)]
+pub struct JobCtl {
+    /// When the job entered the system. The `job_deadline_ms` clock
+    /// starts *here*, so admission-queue wait counts against the budget.
+    pub submitted_at: Instant,
+    /// Milliseconds spent queued before admission; carried on
+    /// `Error::DeadlineExceeded` so a queued-then-expired job is
+    /// distinguishable from one that ran slow.
+    pub queue_wait_ms: u64,
+    /// Cooperative cancel flag (`JobHandle::cancel` sets it; the job
+    /// loop checks it every driver tick and marks all partitions done,
+    /// stopping in-flight attempts at their next cancellation point).
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Max partitions of this job concurrently scheduled: completed
+    /// partitions free slots for the next wave, so a wide job holds at
+    /// most this many deque entries at once. 0 = uncapped (push every
+    /// partition up front).
+    pub fair_cap: usize,
+}
+
+impl Default for JobCtl {
+    fn default() -> Self {
+        JobCtl { submitted_at: Instant::now(), queue_wait_ms: 0, cancel: None, fair_cap: 0 }
+    }
+}
+
+impl JobCtl {
+    fn cancelled(&self) -> bool {
+        self.cancel.as_ref().map(|c| c.load(Ordering::Acquire)).unwrap_or(false)
+    }
+}
+
 /// The simulated cluster: worker pool + block manager + shuffle store +
 /// metrics + fault injector. One per [`crate::Context`].
 pub struct Cluster {
@@ -655,6 +724,9 @@ pub struct Cluster {
     /// per producing side). Cleared per-shuffle by `ShuffleDep::drop`
     /// and wholesale on shutdown.
     reruns: Mutex<HashMap<usize, Vec<ShuffleRerun>>>,
+    /// The multi-job serving front door: admission queue, in-flight
+    /// accounting, and the load-shedding policy (`rdd::jobs`).
+    pub serving: crate::rdd::jobs::JobRuntime,
     scheduler: Arc<Scheduler>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_id: AtomicUsize,
@@ -679,6 +751,7 @@ impl Cluster {
             metrics,
             workspace: Arc::new(VecPool::new()),
             reruns: Mutex::new(HashMap::new()),
+            serving: crate::rdd::jobs::JobRuntime::new(),
             scheduler: Arc::clone(&scheduler),
             workers: Mutex::new(vec![]),
             next_id: AtomicUsize::new(1),
@@ -793,20 +866,51 @@ impl Cluster {
         self.run_job_opts(num_partitions, task_fn, JobOptions::default())
     }
 
-    /// [`Cluster::run_job`] with explicit [`JobOptions`]. The full task
-    /// lifecycle lives here: keyed fault injection at task start,
-    /// injected stragglers with cooperative cancellation, mid-task
-    /// faults after the work lands, `FetchFailed`-driven stage-level
-    /// lineage recovery, seeded retry backoff, speculative clones for
-    /// stalled tasks, and the per-job wall-clock deadline.
+    /// [`Cluster::run_job`] with explicit [`JobOptions`]. Blocking entry
+    /// point — jobs submitted here start their deadline clock now, are
+    /// not cancellable, and push every partition up front.
     pub fn run_job_opts<R: Send + 'static>(
         self: &Arc<Self>,
         num_partitions: usize,
         task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
         opts: JobOptions,
     ) -> Result<Vec<R>> {
+        self.run_job_ctl(num_partitions, task_fn, opts, JobCtl::default())
+    }
+
+    /// [`Cluster::run_job_opts`] with an explicit [`JobCtl`]. The full
+    /// task lifecycle lives here: keyed fault injection at task start,
+    /// injected stragglers with cooperative cancellation, mid-task
+    /// faults after the work lands, `FetchFailed`-driven stage-level
+    /// lineage recovery, seeded retry backoff, speculative clones for
+    /// stalled tasks, fair-share wave scheduling (`JobCtl::fair_cap`
+    /// bounds how many of this job's partitions occupy the shared
+    /// worker deques, so concurrent jobs interleave instead of queueing
+    /// behind one wide submission), cooperative job cancellation, and
+    /// the per-job wall-clock deadline measured from submission.
+    pub fn run_job_ctl<R: Send + 'static>(
+        self: &Arc<Self>,
+        num_partitions: usize,
+        task_fn: Arc<dyn Fn(usize, usize) -> Result<R> + Send + Sync>,
+        opts: JobOptions,
+        ctl: JobCtl,
+    ) -> Result<Vec<R>> {
         if num_partitions == 0 {
             return Ok(vec![]);
+        }
+        let deadline = self.config.job_deadline_ms;
+        if let Some(limit) = deadline {
+            // a job that expired while queued dies before any task is
+            // scheduled: attempt 0 = it never ran
+            if ctl.submitted_at.elapsed() >= Duration::from_millis(limit) {
+                return Err(Error::DeadlineExceeded {
+                    deadline_ms: limit,
+                    partition: 0,
+                    attempt: 0,
+                    last_fault: String::from("none"),
+                    queue_wait_ms: ctl.queue_wait_ms,
+                });
+            }
         }
         self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
         let job = self.injector.next_job();
@@ -909,12 +1013,8 @@ impl Cluster {
                 let _ = done_tx.send((partition, attempt, executor_id, res));
             })
         };
-        for p in 0..num_partitions {
-            self.scheduler.push(TaskUnit { partition: p, attempt: 1, run: Arc::clone(&runner) })?;
-        }
         let spec = self.config.speculation.clone();
         let speculate = spec.enabled && opts.replayable;
-        let deadline = self.config.job_deadline_ms;
         let tick = Duration::from_millis(spec.tick_ms.max(1));
         let mut results: Vec<Option<R>> = (0..num_partitions).map(|_| None).collect();
         let mut remaining = num_partitions;
@@ -927,9 +1027,24 @@ impl Cluster {
         let mut launched = vec![Instant::now(); num_partitions];
         let mut durations_ms: Vec<u64> = Vec::new();
         let mut last_fault = String::from("none");
-        let started = Instant::now();
+        // fair-share wave scheduling: at most `cap` of this job's
+        // partitions sit on the shared worker deques at once, so
+        // concurrent jobs interleave instead of one wide submission
+        // monopolising the pool; blocking jobs (cap = num_partitions)
+        // keep the legacy push-everything behaviour bit-for-bit
+        let cap = if ctl.fair_cap == 0 { num_partitions } else { ctl.fair_cap.max(1) };
+        let mut pushed = 0usize;
+        while pushed < num_partitions && pushed - (num_partitions - remaining) < cap {
+            self.scheduler.push(TaskUnit {
+                partition: pushed,
+                attempt: 1,
+                run: Arc::clone(&runner),
+            })?;
+            launched[pushed] = Instant::now();
+            pushed += 1;
+        }
         while remaining > 0 {
-            let msg = if speculate || deadline.is_some() {
+            let msg = if speculate || deadline.is_some() || ctl.cancel.is_some() {
                 // tick so stalls and the deadline are noticed even while
                 // no completions arrive
                 match done_rx.recv_timeout(tick) {
@@ -942,14 +1057,28 @@ impl Cluster {
             } else {
                 Some(done_rx.recv().map_err(|_| Error::msg("scheduler: all workers gone"))?)
             };
+            // cooperative cancellation: flag every partition done so
+            // in-flight attempts drop at their next cancellation point,
+            // then abandon the driver loop (reservations unwind as the
+            // job's RDD chain and runner drop)
+            if ctl.cancelled() {
+                for d in done.iter() {
+                    d.store(true, Ordering::Release);
+                }
+                self.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::JobCancelled { partitions_remaining: remaining });
+            }
             if let Some(limit) = deadline {
-                if started.elapsed() >= Duration::from_millis(limit) {
+                // the clock starts at *submission* (JobCtl::submitted_at),
+                // so admission-queue wait counts against the budget
+                if ctl.submitted_at.elapsed() >= Duration::from_millis(limit) {
                     let p = results.iter().position(|r| r.is_none()).unwrap_or(0);
                     return Err(Error::DeadlineExceeded {
                         deadline_ms: limit,
                         partition: p,
                         attempt: next_attempt[p],
                         last_fault: last_fault.clone(),
+                        queue_wait_ms: ctl.queue_wait_ms,
                     });
                 }
             }
@@ -959,7 +1088,9 @@ impl Cluster {
                 }
                 let threshold = stall_threshold(&durations_ms, &spec);
                 for q in 0..num_partitions {
-                    if results[q].is_some() || spec_attempt[q] != 0 {
+                    // unpushed partitions (beyond the current wave) are
+                    // waiting on fair-share, not stalled
+                    if q >= pushed || results[q].is_some() || spec_attempt[q] != 0 {
                         continue;
                     }
                     if (launched[q].elapsed().as_millis() as u64) < threshold {
@@ -988,6 +1119,19 @@ impl Cluster {
                         results[p] = Some(r);
                         done[p].store(true, Ordering::Release);
                         remaining -= 1;
+                        // refill the wave: a slot freed, push the next
+                        // unscheduled partition(s) up to the fair cap
+                        while pushed < num_partitions
+                            && pushed - (num_partitions - remaining) < cap
+                        {
+                            self.scheduler.push(TaskUnit {
+                                partition: pushed,
+                                attempt: 1,
+                                run: Arc::clone(&runner),
+                            })?;
+                            launched[pushed] = Instant::now();
+                            pushed += 1;
+                        }
                     } else {
                         // the speculation loser finished anyway
                         self.metrics.tasks_cancelled.fetch_add(1, Ordering::Relaxed);
@@ -1054,12 +1198,14 @@ impl Cluster {
         Ok(results.into_iter().map(|r| r.expect("all partitions done")).collect())
     }
 
-    /// Graceful shutdown: flag the scheduler and join workers (queued
-    /// tasks drain first). Called by `Context::drop`; safe to call twice.
-    /// Also clears the rerun registry — handlers close over producer
-    /// RDD state, and a leaked RDD must not keep the registry cycle
-    /// alive past the context.
+    /// Graceful shutdown: close the serving admission queue (queued
+    /// jobs abort with an error, they never silently vanish), flag the
+    /// scheduler, and join workers (queued tasks drain first). Called
+    /// by `Context::drop`; safe to call twice. Also clears the rerun
+    /// registry — handlers close over producer RDD state, and a leaked
+    /// RDD must not keep the registry cycle alive past the context.
     pub fn shutdown(&self) {
+        self.serving.close();
         self.reruns.lock().expect("rerun registry").clear();
         self.scheduler.shutdown();
         let mut ws = self.workers.lock().expect("workers");

@@ -1,0 +1,595 @@
+//! Multi-job serving runtime: async submission, admission control,
+//! fair scheduling, cooperative cancellation, and load shedding.
+//!
+//! The paper's driver model is one blocking action at a time; the
+//! ROADMAP north star is a serving system with thousands of in-flight
+//! matvec/LASSO queries. This module is the front door between the two:
+//! [`Cluster::submit_job`] returns a [`JobHandle`] immediately and the
+//! job runs on its own driver thread, with its partition waves
+//! interleaved on the shared worker deques by the fair-share cap in
+//! [`JobCtl`](crate::rdd::exec::JobCtl).
+//!
+//! **Admission policy** (DESIGN.md §"Serving runtime"): a submission is
+//! admitted immediately when the in-flight-job limit
+//! (`ServingConfig::max_in_flight_jobs`, 0 = unlimited) has a free
+//! slot, the memory-pressure gate is open, and no earlier job is
+//! queued (FIFO — a queue jumper would starve the queue). Otherwise it
+//! waits in a bounded FIFO queue (`admission_queue_limit`); a
+//! submission that can neither run nor queue is rejected with
+//! [`Error::JobRejected`] carrying the full admission context, so
+//! callers get backpressure instead of an unbounded queue.
+//!
+//! **Pressure gate**: admission consults
+//! [`MemoryManager`](crate::rdd::memory::MemoryManager) headroom —
+//! the gate is open while `used <= admission_pressure_frac × budget`
+//! (always open on unlimited clusters). A closed gate stops admission
+//! and, while it stays closed, *sheds* the newest queued jobs down to
+//! `shed_queue_keep` entries. Newest-first keeps the oldest waiters —
+//! they have paid the most queue time against their deadline and FIFO
+//! order means they run first once pressure clears; the newest arrivals
+//! are the cheapest to retry driver-side. Shed jobs fail with
+//! `JobRejected { shed: true }`.
+//!
+//! **Cancellation**: [`JobHandle::cancel`] flips a shared flag. A
+//! queued job is dropped at the next pump (it never runs); an in-flight
+//! job's driver loop notices on its next tick, marks every partition
+//! done — the same flags PR-9's speculation losers check — so running
+//! attempts stop at their next cooperative cancellation point, and the
+//! job resolves to [`Error::JobCancelled`]. Dropping the job body
+//! releases its lineage references, which is what unwinds shuffle
+//! bucket reservations and map-rerun registrations
+//! (`ShuffleDep::drop`).
+//!
+//! Lock order: `admission` is a leaf taken before any scheduler lock —
+//! launch/abort closures are collected under the guard but invoked
+//! only after it drops, so no `gate`/`shards` lock ever nests inside
+//! `admission` (SL004).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::rdd::exec::{Cluster, JobCtl};
+
+/// One job waiting in the admission queue: everything needed to either
+/// launch it (stamp a [`JobCtl`], spawn its driver thread) or abort it
+/// (resolve the caller's handle with an error). Type-erased so jobs
+/// with different result types share one queue.
+struct Pending {
+    /// When `submit_job` accepted it — the deadline clock and the
+    /// queue-wait metric both start here.
+    submitted_at: Instant,
+    /// Shared with the caller's [`JobHandle`]; a queued job whose flag
+    /// is set is dropped at the next pump without ever running.
+    cancel: Arc<AtomicBool>,
+    /// Admit: stamp the ctl and spawn the driver thread. Owns the job
+    /// body (and thereby the RDD lineage it closes over) — dropping an
+    /// unlaunched `Pending` releases those references.
+    launch: Box<dyn FnOnce(&Arc<Cluster>, JobCtl) + Send>,
+    /// Reject/shed/cancel while queued: resolve the handle with `e`.
+    abort: Box<dyn FnOnce(Error) + Send>,
+}
+
+/// Admission state, all behind one mutex (`admission` — the SL004 leaf
+/// lock for this file).
+struct ServingState {
+    /// Jobs currently running on driver threads.
+    admitted: usize,
+    /// FIFO wait queue, bounded by `ServingConfig::admission_queue_limit`.
+    queue: VecDeque<Pending>,
+    /// Set at shutdown: queued jobs abort, new submissions are refused.
+    closed: bool,
+}
+
+/// The serving front door, owned by [`Cluster`]. Holds no back-reference
+/// to the cluster (that would be a cycle); every method takes it as an
+/// argument instead.
+pub struct JobRuntime {
+    admission: Mutex<ServingState>,
+}
+
+impl JobRuntime {
+    /// Empty runtime: nothing queued, nothing admitted.
+    pub(crate) fn new() -> JobRuntime {
+        JobRuntime {
+            admission: Mutex::new(ServingState {
+                admitted: 0,
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+        }
+    }
+
+    /// True while memory headroom permits admitting another job:
+    /// `used <= admission_pressure_frac × budget`, always true on
+    /// unlimited clusters. Pure atomic reads — safe under `admission`.
+    fn gate_open(cluster: &Arc<Cluster>) -> bool {
+        if cluster.memory.unlimited() {
+            return true;
+        }
+        let frac = cluster.config.serving.admission_pressure_frac;
+        (cluster.memory.used() as f64) <= frac * (cluster.memory.budget() as f64)
+    }
+
+    /// Admission context for [`Error::JobRejected`] (`budget_bytes` is
+    /// 0 when the cluster runs without a budget).
+    fn rejection(cluster: &Arc<Cluster>, st: &ServingState, shed: bool) -> Error {
+        let cfg = &cluster.config.serving;
+        Error::JobRejected {
+            queue_depth: st.queue.len(),
+            queue_limit: cfg.admission_queue_limit,
+            in_flight: st.admitted,
+            in_flight_limit: cfg.max_in_flight_jobs,
+            bytes_used: cluster.memory.used(),
+            budget_bytes: if cluster.memory.unlimited() { 0 } else { cluster.memory.budget() },
+            shed,
+        }
+    }
+
+    /// Submit a type-erased job body. Counted in `jobs_submitted`;
+    /// either enqueued (then pumped — an idle cluster launches it
+    /// before this returns) or rejected with full admission context.
+    pub(crate) fn submit<O: Send + 'static>(
+        &self,
+        cluster: &Arc<Cluster>,
+        body: Box<dyn FnOnce(&Arc<Cluster>, JobCtl) -> Result<O> + Send>,
+    ) -> Result<JobHandle<O>> {
+        cluster.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel::<Result<O>>();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let id = cluster.new_id();
+        let launch: Box<dyn FnOnce(&Arc<Cluster>, JobCtl) + Send> = {
+            let tx = tx.clone();
+            Box::new(move |cluster, ctl| {
+                let cl = Arc::clone(cluster);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("job-driver-{id}"))
+                    .spawn(move || {
+                        let out = body(&cl, ctl);
+                        if out.is_ok() {
+                            cl.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // the caller may have dropped the handle
+                        let _ = tx.send(out);
+                        cl.serving.finish(&cl);
+                    });
+                if spawned.is_err() {
+                    // OS refused the thread: return the admission slot
+                    // without pumping (the next natural pump retries the
+                    // queue; pumping here could recurse on repeated
+                    // spawn failure)
+                    let mut st = cluster.serving.admission.lock().expect("admission queue");
+                    st.admitted = st.admitted.saturating_sub(1);
+                }
+            })
+        };
+        let abort: Box<dyn FnOnce(Error) + Send> = Box::new(move |e| {
+            let _ = tx.send(Err(e));
+        });
+        let pending = Pending { submitted_at: Instant::now(), cancel: Arc::clone(&cancel), launch, abort };
+        let refused = {
+            let mut st = self.admission.lock().expect("admission queue");
+            if st.closed {
+                Some(Error::msg("cluster is shut down"))
+            } else {
+                let cfg = &cluster.config.serving;
+                let slot_free =
+                    cfg.max_in_flight_jobs == 0 || st.admitted < cfg.max_in_flight_jobs;
+                // admit-now requires FIFO fairness: an empty queue, a
+                // free slot, and an open gate; otherwise the job must
+                // queue — and a full queue is the backpressure signal
+                let can_admit_now = slot_free && st.queue.is_empty() && Self::gate_open(cluster);
+                if !can_admit_now && st.queue.len() >= cfg.admission_queue_limit {
+                    Some(Self::rejection(cluster, &st, false))
+                } else {
+                    st.queue.push_back(pending);
+                    None
+                }
+            }
+        };
+        if let Some(e) = refused {
+            cluster.metrics.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        self.pump(cluster);
+        Ok(JobHandle { rx, cancel, cluster: Arc::clone(cluster) })
+    }
+
+    /// Drive the admission queue: drop cancelled entries, shed the
+    /// newest entries past `shed_queue_keep` while the pressure gate is
+    /// closed, then admit from the front while slots and headroom
+    /// allow. Launch/abort closures run *after* the `admission` guard
+    /// drops (SL004: spawning and channel sends never happen under the
+    /// lock). Called after every state change that could unblock the
+    /// queue: submission, job completion, cancellation.
+    pub(crate) fn pump(&self, cluster: &Arc<Cluster>) {
+        // Aborted entries carry their whole `Pending` out of the guard:
+        // dropping `launch` releases the job body's RDD lineage, which
+        // can take shuffle/rerun locks (`ShuffleDep::drop`) — that must
+        // happen after `admission` is released, like the launches.
+        let mut aborts: Vec<(Pending, Error)> = Vec::new();
+        let mut launches: Vec<(Pending, usize)> = Vec::new();
+        {
+            let mut st = self.admission.lock().expect("admission queue");
+            if st.closed {
+                return; // close() already drained the queue
+            }
+            let cfg = cluster.config.serving.clone();
+            // 1. cancelled-while-queued jobs leave without running
+            for _ in 0..st.queue.len() {
+                let p = st.queue.pop_front().expect("queue length just checked");
+                if p.cancel.load(Ordering::Acquire) {
+                    cluster.metrics.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                    aborts.push((p, Error::JobCancelled { partitions_remaining: 0 }));
+                } else {
+                    st.queue.push_back(p);
+                }
+            }
+            let gate = Self::gate_open(cluster);
+            // 2. sustained pressure sheds newest-first down to the keep
+            //    floor (oldest waiters have paid the most deadline
+            //    budget and run first when pressure clears)
+            if !gate {
+                let keep = cfg.shed_queue_keep.min(cfg.admission_queue_limit);
+                while st.queue.len() > keep {
+                    let p = st.queue.pop_back().expect("queue longer than keep floor");
+                    cluster.metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+                    let e = Self::rejection(cluster, &st, true);
+                    aborts.push((p, e));
+                }
+            }
+            // 3. admit FIFO while a slot is free and the gate is open
+            while gate
+                && !st.queue.is_empty()
+                && (cfg.max_in_flight_jobs == 0 || st.admitted < cfg.max_in_flight_jobs)
+            {
+                let p = st.queue.pop_front().expect("queue non-empty");
+                st.admitted += 1;
+                // fair share: explicit cap, or an equal split of the
+                // cores among in-flight jobs (floor 1 so every admitted
+                // job makes progress)
+                let fair = if cfg.fair_share_tasks != 0 {
+                    cfg.fair_share_tasks
+                } else {
+                    (cluster.config.total_cores() / st.admitted).max(1)
+                };
+                launches.push((p, fair));
+            }
+        }
+        for (p, e) in aborts {
+            (p.abort)(e);
+        }
+        for (p, fair) in launches {
+            let wait_ms = p.submitted_at.elapsed().as_millis() as u64;
+            cluster.metrics.job_queue_wait_ms_total.fetch_add(wait_ms, Ordering::Relaxed);
+            let ctl = JobCtl {
+                submitted_at: p.submitted_at,
+                queue_wait_ms: wait_ms,
+                cancel: Some(p.cancel),
+                fair_cap: fair,
+            };
+            (p.launch)(cluster, ctl);
+        }
+    }
+
+    /// A driver thread finished (any outcome): return its slot and pump
+    /// so the next queued job launches.
+    fn finish(&self, cluster: &Arc<Cluster>) {
+        {
+            let mut st = self.admission.lock().expect("admission queue");
+            st.admitted = st.admitted.saturating_sub(1);
+        }
+        self.pump(cluster);
+    }
+
+    /// Jobs currently queued (test/diagnostic visibility).
+    pub fn queued(&self) -> usize {
+        self.admission.lock().expect("admission queue").queue.len()
+    }
+
+    /// Jobs currently running on driver threads (test/diagnostic
+    /// visibility).
+    pub fn in_flight(&self) -> usize {
+        self.admission.lock().expect("admission queue").admitted
+    }
+
+    /// Shutdown: refuse new submissions and abort every queued job with
+    /// an error (handles resolve; nothing silently vanishes). Abort
+    /// closures run after the guard drops (SL004). In-flight driver
+    /// threads are not joined — their scheduler pushes fail once the
+    /// worker pool stops, and their handles resolve with that error.
+    pub(crate) fn close(&self) {
+        let drained: Vec<Pending> = {
+            let mut st = self.admission.lock().expect("admission queue");
+            st.closed = true;
+            st.queue.drain(..).collect()
+        };
+        for p in drained {
+            (p.abort)(Error::msg("cluster is shut down"));
+        }
+    }
+}
+
+/// Driver-side handle to an async job. The result arrives on a channel;
+/// [`join`](JobHandle::join) blocks for it, [`try_join`](JobHandle::try_join)
+/// polls, [`cancel`](JobHandle::cancel) requests cooperative
+/// cancellation. Dropping the handle detaches the job (it still runs to
+/// completion; the result is discarded).
+pub struct JobHandle<O> {
+    rx: mpsc::Receiver<Result<O>>,
+    cancel: Arc<AtomicBool>,
+    cluster: Arc<Cluster>,
+}
+
+impl<O> std::fmt::Debug for JobHandle<O> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("cancelled", &self.cancel.load(Ordering::Acquire))
+            .finish_non_exhaustive()
+    }
+}
+
+impl<O> JobHandle<O> {
+    /// Block until the job resolves: its result, or the rejection /
+    /// cancellation / task error that ended it.
+    pub fn join(self) -> Result<O> {
+        self.rx.recv().map_err(|_| Error::msg("job driver disappeared"))?
+    }
+
+    /// Non-blocking poll: `None` while the job is still queued or
+    /// running.
+    pub fn try_join(&self) -> Option<Result<O>> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Request cooperative cancellation. A queued job is dropped
+    /// without running; an in-flight job stops at its next driver tick
+    /// (in-flight task attempts exit at their next cancellation point —
+    /// the per-partition done flags). Either way the handle resolves to
+    /// [`Error::JobCancelled`]. Idempotent; a job that already
+    /// completed keeps its result.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+        // pump immediately so a cancelled *queued* job resolves now
+        // rather than at the next unrelated admission event
+        self.cluster.serving.pump(&self.cluster);
+    }
+}
+
+impl Cluster {
+    /// Submit a job body for async execution through the serving
+    /// runtime: admission control (bounded queue, in-flight limit,
+    /// memory-pressure gate per `ClusterConfig::serving`), FIFO
+    /// dispatch onto a dedicated driver thread, fair-share interleaving
+    /// with other jobs on the shared worker pool, and cooperative
+    /// cancellation via the returned [`JobHandle`].
+    ///
+    /// The body receives the cluster and a stamped
+    /// [`JobCtl`](crate::rdd::exec::JobCtl) it must thread into
+    /// [`Cluster::run_job_ctl`] so the deadline clock (started at
+    /// submission), cancel flag, and fair-share cap apply. The typed
+    /// action wrappers ([`Rdd::collect_async`](crate::rdd::Rdd) and
+    /// friends) do exactly that.
+    ///
+    /// Blocking actions (`collect`, shuffle-prep map stages, nested
+    /// `tree_aggregate` rounds) deliberately bypass admission — they
+    /// run inside an already-admitted job, and gating them against the
+    /// in-flight limit would deadlock the very jobs holding the slots.
+    pub fn submit_job<O: Send + 'static>(
+        self: &Arc<Self>,
+        body: Box<dyn FnOnce(&Arc<Cluster>, JobCtl) -> Result<O> + Send>,
+    ) -> Result<JobHandle<O>> {
+        self.serving.submit(self, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cluster(f: impl FnOnce(&mut ClusterConfig)) -> Arc<Cluster> {
+        let mut cfg = ClusterConfig::default();
+        f(&mut cfg);
+        Cluster::start(cfg)
+    }
+
+    #[test]
+    fn submit_join_roundtrip() {
+        let cl = cluster(|_| {});
+        let h = cl
+            .submit_job(Box::new(|cl, ctl| {
+                cl.run_job_ctl(
+                    4,
+                    Arc::new(|p, _| Ok(p * 10)),
+                    crate::rdd::exec::JobOptions::default(),
+                    ctl,
+                )
+            }))
+            .expect("admitted");
+        assert_eq!(h.join().unwrap(), vec![0, 10, 20, 30]);
+        let s = cl.metrics.snapshot();
+        assert_eq!(s.jobs_submitted, 1);
+        assert_eq!(s.jobs_completed, 1);
+        cl.shutdown();
+    }
+
+    #[test]
+    fn over_limit_submissions_reject_not_deadlock() {
+        let cl = cluster(|c| {
+            c.serving.max_in_flight_jobs = 1;
+            c.serving.admission_queue_limit = 0; // no queue: reject instantly
+        });
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let h = cl
+            .submit_job(Box::new(move |cl, ctl| {
+                cl.run_job_ctl(
+                    1,
+                    Arc::new(move |_, _| {
+                        while !g.load(Ordering::Acquire) {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Ok(1usize)
+                    }),
+                    crate::rdd::exec::JobOptions::default(),
+                    ctl,
+                )
+            }))
+            .expect("first job admitted");
+        // wait until the first job actually occupies the slot
+        while cl.serving.in_flight() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let second = cl.submit_job(Box::new(|_, _| Ok(0usize)));
+        match second {
+            Err(Error::JobRejected { in_flight, in_flight_limit, shed, .. }) => {
+                assert_eq!((in_flight, in_flight_limit, shed), (1, 1, false));
+            }
+            other => panic!("expected JobRejected, got {other:?}"),
+        }
+        assert_eq!(cl.metrics.snapshot().jobs_rejected, 1);
+        gate.store(true, Ordering::Release);
+        assert_eq!(h.join().unwrap(), vec![1]);
+        cl.shutdown();
+    }
+
+    #[test]
+    fn cancel_queued_job_never_runs() {
+        let cl = cluster(|c| {
+            c.serving.max_in_flight_jobs = 1;
+        });
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let first = cl
+            .submit_job(Box::new(move |cl, ctl| {
+                cl.run_job_ctl(
+                    1,
+                    Arc::new(move |_, _| {
+                        while !g.load(Ordering::Acquire) {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Ok(1usize)
+                    }),
+                    crate::rdd::exec::JobOptions::default(),
+                    ctl,
+                )
+            }))
+            .expect("admitted");
+        while cl.serving.in_flight() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let ran = Arc::new(AtomicBool::new(false));
+        let r = Arc::clone(&ran);
+        let queued = cl
+            .submit_job(Box::new(move |_, _| {
+                r.store(true, Ordering::Release);
+                Ok(0usize)
+            }))
+            .expect("queued");
+        assert_eq!(cl.serving.queued(), 1);
+        queued.cancel();
+        match queued.join() {
+            Err(Error::JobCancelled { partitions_remaining }) => {
+                assert_eq!(partitions_remaining, 0)
+            }
+            other => panic!("expected JobCancelled, got {other:?}"),
+        }
+        assert!(!ran.load(Ordering::Acquire), "cancelled queued job must never run");
+        assert_eq!(cl.metrics.snapshot().jobs_cancelled, 1);
+        gate.store(true, Ordering::Release);
+        assert_eq!(first.join().unwrap(), vec![1]);
+        cl.shutdown();
+    }
+
+    #[test]
+    fn closed_gate_sheds_newest_first() {
+        let cl = cluster(|c| {
+            c.memory_budget_bytes = Some(1024);
+            c.serving.max_in_flight_jobs = 1;
+            c.serving.admission_queue_limit = 8;
+            c.serving.shed_queue_keep = 1;
+        });
+        // hold the only slot so later submissions queue
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let first = cl
+            .submit_job(Box::new(move |cl, ctl| {
+                cl.run_job_ctl(
+                    1,
+                    Arc::new(move |_, _| {
+                        while !g.load(Ordering::Acquire) {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Ok(0usize)
+                    }),
+                    crate::rdd::exec::JobOptions::default(),
+                    ctl,
+                )
+            }))
+            .expect("admitted");
+        while cl.serving.in_flight() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let oldest = cl.submit_job(Box::new(|_, _| Ok(1usize))).expect("queued");
+        let newest = cl.submit_job(Box::new(|_, _| Ok(2usize))).expect("queued");
+        assert_eq!(cl.serving.queued(), 2);
+        // close the pressure gate, then pump: the *newest* queued job is
+        // shed down to the keep floor of 1
+        cl.memory.force_reserve(4096);
+        cl.serving.pump(&cl);
+        match newest.join() {
+            Err(Error::JobRejected { shed: true, .. }) => {}
+            other => panic!("expected shed JobRejected, got {other:?}"),
+        }
+        assert_eq!(cl.metrics.snapshot().jobs_shed, 1);
+        assert_eq!(cl.serving.queued(), 1, "oldest waiter survives the shed");
+        // pressure clears: the survivor runs
+        cl.memory.release(4096);
+        gate.store(true, Ordering::Release);
+        assert_eq!(first.join().unwrap(), vec![0]);
+        assert_eq!(oldest.join().unwrap(), vec![1]);
+        cl.shutdown();
+    }
+
+    #[test]
+    fn shutdown_aborts_queued_jobs() {
+        let cl = cluster(|c| {
+            c.serving.max_in_flight_jobs = 1;
+        });
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let first = cl
+            .submit_job(Box::new(move |cl, ctl| {
+                cl.run_job_ctl(
+                    1,
+                    Arc::new(move |_, _| {
+                        while !g.load(Ordering::Acquire) {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Ok(0usize)
+                    }),
+                    crate::rdd::exec::JobOptions::default(),
+                    ctl,
+                )
+            }))
+            .expect("admitted");
+        while cl.serving.in_flight() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let queued = cl.submit_job(Box::new(|_, _| Ok(1usize))).expect("queued");
+        // close the serving front door while the second job still waits:
+        // it must resolve with an error, never silently vanish
+        cl.serving.close();
+        assert!(queued.join().is_err(), "queued job must resolve with an error at close");
+        assert!(
+            cl.submit_job::<usize>(Box::new(|_, _| Ok(2))).is_err(),
+            "closed runtime refuses work"
+        );
+        gate.store(true, Ordering::Release);
+        assert_eq!(first.join().unwrap(), vec![0]);
+        cl.shutdown();
+    }
+}

@@ -42,20 +42,30 @@
 //! bit-identically) and the block cache evicts LRU unpinned entries
 //! (lineage recomputes the miss). Unlimited by default: nothing spills,
 //! zero behavior change — see DESIGN.md §"Memory governance".
+//!
+//! Serving is *multi-job*: [`Cluster::submit_job`] (and the typed
+//! `collect_async`/`count_async`/`aggregate_async` actions) returns a
+//! [`JobHandle`] immediately; jobs pass admission control (bounded
+//! queue, in-flight limit, memory-pressure gate), interleave task waves
+//! fairly on the shared worker deques, and support cooperative
+//! cancellation and newest-first load shedding under sustained
+//! pressure — see [`jobs`] and DESIGN.md §"Serving runtime".
 
 pub mod exec;
 pub mod cache;
 pub mod shuffle;
 pub mod broadcast;
 pub mod core;
+pub mod jobs;
 pub mod memory;
 pub mod pair;
 
 pub use broadcast::Broadcast;
 pub use core::Rdd;
 pub use exec::{
-    Cluster, FaultInjector, FaultPlan, JobOptions, Metrics, MetricsSnapshot, ShuffleRerun,
+    Cluster, FaultInjector, FaultPlan, JobCtl, JobOptions, Metrics, MetricsSnapshot, ShuffleRerun,
     VecPool,
 };
+pub use jobs::{JobHandle, JobRuntime};
 pub use memory::{MemoryManager, SizeOf, Spill};
 pub use pair::{PartitionableKey, Partitioner};

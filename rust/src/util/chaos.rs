@@ -143,6 +143,13 @@ impl Chaos {
         self
     }
 
+    /// Serving-runtime admission limit, for concurrent-overload
+    /// schedules (chaos faults while the admission queue is contended).
+    pub fn serving(mut self, max_in_flight: usize) -> Chaos {
+        self.cfg.serving.max_in_flight_jobs = max_in_flight;
+        self
+    }
+
     /// Collapse to one executor × one core. Fault *events* are keyed and
     /// seed-deterministic on any topology; executor-dependent effects
     /// (which outputs a crash takes) also become scheduling-independent
@@ -199,9 +206,11 @@ mod tests {
             .backoff(2, 32)
             .deadline_ms(60_000)
             .memory_budget(4096)
+            .serving(4)
             .serial()
             .build();
         assert_eq!((cfg.num_executors, cfg.cores_per_executor), (1, 1));
+        assert_eq!(cfg.serving.max_in_flight_jobs, 4);
         assert_eq!(cfg.fault.delay_ms, 9);
         assert!(cfg.speculation.enabled && cfg.speculation.min_stall_ms == 4);
         assert_eq!((cfg.retry_backoff_base_ms, cfg.retry_backoff_max_ms), (2, 32));

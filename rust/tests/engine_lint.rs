@@ -38,7 +38,7 @@ fn fixtures_trip_their_passes() {
         .filter(|p| p.extension().map(|x| x == "rs").unwrap_or(false))
         .collect();
     fixtures.sort();
-    assert_eq!(fixtures.len(), 6, "one fixture per pass");
+    assert_eq!(fixtures.len(), 8, "fixture corpus tracks the pass catalog");
     for fixture in fixtures {
         let corpus = Corpus::load_paths(&[fixture.clone()]).expect("load fixture");
         let mut got: Vec<String> = run_all(&corpus)

@@ -1,0 +1,29 @@
+// SL004 fixture (serving runtime): an admission-queue guard nested
+// into an undeclared lock, and a guard held across a thread spawn.
+
+use std::sync::Mutex;
+use std::thread;
+
+pub struct Serving {
+    pub admission: Mutex<Vec<u64>>,
+    pub results: Mutex<Vec<u64>>,
+}
+
+impl Serving {
+    pub fn bad_nest(&self) -> u64 {
+        let q = self.admission.lock().unwrap();
+        let r = self.results.lock().unwrap();
+        q[0] + r[0]
+    }
+
+    pub fn bad_spawn(&self) {
+        let q = self.admission.lock().unwrap();
+        thread::spawn(move || drop(q));
+    }
+
+    pub fn fine(&self) -> usize {
+        let n = { self.admission.lock().unwrap().len() };
+        thread::spawn(|| {});
+        n
+    }
+}

@@ -1,0 +1,29 @@
+// SL006 fixture (serving runtime): panics inside an async job body
+// (submit_job) and a ctl-threaded task closure (run_job_ctl), next
+// to the sanctioned lock-poison idiom.
+
+pub fn submit(cluster: &Cluster, data: &Store) -> JobHandle {
+    cluster.submit_job(Box::new(move |cl, ctl| {
+        let newest = data.newest().unwrap();
+        if newest.is_empty() {
+            panic!("nothing to serve");
+        }
+        Ok(newest)
+    }))
+}
+
+pub fn launch(cluster: &Cluster, results: &Store, state: &Lock, ctl: JobCtl) {
+    cluster.run_job_ctl(
+        4,
+        Arc::new(move |p, _exec| {
+            if done[p].load(Ordering::Acquire) {
+                unreachable!("cancelled attempt rescheduled");
+            }
+            let r = results.get(p).expect("wave refill raced");
+            let _guard = state.lock().expect("sibling worker panicked");
+            Ok(r)
+        }),
+        opts,
+        ctl,
+    );
+}

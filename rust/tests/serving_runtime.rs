@@ -1,0 +1,289 @@
+//! Serving-runtime concurrency suite (DESIGN.md §"Serving runtime"):
+//! concurrent async jobs over shared cached operators must be
+//! bit-identical to their sequential fault-free runs (including under
+//! the chaos seeds the CI matrix sweeps), over-limit submissions must
+//! reject with `Error::JobRejected` instead of deadlocking, cancelling
+//! an in-flight job must return every memory reservation to its
+//! pre-submission value, and a shed job's shuffle buckets must be
+//! dropped.
+//!
+//! Also runs under `SPARKLA_MEMORY_BUDGET_BYTES=65536` in the CI
+//! serving-stress job: admission, shedding, and cancellation all
+//! interact with a real (tiny) budget there.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparkla::config::ClusterConfig;
+use sparkla::error::Error;
+use sparkla::rdd::Cluster;
+use sparkla::util::chaos::{Chaos, FaultKind};
+use sparkla::Context;
+
+/// Spin until `cond` holds, failing the test after `secs` seconds —
+/// bounded so a scheduling bug surfaces as an assertion, not a CI hang.
+fn wait_for(secs: u64, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Occupy one serving slot with a job whose body parks on `gate`
+/// (driver-thread side — no executor task is scheduled, so releasing
+/// the gate is the only dependency).
+fn park_one_slot(cluster: &Arc<Cluster>, gate: &Arc<AtomicBool>) -> sparkla::rdd::JobHandle<usize> {
+    let g = Arc::clone(gate);
+    let h = cluster
+        .submit_job(Box::new(move |_, _| {
+            while !g.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Ok(0usize)
+        }))
+        .expect("slot-holder admitted");
+    wait_for(10, "slot holder to start", || cluster.serving.in_flight() >= 1);
+    h
+}
+
+#[test]
+fn concurrent_jobs_bit_identical_to_sequential() {
+    // sequential fault-free baselines
+    let ctx = Context::with_config(ClusterConfig::default());
+    let shared = ctx.parallelize((0..4000i64).collect(), 16).map(|x| x * 7 - 3).cache();
+    let base_collect = shared.collect().unwrap();
+    let base_count = shared.count().unwrap();
+    let base_sum = shared.aggregate(0i64, |a, x| a + x, |a, b| a + b).unwrap();
+
+    // 9 concurrent jobs from 9 threads over the *same* cached operator
+    let mut threads = Vec::new();
+    for i in 0..9 {
+        let r = shared.clone();
+        threads.push(std::thread::spawn(move || match i % 3 {
+            0 => {
+                let got = r.collect_async().unwrap().join().unwrap();
+                got.iter().map(|x| x.wrapping_mul(31)).sum::<i64>()
+            }
+            1 => r.count_async().unwrap().join().unwrap() as i64,
+            _ => r.aggregate_async(0i64, |a, x| a + x, |a, b| a + b).unwrap().join().unwrap(),
+        }));
+    }
+    let digest: i64 = base_collect.iter().map(|x| x.wrapping_mul(31)).sum();
+    for (i, t) in threads.into_iter().enumerate() {
+        let got = t.join().expect("submitter thread");
+        let want = match i % 3 {
+            0 => digest,
+            1 => base_count as i64,
+            _ => base_sum,
+        };
+        assert_eq!(got, want, "job {i} diverged from its sequential run");
+    }
+    let s = ctx.metrics().snapshot();
+    assert_eq!(s.jobs_submitted, 9);
+    assert_eq!(s.jobs_completed, 9);
+}
+
+#[test]
+fn concurrent_jobs_bit_identical_under_chaos() {
+    // fault-free sequential baseline
+    let clean = Context::with_config(ClusterConfig::default());
+    let base: Vec<i64> =
+        clean.parallelize((0..3000i64).collect(), 12).map(|x| x * 11 + 5).collect().unwrap();
+    let base_sum: i64 = base.iter().sum();
+
+    // the CI chaos matrix seeds; SPARKLA_CHAOS_SEED overrides inside
+    // Chaos::new, and determinism must hold at *any* seed
+    for seed in [1337u64, 4242u64] {
+        let cfg = Chaos::new(seed)
+            .with(FaultKind::TaskFail, 0.12)
+            .with(FaultKind::Delay, 0.08)
+            .with(FaultKind::MidTask, 0.05)
+            .serving(4)
+            .build();
+        let ctx = Context::with_config(cfg);
+        let shared = ctx.parallelize((0..3000i64).collect(), 12).map(|x| x * 11 + 5).cache();
+        let mut threads = Vec::new();
+        for i in 0..8 {
+            let r = shared.clone();
+            threads.push(std::thread::spawn(move || {
+                if i % 2 == 0 {
+                    r.collect_async().unwrap().join().unwrap()
+                } else {
+                    vec![r.aggregate_async(0i64, |a, x| a + x, |a, b| a + b)
+                        .unwrap()
+                        .join()
+                        .unwrap()]
+                }
+            }));
+        }
+        for (i, t) in threads.into_iter().enumerate() {
+            let got = t.join().expect("submitter thread");
+            if i % 2 == 0 {
+                assert_eq!(got, base, "seed {seed} job {i}: chaos broke bit-identity");
+            } else {
+                assert_eq!(got, vec![base_sum], "seed {seed} job {i}: chaos broke the sum");
+            }
+        }
+    }
+}
+
+#[test]
+fn over_limit_submission_rejects_never_deadlocks() {
+    let mut cfg = ClusterConfig::default();
+    cfg.serving.max_in_flight_jobs = 1;
+    cfg.serving.admission_queue_limit = 0;
+    let ctx = Context::with_config(cfg);
+    let cluster = Arc::clone(ctx.cluster());
+    let gate = Arc::new(AtomicBool::new(false));
+    let holder = park_one_slot(&cluster, &gate);
+
+    // the slot is held and there is no queue: a second submission must
+    // come back rejected immediately (a deadlock here would hang the
+    // test's 10s bound, not block forever)
+    let rdd = ctx.parallelize((0..100u64).collect(), 4);
+    match rdd.count_async() {
+        Err(Error::JobRejected { queue_depth, queue_limit, in_flight, in_flight_limit, shed, .. }) => {
+            assert_eq!(queue_depth, 0);
+            assert_eq!(queue_limit, 0);
+            assert_eq!((in_flight, in_flight_limit), (1, 1));
+            assert!(!shed);
+        }
+        other => panic!("expected JobRejected, got {other:?}"),
+    }
+    assert_eq!(ctx.metrics().snapshot().jobs_rejected, 1);
+
+    gate.store(true, Ordering::Release);
+    assert_eq!(holder.join().unwrap(), 0);
+    // the slot freed: the same submission is admitted now
+    assert_eq!(rdd.count_async().unwrap().join().unwrap(), 100);
+}
+
+#[test]
+fn cancellation_returns_reservations_to_baseline() {
+    let mut cfg = ClusterConfig::default();
+    // keep the CI stress job's tiny SPARKLA_MEMORY_BUDGET_BYTES when set
+    cfg.memory_budget_bytes = cfg.memory_budget_bytes.or(Some(64 << 20));
+    let ctx = Context::with_config(cfg);
+    let cluster = Arc::clone(ctx.cluster());
+    let baseline = cluster.memory.used();
+
+    // a shuffle (map stage reserves buckets at prepare) feeding tasks
+    // that park on a gate, so the job is reliably mid-flight when
+    // cancelled
+    let gate = Arc::new(AtomicBool::new(false));
+    let g = Arc::clone(&gate);
+    let pairs: Vec<(u32, u64)> = (0..2000).map(|i| ((i % 16) as u32, (i * i) as u64)).collect();
+    let slow = ctx
+        .parallelize(pairs, 8)
+        .map(|p| *p)
+        .reduce_by_key(8, |a, b| a + b)
+        .map(move |kv| {
+            while !g.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            *kv
+        });
+    let handle = slow.collect_async().unwrap();
+    wait_for(10, "job to go in flight", || cluster.serving.in_flight() >= 1);
+    // shuffle buckets are reserved once the body's prepare ran
+    wait_for(10, "map stage to reserve shuffle buckets", || cluster.memory.used() > baseline);
+
+    handle.cancel();
+    gate.store(true, Ordering::Release); // parked tasks hit their next cancellation point
+    match handle.join() {
+        Err(Error::JobCancelled { .. }) => {}
+        other => panic!("expected JobCancelled, got {other:?}"),
+    }
+    assert_eq!(ctx.metrics().snapshot().jobs_cancelled, 1);
+
+    // dropping the last RDD reference unwinds the lineage: ShuffleDep
+    // releases its buckets and rerun registrations; late task attempts
+    // drop their runner clones as they see the done flags
+    drop(slow);
+    wait_for(10, "reservations to return to the pre-submission value", || {
+        cluster.memory.used() == baseline
+    });
+    assert_eq!(cluster.memory.used(), baseline);
+}
+
+#[test]
+fn shed_job_drops_its_shuffle_buckets() {
+    let mut cfg = ClusterConfig::default();
+    // keep the CI stress job's tiny SPARKLA_MEMORY_BUDGET_BYTES when set
+    cfg.memory_budget_bytes = cfg.memory_budget_bytes.or(Some(64 << 20));
+    cfg.serving.max_in_flight_jobs = 1;
+    cfg.serving.admission_queue_limit = 8;
+    cfg.serving.shed_queue_keep = 0;
+    let ctx = Context::with_config(cfg);
+    let cluster = Arc::clone(ctx.cluster());
+    let baseline = cluster.memory.used();
+
+    // prepare the shuffle up front: its buckets are reserved before the
+    // job is even submitted
+    let pairs: Vec<(u32, u64)> = (0..2000).map(|i| ((i % 16) as u32, i as u64)).collect();
+    let shuffled = ctx.parallelize(pairs, 8).map(|p| *p).reduce_by_key(8, |a, b| a + b);
+    shuffled.prepare().unwrap();
+    let reserved = cluster.memory.used();
+    assert!(reserved > baseline, "map stage must have reserved shuffle buckets");
+
+    let gate = Arc::new(AtomicBool::new(false));
+    let holder = park_one_slot(&cluster, &gate);
+    // queue a job, then hand it the only lineage reference
+    let victim = shuffled.collect_async().unwrap();
+    drop(shuffled);
+    assert_eq!(cluster.serving.queued(), 1);
+
+    // slam the pressure gate shut; the next admission event (here: one
+    // more submission) sheds the queue newest-first down to keep=0
+    let budget = cluster.memory.budget();
+    cluster.memory.force_reserve(budget);
+    let also_shed = ctx.parallelize((0..10u64).collect(), 2).count_async().unwrap();
+    match victim.join() {
+        Err(Error::JobRejected { shed: true, .. }) => {}
+        other => panic!("expected shed JobRejected, got {other:?}"),
+    }
+    assert!(matches!(also_shed.join(), Err(Error::JobRejected { shed: true, .. })));
+    assert_eq!(ctx.metrics().snapshot().jobs_shed, 2);
+    cluster.memory.release(budget);
+
+    // shedding dropped the job body — the last reference to the
+    // shuffled RDD — so its buckets and reservations are gone
+    wait_for(10, "shed job's shuffle buckets to be dropped", || {
+        cluster.memory.used() == baseline
+    });
+    assert!(cluster.shuffle.is_empty(), "shed job's buckets must be dropped");
+
+    gate.store(true, Ordering::Release);
+    assert_eq!(holder.join().unwrap(), 0);
+}
+
+#[test]
+fn queued_job_deadline_counts_queue_wait() {
+    let mut cfg = ClusterConfig::default();
+    cfg.job_deadline_ms = Some(40);
+    cfg.serving.max_in_flight_jobs = 1;
+    let ctx = Context::with_config(cfg);
+    let cluster = Arc::clone(ctx.cluster());
+    let gate = Arc::new(AtomicBool::new(false));
+    let holder = park_one_slot(&cluster, &gate);
+
+    // this job queues behind the slot holder past its whole deadline
+    let queued = ctx.parallelize((0..100u64).collect(), 4).count_async().unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+    gate.store(true, Ordering::Release);
+    assert_eq!(holder.join().unwrap(), 0);
+
+    match queued.join() {
+        Err(Error::DeadlineExceeded { deadline_ms, attempt, queue_wait_ms, .. }) => {
+            assert_eq!(deadline_ms, 40);
+            assert_eq!(attempt, 0, "a queued-then-expired job never ran a task");
+            assert!(
+                queue_wait_ms >= 40,
+                "queue wait ({queue_wait_ms} ms) must cover the blown deadline"
+            );
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+}
